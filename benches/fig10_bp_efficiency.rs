@@ -1,0 +1,5 @@
+//! Regenerates paper Fig. 10 (accuracy vs cumulative BP samples).
+fn main() {
+    evosample::experiments::fig10::run(evosample::config::presets::Scale::from_env())
+        .expect("fig10");
+}

@@ -1,0 +1,4 @@
+//! Regenerates paper Fig. 1 / Fig. 8 (weight-signal illustration).
+fn main() {
+    evosample::experiments::fig1::run(400).expect("fig1");
+}

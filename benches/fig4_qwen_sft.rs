@@ -1,0 +1,5 @@
+//! Regenerates paper Fig. 4 / Tab. 9 (low-resource SFT w/ grad accum).
+fn main() {
+    evosample::experiments::fig4::run(evosample::config::presets::Scale::from_env())
+        .expect("fig4");
+}

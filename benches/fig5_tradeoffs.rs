@@ -1,0 +1,5 @@
+//! Regenerates paper Fig. 5 (b/B sweep + pruning-ratio sweep).
+fn main() {
+    evosample::experiments::fig5::run(evosample::config::presets::Scale::from_env())
+        .expect("fig5");
+}

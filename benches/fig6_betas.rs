@@ -1,0 +1,6 @@
+//! Regenerates paper Fig. 6 (beta grid) and Fig. 7 (dense local grid).
+fn main() {
+    let scale = evosample::config::presets::Scale::from_env();
+    evosample::experiments::fig6::run(scale, false).expect("fig6");
+    evosample::experiments::fig6::run(scale, true).expect("fig7");
+}

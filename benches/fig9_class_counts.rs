@@ -1,0 +1,5 @@
+//! Regenerates paper Fig. 9 (per-class BP-sample counts under ESWP).
+fn main() {
+    evosample::experiments::fig9::run(evosample::config::presets::Scale::from_env())
+        .expect("fig9");
+}

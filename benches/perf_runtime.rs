@@ -1,0 +1,80 @@
+//! Runtime perf: XLA step costs per model/batch (FP vs BP), quantifying
+//! the paper's §3.3 claim that BP dominates and ES's scoring FP is cheap.
+//! Backs EXPERIMENTS.md §Perf L2 numbers.
+
+use evosample::runtime::manifest::Manifest;
+use evosample::runtime::xla_rt::XlaRuntime;
+use evosample::runtime::{BatchX, ModelRuntime};
+use evosample::util::bench::Bencher;
+use evosample::util::Pcg64;
+
+fn main() {
+    let Ok(m) = Manifest::load_default() else {
+        println!("artifacts missing: run `make artifacts` first");
+        return;
+    };
+    let bench = Bencher::default();
+    let mut rng = Pcg64::new(3);
+    let smoke = evosample::util::bench::smoke_mode();
+    let models: Vec<&str> = if smoke {
+        vec!["mlp_cifar10", "cnn_small_c100", "txf_lm"]
+    } else {
+        m.models.keys().map(|s| s.as_str()).collect()
+    };
+
+    for name in models {
+        let Some(entry) = m.models.get(name) else { continue };
+        let mut rt = XlaRuntime::load(&m, name).expect(name);
+        rt.init(0).unwrap();
+        let xd = entry.x_len();
+        let yd = entry.y_len();
+        let hi = entry.classes.max(2) as i64;
+
+        let fwd_n = rt.fwd_size();
+        let make_x_f32 = |n: usize, rng: &mut Pcg64| -> Vec<f32> {
+            (0..n * xd).map(|_| rng.normal()).collect()
+        };
+        let make_x_i32 = |n: usize, rng: &mut Pcg64| -> Vec<i32> {
+            (0..n * xd).map(|_| rng.int_in(0, hi) as i32).collect()
+        };
+        let make_y = |n: usize, rng: &mut Pcg64| -> Vec<i32> {
+            (0..n * yd).map(|_| rng.int_in(0, hi) as i32).collect()
+        };
+
+        // Scoring FP at meta-batch size.
+        let y = make_y(fwd_n, &mut rng);
+        match entry.x_dtype {
+            evosample::runtime::manifest::XDtype::F32 => {
+                let x = make_x_f32(fwd_n, &mut rng);
+                bench.run(&format!("{name:<16} loss_fwd  n={fwd_n}"), || {
+                    rt.loss_fwd(BatchX::F32(&x), &y, fwd_n).unwrap()
+                });
+            }
+            evosample::runtime::manifest::XDtype::I32 => {
+                let x = make_x_i32(fwd_n, &mut rng);
+                bench.run(&format!("{name:<16} loss_fwd  n={fwd_n}"), || {
+                    rt.loss_fwd(BatchX::I32(&x), &y, fwd_n).unwrap()
+                });
+            }
+        }
+        // Train step at each emitted size.
+        for n in rt.train_sizes() {
+            let y = make_y(n, &mut rng);
+            let w = vec![1.0f32; n];
+            match entry.x_dtype {
+                evosample::runtime::manifest::XDtype::F32 => {
+                    let x = make_x_f32(n, &mut rng);
+                    bench.run(&format!("{name:<16} train_step n={n}"), || {
+                        rt.train_step(BatchX::F32(&x), &y, &w, 1e-3, n).unwrap()
+                    });
+                }
+                evosample::runtime::manifest::XDtype::I32 => {
+                    let x = make_x_i32(n, &mut rng);
+                    bench.run(&format!("{name:<16} train_step n={n}"), || {
+                        rt.train_step(BatchX::I32(&x), &y, &w, 1e-3, n).unwrap()
+                    });
+                }
+            }
+        }
+    }
+}

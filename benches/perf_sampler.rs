@@ -1,0 +1,73 @@
+//! L3 perf microbenches: the sampler hot paths (score update, weighted
+//! selection, pruning) + the XLA es_update kernel vs the rust scalar loop.
+//! These back the EXPERIMENTS.md §Perf L3 numbers.
+
+use evosample::runtime::manifest::Manifest;
+use evosample::runtime::xla_rt::EsUpdateKernel;
+use evosample::sampler::evolved::Evolved;
+use evosample::sampler::weights::sample_without_replacement;
+use evosample::sampler::Sampler;
+use evosample::util::bench::Bencher;
+use evosample::util::Pcg64;
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Pcg64::new(1);
+
+    // --- per-step ES observe+select at meta-batch scale ----------------
+    for &(n, bb, mini) in &[(50_000usize, 128usize, 32usize), (1_000_000, 1024, 256)] {
+        let mut es = Evolved::new(n, 10, 0.2, 0.9, 0.0, 0.0);
+        let meta: Vec<u32> = (0..bb as u32).map(|i| i * (n as u32 / bb as u32)).collect();
+        let losses: Vec<f32> = (0..bb).map(|_| rng.f32() * 3.0).collect();
+        b.run(&format!("es observe_meta        n={n} B={bb}"), || {
+            es.observe_meta(&meta, &losses, 1);
+        });
+        b.run(&format!("es select              n={n} B={bb} b={mini}"), || {
+            es.select(&meta, mini, 1, &mut rng)
+        });
+    }
+
+    // --- weighted sampling without replacement --------------------------
+    for &(n, k) in &[(128usize, 32usize), (4096, 1024), (1_000_000, 200_000)] {
+        let w: Vec<f32> = (0..n).map(|_| rng.f32() + 1e-3).collect();
+        b.run(&format!("swor (gumbel top-k)    n={n} k={k}"), || {
+            sample_without_replacement(&w, k, &mut rng)
+        });
+    }
+
+    // --- epoch-level pruning --------------------------------------------
+    for &n in &[50_000usize, 1_000_000] {
+        let mut es = Evolved::new(n, 10, 0.2, 0.8, 0.0, 0.3);
+        b.run(&format!("eswp epoch prune       n={n} r=0.3"), || {
+            es.on_epoch_start(1, &mut rng)
+        });
+    }
+
+    // --- dense table refresh: rust loop vs L1 kernel ---------------------
+    let n = 65_536usize;
+    let s0: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+    let losses: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+    let mask = vec![1.0f32; n];
+    {
+        let mut s = s0.clone();
+        let mut w = s0.clone();
+        b.run(&format!("table refresh (rust)   n={n}"), || {
+            for i in 0..n {
+                let so = s[i];
+                w[i] = 0.2 * so + 0.8 * losses[i];
+                s[i] = 0.9 * so + 0.1 * losses[i];
+            }
+        });
+    }
+    if let Ok(m) = Manifest::load_default() {
+        if let Ok(kernel) = EsUpdateKernel::load(&m) {
+            let mut s = s0.clone();
+            let mut w = s0;
+            b.run(&format!("table refresh (xla L1) n={n}"), || {
+                kernel.refresh(&mut s, &mut w, &losses, &mask, 0.2, 0.9).unwrap();
+            });
+        }
+    } else {
+        println!("(artifacts missing: skipping xla kernel bench)");
+    }
+}

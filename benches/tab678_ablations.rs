@@ -1,0 +1,7 @@
+//! Regenerates paper Tables 6, 7 and 8 (ablations).
+fn main() {
+    let scale = evosample::config::presets::Scale::from_env();
+    evosample::experiments::ablations::run_tab6(scale).expect("tab6");
+    evosample::experiments::ablations::run_tab7(scale).expect("tab7");
+    evosample::experiments::ablations::run_tab8(scale).expect("tab8");
+}

@@ -1,0 +1,6 @@
+//! Regenerates paper Table 2 (CIFAR classification, 8 sampling methods).
+//! Smoke scale by default; EVOSAMPLE_BENCH_FULL=1 for paper-faithful runs.
+fn main() {
+    evosample::experiments::table2::run(evosample::config::presets::Scale::from_env())
+        .expect("table2");
+}

@@ -1,0 +1,5 @@
+//! Regenerates paper Table 3 (large-model full fine-tuning).
+fn main() {
+    evosample::experiments::table3::run(evosample::config::presets::Scale::from_env())
+        .expect("table3");
+}

@@ -1,0 +1,5 @@
+//! Regenerates paper Table 4 + Fig. 3 (MAE pre-training, 4-worker sim).
+fn main() {
+    evosample::experiments::table4::run(evosample::config::presets::Scale::from_env())
+        .expect("table4");
+}

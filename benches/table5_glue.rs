@@ -1,0 +1,5 @@
+//! Regenerates paper Table 5 (GLUE fine-tuning, 8 synthetic NLU tasks).
+fn main() {
+    evosample::experiments::table5::run(evosample::config::presets::Scale::from_env())
+        .expect("table5");
+}

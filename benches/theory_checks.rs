@@ -1,0 +1,4 @@
+//! Numerical verification of Prop. 2.1, Prop. 3.1 and Thm. 3.2.
+fn main() {
+    evosample::experiments::theory::run_all().expect("theory");
+}

@@ -1,0 +1,88 @@
+//! END-TO-END DRIVER (DESIGN.md "End-to-end validation"): pre-train a real
+//! transformer LM through the full three-layer stack — rust coordinator →
+//! PJRT-compiled AOT artifacts (JAX L2 + Pallas L1 kernels) — on the
+//! synthetic corpus, for several hundred optimizer steps, with ES/ESWP
+//! against the baseline. Logs the loss curves (results/e2e_pretrain.jsonl)
+//! and prints the summary recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example end_to_end_pretrain
+//!
+//! EVOSAMPLE_E2E_STEPS overrides the target step count (default ~300).
+
+use evosample::config::presets::{e2e_pretrain, Scale};
+use evosample::coordinator::{predicted_saved_time_pct, saved_time_pct, train};
+use evosample::data;
+use evosample::experiments::make_runtime;
+use evosample::metrics::Recorder;
+use evosample::util::json::{num, obj, s, Json};
+
+fn main() -> anyhow::Result<()> {
+    let mut runs = e2e_pretrain(Scale::from_env());
+    // Target a few hundred steps: steps = epochs * n / B.
+    let target_steps: usize = std::env::var("EVOSAMPLE_E2E_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    for cfg in &mut runs {
+        let per_epoch = cfg.dataset.n().div_ceil(cfg.meta_batch);
+        cfg.epochs = (target_steps / per_epoch).max(3);
+        cfg.eval_every = 1;
+    }
+
+    let rec = Recorder::new("e2e_pretrain")?;
+    let split = data::build(&runs[0].dataset, runs[0].test_n, 1234);
+    let mut rt = make_runtime(&runs[0])?;
+    println!(
+        "e2e: pre-training txf_lm ({} params) for ~{} steps per method on {} sequences",
+        rt.param_count(),
+        target_steps,
+        split.train.n
+    );
+
+    let mut base = None;
+    for cfg in &runs {
+        let t0 = std::time::Instant::now();
+        let r = train(cfg, rt.as_mut(), &split)?;
+        rec.record_result(&r)?;
+        rec.record(&obj(vec![
+            ("fig", s("e2e_loss_curve")),
+            ("method", s(r.sampler.clone())),
+            ("steps", num(r.steps as f64)),
+            (
+                "curve",
+                Json::Arr(r.loss_curve.iter().map(|&l| num(l)).collect()),
+            ),
+        ]))?;
+        println!("\n== {} ==", r.sampler);
+        println!(
+            "  steps {} | final train loss {:.4} | eval loss {:.4} | token acc {:.1}%",
+            r.steps,
+            r.loss_curve.last().unwrap(),
+            r.final_eval.loss,
+            r.accuracy_pct()
+        );
+        println!(
+            "  wall {:.1}s (total incl eval {:.1}s) | bp samples {} | fp samples {}",
+            r.cost.train_wall_s(),
+            t0.elapsed().as_secs_f64(),
+            r.cost.bp_samples,
+            r.cost.fp_samples
+        );
+        print!("  loss curve: ");
+        for (e, l) in r.loss_curve.iter().enumerate() {
+            print!("e{e}:{l:.3} ");
+        }
+        println!();
+        match &base {
+            None => base = Some(r),
+            Some(b) => println!(
+                "  vs baseline: saved {:.1}% wall ({:.1}% flops-pred), Δeval loss {:+.4}",
+                saved_time_pct(&b.cost, &r.cost),
+                predicted_saved_time_pct(&b.cost, &r.cost),
+                r.final_eval.loss - b.final_eval.loss
+            ),
+        }
+    }
+    println!("\n(curves in results/e2e_pretrain.jsonl — summarized in EXPERIMENTS.md)");
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Fig. 1 / Fig. 8 illustration: how the ES weight signal (Eq. 3.1) tracks
+//! a noisy decaying loss while damping oscillations, vs raw loss weights
+//! (Eq. 2.3). Prints an ASCII plot + the transfer-function story.
+//!
+//!     cargo run --release --example sampling_illustration
+
+use evosample::sampler::analysis::{fig1_traces, total_variation, transfer_magnitude};
+use evosample::util::Pcg64;
+
+fn ascii_plot(name: &str, xs: &[f32], rows: usize) {
+    let max = xs.iter().cloned().fold(f32::MIN, f32::max);
+    let min = xs.iter().cloned().fold(f32::MAX, f32::min);
+    println!("\n{name}  (min {min:.2}, max {max:.2})");
+    let cols = xs.len().min(100);
+    let stride = xs.len() / cols;
+    for r in (0..rows).rev() {
+        let lo = min + (max - min) * r as f32 / rows as f32;
+        let hi = min + (max - min) * (r + 1) as f32 / rows as f32;
+        let line: String = (0..cols)
+            .map(|c| {
+                let v = xs[c * stride];
+                if v >= lo && v < hi { '*' } else { ' ' }
+            })
+            .collect();
+        println!("|{line}");
+    }
+    println!("+{}", "-".repeat(100));
+}
+
+fn main() {
+    let (b1, b2) = (0.5f32, 0.9f32); // Fig. 1's betas
+    let mut rng = Pcg64::new(1234);
+    let (loss, w_loss, w_es) = fig1_traces(400, b1, b2, &mut rng);
+
+    ascii_plot("loss signal l(t) == Loss-sampling weights (Eq. 2.3)", &loss, 12);
+    ascii_plot(&format!("ES weights (Eq. 3.1, beta1={b1}, beta2={b2})"), &w_es, 12);
+
+    println!("\ntotal variation: loss {:.1}  es {:.1}  (smoothing {:.2}x)",
+        total_variation(&w_loss), total_variation(&w_es),
+        total_variation(&w_loss) / total_variation(&w_es));
+    println!("Thm 3.2: |H(i w->inf)| = |beta2-beta1| = {:.2}; measured {:.4}",
+        (b2 - b1).abs(), transfer_magnitude(b1 as f64, b2 as f64, 1e9));
+    println!("=> ES keeps the trend (low freq, |H|->1) and keeps a tunable {:.0}% of the detail.",
+        100.0 * (b2 - b1).abs());
+}

@@ -1,0 +1,235 @@
+"""AOT lowering: JAX (L2+L1) → HLO text artifacts + manifest.json.
+
+Run once at build time (``make artifacts``); the rust coordinator then loads
+``artifacts/*.hlo.txt`` through PJRT and python never appears on the
+training path again.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every model emits the uniform artifact family from model.build_fns, at the
+batch sizes each experiment needs (meta-batch B for baseline/scoring,
+mini-batch b for selected BP, sweep sizes for Fig. 5):
+
+  {model}_init.hlo.txt
+  {model}_loss_fwd_n{B}.hlo.txt
+  {model}_train_step_n{b}.hlo.txt
+  {model}_eval_n{E}.hlo.txt
+
+plus the standalone L1 table-refresh kernel ``es_update_n{N}.hlo.txt``.
+
+``manifest.json`` records shapes/dtypes/param counts/FLOP estimates so the
+rust runtime stays model-agnostic.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.es_update import es_update
+
+
+# ---------------------------------------------------------------------------
+# Batch-size plan per model (see DESIGN.md §4 for the experiment mapping)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactPlan:
+    model: str
+    train_steps: tuple[int, ...]  # mini/meta batch sizes for train_step
+    loss_fwds: tuple[int, ...]  # meta-batch sizes for scoring FP
+    evals: tuple[int, ...]  # eval chunk sizes
+
+
+PLANS: dict[str, ArtifactPlan] = {
+    # Fig. 5 sweeps b/B on the cheap model => many train_step sizes.
+    "mlp_cifar10": ArtifactPlan("mlp_cifar10", (4, 8, 16, 32, 64, 128), (128,), (256,)),
+    "cnn_small_c10": ArtifactPlan("cnn_small_c10", (32, 128), (128,), (256,)),
+    "cnn_small_c100": ArtifactPlan("cnn_small_c100", (32, 128), (128,), (256,)),
+    "cnn_deep_c100": ArtifactPlan("cnn_deep_c100", (64, 128), (128,), (256,)),
+    "txf_cls": ArtifactPlan("txf_cls", (16, 64), (64,), (128,)),
+    "txf_nlu": ArtifactPlan("txf_nlu", (16, 64), (64,), (128,)),
+    "txf_lm": ArtifactPlan("txf_lm", (8, 32), (32,), (32,)),
+    "txf_lm_large": ArtifactPlan("txf_lm_large", (4, 16), (16,), (16,)),
+    "mae_mlp": ArtifactPlan("mae_mlp", (64, 256), (256,), (256,)),
+}
+
+# A fast subset for `make artifacts QUICK=1` / CI-style smoke runs.
+QUICK_MODELS = ("mlp_cifar10",)
+
+ES_UPDATE_BLOCK = 4096  # rust chunks score tables through this size
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(fn, *arg_specs) -> str:
+    """jit → lower → stablehlo → XlaComputation → HLO text."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype(name):
+    return {"f32": jnp.float32, "i32": jnp.int32}[name]
+
+
+def _write(out_dir: str, name: str, text: str, verbose: bool) -> str:
+    fname = f"{name}.hlo.txt"
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    if verbose:
+        print(f"  wrote {fname} ({len(text) / 1024:.0f} KiB)")
+    return fname
+
+
+def emit_model(model_name: str, out_dir: str, verbose: bool = True) -> dict:
+    """Emit the artifact family for one model; returns its manifest entry."""
+    t0 = time.time()
+    model = M.make_model(model_name)
+    opt = M.DEFAULT_OPTS[model_name]
+    fns = M.build_fns(model, opt)
+    spec = model.spec
+    plan = PLANS[model_name]
+    pc = fns["param_count"]
+
+    pf = _spec((pc,), jnp.float32)
+    seed = _spec((), jnp.int32)
+    scalar = _spec((), jnp.float32)
+    xd = _dtype(spec.x_dtype)
+
+    def xb(n):
+        return _spec(spec.x_batch_shape(n), xd)
+
+    def yb(n):
+        return _spec(spec.y_batch_shape(n), jnp.int32)
+
+    entry = {
+        "kind": spec.kind,
+        "param_count": pc,
+        "classes": spec.classes,
+        "x_shape": list(spec.x_shape),
+        "x_dtype": spec.x_dtype,
+        "y_shape": list(spec.y_shape),
+        "flops_per_sample_fwd": spec.flops_per_sample_fwd,
+        "optimizer": opt.kind,
+        "artifacts": {"train_step": {}, "loss_fwd": {}, "eval_step": {}},
+    }
+
+    entry["artifacts"]["init"] = _write(
+        out_dir, f"{model_name}_init", to_hlo_text(fns["init"], seed), verbose
+    )
+    for b in plan.train_steps:
+        wspec = _spec((b,), jnp.float32)
+        text = to_hlo_text(fns["train_step"], pf, pf, pf, xb(b), yb(b), wspec, scalar, scalar)
+        entry["artifacts"]["train_step"][str(b)] = _write(
+            out_dir, f"{model_name}_train_step_n{b}", text, verbose
+        )
+    for n in plan.loss_fwds:
+        text = to_hlo_text(fns["loss_fwd"], pf, xb(n), yb(n))
+        entry["artifacts"]["loss_fwd"][str(n)] = _write(
+            out_dir, f"{model_name}_loss_fwd_n{n}", text, verbose
+        )
+    for n in plan.evals:
+        text = to_hlo_text(fns["eval_step"], pf, xb(n), yb(n))
+        entry["artifacts"]["eval_step"][str(n)] = _write(
+            out_dir, f"{model_name}_eval_n{n}", text, verbose
+        )
+    if verbose:
+        print(f"  [{model_name}] {pc} params, {time.time() - t0:.1f}s")
+    return entry
+
+
+def emit_es_update(out_dir: str, n: int, verbose: bool = True) -> str:
+    """Emit the standalone L1 dual-EMA table-refresh kernel."""
+    v = _spec((n,), jnp.float32)
+    betas = _spec((2,), jnp.float32)
+
+    def fn(s, w, l, mask, b):
+        return es_update(s, w, l, mask, b)
+
+    return _write(out_dir, f"es_update_n{n}", to_hlo_text(fn, v, v, v, v, betas), verbose)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="all",
+        help="comma-separated model names, 'all', or 'quick'",
+    )
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    if args.models == "all":
+        names = list(PLANS)
+    elif args.models == "quick":
+        names = list(QUICK_MODELS)
+    else:
+        names = [m.strip() for m in args.models.split(",") if m.strip()]
+        unknown = [m for m in names if m not in PLANS]
+        if unknown:
+            sys.exit(f"unknown models: {unknown}; known: {sorted(PLANS)}")
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    verbose = not args.quiet
+    t0 = time.time()
+
+    manifest = {"version": 1, "models": {}, "kernels": {}}
+    for name in names:
+        if verbose:
+            print(f"[aot] lowering {name} ...")
+        manifest["models"][name] = emit_model(name, args.out_dir, verbose)
+
+    manifest["kernels"]["es_update"] = {
+        str(ES_UPDATE_BLOCK): emit_es_update(args.out_dir, ES_UPDATE_BLOCK, verbose)
+    }
+
+    # Merge with any pre-existing manifest so partial emissions (e.g.
+    # `--models quick` after a full build) never drop entries.
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        for k, v in old.get("models", {}).items():
+            manifest["models"].setdefault(k, v)
+        for k, v in old.get("kernels", {}).items():
+            manifest["kernels"].setdefault(k, v)
+
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if verbose:
+        print(f"[aot] manifest: {len(manifest['models'])} models, {time.time() - t0:.1f}s total")
+
+
+if __name__ == "__main__":
+    main()

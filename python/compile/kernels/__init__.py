@@ -1,0 +1,23 @@
+"""L1: Pallas kernels for the compute hot-spots + pure-jnp oracles.
+
+Kernels (interpret=True — see each module's docstring for the TPU story):
+  * ce_loss.cross_entropy      — fused per-sample softmax cross-entropy
+  * attention.flash_attention  — flash-style tiled online-softmax attention
+  * es_update.es_update        — fused dual-EMA score/weight table refresh
+
+Oracles in ref.py; pinned by python/tests/test_kernels.py.
+"""
+
+from compile.kernels.attention import flash_attention, multi_head_attention
+from compile.kernels.ce_loss import cross_entropy, cross_entropy_vjp
+from compile.kernels.es_update import es_update
+from compile.kernels import ref
+
+__all__ = [
+    "flash_attention",
+    "multi_head_attention",
+    "cross_entropy",
+    "cross_entropy_vjp",
+    "es_update",
+    "ref",
+]

@@ -1,0 +1,158 @@
+"""Pallas kernel: flash-style single-head attention (L1 hot-spot).
+
+TPU rethink of the FlashAttention GPU kernel: the GPU version assigns one
+threadblock per (head, q-tile) and stages K/V through shared memory with
+warp-level softmax reductions. On TPU the same insight — never materialize
+the [T, T] score matrix in HBM — maps to:
+
+  * grid over q-tiles; for each q-tile the kernel *loops over k-tiles*
+    with `jax.lax.fori_loop`, streaming K/V tiles HBM→VMEM via the
+    BlockSpec pipeline (double-buffered by Mosaic on real hardware);
+  * the running max `m`, normalizer `l`, and output accumulator live in
+    VMEM scratch for the whole k-sweep (the shared-memory analogue);
+  * q·kᵀ and p·v hit the MXU (f32 here; bf16-ready — the systolic array
+    natively accumulates bf16 inputs in f32);
+  * the online-softmax rescale (`exp(m_old - m_new)`) runs on the VPU.
+
+Causal masking is applied with tile-local iota offsets so fully-masked
+k-tiles still compute (grid shapes must be static); the -inf guard keeps
+them exact zeros after the softmax.
+
+interpret=True for CPU-PJRT execution; see ce_loss.py for why.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int, seq: int, causal: bool):
+    qi = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)  # [block_q, d]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    q = q * scale
+
+    num_k = seq // block_k
+
+    def body(kj, carry):
+        acc, m_prev, l_prev = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...], kj * block_k, block_k, axis=0).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...], kj * block_k, block_k, axis=0).astype(jnp.float32)
+        s = q @ k.T  # MXU: [block_q, block_k]
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Guard: a fully-masked row has m_new == -inf-ish; exp underflows to 0.
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v  # MXU: [block_q, d]
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, num_k, body, (acc0, m0, l0))
+    o_ref[...] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 32,
+    block_k: int = 32,
+) -> jax.Array:
+    """Single-head attention, tiled online-softmax. Drop-in for attention_ref.
+
+    Args:
+      q, k, v: f32[seq, head_dim]; seq must be divisible by the block sizes
+        (aot.py emits power-of-two sequence lengths).
+
+    Returns:
+      f32[seq, head_dim]
+    """
+    seq, d = q.shape
+    block_q = min(block_q, seq)
+    block_k = min(block_k, seq)
+    if seq % block_q != 0 or seq % block_k != 0:
+        block_q = block_k = seq
+    grid = (seq // block_q,)
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, seq=seq, causal=causal
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            # K/V: whole-sequence blocks; the k-sweep slices tiles inside
+            # the kernel (VMEM-resident for the seq lengths we emit —
+            # 128x64 f32 = 32KB; a production TPU kernel would instead
+            # use a 2-D grid with per-(q,k) BlockSpecs + carry semantics).
+            pl.BlockSpec((seq, d), lambda i: (0, 0)),
+            pl.BlockSpec((seq, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((seq, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def multi_head_attention(q, k, v, *, causal: bool = True) -> jax.Array:
+    """vmap of the flash kernel over heads: f32[heads, seq, d] -> same."""
+    return jax.vmap(lambda a, b, c: flash_attention(a, b, c, causal=causal))(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper
+# ---------------------------------------------------------------------------
+#
+# jax cannot JVP through a pallas_call, so the model-facing entry point is a
+# custom_vjp: forward = the flash kernel, backward = the standard attention
+# gradients recomputed from q/k/v (flash-style: nothing from the forward tile
+# sweep is saved to HBM; a production TPU build would kernelize the backward
+# the same way — see DESIGN.md §Hardware-Adaptation).
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention_vjp(q, k, v, causal=True):
+    """Differentiable flash attention; fwd is the Pallas kernel."""
+    return flash_attention(q, k, v, causal=causal)
+
+
+def _attn_fwd(q, k, v, causal):
+    return flash_attention(q, k, v, causal=causal), (q, k, v)
+
+
+def _attn_bwd(causal, res, g):
+    q, k, v = res
+    t, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = (q @ k.T) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)  # [t, t]
+    dv = p.T @ g
+    dp = g @ v.T
+    # softmax backward: ds = p * (dp - rowsum(dp * p))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = (ds @ k) * scale
+    dk = (ds.T @ q) * scale
+    return dq, dk, dv
+
+
+flash_attention_vjp.defvjp(_attn_fwd, _attn_bwd)

@@ -1,0 +1,82 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+pure-`jax.numpy` counterpart here. The pytest suite (python/tests) sweeps
+shapes/dtypes with hypothesis and asserts allclose between kernel and ref.
+These refs are also usable directly by model.py, which lets aot.py emit a
+"reference lowering" of every model for L2-level A/B checks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-sample softmax cross-entropy.
+
+    Args:
+      logits: f32[batch, classes]
+      labels: i32[batch] in [0, classes)
+
+    Returns:
+      f32[batch] — per-sample loss, numerically stabilized log-softmax.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return lse - gold
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Single-head scaled-dot-product attention.
+
+    Args:
+      q, k, v: f32[seq, head_dim]
+      causal: apply a lower-triangular mask.
+
+    Returns:
+      f32[seq, head_dim]
+    """
+    t, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    scores = (q @ k.T) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.asarray(-jnp.inf, scores.dtype))
+    p = jax.nn.softmax(scores, axis=-1)
+    return p @ v
+
+
+def es_update_ref(
+    s: jax.Array,
+    w: jax.Array,
+    losses: jax.Array,
+    mask: jax.Array,
+    beta1,
+    beta2,
+) -> tuple[jax.Array, jax.Array]:
+    """Evolved-Sampling dual-EMA score/weight update (paper Eq. 3.1).
+
+    For masked-in entries (mask == 1):
+        w' = beta1 * s + (1 - beta1) * loss
+        s' = beta2 * s + (1 - beta2) * loss
+    Masked-out entries keep their previous s/w.
+
+    Args:
+      s, w, losses, mask: f32[n]
+      beta1, beta2: scalars in [0, 1]
+
+    Returns:
+      (s', w'): updated f32[n] arrays.
+    """
+    s = s.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    losses = losses.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    new_w = beta1 * s + (1.0 - beta1) * losses
+    new_s = beta2 * s + (1.0 - beta2) * losses
+    return (mask * new_s + (1.0 - mask) * s, mask * new_w + (1.0 - mask) * w)

@@ -1,0 +1,551 @@
+"""L2: JAX model zoo + train/eval step builders (build-time only).
+
+Every workload in the paper's evaluation has a CPU-feasible stand-in here
+(see DESIGN.md §3 for the substitution table):
+
+  * ``mlp``             — dense classifier (CIFAR-scale substitute)
+  * ``cnn``             — small/deep conv nets (ResNet-18/50 substitutes)
+  * ``transformer_cls`` — encoder classifier (ViT-L / ALBERT substitute)
+  * ``transformer_lm``  — decoder LM (Qwen-SFT / pre-training substitute)
+  * ``mae``             — masked autoencoder (MAE ViT-L substitute)
+
+All models expose the same functional surface so aot.py can emit a uniform
+artifact family and the rust runtime can stay model-agnostic:
+
+  init_params(key) -> pytree
+  per_sample_loss(params, x, y) -> f32[batch]
+  metrics(params, x, y) -> (losses f32[batch], correct f32[batch])
+
+Parameters cross the FFI as a single flat f32 vector (ravel_pytree); the
+unflattener is closed over inside the lowered computation, so the rust side
+only ever sees ``f32[param_count]``.
+
+Compute hot-spots route through the L1 Pallas kernels
+(``kernels.cross_entropy_vjp``, ``kernels.flash_attention``); set
+``use_kernels=False`` to lower a pure-jnp reference variant of the same
+model (used for L2 A/B checks in python/tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from compile.kernels import ref
+from compile.kernels.attention import flash_attention_vjp
+from compile.kernels.ce_loss import cross_entropy_vjp
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, n_in, n_out):
+    """He-normal weight + zero bias."""
+    wkey, _ = jax.random.split(key)
+    std = jnp.sqrt(2.0 / n_in)
+    return {
+        "w": jax.random.normal(wkey, (n_in, n_out), jnp.float32) * std,
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _layernorm(x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+# ---------------------------------------------------------------------------
+# Model definitions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one model variant (mirrors manifest.json)."""
+
+    name: str
+    kind: str  # mlp | cnn | transformer_cls | transformer_lm | mae
+    x_shape: tuple[int, ...]  # per-sample input shape
+    x_dtype: str  # "f32" | "i32"
+    y_shape: tuple[int, ...]  # per-sample label shape (() scalar for cls)
+    classes: int
+    flops_per_sample_fwd: int  # analytic FP cost (for the L3 cost model)
+
+    def x_batch_shape(self, n):
+        return (n, *self.x_shape)
+
+    def y_batch_shape(self, n):
+        return (n, *self.y_shape)
+
+
+class Mlp:
+    """Dense classifier over flat features."""
+
+    def __init__(self, name, in_dim, hidden, classes, use_kernels=True):
+        self.in_dim, self.hidden, self.classes = in_dim, tuple(hidden), classes
+        self.use_kernels = use_kernels
+        dims = [in_dim, *hidden, classes]
+        flops = sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+        self.spec = ModelSpec(name, "mlp", (in_dim,), "f32", (), classes, flops)
+
+    def init_params(self, key):
+        dims = [self.in_dim, *self.hidden, self.classes]
+        keys = jax.random.split(key, len(dims) - 1)
+        return [_dense_init(k, a, b) for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+    def logits(self, params, x):
+        h = x
+        for layer in params[:-1]:
+            h = jax.nn.relu(_dense(layer, h))
+        return _dense(params[-1], h)
+
+    def per_sample_loss(self, params, x, y):
+        logits = self.logits(params, x)
+        if self.use_kernels:
+            return cross_entropy_vjp(logits, y)
+        return ref.cross_entropy_ref(logits, y)
+
+    def metrics(self, params, x, y):
+        logits = self.logits(params, x)
+        losses = ref.cross_entropy_ref(logits, y)
+        correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        return losses, correct
+
+
+class Cnn:
+    """Small conv classifier on 32x32x3 images passed as flat f32[3072].
+
+    conv(3x3) → relu → avgpool(2) per stage, then a dense head. The
+    ResNet-18/50 substitutes use 2 and 3 stages respectively.
+    """
+
+    def __init__(self, name, channels, classes, use_kernels=True, image=32):
+        self.channels = tuple(channels)
+        self.classes = classes
+        self.image = image
+        self.use_kernels = use_kernels
+        # FLOPs: conv = 2 * H*W*Cin*Cout*9 per stage (H,W halve per stage).
+        flops, hw, cin = 0, image, 3
+        for cout in self.channels:
+            flops += 2 * hw * hw * cin * cout * 9
+            hw //= 2
+            cin = cout
+        feat = hw * hw * self.channels[-1]
+        flops += 2 * feat * classes
+        self._feat = feat
+        self.spec = ModelSpec(name, "cnn", (image * image * 3,), "f32", (), classes, flops)
+
+    def init_params(self, key):
+        keys = jax.random.split(key, len(self.channels) + 1)
+        params = []
+        cin = 3
+        for k, cout in zip(keys[:-1], self.channels):
+            std = jnp.sqrt(2.0 / (9 * cin))
+            params.append(
+                {
+                    "w": jax.random.normal(k, (3, 3, cin, cout), jnp.float32) * std,
+                    "b": jnp.zeros((cout,), jnp.float32),
+                }
+            )
+            cin = cout
+        params.append(_dense_init(keys[-1], self._feat, self.classes))
+        return params
+
+    def logits(self, params, x):
+        n = x.shape[0]
+        h = x.reshape(n, self.image, self.image, 3)
+        for layer in params[:-1]:
+            h = jax.lax.conv_general_dilated(
+                h,
+                layer["w"],
+                window_strides=(1, 1),
+                padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            h = jax.nn.relu(h + layer["b"])
+            h = jax.lax.reduce_window(
+                h, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            ) / 4.0
+        return _dense(params[-1], h.reshape(n, -1))
+
+    def per_sample_loss(self, params, x, y):
+        logits = self.logits(params, x)
+        if self.use_kernels:
+            return cross_entropy_vjp(logits, y)
+        return ref.cross_entropy_ref(logits, y)
+
+    def metrics(self, params, x, y):
+        logits = self.logits(params, x)
+        losses = ref.cross_entropy_ref(logits, y)
+        correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        return losses, correct
+
+
+class Transformer:
+    """Decoder-only transformer; LM and classifier heads share the trunk.
+
+    Layers are stacked (params have a leading [layers] axis) and walked
+    with lax.scan so the lowered HLO stays compact at any depth.
+    """
+
+    def __init__(
+        self,
+        name,
+        vocab,
+        d_model,
+        layers,
+        heads,
+        seq,
+        classes=0,
+        causal=True,
+        use_kernels=True,
+    ):
+        assert d_model % heads == 0
+        self.vocab, self.d, self.layers, self.heads, self.seq = vocab, d_model, layers, heads, seq
+        self.classes = classes  # 0 => LM head (tied embedding)
+        self.causal = causal
+        self.use_kernels = use_kernels
+        d, t = d_model, seq
+        per_layer = 2 * t * (4 * d * d) + 2 * t * (2 * d * 4 * d) + 2 * t * t * d * 2
+        head = 2 * t * d * (classes if classes else vocab)
+        kind = "transformer_cls" if classes else "transformer_lm"
+        y_shape = () if classes else (seq,)
+        self.spec = ModelSpec(
+            name,
+            kind,
+            (seq,),
+            "i32",
+            y_shape,
+            classes if classes else vocab,
+            layers * per_layer + head,
+        )
+
+    def init_params(self, key):
+        keys = jax.random.split(key, 8)
+        d, L = self.d, self.layers
+        scale = 0.02
+
+        def stack(k, shape):
+            return jax.random.normal(k, (L, *shape), jnp.float32) * scale
+
+        params = {
+            "embed": jax.random.normal(keys[0], (self.vocab, d), jnp.float32) * scale,
+            "pos": jax.random.normal(keys[1], (self.seq, d), jnp.float32) * scale,
+            "qkv": stack(keys[2], (d, 3 * d)),
+            "proj": stack(keys[3], (d, d)),
+            "fc1": stack(keys[4], (d, 4 * d)),
+            "fc1_b": jnp.zeros((L, 4 * d), jnp.float32),
+            "fc2": stack(keys[5], (4 * d, d)),
+            "fc2_b": jnp.zeros((L, d), jnp.float32),
+        }
+        if self.classes:
+            params["head"] = _dense_init(keys[6], d, self.classes)
+        return params
+
+    def _attention(self, q, k, v):
+        """q,k,v: [heads, seq, hd] -> [heads, seq, hd]."""
+        if self.use_kernels:
+            return jax.vmap(lambda a, b, c: flash_attention_vjp(a, b, c, self.causal))(q, k, v)
+        return jax.vmap(lambda a, b, c: ref.attention_ref(a, b, c, causal=self.causal))(q, k, v)
+
+    def trunk(self, params, tokens):
+        """tokens: i32[n, seq] -> activations f32[n, seq, d]."""
+        h = params["embed"][tokens] + params["pos"][None, :, :]
+        hd = self.d // self.heads
+
+        def layer(h, lp):
+            x = _layernorm(h)
+            qkv = x @ lp["qkv"]  # [n, t, 3d]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+
+            def split_heads(a):
+                n, t, _ = a.shape
+                return a.reshape(n, t, self.heads, hd).transpose(0, 2, 1, 3)
+
+            q, k, v = split_heads(q), split_heads(k), split_heads(v)
+            o = jax.vmap(self._attention)(q, k, v)  # [n, heads, t, hd]
+            n, _, t, _ = o.shape
+            o = o.transpose(0, 2, 1, 3).reshape(n, t, self.d)
+            h = h + o @ lp["proj"]
+            x = _layernorm(h)
+            x = jax.nn.gelu(x @ lp["fc1"] + lp["fc1_b"])
+            h = h + x @ lp["fc2"] + lp["fc2_b"]
+            return h, None
+
+        layer_params = {
+            k: params[k] for k in ("qkv", "proj", "fc1", "fc1_b", "fc2", "fc2_b")
+        }
+        h, _ = jax.lax.scan(layer, h, layer_params)
+        return _layernorm(h)
+
+    # -- LM head ---------------------------------------------------------
+    def lm_logits(self, params, tokens):
+        h = self.trunk(params, tokens)
+        return h @ params["embed"].T  # tied embedding
+
+    def _token_ce(self, logits2d, labels1d):
+        if self.use_kernels:
+            return cross_entropy_vjp(logits2d, labels1d)
+        return ref.cross_entropy_ref(logits2d, labels1d)
+
+    def per_sample_loss(self, params, x, y):
+        if self.classes:
+            logits = self.cls_logits(params, x)
+            return self._token_ce(logits, y)
+        n = x.shape[0]
+        logits = self.lm_logits(params, x).reshape(n * self.seq, self.vocab)
+        tok_loss = self._token_ce(logits, y.reshape(n * self.seq))
+        return tok_loss.reshape(n, self.seq).mean(axis=-1)
+
+    # -- classifier head --------------------------------------------------
+    def cls_logits(self, params, tokens):
+        h = self.trunk(params, tokens)
+        pooled = h.mean(axis=1)
+        return _dense(params["head"], pooled)
+
+    def metrics(self, params, x, y):
+        if self.classes:
+            logits = self.cls_logits(params, x)
+            losses = ref.cross_entropy_ref(logits, y)
+            correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+            return losses, correct
+        n = x.shape[0]
+        logits = self.lm_logits(params, x)
+        flat = ref.cross_entropy_ref(
+            logits.reshape(n * self.seq, self.vocab), y.reshape(n * self.seq)
+        )
+        losses = flat.reshape(n, self.seq).mean(axis=-1)
+        correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32).mean(axis=-1)
+        return losses, correct
+
+
+class Mae:
+    """MLP masked autoencoder over patch grids (MAE ViT-L substitute).
+
+    Input images arrive as flat f32[in_dim]; they are cut into ``patches``
+    patches of ``patch_dim`` features. A per-step pseudo-random mask hides
+    ``mask_ratio`` of the patches; the encoder sees masked input, the
+    decoder reconstructs everything, and the per-sample loss is the MSE on
+    the *masked* patches only (the paper's reconstruction loss).
+    """
+
+    def __init__(self, name, in_dim, patches, enc_dim, dec_dim, mask_ratio=0.5):
+        assert in_dim % patches == 0
+        self.in_dim, self.patches = in_dim, patches
+        self.patch_dim = in_dim // patches
+        self.enc_dim, self.dec_dim, self.mask_ratio = enc_dim, dec_dim, mask_ratio
+        flops = 2 * in_dim * enc_dim + 2 * enc_dim * dec_dim + 2 * dec_dim * in_dim
+        self.spec = ModelSpec(name, "mae", (in_dim,), "f32", (), 0, flops)
+
+    def init_params(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "enc1": _dense_init(k1, self.patch_dim, self.enc_dim),
+            "enc2": _dense_init(k2, self.enc_dim, self.enc_dim),
+            "dec1": _dense_init(k3, self.enc_dim, self.dec_dim),
+            "dec2": _dense_init(k4, self.dec_dim, self.patch_dim),
+        }
+
+    def _mask(self, step, n):
+        """Deterministic pseudo-random patch mask [n, patches] from the step."""
+        key = jax.random.fold_in(jax.random.PRNGKey(17), step.astype(jnp.int32))
+        u = jax.random.uniform(key, (n, self.patches))
+        return (u < self.mask_ratio).astype(jnp.float32)  # 1 = hidden
+
+    def per_sample_loss(self, params, x, y, step=None):
+        if step is None:
+            step = jnp.int32(0)
+        n = x.shape[0]
+        patches = x.reshape(n, self.patches, self.patch_dim)
+        mask = self._mask(step, n)  # [n, p]
+        visible = patches * (1.0 - mask)[..., None]
+        h = jax.nn.relu(_dense(params["enc1"], visible))
+        h = jax.nn.relu(_dense(params["enc2"], h))
+        h = jax.nn.relu(_dense(params["dec1"], h))
+        recon = _dense(params["dec2"], h)
+        se = jnp.mean((recon - patches) ** 2, axis=-1)  # [n, p]
+        denom = jnp.maximum(mask.sum(axis=-1), 1.0)
+        return (se * mask).sum(axis=-1) / denom
+
+    def metrics(self, params, x, y):
+        losses = self.per_sample_loss(params, x, y, step=jnp.int32(1))
+        return losses, jnp.zeros_like(losses)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers over flat vectors
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OptSpec:
+    kind: str  # "sgdm" | "adamw"
+    momentum: float = 0.9
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+def apply_optimizer(opt: OptSpec, flat, m, v, grads, lr, step):
+    """One optimizer update over flat f32 vectors.
+
+    Returns (flat', m', v'). SGD-momentum uses the ``m`` slot only and
+    passes ``v`` through untouched, so every train_step artifact has the
+    same arity regardless of optimizer.
+    """
+    if opt.kind == "sgdm":
+        g = grads + opt.weight_decay * flat
+        m_new = opt.momentum * m + g
+        return flat - lr * m_new, m_new, v
+    if opt.kind == "adamw":
+        m_new = opt.beta1 * m + (1 - opt.beta1) * grads
+        v_new = opt.beta2 * v + (1 - opt.beta2) * grads * grads
+        t = step + 1.0
+        mhat = m_new / (1 - opt.beta1**t)
+        vhat = v_new / (1 - opt.beta2**t)
+        upd = mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * flat
+        return flat - lr * upd, m_new, v_new
+    raise ValueError(f"unknown optimizer {opt.kind}")
+
+
+# ---------------------------------------------------------------------------
+# Step builders (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+# Global-norm gradient clip applied in every train_step artifact.
+GRAD_CLIP_NORM = 5.0
+
+
+def build_fns(model, opt: OptSpec, seed: int = 0):
+    """Build the uniform artifact function family for ``model``.
+
+    Returns a dict of pure functions, each returning a tuple (lowered with
+    return_tuple=True for the rust side):
+
+      init:       (seed i32)                               -> (flat,)
+      loss_fwd:   (flat, x, y)                             -> (losses,)
+      train_step: (flat, m, v, x, y, wts, lr, step)        -> (flat', m', v',
+                                                               losses, mean)
+      eval_step:  (flat, x, y)                             -> (losses, correct)
+    """
+    template = model.init_params(jax.random.PRNGKey(seed))
+    flat0, unravel = ravel_pytree(template)
+    param_count = flat0.shape[0]
+
+    is_mae = isinstance(model, Mae)
+
+    def _tie_y(losses, y):
+        # Unsupervised models (MAE) ignore labels; keep `y` in the graph
+        # anyway so every artifact family has identical parameter arity
+        # (jax prunes unused parameters from the lowered module).
+        return losses + 0.0 * y.reshape(y.shape[0], -1)[:, 0].astype(jnp.float32)
+
+    def _losses(flat, x, y, step):
+        params = unravel(flat)
+        if is_mae:
+            return _tie_y(model.per_sample_loss(params, x, y, step=step.astype(jnp.int32)), y)
+        return model.per_sample_loss(params, x, y)
+
+    def init(seed_scalar):
+        params = model.init_params(jax.random.PRNGKey(seed_scalar))
+        flat, _ = ravel_pytree(params)
+        return (flat,)
+
+    def loss_fwd(flat, x, y):
+        return (_losses(flat, x, y, jnp.float32(0)),)
+
+    def train_step(flat, m, v, x, y, weights, lr, step):
+        # Keep `step` in the graph even for optimizers that ignore it, so
+        # every train_step artifact has the same 8-parameter signature
+        # (jax prunes unused parameters from the lowered module otherwise).
+        lr = lr + 0.0 * step
+
+        def objective(f):
+            losses = _losses(f, x, y, step)
+            wsum = jnp.maximum(weights.sum(), 1e-12)
+            return (weights * losses).sum() / wsum, losses
+
+        (mean_loss, losses), grads = jax.value_and_grad(objective, has_aux=True)(flat)
+        # Global-norm gradient clipping. Selection-heavy samplers repeatedly
+        # concentrate BP on the hardest/noisiest samples, which can spiral
+        # SGD-momentum; a high threshold leaves normal training untouched
+        # while keeping every method in the stable regime (DESIGN.md §3).
+        gnorm = jnp.sqrt(jnp.sum(grads * grads))
+        grads = grads * jnp.minimum(1.0, GRAD_CLIP_NORM / jnp.maximum(gnorm, 1e-12))
+        flat2, m2, v2 = apply_optimizer(opt, flat, m, v, grads, lr, step)
+        return flat2, m2, v2, losses, mean_loss
+
+    def eval_step(flat, x, y):
+        params = unravel(flat)
+        losses, correct = model.metrics(params, x, y)
+        if is_mae:
+            losses = _tie_y(losses, y)
+        return losses, correct
+
+    return {
+        "init": init,
+        "loss_fwd": loss_fwd,
+        "train_step": train_step,
+        "eval_step": eval_step,
+        "param_count": param_count,
+        "flat0": flat0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Registry (names referenced by aot.py and the rust config presets)
+# ---------------------------------------------------------------------------
+
+
+def make_model(name: str, use_kernels: bool = True):
+    """Factory for every model variant shipped in the artifact set."""
+    k = dict(use_kernels=use_kernels)
+    registry: dict[str, Callable[[], object]] = {
+        # CIFAR-scale classifiers (Table 2).
+        "mlp_cifar10": lambda: Mlp("mlp_cifar10", 3072, (256, 128), 10, **k),
+        "cnn_small_c10": lambda: Cnn("cnn_small_c10", (16, 32), 10, **k),
+        "cnn_small_c100": lambda: Cnn("cnn_small_c100", (16, 32), 100, **k),
+        "cnn_deep_c100": lambda: Cnn("cnn_deep_c100", (32, 64, 128), 100, **k),
+        # ViT-L fine-tune substitute (Table 3) + GLUE substitute (Table 5).
+        "txf_cls": lambda: Transformer(
+            "txf_cls", 512, 128, 2, 4, 64, classes=16, causal=False, **k
+        ),
+        "txf_nlu": lambda: Transformer(
+            "txf_nlu", 512, 96, 2, 4, 48, classes=4, causal=False, **k
+        ),
+        # LM for SFT / end-to-end pre-training (Fig. 4, e2e example).
+        "txf_lm": lambda: Transformer("txf_lm", 1024, 128, 4, 4, 64, classes=0, **k),
+        "txf_lm_large": lambda: Transformer(
+            "txf_lm_large", 4096, 256, 6, 8, 128, classes=0, **k
+        ),
+        # MAE pre-training substitute (Table 4 / Fig. 3).
+        "mae_mlp": lambda: Mae("mae_mlp", 3072, 64, 192, 128, mask_ratio=0.5),
+    }
+    if name not in registry:
+        raise KeyError(f"unknown model {name!r}; known: {sorted(registry)}")
+    return registry[name]()
+
+
+DEFAULT_OPTS = {
+    "mlp_cifar10": OptSpec("sgdm", momentum=0.9, weight_decay=5e-4),
+    "cnn_small_c10": OptSpec("sgdm", momentum=0.9, weight_decay=5e-4),
+    "cnn_small_c100": OptSpec("sgdm", momentum=0.9, weight_decay=5e-4),
+    "cnn_deep_c100": OptSpec("sgdm", momentum=0.9, weight_decay=5e-4),
+    "txf_cls": OptSpec("adamw", weight_decay=0.01),
+    "txf_nlu": OptSpec("adamw", weight_decay=0.01),
+    "txf_lm": OptSpec("adamw", weight_decay=0.01),
+    "txf_lm_large": OptSpec("adamw", weight_decay=0.01),
+    "mae_mlp": OptSpec("adamw", weight_decay=0.05),
+}

@@ -1,0 +1,96 @@
+"""AOT emission smoke tests: HLO text artifacts parse-ably emitted,
+manifest is consistent with the model registry, and the HLO interchange
+constraints (text format, tuple root, parameter arity) hold.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_plan_covers_registry():
+    """Every plan references a registered model and vice versa."""
+    assert set(aot.PLANS) == set(M.DEFAULT_OPTS)
+    for name in aot.PLANS:
+        M.make_model(name)  # must not raise
+
+
+def test_to_hlo_text_shape():
+    """Emitted text is real HLO: module header + tuple-rooted ENTRY."""
+    fn = lambda x: (x * 2 + 1,)
+    text = aot.to_hlo_text(fn, jax.ShapeDtypeStruct((4,), jnp.float32))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True => root is a tuple (what rust's to_tuple expects)
+    assert "tuple(" in text
+
+
+def test_train_step_arity():
+    """train_step lowers with exactly 8 parameters (rust contract)."""
+    model = M.make_model("mlp_cifar10")
+    fns = M.build_fns(model, M.DEFAULT_OPTS["mlp_cifar10"])
+    pc = fns["param_count"]
+    f32, i32 = jnp.float32, jnp.int32
+    specs = [
+        jax.ShapeDtypeStruct((pc,), f32),
+        jax.ShapeDtypeStruct((pc,), f32),
+        jax.ShapeDtypeStruct((pc,), f32),
+        jax.ShapeDtypeStruct((8, 3072), f32),
+        jax.ShapeDtypeStruct((8,), i32),
+        jax.ShapeDtypeStruct((8,), f32),
+        jax.ShapeDtypeStruct((), f32),
+        jax.ShapeDtypeStruct((), f32),
+    ]
+    text = aot.to_hlo_text(fns["train_step"], *specs)
+    for i in range(8):
+        assert f"parameter({i})" in text
+    assert "parameter(8)" not in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestEmittedManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_files_exist(self, manifest):
+        for name, entry in manifest["models"].items():
+            arts = entry["artifacts"]
+            files = [arts["init"]]
+            for group in ("train_step", "loss_fwd", "eval_step"):
+                files.extend(arts[group].values())
+            for fname in files:
+                path = os.path.join(ART_DIR, fname)
+                assert os.path.exists(path), f"{name}: missing {fname}"
+                with open(path) as f:
+                    head = f.read(64)
+                assert head.startswith("HloModule"), f"{name}: {fname} not HLO text"
+
+    def test_param_counts_match_registry(self, manifest):
+        for name, entry in manifest["models"].items():
+            model = M.make_model(name)
+            fns = M.build_fns(model, M.DEFAULT_OPTS[name])
+            assert entry["param_count"] == fns["param_count"]
+
+    def test_es_update_kernel_present(self, manifest):
+        ks = manifest["kernels"]["es_update"]
+        assert str(aot.ES_UPDATE_BLOCK) in ks
+        assert os.path.exists(os.path.join(ART_DIR, ks[str(aot.ES_UPDATE_BLOCK)]))
+
+    def test_flops_estimates_positive(self, manifest):
+        for name, entry in manifest["models"].items():
+            assert entry["flops_per_sample_fwd"] > 0, name

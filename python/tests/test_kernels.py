@@ -1,0 +1,232 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes/dtypes/value ranges; each kernel must match its
+reference to float32 tolerance on every draw. These tests are the core
+correctness signal for everything the rust runtime executes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.attention import flash_attention, flash_attention_vjp
+from compile.kernels.ce_loss import cross_entropy, cross_entropy_vjp
+from compile.kernels.es_update import es_update
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(deadline=None, max_examples=25, derandomize=True)
+
+
+def _key(seed):
+    return jax.random.PRNGKey(seed)
+
+
+# ---------------------------------------------------------------------------
+# cross_entropy
+# ---------------------------------------------------------------------------
+
+
+class TestCrossEntropy:
+    @hypothesis.given(
+        batch=st.sampled_from([1, 3, 8, 16, 40, 64]),
+        classes=st.sampled_from([2, 10, 100, 257, 1024]),
+        seed=st.integers(0, 2**16),
+        scale=st.sampled_from([0.1, 1.0, 10.0]),
+    )
+    @hypothesis.settings(**SETTINGS)
+    def test_matches_ref(self, batch, classes, seed, scale):
+        k1, k2 = jax.random.split(_key(seed))
+        logits = jax.random.normal(k1, (batch, classes)) * scale
+        labels = jax.random.randint(k2, (batch,), 0, classes)
+        got = cross_entropy(logits, labels)
+        want = ref.cross_entropy_ref(logits, labels)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_extreme_logits_stable(self):
+        """Large logits must not overflow (log-sum-exp stabilization)."""
+        logits = jnp.array([[1000.0, 0.0], [-1000.0, 0.0], [0.0, 0.0]])
+        labels = jnp.array([0, 1, 0])
+        got = cross_entropy(logits, labels)
+        assert np.all(np.isfinite(got))
+        want = ref.cross_entropy_ref(logits, labels)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_correct_class_low_loss(self):
+        logits = jnp.eye(4) * 20.0
+        labels = jnp.arange(4)
+        got = cross_entropy(logits, labels)
+        assert np.all(np.asarray(got) < 1e-3)
+
+    def test_loss_nonnegative(self):
+        k = _key(3)
+        logits = jax.random.normal(k, (32, 10)) * 3
+        labels = jax.random.randint(k, (32,), 0, 10)
+        assert np.all(np.asarray(cross_entropy(logits, labels)) >= -1e-6)
+
+    @hypothesis.given(seed=st.integers(0, 2**16))
+    @hypothesis.settings(**SETTINGS)
+    def test_vjp_matches_autodiff_of_ref(self, seed):
+        """Hand-written backward == autodiff of the reference."""
+        k1, k2 = jax.random.split(_key(seed))
+        logits = jax.random.normal(k1, (8, 16))
+        labels = jax.random.randint(k2, (8,), 0, 16)
+
+        g_kernel = jax.grad(lambda l: cross_entropy_vjp(l, labels).sum())(logits)
+        g_ref = jax.grad(lambda l: ref.cross_entropy_ref(l, labels).sum())(logits)
+        np.testing.assert_allclose(g_kernel, g_ref, rtol=1e-4, atol=1e-5)
+
+    def test_ragged_batch_fallback(self):
+        """Non-multiple-of-8 batches take the single-tile fallback."""
+        logits = jax.random.normal(_key(0), (13, 7))
+        labels = jax.random.randint(_key(1), (13,), 0, 7)
+        np.testing.assert_allclose(
+            cross_entropy(logits, labels),
+            ref.cross_entropy_ref(logits, labels),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+class TestFlashAttention:
+    @hypothesis.given(
+        seq=st.sampled_from([8, 32, 64, 128]),
+        dim=st.sampled_from([8, 16, 32, 64]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    @hypothesis.settings(**SETTINGS)
+    def test_matches_ref(self, seq, dim, causal, seed):
+        ks = jax.random.split(_key(seed), 3)
+        q, k, v = (jax.random.normal(kk, (seq, dim)) for kk in ks)
+        got = flash_attention(q, k, v, causal=causal)
+        want = ref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_ragged_seq_fallback(self):
+        ks = jax.random.split(_key(7), 3)
+        q, k, v = (jax.random.normal(kk, (24, 16)) for kk in ks)
+        got = flash_attention(q, k, v, causal=True)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_first_token_attends_to_itself(self):
+        """Causal row 0 can only see k[0], so out[0] == v[0]."""
+        ks = jax.random.split(_key(9), 3)
+        q, k, v = (jax.random.normal(kk, (32, 8)) for kk in ks)
+        got = flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got[0], v[0], rtol=1e-5, atol=1e-5)
+
+    def test_uniform_values_passthrough(self):
+        """If all v rows are equal, attention output equals that row."""
+        ks = jax.random.split(_key(11), 2)
+        q, k = (jax.random.normal(kk, (16, 8)) for kk in ks)
+        v = jnp.ones((16, 8)) * 3.5
+        got = flash_attention(q, k, v, causal=False)
+        np.testing.assert_allclose(got, v, rtol=1e-5, atol=1e-5)
+
+    @hypothesis.given(seed=st.integers(0, 2**16))
+    @hypothesis.settings(**SETTINGS)
+    def test_vjp_matches_autodiff_of_ref(self, seed):
+        ks = jax.random.split(_key(seed), 3)
+        q, k, v = (jax.random.normal(kk, (16, 8)) for kk in ks)
+
+        def loss_kernel(q, k, v):
+            return (flash_attention_vjp(q, k, v, True) ** 2).sum()
+
+        def loss_ref(q, k, v):
+            return (ref.attention_ref(q, k, v, causal=True) ** 2).sum()
+
+        gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# es_update
+# ---------------------------------------------------------------------------
+
+
+class TestEsUpdate:
+    @hypothesis.given(
+        n=st.sampled_from([16, 1024, 4096, 8192, 10000]),
+        beta1=st.sampled_from([0.0, 0.2, 0.5, 0.9, 1.0]),
+        beta2=st.sampled_from([0.0, 0.8, 0.9, 1.0]),
+        seed=st.integers(0, 2**16),
+    )
+    @hypothesis.settings(**SETTINGS)
+    def test_matches_ref(self, n, beta1, beta2, seed):
+        ks = jax.random.split(_key(seed), 4)
+        s = jax.random.uniform(ks[0], (n,))
+        w = jax.random.uniform(ks[1], (n,))
+        l = jax.random.uniform(ks[2], (n,)) * 5
+        mask = (jax.random.uniform(ks[3], (n,)) > 0.5).astype(jnp.float32)
+        s2, w2 = es_update(s, w, l, mask, jnp.array([beta1, beta2]))
+        sr, wr = ref.es_update_ref(s, w, l, mask, beta1, beta2)
+        np.testing.assert_allclose(s2, sr, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(w2, wr, rtol=1e-6, atol=1e-6)
+
+    def test_masked_out_entries_unchanged(self):
+        n = 64
+        s = jnp.arange(n, dtype=jnp.float32)
+        w = jnp.arange(n, dtype=jnp.float32) * 2
+        l = jnp.ones((n,)) * 100
+        mask = jnp.zeros((n,))
+        s2, w2 = es_update(s, w, l, mask, jnp.array([0.2, 0.9]))
+        np.testing.assert_array_equal(s2, s)
+        np.testing.assert_array_equal(w2, w)
+
+    def test_beta_zero_reduces_to_loss_sampling(self):
+        """β1=β2=0 ⇒ w'=s'=loss (paper Eq. 2.3 degenerate case)."""
+        n = 32
+        ks = jax.random.split(_key(5), 3)
+        s, w = jax.random.uniform(ks[0], (n,)), jax.random.uniform(ks[1], (n,))
+        l = jax.random.uniform(ks[2], (n,)) * 3
+        s2, w2 = es_update(s, w, l, jnp.ones((n,)), jnp.array([0.0, 0.0]))
+        np.testing.assert_allclose(s2, l, atol=1e-7)
+        np.testing.assert_allclose(w2, l, atol=1e-7)
+
+    def test_beta_one_freezes(self):
+        """β1=β2=1 ⇒ w'=s'=s (standard sampling w/ frozen uniform init)."""
+        n = 32
+        ks = jax.random.split(_key(6), 3)
+        s, w = jax.random.uniform(ks[0], (n,)), jax.random.uniform(ks[1], (n,))
+        l = jax.random.uniform(ks[2], (n,)) * 3
+        s2, w2 = es_update(s, w, l, jnp.ones((n,)), jnp.array([1.0, 1.0]))
+        np.testing.assert_allclose(s2, s, atol=1e-7)
+        np.testing.assert_allclose(w2, s, atol=1e-7)
+
+    def test_recursion_matches_explicit_expansion(self):
+        """Prop. 3.1 / Eq. 3.2: the recursion equals the explicit sum of
+        discounted losses + discounted loss differences + O(β2^t)."""
+        rng = np.random.default_rng(0)
+        t_max, b1, b2 = 30, 0.2, 0.9
+        losses = rng.uniform(0.1, 4.0, size=t_max + 1)
+        s = 1.0 / 8
+        s_hist = [s]
+        w = None
+        for t in range(1, t_max + 1):
+            w = b1 * s + (1 - b1) * losses[t]
+            s = b2 * s + (1 - b2) * losses[t]
+            s_hist.append(s)
+        # Explicit Eq. 3.2 expansion.
+        term1 = (1 - b2) * sum(b2 ** (t_max - k) * losses[k] for k in range(1, t_max + 1))
+        term2 = (b2 - b1) * sum(
+            b2 ** (t_max - 1 - k) * (losses[k + 1] - losses[k]) for k in range(1, t_max)
+        )
+        # Residual O(β2^t): includes the s(0) and first-loss boundary terms.
+        assert abs(w - (term1 + term2)) < 5 * b2**t_max + 1e-9
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,175 @@
+"""L2 correctness: model zoo shapes, gradients, and kernel-vs-ref parity.
+
+Each model must (a) produce finite per-sample losses of the right shape,
+(b) produce identical losses whether routed through the Pallas kernels or
+the pure-jnp refs, (c) train (loss decreases on a tiny overfit task), and
+(d) keep the uniform train_step contract that the rust runtime assumes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+ALL_MODELS = list(M.DEFAULT_OPTS)
+FAST_MODELS = ["mlp_cifar10", "cnn_small_c10", "txf_nlu", "txf_lm", "mae_mlp"]
+
+
+def _batch(model, n, seed=0):
+    spec = model.spec
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    if spec.x_dtype == "f32":
+        x = jax.random.normal(k1, spec.x_batch_shape(n))
+    else:
+        x = jax.random.randint(k1, spec.x_batch_shape(n), 0, model.vocab)
+    hi = max(spec.classes, 2)
+    y = jax.random.randint(k2, spec.y_batch_shape(n), 0, hi)
+    return x, y
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_loss_shape_and_finite(name):
+    model = M.make_model(name)
+    params = model.init_params(jax.random.PRNGKey(0))
+    x, y = _batch(model, 8)
+    losses = model.per_sample_loss(params, x, y)
+    assert losses.shape == (8,)
+    assert np.all(np.isfinite(np.asarray(losses)))
+    assert np.all(np.asarray(losses) >= -1e-5)
+
+
+@pytest.mark.parametrize("name", FAST_MODELS)
+def test_kernel_vs_ref_model_parity(name):
+    """The same model lowered with kernels and with refs must agree."""
+    mk = M.make_model(name, use_kernels=True)
+    mr = M.make_model(name, use_kernels=False)
+    params = mk.init_params(jax.random.PRNGKey(1))
+    x, y = _batch(mk, 8, seed=1)
+    lk = mk.per_sample_loss(params, x, y)
+    lr = mr.per_sample_loss(params, x, y)
+    np.testing.assert_allclose(lk, lr, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_metrics_contract(name):
+    model = M.make_model(name)
+    params = model.init_params(jax.random.PRNGKey(0))
+    x, y = _batch(model, 8)
+    losses, correct = model.metrics(params, x, y)
+    assert losses.shape == (8,) and correct.shape == (8,)
+    c = np.asarray(correct)
+    assert np.all((c >= 0) & (c <= 1))
+
+
+@pytest.mark.parametrize("name", FAST_MODELS)
+def test_train_step_decreases_loss(name):
+    """A few steps on one fixed batch must overfit it."""
+    model = M.make_model(name)
+    fns = M.build_fns(model, M.DEFAULT_OPTS[name])
+    x, y = _batch(model, 8, seed=2)
+    flat = fns["flat0"]
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    w = jnp.ones((8,))
+    step_fn = jax.jit(fns["train_step"])
+    first = None
+    lr = 1e-2 if M.DEFAULT_OPTS[name].kind == "sgdm" else 1e-3
+    # MAE's per-step mask is derived from `step`; hold it fixed so the
+    # objective is deterministic and the overfit check is meaningful.
+    for i in range(12):
+        step_val = 0 if name == "mae_mlp" else i
+        flat, m, v, losses, mean = step_fn(
+            flat, m, v, x, y, w, jnp.float32(lr), jnp.float32(step_val)
+        )
+        if first is None:
+            first = float(mean)
+    assert float(mean) < first, f"{name}: {first} -> {float(mean)}"
+
+
+@pytest.mark.parametrize("name", FAST_MODELS)
+def test_train_step_losses_are_per_sample(name):
+    """train_step's aux losses equal loss_fwd on the same inputs."""
+    model = M.make_model(name)
+    fns = M.build_fns(model, M.DEFAULT_OPTS[name])
+    x, y = _batch(model, 8, seed=3)
+    flat = fns["flat0"]
+    z = jnp.zeros_like(flat)
+    _, _, _, losses, _ = fns["train_step"](
+        flat, z, z, x, y, jnp.ones((8,)), jnp.float32(0.0), jnp.float32(0.0)
+    )
+    (fwd,) = fns["loss_fwd"](flat, x, y)
+    np.testing.assert_allclose(losses, fwd, rtol=1e-5, atol=1e-6)
+
+
+def test_weighted_step_ignores_zero_weight_samples():
+    """With weight 0, a sample must not influence the gradient."""
+    model = M.make_model("mlp_cifar10")
+    fns = M.build_fns(model, M.DEFAULT_OPTS["mlp_cifar10"])
+    x, y = _batch(model, 8, seed=4)
+    flat = fns["flat0"]
+    z = jnp.zeros_like(flat)
+    w = jnp.array([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+    out_w = fns["train_step"](flat, z, z, x, y, w, jnp.float32(0.1), jnp.float32(0))[0]
+    # Same step with the zero-weight samples replaced by garbage.
+    x2 = x.at[4:].set(jax.random.normal(jax.random.PRNGKey(9), x[4:].shape) * 50)
+    out_g = fns["train_step"](flat, z, z, x2, y, w, jnp.float32(0.1), jnp.float32(0))[0]
+    np.testing.assert_allclose(out_w, out_g, rtol=1e-5, atol=1e-6)
+
+
+def test_init_is_seed_deterministic_and_varies():
+    model = M.make_model("mlp_cifar10")
+    fns = M.build_fns(model, M.DEFAULT_OPTS["mlp_cifar10"])
+    (a,) = fns["init"](jnp.int32(7))
+    (b,) = fns["init"](jnp.int32(7))
+    (c,) = fns["init"](jnp.int32(8))
+    np.testing.assert_array_equal(a, b)
+    assert not np.allclose(a, c)
+
+
+def test_sgdm_vs_adamw_distinct():
+    """Sanity: the two optimizers produce different updates."""
+    flat = jnp.ones((16,))
+    g = jnp.full((16,), 0.5)
+    m = jnp.zeros((16,))
+    v = jnp.zeros((16,))
+    sg = M.apply_optimizer(M.OptSpec("sgdm"), flat, m, v, g, 0.1, 0.0)[0]
+    ad = M.apply_optimizer(M.OptSpec("adamw"), flat, m, v, g, 0.1, 0.0)[0]
+    assert not np.allclose(sg, ad)
+
+
+def test_adamw_bias_correction_first_step():
+    """First AdamW step ≈ lr * sign(g) for small eps."""
+    flat = jnp.zeros((8,))
+    g = jnp.array([1.0, -1, 2, -2, 0.5, -0.5, 3, -3])
+    m = jnp.zeros((8,))
+    v = jnp.zeros((8,))
+    out = M.apply_optimizer(M.OptSpec("adamw", eps=1e-12), flat, m, v, g, 0.1, 0.0)[0]
+    np.testing.assert_allclose(out, -0.1 * np.sign(g), rtol=1e-5, atol=1e-6)
+
+
+def test_mae_mask_determinism_per_step():
+    model = M.make_model("mae_mlp")
+    params = model.init_params(jax.random.PRNGKey(0))
+    x, y = _batch(model, 4)
+    a = model.per_sample_loss(params, x, y, step=jnp.int32(5))
+    b = model.per_sample_loss(params, x, y, step=jnp.int32(5))
+    c = model.per_sample_loss(params, x, y, step=jnp.int32(6))
+    np.testing.assert_array_equal(a, b)
+    assert not np.allclose(a, c)
+
+
+def test_transformer_causal_mask_respected():
+    """Perturbing future tokens must not change earlier LM logits."""
+    model = M.make_model("txf_lm")
+    params = model.init_params(jax.random.PRNGKey(0))
+    x, _ = _batch(model, 2, seed=5)
+    logits_a = model.lm_logits(params, x)
+    x2 = x.at[:, -1].set((x[:, -1] + 1) % model.vocab)
+    logits_b = model.lm_logits(params, x2)
+    np.testing.assert_allclose(
+        logits_a[:, : model.seq - 1], logits_b[:, : model.seq - 1], rtol=2e-4, atol=2e-4
+    )

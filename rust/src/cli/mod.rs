@@ -1,0 +1,100 @@
+//! Minimal CLI argument parser (clap is not available offline).
+//!
+//! Grammar: `evosample <subcommand> [--flag value]... [--switch]...`.
+//! Unknown flags are an error (no silent typo-swallowing).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding argv[0]). `known_switches` take no value.
+    pub fn parse(argv: &[String], known_switches: &[&str]) -> Result<Args, String> {
+        let mut it = argv.iter().peekable();
+        let subcommand = it.next().cloned().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument {arg:?}"));
+            };
+            if known_switches.contains(&name) {
+                switches.push(name.to_string());
+            } else {
+                let val = it
+                    .next()
+                    .ok_or_else(|| format!("flag --{name} needs a value"))?;
+                flags.insert(name.to_string(), val.clone());
+            }
+        }
+        Ok(Args { subcommand, flags, switches })
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn usize_flag(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(&argv("train --config run.toml --full"), &["full"]).unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.flag("config"), Some("run.toml"));
+        assert!(a.has("full"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv("train --config"), &[]).is_err());
+    }
+
+    #[test]
+    fn positional_after_subcommand_is_error() {
+        assert!(Args::parse(&argv("train oops"), &[]).is_err());
+    }
+
+    #[test]
+    fn usize_flag_validates() {
+        let a = Args::parse(&argv("x --n 12"), &[]).unwrap();
+        assert_eq!(a.usize_flag("n").unwrap(), Some(12));
+        let a = Args::parse(&argv("x --n twelve"), &[]).unwrap();
+        assert!(a.usize_flag("n").is_err());
+    }
+
+    #[test]
+    fn empty_argv_gives_help() {
+        let a = Args::parse(&[], &[]).unwrap();
+        assert_eq!(a.subcommand, "help");
+    }
+}

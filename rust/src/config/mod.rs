@@ -1,0 +1,15 @@
+//! Config system: TOML-subset parser, typed schema, experiment presets.
+
+pub mod presets;
+pub mod schema;
+pub mod toml;
+
+pub use schema::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
+pub use toml::Doc;
+
+/// Load a RunConfig from a TOML file path.
+pub fn load(path: &str) -> Result<RunConfig, String> {
+    let src = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let doc = Doc::parse(&src)?;
+    RunConfig::from_doc(&doc)
+}

@@ -1,0 +1,531 @@
+//! Experiment presets: one constructor per paper table/figure.
+//!
+//! Every preset exists at two scales:
+//!   * `Scale::Smoke` — minutes-not-hours sizes used by default in the
+//!     bench targets (`cargo bench`), preserving the workload *shape*
+//!     (who wins, roughly by what factor) rather than absolute numbers.
+//!   * `Scale::Full`  — the paper-faithful substitute sizes, enabled with
+//!     `EVOSAMPLE_BENCH_FULL=1`.
+//!
+//! DESIGN.md §4 maps each preset to the table/figure it regenerates.
+
+use super::schema::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Smoke,
+    Full,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        if std::env::var("EVOSAMPLE_BENCH_FULL").as_deref() == Ok("1") {
+            Scale::Full
+        } else {
+            Scale::Smoke
+        }
+    }
+
+    fn pick(self, smoke: usize, full: usize) -> usize {
+        match self {
+            Scale::Smoke => smoke,
+            Scale::Full => full,
+        }
+    }
+}
+
+/// All eight methods compared in Tab. 2/3 (order matches the paper rows).
+pub fn all_samplers() -> Vec<SamplerConfig> {
+    vec![
+        SamplerConfig::Uniform,
+        SamplerConfig::ucb_default(),
+        SamplerConfig::kakurenbo_default(),
+        SamplerConfig::infobatch_default(),
+        SamplerConfig::Loss,
+        SamplerConfig::Ordered,
+        SamplerConfig::es_default(),
+        SamplerConfig::eswp_default(),
+    ]
+}
+
+fn cifar(n: usize, classes: usize) -> DatasetConfig {
+    DatasetConfig::SynthCifar { n, classes, label_noise: 0.05, hard_frac: 0.2 }
+}
+
+/// Tab. 2: CIFAR-scale classification, 3 workload columns.
+/// Paper: R-18/CIFAR-10, R-18/CIFAR-100, R-50/CIFAR-100 (200 epochs,
+/// B=128/256, b/B=25%/50%, OneCycle SGD). Substitutes per DESIGN.md §3.
+pub fn table2(scale: Scale) -> Vec<RunConfig> {
+    let n = scale.pick(1024, 16384);
+    let epochs = scale.pick(6, 60);
+    let workloads = [
+        ("cifar10_small", "cnn_small_c10", 10usize, 32usize, 128usize, 0.02),
+        ("cifar100_small", "cnn_small_c100", 100, 32, 128, 0.02),
+        ("cifar100_deep", "cnn_deep_c100", 100, 64, 128, 0.02),
+    ];
+    let mut runs = Vec::new();
+    for (wname, model, classes, b, bb, max_lr) in workloads {
+        for s in all_samplers() {
+            let mut cfg = RunConfig::new(
+                &format!("table2/{wname}/{}", s.name()),
+                model,
+                cifar(n, classes),
+            );
+            cfg.epochs = epochs;
+            cfg.meta_batch = bb;
+            cfg.mini_batch = b;
+            cfg.lr = LrSchedule::OneCycle { max_lr, warmup_frac: 0.3 };
+            cfg.test_n = scale.pick(256, 2048);
+            cfg.sampler = s;
+            runs.push(cfg);
+        }
+    }
+    runs
+}
+
+/// Tab. 3: full fine-tuning a large vision transformer (substitute:
+/// txf_cls "pre-trained" via a warmup phase, then fine-tuned per method).
+pub fn table3(scale: Scale) -> Vec<RunConfig> {
+    let n = scale.pick(512, 8192);
+    let epochs = scale.pick(3, 10);
+    all_samplers()
+        .into_iter()
+        .map(|s| {
+            let mut cfg = RunConfig::new(
+                &format!("table3/vit_ft/{}", s.name()),
+                "txf_cls",
+                DatasetConfig::Nlu {
+                    task: "imagenet_ft".into(),
+                    n,
+                    vocab: 512,
+                    seq: 64,
+                    classes: 16,
+                },
+            );
+            cfg.epochs = epochs;
+            cfg.meta_batch = 64;
+            cfg.mini_batch = 16;
+            cfg.lr = LrSchedule::WarmupCosine { base_lr: 2e-4, warmup_frac: 0.1, min_lr: 0.0 };
+            cfg.test_n = scale.pick(256, 1024);
+            cfg.sampler = s;
+            cfg
+        })
+        .collect()
+}
+
+/// Tab. 4 + Fig. 3: MAE pre-training under data-parallel simulation.
+/// Rows: Baseline, InfoBatch, ESWP r=0.3, ESWP r=0.5.
+pub fn table4(scale: Scale) -> Vec<RunConfig> {
+    let n = scale.pick(2048, 16384);
+    let epochs = scale.pick(5, 30);
+    let samplers = vec![
+        ("baseline", SamplerConfig::Uniform),
+        ("infobatch", SamplerConfig::infobatch_default()),
+        (
+            "eswp_r0.3",
+            SamplerConfig::Eswp { beta1: 0.2, beta2: 0.8, anneal_frac: 0.05, prune_ratio: 0.3 },
+        ),
+        (
+            "eswp_r0.5",
+            SamplerConfig::Eswp { beta1: 0.2, beta2: 0.8, anneal_frac: 0.05, prune_ratio: 0.5 },
+        ),
+    ];
+    samplers
+        .into_iter()
+        .map(|(tag, s)| {
+            let mut cfg = RunConfig::new(
+                &format!("table4/mae/{tag}"),
+                "mae_mlp",
+                DatasetConfig::MaeImages { n, dim: 3072 },
+            );
+            cfg.epochs = epochs;
+            // Paper: (B, b) = (256, 256) per GPU — no batch-level selection.
+            cfg.meta_batch = 256;
+            cfg.mini_batch = 256;
+            cfg.workers = 4; // 4 simulated data-parallel workers
+            cfg.lr = LrSchedule::WarmupCosine { base_lr: 1.5e-3, warmup_frac: 0.13, min_lr: 0.0 };
+            cfg.sampler = s;
+            cfg.test_n = scale.pick(256, 1024);
+            cfg
+        })
+        .collect()
+}
+
+/// Tab. 5: the eight GLUE tasks (synthetic NLU substitutes with per-task
+/// difficulty roughly matching the paper's score spread).
+pub const GLUE_TASKS: [(&str, usize); 8] = [
+    ("cola", 2),
+    ("sst2", 2),
+    ("qnli", 2),
+    ("qqp", 2),
+    ("mnli", 3),
+    ("mrpc", 2),
+    ("rte", 2),
+    ("stsb", 4), // regression bucketed to 4 classes
+];
+
+pub fn table5(scale: Scale, samplers: &[SamplerConfig]) -> Vec<RunConfig> {
+    let n = scale.pick(512, 8192);
+    let epochs = scale.pick(3, 15);
+    let mut runs = Vec::new();
+    for (task, classes) in GLUE_TASKS {
+        for s in samplers {
+            let mut cfg = RunConfig::new(
+                &format!("table5/{task}/{}", s.name()),
+                "txf_nlu",
+                DatasetConfig::Nlu { task: task.into(), n, vocab: 512, seq: 48, classes },
+            );
+            cfg.epochs = epochs;
+            cfg.meta_batch = 64;
+            cfg.mini_batch = 16;
+            cfg.lr = LrSchedule::Poly { base_lr: 5e-4, power: 1.0, warmup_frac: 0.1 };
+            cfg.test_n = scale.pick(256, 1024);
+            cfg.sampler = s.clone();
+            runs.push(cfg);
+        }
+    }
+    runs
+}
+
+/// Fig. 4 / Tab. 9: low-resource LM SFT with gradient accumulation.
+/// Paper: Qwen2.5-Math-1.5B, B=32, b=8, b_micro=8, ESWP r=0.2.
+pub fn fig4(scale: Scale) -> Vec<RunConfig> {
+    let n = scale.pick(1024, 8192);
+    let epochs = scale.pick(3, 10);
+    [
+        ("baseline", SamplerConfig::Uniform),
+        ("eswp", SamplerConfig::Eswp { beta1: 0.2, beta2: 0.8, anneal_frac: 0.05, prune_ratio: 0.2 }),
+    ]
+    .into_iter()
+    .map(|(tag, s)| {
+        let mut cfg = RunConfig::new(
+            &format!("fig4/sft/{tag}"),
+            "txf_lm",
+            DatasetConfig::LmCorpus { n, vocab: 1024, seq: 64 },
+        );
+        cfg.epochs = epochs;
+        cfg.meta_batch = 32;
+        cfg.mini_batch = 8;
+        cfg.micro_batch = 8; // gradient accumulation granularity
+        cfg.lr = LrSchedule::WarmupCosine { base_lr: 1e-4, warmup_frac: 0.1, min_lr: 0.0 };
+        cfg.test_n = scale.pick(128, 512);
+        cfg.sampler = s;
+        cfg
+    })
+    .collect()
+}
+
+/// Fig. 5 (left): b/B sweep for ES on the fine-tune workload.
+pub fn fig5_bb_sweep(scale: Scale) -> Vec<RunConfig> {
+    let n = scale.pick(1024, 8192);
+    let epochs = scale.pick(6, 30);
+    let bs = [4usize, 8, 16, 32, 64, 128];
+    let mut runs: Vec<RunConfig> = bs
+        .iter()
+        .map(|&b| {
+            let mut cfg = RunConfig::new(
+                &format!("fig5/bb/es_b{b}"),
+                "mlp_cifar10",
+                cifar(n, 10),
+            );
+            cfg.epochs = epochs;
+            cfg.meta_batch = 128;
+            cfg.mini_batch = b;
+            cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
+            cfg.sampler = SamplerConfig::es_default();
+            cfg.test_n = scale.pick(512, 1024);
+            cfg
+        })
+        .collect();
+    // Baseline anchor.
+    let mut base = runs[0].clone();
+    base.name = "fig5/bb/baseline".into();
+    base.mini_batch = 128;
+    base.sampler = SamplerConfig::Uniform;
+    runs.insert(0, base);
+    runs
+}
+
+/// Fig. 5 (right): pruning-ratio sweep for ESWP on CIFAR-100.
+pub fn fig5_prune_sweep(scale: Scale) -> Vec<RunConfig> {
+    let n = scale.pick(1024, 16384);
+    let epochs = scale.pick(6, 40);
+    let ratios = [0.0, 0.1, 0.2, 0.3, 0.5, 0.7];
+    ratios
+        .iter()
+        .map(|&r| {
+            let mut cfg = RunConfig::new(
+                &format!("fig5/prune/r{r}"),
+                "cnn_small_c100",
+                cifar(n, 100),
+            );
+            cfg.epochs = epochs;
+            cfg.meta_batch = 128;
+            cfg.mini_batch = 32;
+            cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
+            cfg.sampler = if r == 0.0 {
+                SamplerConfig::es_default()
+            } else {
+                SamplerConfig::Eswp { beta1: 0.2, beta2: 0.8, anneal_frac: 0.05, prune_ratio: r }
+            };
+            cfg.test_n = scale.pick(512, 1024);
+            cfg
+        })
+        .collect()
+}
+
+/// Fig. 6/7: (β1, β2) grid for ES. Returns (β1, β2, config) triples.
+pub fn fig6_beta_grid(scale: Scale, dense: bool) -> Vec<(f32, f32, RunConfig)> {
+    let n = scale.pick(1024, 8192);
+    let epochs = scale.pick(5, 30);
+    let (b1s, b2s): (Vec<f32>, Vec<f32>) = if dense {
+        // Fig. 7: dense grid around the default (0.2, 0.9).
+        (vec![0.1, 0.15, 0.2, 0.25, 0.3], vec![0.8, 0.85, 0.9, 0.95])
+    } else {
+        // Fig. 6: coarse sweep.
+        (vec![0.0, 0.2, 0.5, 0.8, 1.0], vec![0.0, 0.5, 0.8, 0.9, 1.0])
+    };
+    let mut out = Vec::new();
+    for &b1 in &b1s {
+        for &b2 in &b2s {
+            let mut cfg = RunConfig::new(
+                &format!("fig6/betas/b1_{b1}_b2_{b2}"),
+                "mlp_cifar10",
+                cifar(n, 10),
+            );
+            cfg.epochs = epochs;
+            cfg.meta_batch = 128;
+            cfg.mini_batch = 32;
+            cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
+            cfg.sampler = SamplerConfig::Es { beta1: b1, beta2: b2, anneal_frac: 0.05 };
+            cfg.test_n = scale.pick(512, 1024);
+            out.push((b1, b2, cfg));
+        }
+    }
+    out
+}
+
+/// Tab. 6 ablation rows: Loss / Loss+A / NonDif+A / Dif / NonDif / Dif+A.
+/// "NonDif" is β1=β2 (historical EMA only, no difference augmentation);
+/// "Dif" is the full ES; "+A" adds annealing.
+pub fn tab6(scale: Scale) -> Vec<(String, RunConfig)> {
+    let n = scale.pick(1024, 16384);
+    let epochs = scale.pick(6, 40);
+    let rows: Vec<(&str, SamplerConfig)> = vec![
+        ("Loss", SamplerConfig::Loss),
+        ("Loss+A", SamplerConfig::Es { beta1: 0.0, beta2: 0.0, anneal_frac: 0.05 }),
+        ("NonDif", SamplerConfig::Es { beta1: 0.9, beta2: 0.9, anneal_frac: 0.0 }),
+        ("Dif", SamplerConfig::Es { beta1: 0.2, beta2: 0.9, anneal_frac: 0.0 }),
+        ("NonDif+A", SamplerConfig::Es { beta1: 0.9, beta2: 0.9, anneal_frac: 0.05 }),
+        ("Dif+A (ES)", SamplerConfig::Es { beta1: 0.2, beta2: 0.9, anneal_frac: 0.05 }),
+    ];
+    rows.into_iter()
+        .map(|(label, s)| {
+            let mut cfg = RunConfig::new(
+                &format!("tab6/{label}"),
+                "cnn_small_c100",
+                cifar(n, 100),
+            );
+            cfg.epochs = epochs;
+            cfg.meta_batch = 128;
+            cfg.mini_batch = 32;
+            cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
+            cfg.test_n = scale.pick(512, 1024);
+            cfg.sampler = s;
+            (label.to_string(), cfg)
+        })
+        .collect()
+}
+
+/// Tab. 7: pruning strategies (Baseline / Random / ES / ESWP) on NLU tasks.
+pub fn tab7(scale: Scale) -> Vec<(String, String, RunConfig)> {
+    let n = scale.pick(512, 8192);
+    let epochs = scale.pick(3, 15);
+    let rows = vec![
+        ("Baseline", SamplerConfig::Uniform),
+        ("Random", SamplerConfig::RandomPrune { prune_ratio: 0.2 }),
+        ("ES", SamplerConfig::es_default()),
+        ("ESWP", SamplerConfig::eswp_default()),
+    ];
+    let mut out = Vec::new();
+    for task in ["cola", "sst2"] {
+        for (label, s) in &rows {
+            let mut cfg = RunConfig::new(
+                &format!("tab7/{task}/{label}"),
+                "txf_nlu",
+                DatasetConfig::Nlu { task: task.into(), n, vocab: 512, seq: 48, classes: 2 },
+            );
+            cfg.epochs = epochs;
+            cfg.meta_batch = 64;
+            cfg.mini_batch = 16;
+            cfg.lr = LrSchedule::Poly { base_lr: 5e-4, power: 1.0, warmup_frac: 0.1 };
+            cfg.test_n = scale.pick(256, 1024);
+            cfg.sampler = s.clone();
+            out.push((task.to_string(), label.to_string(), cfg));
+        }
+    }
+    out
+}
+
+/// Tab. 8: annealing-ratio sweep for ES on CIFAR-100.
+pub fn tab8(scale: Scale) -> Vec<(f64, RunConfig)> {
+    let n = scale.pick(1024, 16384);
+    let epochs = scale.pick(6, 40);
+    [0.0, 0.05, 0.075, 0.1]
+        .into_iter()
+        .map(|ar| {
+            let mut cfg = RunConfig::new(
+                &format!("tab8/ar{ar}"),
+                "cnn_small_c100",
+                cifar(n, 100),
+            );
+            cfg.epochs = epochs;
+            cfg.meta_batch = 128;
+            cfg.mini_batch = 32;
+            cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
+            cfg.sampler = SamplerConfig::Es { beta1: 0.2, beta2: 0.9, anneal_frac: ar };
+            cfg.test_n = scale.pick(512, 1024);
+            (ar, cfg)
+        })
+        .collect()
+}
+
+/// End-to-end pre-training driver (examples/end_to_end_pretrain.rs):
+/// a real LM trained for a few hundred steps, ES vs Baseline.
+pub fn e2e_pretrain(scale: Scale) -> Vec<RunConfig> {
+    let n = scale.pick(1024, 8192);
+    let epochs = scale.pick(3, 8);
+    [
+        ("baseline", SamplerConfig::Uniform),
+        ("es", SamplerConfig::es_default()),
+        ("eswp", SamplerConfig::eswp_default()),
+    ]
+    .into_iter()
+    .map(|(tag, s)| {
+        let mut cfg = RunConfig::new(
+            &format!("e2e/pretrain/{tag}"),
+            "txf_lm",
+            DatasetConfig::LmCorpus { n, vocab: 1024, seq: 64 },
+        );
+        cfg.epochs = epochs;
+        cfg.meta_batch = 32;
+        cfg.mini_batch = 8;
+        cfg.lr = LrSchedule::WarmupCosine { base_lr: 3e-4, warmup_frac: 0.1, min_lr: 3e-5 };
+        cfg.test_n = scale.pick(128, 512);
+        cfg.sampler = s;
+        cfg
+    })
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_validate() {
+        for scale in [Scale::Smoke, Scale::Full] {
+            for cfg in table2(scale) {
+                cfg.validate().expect(&cfg.name);
+            }
+            for cfg in table3(scale) {
+                cfg.validate().expect(&cfg.name);
+            }
+            for cfg in table4(scale) {
+                cfg.validate().expect(&cfg.name);
+            }
+            for cfg in table5(scale, &all_samplers()) {
+                cfg.validate().expect(&cfg.name);
+            }
+            for cfg in fig4(scale) {
+                cfg.validate().expect(&cfg.name);
+            }
+            for cfg in fig5_bb_sweep(scale) {
+                cfg.validate().expect(&cfg.name);
+            }
+            for cfg in fig5_prune_sweep(scale) {
+                cfg.validate().expect(&cfg.name);
+            }
+            for (_, _, cfg) in fig6_beta_grid(scale, false) {
+                cfg.validate().expect(&cfg.name);
+            }
+            for (_, cfg) in tab6(scale) {
+                cfg.validate().expect(&cfg.name);
+            }
+            for (_, _, cfg) in tab7(scale) {
+                cfg.validate().expect(&cfg.name);
+            }
+            for (_, cfg) in tab8(scale) {
+                cfg.validate().expect(&cfg.name);
+            }
+            for cfg in e2e_pretrain(scale) {
+                cfg.validate().expect(&cfg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn table2_has_8_methods_3_workloads() {
+        let runs = table2(Scale::Smoke);
+        assert_eq!(runs.len(), 24);
+        assert!(runs.iter().any(|r| r.name.contains("eswp")));
+    }
+
+    #[test]
+    fn table4_uses_workers_and_no_batch_selection() {
+        for cfg in table4(Scale::Smoke) {
+            assert_eq!(cfg.workers, 4);
+            assert_eq!(cfg.meta_batch, cfg.mini_batch);
+        }
+    }
+
+    #[test]
+    fn fig4_uses_grad_accum() {
+        for cfg in fig4(Scale::Smoke) {
+            assert_eq!(cfg.micro_batch, 8);
+        }
+    }
+
+    #[test]
+    fn beta_grid_covers_corners() {
+        let grid = fig6_beta_grid(Scale::Smoke, false);
+        assert!(grid.iter().any(|&(b1, b2, _)| b1 == 0.0 && b2 == 0.0));
+        assert!(grid.iter().any(|&(b1, b2, _)| b1 == 1.0 && b2 == 1.0));
+        assert_eq!(grid.len(), 25);
+    }
+
+    #[test]
+    fn batch_sizes_match_artifact_plan() {
+        // Every preset's (mini, meta) must have train_step artifacts
+        // emitted by aot.py's PLANS (kept in sync by hand; this test is
+        // the tripwire).
+        let allowed: &[(&str, &[usize])] = &[
+            ("mlp_cifar10", &[4, 8, 16, 32, 64, 128]),
+            ("cnn_small_c10", &[32, 128]),
+            ("cnn_small_c100", &[32, 128]),
+            ("cnn_deep_c100", &[64, 128]),
+            ("txf_cls", &[16, 64]),
+            ("txf_nlu", &[16, 64]),
+            ("txf_lm", &[8, 32]),
+            ("txf_lm_large", &[4, 16]),
+            ("mae_mlp", &[64, 256]),
+        ];
+        let check = |cfg: &RunConfig| {
+            let sizes = allowed
+                .iter()
+                .find(|(m, _)| *m == cfg.model)
+                .unwrap_or_else(|| panic!("{}: unknown model {}", cfg.name, cfg.model))
+                .1;
+            assert!(sizes.contains(&cfg.mini_batch), "{}: b={}", cfg.name, cfg.mini_batch);
+            assert!(sizes.contains(&cfg.meta_batch), "{}: B={}", cfg.name, cfg.meta_batch);
+        };
+        table2(Scale::Smoke).iter().for_each(check);
+        table3(Scale::Smoke).iter().for_each(check);
+        table4(Scale::Smoke).iter().for_each(check);
+        table5(Scale::Smoke, &all_samplers()).iter().for_each(check);
+        fig4(Scale::Smoke).iter().for_each(check);
+        fig5_bb_sweep(Scale::Smoke).iter().for_each(check);
+        fig5_prune_sweep(Scale::Smoke).iter().for_each(check);
+        e2e_pretrain(Scale::Smoke).iter().for_each(check);
+    }
+}

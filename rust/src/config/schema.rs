@@ -1,0 +1,494 @@
+//! Typed experiment configuration + validation.
+//!
+//! A `RunConfig` fully determines one training run (model, dataset,
+//! sampler, schedule, batching, trials, seeds). Configs come from three
+//! places: TOML files (`evosample train --config run.toml`), CLI overrides,
+//! and the built-in experiment presets (`config::presets`) that regenerate
+//! the paper's tables.
+
+use super::toml::Doc;
+
+/// Which dynamic-sampling method drives data selection (paper Tab. 1).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SamplerConfig {
+    /// Standard batched sampling — the paper's "Baseline".
+    Uniform,
+    /// Loss-proportional batch selection (Katharopoulos & Fleuret 2017).
+    Loss,
+    /// Ordered SGD: top-q losses per meta-batch (Kawaguchi & Lu 2020).
+    Ordered,
+    /// Evolved Sampling (paper Eq. 3.1), batch level.
+    Es { beta1: f32, beta2: f32, anneal_frac: f64 },
+    /// ES With Pruning: ES + set-level epoch pruning.
+    Eswp { beta1: f32, beta2: f32, anneal_frac: f64, prune_ratio: f64 },
+    /// InfoBatch (Qin et al. 2024): prune below-mean losses, rescale kept.
+    InfoBatch { prune_ratio: f64, anneal_frac: f64 },
+    /// KAKURENBO (Thao Nguyen et al. 2023): hide easiest samples w/ move-back.
+    Kakurenbo { prune_ratio: f64, conf_threshold: f32 },
+    /// UCB dynamic pruning (Raju et al. 2021).
+    Ucb { prune_ratio: f64, decay: f32, c: f32 },
+    /// Purely random set-level pruning (ablation Tab. 7).
+    RandomPrune { prune_ratio: f64 },
+}
+
+impl SamplerConfig {
+    /// Paper defaults: ES (0.2, 0.9); ESWP (0.2, 0.8, r=0.2); 5% annealing.
+    pub fn es_default() -> Self {
+        SamplerConfig::Es { beta1: 0.2, beta2: 0.9, anneal_frac: 0.05 }
+    }
+
+    pub fn eswp_default() -> Self {
+        SamplerConfig::Eswp { beta1: 0.2, beta2: 0.8, anneal_frac: 0.05, prune_ratio: 0.2 }
+    }
+
+    pub fn infobatch_default() -> Self {
+        // InfoBatch defaults from the original paper: r=0.5, anneal δ=0.875.
+        SamplerConfig::InfoBatch { prune_ratio: 0.5, anneal_frac: 0.125 }
+    }
+
+    pub fn kakurenbo_default() -> Self {
+        SamplerConfig::Kakurenbo { prune_ratio: 0.3, conf_threshold: 0.7 }
+    }
+
+    pub fn ucb_default() -> Self {
+        SamplerConfig::Ucb { prune_ratio: 0.3, decay: 0.8, c: 1.0 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerConfig::Uniform => "baseline",
+            SamplerConfig::Loss => "loss",
+            SamplerConfig::Ordered => "order",
+            SamplerConfig::Es { .. } => "es",
+            SamplerConfig::Eswp { .. } => "eswp",
+            SamplerConfig::InfoBatch { .. } => "infobatch",
+            SamplerConfig::Kakurenbo { .. } => "ka",
+            SamplerConfig::Ucb { .. } => "ucb",
+            SamplerConfig::RandomPrune { .. } => "random_prune",
+        }
+    }
+
+    /// Batch-level methods need per-step scoring FPs over the meta-batch.
+    pub fn is_batch_level(&self) -> bool {
+        matches!(
+            self,
+            SamplerConfig::Loss
+                | SamplerConfig::Ordered
+                | SamplerConfig::Es { .. }
+                | SamplerConfig::Eswp { .. }
+        )
+    }
+
+    /// Set-level methods prune the dataset at epoch boundaries.
+    pub fn is_set_level(&self) -> bool {
+        matches!(
+            self,
+            SamplerConfig::Eswp { .. }
+                | SamplerConfig::InfoBatch { .. }
+                | SamplerConfig::Kakurenbo { .. }
+                | SamplerConfig::Ucb { .. }
+                | SamplerConfig::RandomPrune { .. }
+        )
+    }
+}
+
+/// Learning-rate schedules (computed in rust, passed as a scalar input to
+/// every train_step artifact — so schedules never require re-lowering).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    Const { lr: f64 },
+    /// OneCycle w/ cosine anneal (Smith & Topin 2019) — the CIFAR recipe.
+    OneCycle { max_lr: f64, warmup_frac: f64 },
+    /// Linear warmup then cosine decay — the transformer recipe.
+    WarmupCosine { base_lr: f64, warmup_frac: f64, min_lr: f64 },
+    /// Polynomial decay with warmup — the ALBERT/GLUE recipe.
+    Poly { base_lr: f64, power: f64, warmup_frac: f64 },
+}
+
+impl LrSchedule {
+    /// lr at `step` of `total` steps.
+    pub fn lr_at(&self, step: usize, total: usize) -> f64 {
+        let total = total.max(1);
+        let t = (step as f64 / total as f64).clamp(0.0, 1.0);
+        match *self {
+            LrSchedule::Const { lr } => lr,
+            LrSchedule::OneCycle { max_lr, warmup_frac } => {
+                if t < warmup_frac {
+                    max_lr * (t / warmup_frac.max(1e-9))
+                } else {
+                    let u = (t - warmup_frac) / (1.0 - warmup_frac).max(1e-9);
+                    max_lr * 0.5 * (1.0 + (std::f64::consts::PI * u).cos())
+                }
+            }
+            LrSchedule::WarmupCosine { base_lr, warmup_frac, min_lr } => {
+                if t < warmup_frac {
+                    base_lr * (t / warmup_frac.max(1e-9))
+                } else {
+                    let u = (t - warmup_frac) / (1.0 - warmup_frac).max(1e-9);
+                    min_lr + (base_lr - min_lr) * 0.5 * (1.0 + (std::f64::consts::PI * u).cos())
+                }
+            }
+            LrSchedule::Poly { base_lr, power, warmup_frac } => {
+                if t < warmup_frac {
+                    base_lr * (t / warmup_frac.max(1e-9))
+                } else {
+                    let u = (t - warmup_frac) / (1.0 - warmup_frac).max(1e-9);
+                    base_lr * (1.0 - u).max(0.0).powf(power)
+                }
+            }
+        }
+    }
+}
+
+/// Synthetic dataset descriptor (generators live in `crate::data`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetConfig {
+    /// CIFAR-like class-prototype images: flat f32[3072].
+    SynthCifar { n: usize, classes: usize, label_noise: f64, hard_frac: f64 },
+    /// Zipf-grammar token corpus for LM training: i32[seq] x/y pairs.
+    LmCorpus { n: usize, vocab: usize, seq: usize },
+    /// GLUE-like NLU classification task (one of 8 synthetic tasks).
+    Nlu { task: String, n: usize, vocab: usize, seq: usize, classes: usize },
+    /// Unlabeled images for MAE pre-training.
+    MaeImages { n: usize, dim: usize },
+}
+
+impl DatasetConfig {
+    pub fn n(&self) -> usize {
+        match self {
+            DatasetConfig::SynthCifar { n, .. }
+            | DatasetConfig::LmCorpus { n, .. }
+            | DatasetConfig::Nlu { n, .. }
+            | DatasetConfig::MaeImages { n, .. } => *n,
+        }
+    }
+}
+
+/// One fully-specified training run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub name: String,
+    /// Manifest model name (e.g. "cnn_small_c100").
+    pub model: String,
+    pub dataset: DatasetConfig,
+    pub sampler: SamplerConfig,
+    pub epochs: usize,
+    /// Meta-batch size B (uniformly drawn each step).
+    pub meta_batch: usize,
+    /// Mini-batch size b selected for BP (== meta_batch ⇒ no batch selection).
+    pub mini_batch: usize,
+    pub lr: LrSchedule,
+    pub seed: u64,
+    /// Evaluate on the held-out set every k epochs (0 = only at end).
+    pub eval_every: usize,
+    /// Held-out test set size.
+    pub test_n: usize,
+    /// Gradient-accumulation micro-batch (0 = off). Fig. 4 low-resource mode.
+    pub micro_batch: usize,
+    /// Data-parallel simulated workers (1 = off). Table 4 pre-training mode.
+    pub workers: usize,
+}
+
+impl RunConfig {
+    /// Sensible small defaults; presets/TOML override.
+    pub fn new(name: &str, model: &str, dataset: DatasetConfig) -> Self {
+        RunConfig {
+            name: name.to_string(),
+            model: model.to_string(),
+            dataset,
+            sampler: SamplerConfig::Uniform,
+            epochs: 10,
+            meta_batch: 128,
+            mini_batch: 32,
+            lr: LrSchedule::Const { lr: 1e-3 },
+            seed: 0,
+            eval_every: 0,
+            test_n: 512,
+            micro_batch: 0,
+            workers: 1,
+        }
+    }
+
+    pub fn with_sampler(mut self, s: SamplerConfig) -> Self {
+        self.sampler = s;
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.epochs == 0 {
+            return Err("epochs must be >= 1".into());
+        }
+        if self.mini_batch == 0 || self.meta_batch == 0 {
+            return Err("batch sizes must be >= 1".into());
+        }
+        if self.mini_batch > self.meta_batch {
+            return Err(format!(
+                "mini_batch ({}) must be <= meta_batch ({})",
+                self.mini_batch, self.meta_batch
+            ));
+        }
+        if self.dataset.n() < self.meta_batch {
+            return Err(format!(
+                "dataset n ({}) must be >= meta_batch ({})",
+                self.dataset.n(),
+                self.meta_batch
+            ));
+        }
+        if self.micro_batch > self.mini_batch {
+            return Err("micro_batch must be <= mini_batch".into());
+        }
+        if self.workers == 0 {
+            return Err("workers must be >= 1".into());
+        }
+        let ratios: &[f64] = match &self.sampler {
+            SamplerConfig::Eswp { prune_ratio, anneal_frac, .. } => &[*prune_ratio, *anneal_frac],
+            SamplerConfig::InfoBatch { prune_ratio, anneal_frac } => &[*prune_ratio, *anneal_frac],
+            SamplerConfig::Kakurenbo { prune_ratio, .. } => &[*prune_ratio],
+            SamplerConfig::Ucb { prune_ratio, .. } => &[*prune_ratio],
+            SamplerConfig::RandomPrune { prune_ratio } => &[*prune_ratio],
+            SamplerConfig::Es { anneal_frac, .. } => &[*anneal_frac],
+            _ => &[],
+        };
+        for r in ratios {
+            if !(0.0..1.0).contains(r) {
+                return Err(format!("ratio {r} out of [0,1)"));
+            }
+        }
+        if let SamplerConfig::Es { beta1, beta2, .. }
+        | SamplerConfig::Eswp { beta1, beta2, .. } = self.sampler
+        {
+            if !(0.0..=1.0).contains(&beta1) || !(0.0..=1.0).contains(&beta2) {
+                return Err(format!("betas ({beta1}, {beta2}) out of [0,1]"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from a TOML document (all keys optional except model/dataset).
+    pub fn from_doc(doc: &Doc) -> Result<RunConfig, String> {
+        let model = doc.require("run.model")?.as_str().ok_or("run.model must be a string")?.to_string();
+        let ds_kind = doc.str_or("dataset.kind", "synth_cifar");
+        let n = doc.i64_or("dataset.n", 4096) as usize;
+        let dataset = match ds_kind.as_str() {
+            "synth_cifar" => DatasetConfig::SynthCifar {
+                n,
+                classes: doc.i64_or("dataset.classes", 10) as usize,
+                label_noise: doc.f64_or("dataset.label_noise", 0.05),
+                hard_frac: doc.f64_or("dataset.hard_frac", 0.2),
+            },
+            "lm_corpus" => DatasetConfig::LmCorpus {
+                n,
+                vocab: doc.i64_or("dataset.vocab", 1024) as usize,
+                seq: doc.i64_or("dataset.seq", 64) as usize,
+            },
+            "nlu" => DatasetConfig::Nlu {
+                task: doc.str_or("dataset.task", "sst2"),
+                n,
+                vocab: doc.i64_or("dataset.vocab", 512) as usize,
+                seq: doc.i64_or("dataset.seq", 48) as usize,
+                classes: doc.i64_or("dataset.classes", 2) as usize,
+            },
+            "mae_images" => DatasetConfig::MaeImages {
+                n,
+                dim: doc.i64_or("dataset.dim", 3072) as usize,
+            },
+            other => return Err(format!("unknown dataset.kind {other:?}")),
+        };
+        let sampler = match doc.str_or("sampler.kind", "baseline").as_str() {
+            "baseline" | "uniform" => SamplerConfig::Uniform,
+            "loss" => SamplerConfig::Loss,
+            "order" | "ordered" => SamplerConfig::Ordered,
+            "es" => SamplerConfig::Es {
+                beta1: doc.f64_or("sampler.beta1", 0.2) as f32,
+                beta2: doc.f64_or("sampler.beta2", 0.9) as f32,
+                anneal_frac: doc.f64_or("sampler.anneal_frac", 0.05),
+            },
+            "eswp" => SamplerConfig::Eswp {
+                beta1: doc.f64_or("sampler.beta1", 0.2) as f32,
+                beta2: doc.f64_or("sampler.beta2", 0.8) as f32,
+                anneal_frac: doc.f64_or("sampler.anneal_frac", 0.05),
+                prune_ratio: doc.f64_or("sampler.prune_ratio", 0.2),
+            },
+            "infobatch" => SamplerConfig::InfoBatch {
+                prune_ratio: doc.f64_or("sampler.prune_ratio", 0.5),
+                anneal_frac: doc.f64_or("sampler.anneal_frac", 0.125),
+            },
+            "ka" | "kakurenbo" => SamplerConfig::Kakurenbo {
+                prune_ratio: doc.f64_or("sampler.prune_ratio", 0.3),
+                conf_threshold: doc.f64_or("sampler.conf_threshold", 0.7) as f32,
+            },
+            "ucb" => SamplerConfig::Ucb {
+                prune_ratio: doc.f64_or("sampler.prune_ratio", 0.3),
+                decay: doc.f64_or("sampler.decay", 0.8) as f32,
+                c: doc.f64_or("sampler.c", 1.0) as f32,
+            },
+            "random_prune" => SamplerConfig::RandomPrune {
+                prune_ratio: doc.f64_or("sampler.prune_ratio", 0.2),
+            },
+            other => return Err(format!("unknown sampler.kind {other:?}")),
+        };
+        let lr = match doc.str_or("lr.schedule", "const").as_str() {
+            "const" => LrSchedule::Const { lr: doc.f64_or("lr.lr", 1e-3) },
+            "onecycle" => LrSchedule::OneCycle {
+                max_lr: doc.f64_or("lr.max_lr", 0.05),
+                warmup_frac: doc.f64_or("lr.warmup_frac", 0.3),
+            },
+            "warmup_cosine" => LrSchedule::WarmupCosine {
+                base_lr: doc.f64_or("lr.base_lr", 1e-3),
+                warmup_frac: doc.f64_or("lr.warmup_frac", 0.1),
+                min_lr: doc.f64_or("lr.min_lr", 0.0),
+            },
+            "poly" => LrSchedule::Poly {
+                base_lr: doc.f64_or("lr.base_lr", 1e-3),
+                power: doc.f64_or("lr.power", 1.0),
+                warmup_frac: doc.f64_or("lr.warmup_frac", 0.1),
+            },
+            other => return Err(format!("unknown lr.schedule {other:?}")),
+        };
+        let cfg = RunConfig {
+            name: doc.str_or("run.name", "run"),
+            model,
+            dataset,
+            sampler,
+            epochs: doc.i64_or("run.epochs", 10) as usize,
+            meta_batch: doc.i64_or("run.meta_batch", 128) as usize,
+            mini_batch: doc.i64_or("run.mini_batch", 32) as usize,
+            lr,
+            seed: doc.i64_or("run.seed", 0) as u64,
+            eval_every: doc.i64_or("run.eval_every", 0) as usize,
+            test_n: doc.i64_or("run.test_n", 512) as usize,
+            micro_batch: doc.i64_or("run.micro_batch", 0) as usize,
+            workers: doc.i64_or("run.workers", 1) as usize,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Steps per epoch (meta-batches drawn from the possibly-pruned set).
+    pub fn steps_per_epoch(&self, kept_n: usize) -> usize {
+        kept_n.div_ceil(self.meta_batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> RunConfig {
+        RunConfig::new(
+            "t",
+            "mlp_cifar10",
+            DatasetConfig::SynthCifar { n: 1024, classes: 10, label_noise: 0.0, hard_frac: 0.2 },
+        )
+    }
+
+    #[test]
+    fn default_validates() {
+        base().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_batches() {
+        let mut c = base();
+        c.mini_batch = 256;
+        c.meta_batch = 128;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.meta_batch = 4096;
+        assert!(c.validate().is_err(), "meta_batch > n must fail");
+    }
+
+    #[test]
+    fn rejects_bad_betas_and_ratios() {
+        let mut c = base();
+        c.sampler = SamplerConfig::Es { beta1: 1.5, beta2: 0.9, anneal_frac: 0.05 };
+        assert!(c.validate().is_err());
+        c.sampler = SamplerConfig::Eswp {
+            beta1: 0.2,
+            beta2: 0.8,
+            anneal_frac: 0.05,
+            prune_ratio: 1.0,
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_toml_roundtrip() {
+        let src = r#"
+[run]
+name = "demo"
+model = "cnn_small_c100"
+epochs = 20
+meta_batch = 128
+mini_batch = 32
+seed = 7
+
+[dataset]
+kind = "synth_cifar"
+n = 2048
+classes = 100
+
+[sampler]
+kind = "eswp"
+beta1 = 0.2
+beta2 = 0.8
+prune_ratio = 0.3
+
+[lr]
+schedule = "onecycle"
+max_lr = 0.05
+"#;
+        let doc = Doc::parse(src).unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.name, "demo");
+        assert_eq!(cfg.epochs, 20);
+        assert_eq!(cfg.sampler.name(), "eswp");
+        assert!(matches!(cfg.lr, LrSchedule::OneCycle { .. }));
+        assert!(matches!(cfg.dataset, DatasetConfig::SynthCifar { classes: 100, .. }));
+    }
+
+    #[test]
+    fn from_doc_requires_model() {
+        let doc = Doc::parse("[run]\nepochs = 3\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).unwrap_err().contains("run.model"));
+    }
+
+    #[test]
+    fn sampler_level_taxonomy_matches_table1() {
+        // Paper Tab. 1: set/batch membership per method.
+        assert!(!SamplerConfig::Uniform.is_batch_level());
+        assert!(SamplerConfig::Loss.is_batch_level() && !SamplerConfig::Loss.is_set_level());
+        assert!(SamplerConfig::es_default().is_batch_level());
+        assert!(!SamplerConfig::es_default().is_set_level());
+        let eswp = SamplerConfig::eswp_default();
+        assert!(eswp.is_batch_level() && eswp.is_set_level());
+        assert!(SamplerConfig::infobatch_default().is_set_level());
+        assert!(!SamplerConfig::infobatch_default().is_batch_level());
+        assert!(SamplerConfig::ucb_default().is_set_level());
+        assert!(SamplerConfig::kakurenbo_default().is_set_level());
+    }
+
+    #[test]
+    fn lr_schedules_shape() {
+        let oc = LrSchedule::OneCycle { max_lr: 1.0, warmup_frac: 0.5 };
+        assert!(oc.lr_at(0, 100) < 0.05);
+        assert!((oc.lr_at(50, 100) - 1.0).abs() < 0.05);
+        assert!(oc.lr_at(99, 100) < 0.01);
+
+        let wc = LrSchedule::WarmupCosine { base_lr: 1.0, warmup_frac: 0.1, min_lr: 0.1 };
+        assert!(wc.lr_at(5, 100) < 1.0);
+        assert!((wc.lr_at(10, 100) - 1.0).abs() < 0.01);
+        assert!((wc.lr_at(100, 100) - 0.1).abs() < 0.01);
+
+        let p = LrSchedule::Poly { base_lr: 1.0, power: 1.0, warmup_frac: 0.0 };
+        assert!((p.lr_at(50, 100) - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn steps_per_epoch_ceil() {
+        let c = base();
+        assert_eq!(c.steps_per_epoch(1024), 8);
+        assert_eq!(c.steps_per_epoch(1000), 8);
+        assert_eq!(c.steps_per_epoch(128), 1);
+    }
+}

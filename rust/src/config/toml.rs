@@ -1,0 +1,298 @@
+//! TOML-subset parser (no `toml`/`serde` crates offline).
+//!
+//! Supports the fragment real experiment configs need:
+//!   * `[table]` and `[dotted.table]` headers
+//!   * `key = value` with string / integer / float / bool / array values
+//!   * `#` comments, blank lines
+//!
+//! Not supported (rejected with a clear error, never silently): inline
+//! tables, multi-line strings, dates, array-of-tables.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Float accessor that also accepts integers (TOML `0` for `0.0`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: flat map of `table.key` → value ("" table = root).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(src: &str) -> Result<Doc, String> {
+        let mut doc = Doc::default();
+        let mut table = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                if line.starts_with("[[") {
+                    return Err(fmt_err(lineno, "array-of-tables not supported"));
+                }
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| fmt_err(lineno, "unclosed table header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(fmt_err(lineno, "empty table name"));
+                }
+                table = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| fmt_err(lineno, "expected `key = value`"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(fmt_err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| fmt_err(lineno, &e))?;
+            let full = if table.is_empty() {
+                key.to_string()
+            } else {
+                format!("{table}.{key}")
+            };
+            if doc.entries.insert(full.clone(), value).is_some() {
+                return Err(fmt_err(lineno, &format!("duplicate key {full:?}")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Required accessor with a descriptive error.
+    pub fn require(&self, key: &str) -> Result<&Value, String> {
+        self.get(key).ok_or_else(|| format!("missing required config key {key:?}"))
+    }
+
+    /// All keys under a table prefix (e.g. `sampler.`).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        self.entries.keys().filter_map(move |k| k.strip_prefix(prefix))
+    }
+}
+
+fn fmt_err(lineno: usize, msg: &str) -> String {
+    format!("toml parse error on line {}: {msg}", lineno + 1)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quotes not supported".into());
+        }
+        return Ok(Value::Str(inner.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items: Result<Vec<Value>, String> = split_top_level(inner)
+            .into_iter()
+            .map(|part| parse_value(part.trim()))
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    if s.contains('{') {
+        return Err("inline tables not supported".into());
+    }
+    let clean = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split an array body on commas, respecting nested brackets/strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let d = Doc::parse("a = 1\nb = \"x\"\nc = true\nd = 2.5\n").unwrap();
+        assert_eq!(d.get("a"), Some(&Value::Int(1)));
+        assert_eq!(d.get("b").unwrap().as_str(), Some("x"));
+        assert_eq!(d.get("c").unwrap().as_bool(), Some(true));
+        assert_eq!(d.get("d").unwrap().as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn parses_tables_and_dotted() {
+        let src = "[train]\nepochs = 10\n[sampler.es]\nbeta1 = 0.2\n";
+        let d = Doc::parse(src).unwrap();
+        assert_eq!(d.i64_or("train.epochs", 0), 10);
+        assert_eq!(d.f64_or("sampler.es.beta1", 0.0), 0.2);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let src = "# header\na = 1 # trailing\n\nb = \"has # inside\"\n";
+        let d = Doc::parse(src).unwrap();
+        assert_eq!(d.i64_or("a", 0), 1);
+        assert_eq!(d.get("b").unwrap().as_str(), Some("has # inside"));
+    }
+
+    #[test]
+    fn arrays() {
+        let d = Doc::parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nzs = []\n").unwrap();
+        assert_eq!(d.get("xs").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(d.get("ys").unwrap().as_array().unwrap()[1].as_str(), Some("b"));
+        assert!(d.get("zs").unwrap().as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let d = Doc::parse("m = [[1, 2], [3, 4]]\n").unwrap();
+        let outer = d.get("m").unwrap().as_array().unwrap();
+        assert_eq!(outer[1].as_array().unwrap()[0], Value::Int(3));
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let err = Doc::parse("a = 1\nbogus line\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_unsupported() {
+        assert!(Doc::parse("a = 1\na = 2\n").unwrap_err().contains("duplicate"));
+        assert!(Doc::parse("[[t]]\n").unwrap_err().contains("array-of-tables"));
+        assert!(Doc::parse("x = {a = 1}\n").unwrap_err().contains("inline"));
+    }
+
+    #[test]
+    fn int_float_distinction() {
+        let d = Doc::parse("i = 3\nf = 3.0\ne = 1e3\nu = 1_000\n").unwrap();
+        assert_eq!(d.get("i"), Some(&Value::Int(3)));
+        assert_eq!(d.get("f"), Some(&Value::Float(3.0)));
+        assert_eq!(d.get("e"), Some(&Value::Float(1000.0)));
+        assert_eq!(d.get("u"), Some(&Value::Int(1000)));
+        // as_f64 accepts ints too
+        assert_eq!(d.get("i").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let d = Doc::parse("a = -5\nb = -0.25\n").unwrap();
+        assert_eq!(d.i64_or("a", 0), -5);
+        assert_eq!(d.f64_or("b", 0.0), -0.25);
+    }
+}

@@ -1,0 +1,146 @@
+//! Cost accounting: turns timers + sample counts into the paper's
+//! "Time ↓" metric, plus an analytic FLOPs model for cross-checking.
+//!
+//! The paper's §3.3 argument: BP dominates (≈ 2× FP FLOPs; a full training
+//! step ≈ 3× a forward), so cutting BP from B to b samples while paying an
+//! extra B-sample FP still wins when b ≪ B. The analytic model below
+//! encodes exactly that and is validated against measured wall-clock in
+//! the integration tests and EXPERIMENTS.md.
+
+use crate::util::timer::{phase, PhaseTimers};
+
+/// A training step costs ~3× the forward FLOPs of the same batch
+/// (forward + backward ≈ 2× forward).
+pub const TRAIN_STEP_FWD_MULTIPLE: u64 = 3;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CostSummary {
+    /// Samples that went through the scoring forward pass.
+    pub fp_samples: u64,
+    /// Samples that went through back-propagation.
+    pub bp_samples: u64,
+    /// Number of train_step invocations (≠ steps under grad accumulation).
+    pub bp_passes: u64,
+    /// Analytic FLOPs: scoring FPs.
+    pub fp_flops: u64,
+    /// Analytic FLOPs: training steps (fwd+bwd).
+    pub bp_flops: u64,
+    /// Measured seconds per phase.
+    pub scoring_s: f64,
+    pub train_s: f64,
+    pub select_s: f64,
+    pub data_s: f64,
+    pub prune_s: f64,
+    pub eval_s: f64,
+}
+
+impl CostSummary {
+    pub fn from_run(
+        timers: &PhaseTimers,
+        fp_samples: u64,
+        bp_samples: u64,
+        bp_passes: u64,
+        flops_per_sample_fwd: u64,
+    ) -> CostSummary {
+        CostSummary {
+            fp_samples,
+            bp_samples,
+            bp_passes,
+            fp_flops: fp_samples * flops_per_sample_fwd,
+            bp_flops: bp_samples * flops_per_sample_fwd * TRAIN_STEP_FWD_MULTIPLE,
+            scoring_s: timers.get(phase::SCORING_FP).as_secs_f64(),
+            train_s: timers.get(phase::TRAIN_BP).as_secs_f64(),
+            select_s: timers.get(phase::SELECT).as_secs_f64(),
+            data_s: timers.get(phase::DATA).as_secs_f64(),
+            prune_s: timers.get(phase::PRUNE).as_secs_f64(),
+            eval_s: timers.get(phase::EVAL).as_secs_f64(),
+        }
+    }
+
+    /// Total *training* seconds (what the paper's Time columns measure —
+    /// eval excluded, exactly as wall-clock comparisons in the paper).
+    pub fn train_wall_s(&self) -> f64 {
+        self.scoring_s + self.train_s + self.select_s + self.data_s + self.prune_s
+    }
+
+    /// Total analytic FLOPs (scoring + training).
+    pub fn total_flops(&self) -> u64 {
+        self.fp_flops + self.bp_flops
+    }
+
+    /// Predicted time ratio vs a baseline using the FLOPs model.
+    pub fn flops_ratio_vs(&self, base: &CostSummary) -> f64 {
+        self.total_flops() as f64 / base.total_flops() as f64
+    }
+}
+
+/// The paper's "Time ↓" (saved wall-clock) in percent, method vs baseline.
+pub fn saved_time_pct(base: &CostSummary, method: &CostSummary) -> f64 {
+    let b = base.train_wall_s();
+    if b <= 0.0 {
+        return 0.0;
+    }
+    100.0 * (1.0 - method.train_wall_s() / b)
+}
+
+/// Predicted saved time from the analytic FLOPs model (for the same
+/// workload shape). Used to sanity-check measurements and to report
+/// "expected" columns where wall-clock is too noisy at smoke scale.
+pub fn predicted_saved_time_pct(base: &CostSummary, method: &CostSummary) -> f64 {
+    100.0 * (1.0 - method.flops_ratio_vs(base))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn summary(fp: u64, bp: u64) -> CostSummary {
+        CostSummary::from_run(&PhaseTimers::new(), fp, bp, bp / 8, 100)
+    }
+
+    #[test]
+    fn flops_model_matches_paper_argument() {
+        // Baseline: BP on B=128 per step. ES: FP on 128 + BP on 32.
+        let steps = 1000u64;
+        let base = summary(0, 128 * steps);
+        let es = summary(128 * steps, 32 * steps);
+        // base: 128*3 = 384 units/step; es: 128 + 32*3 = 224 units/step.
+        let pred = predicted_saved_time_pct(&base, &es);
+        assert!((pred - (1.0 - 224.0 / 384.0) * 100.0).abs() < 1e-9, "pred={pred}");
+        assert!(pred > 40.0, "ES should save >40% FLOPs at b/B=25%");
+    }
+
+    #[test]
+    fn eswp_saves_more_than_es() {
+        let steps = 1000u64;
+        let es = summary(128 * steps, 32 * steps);
+        // ESWP at r=0.2: 20% fewer steps entirely.
+        let eswp = summary(128 * steps * 8 / 10, 32 * steps * 8 / 10);
+        let base = summary(0, 128 * steps);
+        assert!(
+            predicted_saved_time_pct(&base, &eswp) > predicted_saved_time_pct(&base, &es)
+        );
+    }
+
+    #[test]
+    fn saved_time_uses_training_phases_only() {
+        let mut t_base = PhaseTimers::new();
+        t_base.add(crate::util::timer::phase::TRAIN_BP, Duration::from_secs(10));
+        t_base.add(crate::util::timer::phase::EVAL, Duration::from_secs(100));
+        let base = CostSummary::from_run(&t_base, 0, 0, 0, 1);
+
+        let mut t_m = PhaseTimers::new();
+        t_m.add(crate::util::timer::phase::TRAIN_BP, Duration::from_secs(5));
+        t_m.add(crate::util::timer::phase::EVAL, Duration::from_secs(500));
+        let m = CostSummary::from_run(&t_m, 0, 0, 0, 1);
+
+        assert!((saved_time_pct(&base, &m) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_baseline_is_safe() {
+        let z = summary(0, 0);
+        assert_eq!(saved_time_pct(&z, &z), 0.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Checkpointing: persist flat parameters + run metadata so long
+//! pre-training runs (Table 4) can resume and fine-tune phases (Table 3)
+//! can start from a saved trunk.
+//!
+//! Format: `<name>.ckpt` = 16-byte header (magic, version, param count)
+//! + raw little-endian f32 params; `<name>.json` = metadata sidecar.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{num, obj, s, Json};
+
+const MAGIC: u32 = 0x45564f53; // "EVOS"
+const VERSION: u32 = 1;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub step: u64,
+    pub seed: u64,
+    pub params: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, dir: &Path, name: &str) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let bin = dir.join(format!("{name}.ckpt"));
+        let mut f = std::fs::File::create(&bin)?;
+        f.write_all(&MAGIC.to_le_bytes())?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        // Safe f32 -> bytes without unsafe: chunk through to_le_bytes.
+        let mut buf = Vec::with_capacity(self.params.len() * 4);
+        for &p in &self.params {
+            buf.extend_from_slice(&p.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+        let meta = obj(vec![
+            ("model", s(self.model.clone())),
+            ("step", num(self.step as f64)),
+            ("seed", num(self.seed as f64)),
+            ("param_count", num(self.params.len() as f64)),
+        ]);
+        std::fs::write(dir.join(format!("{name}.json")), meta.to_string_compact())?;
+        Ok(bin)
+    }
+
+    pub fn load(dir: &Path, name: &str) -> std::io::Result<Checkpoint> {
+        let bin = dir.join(format!("{name}.ckpt"));
+        let mut f = std::fs::File::open(&bin)?;
+        let mut head = [0u8; 16];
+        f.read_exact(&mut head)?;
+        let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        let count = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
+        if magic != MAGIC {
+            return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+        }
+        if version != VERSION {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("unsupported version {version}"),
+            ));
+        }
+        let mut buf = vec![0u8; count * 4];
+        f.read_exact(&mut buf)?;
+        let params = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let meta_src = std::fs::read_to_string(dir.join(format!("{name}.json")))
+            .unwrap_or_else(|_| "{}".to_string());
+        let meta = Json::parse(&meta_src).unwrap_or(Json::Null);
+        Ok(Checkpoint {
+            model: meta.get("model").and_then(Json::as_str).unwrap_or("").to_string(),
+            step: meta.get("step").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            seed: meta.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            params,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!("evosample_ckpt_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let d = dir();
+        let ck = Checkpoint {
+            model: "mlp".into(),
+            step: 42,
+            seed: 7,
+            params: vec![1.5, -2.25, f32::MIN_POSITIVE, 0.0, 3.4e38],
+        };
+        ck.save(&d, "t1").unwrap();
+        let back = Checkpoint::load(&d, "t1").unwrap();
+        assert_eq!(ck, back);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let d = dir();
+        std::fs::write(d.join("bad.ckpt"), b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&d, "bad").is_err());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(Checkpoint::load(Path::new("/nonexistent"), "x").is_err());
+    }
+
+    #[test]
+    fn large_checkpoint_roundtrips() {
+        let d = dir();
+        let params: Vec<f32> = (0..100_000).map(|i| i as f32 * 0.5).collect();
+        let ck = Checkpoint { model: "big".into(), step: 1, seed: 0, params };
+        ck.save(&d, "big").unwrap();
+        assert_eq!(Checkpoint::load(&d, "big").unwrap().params.len(), 100_000);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -1,0 +1,386 @@
+//! The training coordinator: drives runtime + sampler + data through the
+//! paper's Alg. 1 loop, with full cost accounting.
+//!
+//! Per active step (batch-level methods):
+//!   1. draw a uniform meta-batch B from the kept set           [data]
+//!   2. scoring FP over B at the latest parameters              [scoring_fp]
+//!   3. sampler.observe_meta — the Eq. 3.1 state update         [select]
+//!   4. sampler.select — draw b ⊂ B, probability ∝ w            [select]
+//!   5. train_step on b (optionally chunked into micro-batches) [train_bp]
+//!   6. sampler.observe_train — free losses from the BP batch   [select]
+//!
+//! Set-level methods skip 2–4 (select returns the whole meta-batch with
+//! per-sample gradient weights) and prune in `on_epoch_start`. Annealing
+//! epochs run the standard loop.
+//!
+//! Gradient accumulation (`micro_batch > 0`) chunks the selected batch
+//! into micro-batches executed as sequential optimizer steps — time-exact
+//! for the paper's low-resource accounting (#BP passes = ceil(|b|/micro)),
+//! and a standard small-scale approximation of true gradient accumulation
+//! (documented in DESIGN.md §3).
+//!
+//! Data-parallel simulation (`workers > 1`): the kept set is sharded
+//! round-robin across W simulated workers which take turns stepping; each
+//! worker's loss observations are buffered locally and merged into the
+//! sampler at epoch boundaries — the paper's "additional round of
+//! synchronization" for ESWP pre-training (§D.5). Wall-clock is measured
+//! sequentially and reported both raw and /W (ideal scaling).
+
+use crate::config::RunConfig;
+use crate::data::loader::EpochLoader;
+use crate::data::SplitDataset;
+use crate::runtime::{BatchBuf, ModelRuntime};
+use crate::sampler::{self, Sampler};
+use crate::util::timer::{phase, PhaseTimers};
+use crate::util::Pcg64;
+
+use super::accounting::CostSummary;
+
+#[derive(Clone, Debug, Default)]
+pub struct EvalStats {
+    pub loss: f64,
+    pub accuracy: f64,
+}
+
+/// Everything one training run produces (one trial).
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub name: String,
+    pub sampler: String,
+    pub seed: u64,
+    pub epochs: usize,
+    pub steps: u64,
+    /// Mean train loss per epoch (the Fig. 3-style curve).
+    pub loss_curve: Vec<f64>,
+    /// (epoch, eval loss, eval accuracy) at each eval point.
+    pub eval_curve: Vec<(usize, f64, f64)>,
+    pub final_eval: EvalStats,
+    pub timers: PhaseTimers,
+    pub cost: CostSummary,
+    /// BP sample count per class (Fig. 9) — classification tasks only.
+    pub class_bp_counts: Vec<u64>,
+    /// Cumulative BP samples at each eval point (Fig. 10 x-axis).
+    pub bp_at_eval: Vec<u64>,
+}
+
+impl TrainResult {
+    pub fn accuracy_pct(&self) -> f64 {
+        100.0 * self.final_eval.accuracy
+    }
+}
+
+/// Train with a sampler built from the config (fresh state).
+pub fn train(
+    cfg: &RunConfig,
+    rt: &mut dyn ModelRuntime,
+    data: &SplitDataset,
+) -> anyhow::Result<TrainResult> {
+    cfg.validate().map_err(|e| anyhow::anyhow!("config: {e}"))?;
+    let sampler = sampler::build(&cfg.sampler, data.train.n, cfg.epochs);
+    train_with_sampler(cfg, rt, data, sampler)
+}
+
+/// Train with an externally-constructed sampler (ablations, tests).
+pub fn train_with_sampler(
+    cfg: &RunConfig,
+    rt: &mut dyn ModelRuntime,
+    data: &SplitDataset,
+    mut sampler: Box<dyn Sampler>,
+) -> anyhow::Result<TrainResult> {
+    let mut rng = Pcg64::new(cfg.seed);
+    rt.init(cfg.seed as i32)?;
+
+    let mut timers = PhaseTimers::new();
+    let mut meta_buf = BatchBuf::new();
+    let mut mini_buf = BatchBuf::new();
+    let train_ds = &data.train;
+    let n = train_ds.n;
+    let classes = train_ds.classes.max(1);
+    let mut class_bp_counts = vec![0u64; classes];
+
+    // LR horizon: full-data steps so every method sees the same schedule
+    // (pruning shortens the run, not the schedule — matches InfoBatch).
+    let total_steps = cfg.epochs * n.div_ceil(cfg.meta_batch);
+    let mut step_idx = 0usize;
+
+    let mut fp_samples = 0u64;
+    let mut bp_samples = 0u64;
+    let mut bp_passes = 0u64;
+    let mut steps = 0u64;
+    let mut loss_curve = Vec::with_capacity(cfg.epochs);
+    let mut eval_curve = Vec::new();
+    let mut bp_at_eval = Vec::new();
+
+    let workers = cfg.workers.max(1);
+
+    for epoch in 0..cfg.epochs {
+        // ---- set-level selection -------------------------------------
+        let kept = timers.time(phase::PRUNE, || sampler.on_epoch_start(epoch, &mut rng));
+        anyhow::ensure!(!kept.is_empty(), "sampler kept nothing at epoch {epoch}");
+
+        // ---- build per-worker loaders ---------------------------------
+        let mut loaders: Vec<EpochLoader> = if workers == 1 {
+            vec![EpochLoader::new(&kept, cfg.meta_batch, &mut rng)]
+        } else {
+            // Shard round-robin; every worker sees a disjoint subset.
+            (0..workers)
+                .map(|w| {
+                    let shard: Vec<u32> =
+                        kept.iter().copied().skip(w).step_by(workers).collect();
+                    let shard = if shard.is_empty() { kept.clone() } else { shard };
+                    let mut wrng = rng.fork(0xd15c0 + w as u64);
+                    EpochLoader::new(&shard, cfg.meta_batch, &mut wrng)
+                })
+                .collect()
+        };
+        // Deferred sampler observations per worker (distributed sim).
+        let mut sync_buf: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+
+        let mut epoch_loss_sum = 0.0f64;
+        let mut epoch_loss_cnt = 0u64;
+
+        // ---- step loop: round-robin across workers --------------------
+        'rounds: loop {
+            let mut progressed = false;
+            for w in 0..workers {
+                let Some(meta) = loaders[w].next_batch() else { continue };
+                progressed = true;
+
+                timers.time(phase::DATA, || meta_buf.fill(train_ds, &meta));
+
+                // Scoring FP (batch-level methods during active epochs).
+                let selecting = cfg.mini_batch < cfg.meta_batch;
+                if selecting && sampler.needs_meta_losses(epoch) {
+                    let losses = timers.time(phase::SCORING_FP, || {
+                        rt.loss_fwd(meta_buf.x(train_ds), &meta_buf.y, meta.len())
+                    })?;
+                    fp_samples += meta.len() as u64;
+                    if workers == 1 {
+                        timers.time(phase::SELECT, || {
+                            sampler.observe_meta(&meta, &losses, epoch)
+                        });
+                    } else {
+                        // Distributed: defer to the sync round, but still
+                        // feed this worker's local view for selection.
+                        sampler.observe_meta(&meta, &losses, epoch);
+                        sync_buf.push((meta.clone(), losses));
+                    }
+                }
+
+                let sel = timers.time(phase::SELECT, || {
+                    sampler.select(&meta, cfg.mini_batch, epoch, &mut rng)
+                });
+                debug_assert!(!sel.indices.is_empty());
+
+                // Assemble the BP batch (reuse the meta buffer when the
+                // selection is the identity — the common set-level path).
+                let bsz = sel.indices.len();
+                let (buf, y_ref): (&BatchBuf, &Vec<i32>) = if sel.indices == meta {
+                    (&meta_buf, &meta_buf.y)
+                } else {
+                    timers.time(phase::DATA, || mini_buf.fill(train_ds, &sel.indices));
+                    (&mini_buf, &mini_buf.y)
+                };
+
+                let lr = cfg.lr.lr_at(step_idx, total_steps) as f32;
+
+                // Gradient accumulation: chunk into micro-batches.
+                let micro = if cfg.micro_batch > 0 && cfg.micro_batch < bsz {
+                    cfg.micro_batch
+                } else {
+                    bsz
+                };
+                let mut all_losses = Vec::with_capacity(bsz);
+                let mut mean_acc = 0.0f64;
+                let mut off = 0usize;
+                let x_len = train_ds.x_len();
+                let y_len = train_ds.y_dim;
+                while off < bsz {
+                    let m = micro.min(bsz - off);
+                    let out = timers.time(phase::TRAIN_BP, || {
+                        let x = match buf.x(train_ds) {
+                            crate::runtime::BatchX::F32(v) => crate::runtime::BatchX::F32(
+                                &v[off * x_len..(off + m) * x_len],
+                            ),
+                            crate::runtime::BatchX::I32(v) => crate::runtime::BatchX::I32(
+                                &v[off * x_len..(off + m) * x_len],
+                            ),
+                        };
+                        rt.train_step(
+                            x,
+                            &y_ref[off * y_len..(off + m) * y_len],
+                            &sel.weights[off..off + m],
+                            lr,
+                            m,
+                        )
+                    })?;
+                    bp_passes += 1;
+                    bp_samples += m as u64;
+                    mean_acc += out.mean_loss as f64 * m as f64;
+                    all_losses.extend_from_slice(&out.losses);
+                    off += m;
+                }
+                let step_mean = mean_acc / bsz as f64;
+                epoch_loss_sum += step_mean;
+                epoch_loss_cnt += 1;
+
+                // Per-class BP counts (Fig. 9).
+                if train_ds.y_dim == 1 && train_ds.classes > 0 {
+                    for &i in &sel.indices {
+                        class_bp_counts[train_ds.clean_class[i as usize] as usize] += 1;
+                    }
+                }
+
+                // Free training losses back to the sampler.
+                if workers == 1 {
+                    timers.time(phase::SELECT, || {
+                        sampler.observe_train(&sel.indices, &all_losses, epoch)
+                    });
+                } else {
+                    sync_buf.push((sel.indices.clone(), all_losses));
+                }
+
+                step_idx += 1;
+                steps += 1;
+            }
+            if !progressed {
+                break 'rounds;
+            }
+        }
+
+        // ---- distributed score synchronization ------------------------
+        if workers > 1 && !sync_buf.is_empty() {
+            timers.time(phase::SELECT, || {
+                for (idx, losses) in sync_buf.drain(..) {
+                    sampler.observe_train(&idx, &losses, epoch);
+                }
+            });
+        }
+
+        loss_curve.push(if epoch_loss_cnt > 0 {
+            epoch_loss_sum / epoch_loss_cnt as f64
+        } else {
+            f64::NAN
+        });
+
+        // ---- eval ------------------------------------------------------
+        let at_eval_point = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
+        if at_eval_point || epoch + 1 == cfg.epochs {
+            let stats = timers.time(phase::EVAL, || evaluate(rt, data))?;
+            eval_curve.push((epoch, stats.loss, stats.accuracy));
+            bp_at_eval.push(bp_samples);
+        }
+    }
+
+    let final_eval = eval_curve
+        .last()
+        .map(|&(_, l, a)| EvalStats { loss: l, accuracy: a })
+        .unwrap_or_default();
+    let cost = CostSummary::from_run(
+        &timers,
+        fp_samples,
+        bp_samples,
+        bp_passes,
+        rt.flops_per_sample_fwd(),
+    );
+
+    Ok(TrainResult {
+        name: cfg.name.clone(),
+        sampler: sampler.name().to_string(),
+        seed: cfg.seed,
+        epochs: cfg.epochs,
+        steps,
+        loss_curve,
+        eval_curve,
+        final_eval,
+        timers,
+        cost,
+        class_bp_counts,
+        bp_at_eval,
+    })
+}
+
+/// Evaluate on the held-out set, chunked to the runtime's eval batch size
+/// (tail padded by wraparound; pad rows excluded from the averages).
+pub fn evaluate(rt: &mut dyn ModelRuntime, data: &SplitDataset) -> anyhow::Result<EvalStats> {
+    let ds = &data.test;
+    let chunk = if rt.eval_size() > 0 { rt.eval_size() } else { ds.n };
+    let mut buf = BatchBuf::new();
+    let mut idx = Vec::with_capacity(chunk);
+    let mut loss_sum = 0.0f64;
+    let mut acc_sum = 0.0f64;
+    let mut count = 0usize;
+    let mut off = 0usize;
+    while off < ds.n {
+        let valid = chunk.min(ds.n - off);
+        idx.clear();
+        for k in 0..chunk {
+            idx.push(((off + k) % ds.n) as u32);
+        }
+        buf.fill(ds, &idx);
+        let (losses, correct) = rt.eval(buf.x(ds), &buf.y, chunk)?;
+        for i in 0..valid {
+            loss_sum += losses[i] as f64;
+            acc_sum += correct[i] as f64;
+        }
+        count += valid;
+        off += valid;
+    }
+    anyhow::ensure!(count > 0, "empty test set");
+    Ok(EvalStats { loss: loss_sum / count as f64, accuracy: acc_sum / count as f64 })
+}
+
+/// Run `trials` independent seeds and average the headline numbers.
+pub struct TrialSummary {
+    pub results: Vec<TrainResult>,
+}
+
+impl TrialSummary {
+    pub fn mean_accuracy_pct(&self) -> f64 {
+        self.results.iter().map(|r| r.accuracy_pct()).sum::<f64>() / self.results.len() as f64
+    }
+
+    pub fn mean_eval_loss(&self) -> f64 {
+        self.results.iter().map(|r| r.final_eval.loss).sum::<f64>() / self.results.len() as f64
+    }
+
+    pub fn mean_train_wall_s(&self) -> f64 {
+        self.results.iter().map(|r| r.cost.train_wall_s()).sum::<f64>()
+            / self.results.len() as f64
+    }
+
+    pub fn total_cost(&self) -> CostSummary {
+        // Sum counts across trials (flops ratios are scale-invariant).
+        let mut total = CostSummary::default();
+        for r in &self.results {
+            total.fp_samples += r.cost.fp_samples;
+            total.bp_samples += r.cost.bp_samples;
+            total.bp_passes += r.cost.bp_passes;
+            total.fp_flops += r.cost.fp_flops;
+            total.bp_flops += r.cost.bp_flops;
+            total.scoring_s += r.cost.scoring_s;
+            total.train_s += r.cost.train_s;
+            total.select_s += r.cost.select_s;
+            total.data_s += r.cost.data_s;
+            total.prune_s += r.cost.prune_s;
+            total.eval_s += r.cost.eval_s;
+        }
+        total
+    }
+}
+
+/// Train `trials` seeds of the same config on a fresh runtime state.
+pub fn run_trials(
+    cfg: &RunConfig,
+    rt: &mut dyn ModelRuntime,
+    data: &SplitDataset,
+    trials: usize,
+) -> anyhow::Result<TrialSummary> {
+    let mut results = Vec::with_capacity(trials);
+    for t in 0..trials {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed + 1000 * t as u64;
+        results.push(train(&c, rt, data)?);
+    }
+    Ok(TrialSummary { results })
+}

@@ -1,0 +1,158 @@
+//! Synthetic token corpus for LM pre-training / SFT (NuminaMath substitute).
+//!
+//! Token sequences come from a mixture of per-topic first-order Markov
+//! chains over a Zipf-weighted vocabulary. Each topic has a deterministic
+//! "grammar" (a permutation-based successor function) blended with Zipf
+//! noise; a per-sequence temperature controls how predictable the sequence
+//! is — the LM analogue of image difficulty. Low-temperature sequences are
+//! quickly learned (losses collapse), high-temperature ones stay hard,
+//! giving the loss spread ES exploits.
+
+use super::{Modality, SplitDataset, TensorDataset};
+use crate::util::Pcg64;
+
+const TOPICS: usize = 8;
+
+struct Topic {
+    /// successor[v] = preferred next token after v.
+    successor: Vec<i32>,
+    /// second-choice successor (bigram branching).
+    successor2: Vec<i32>,
+}
+
+fn make_topics(vocab: usize, rng: &mut Pcg64) -> Vec<Topic> {
+    (0..TOPICS)
+        .map(|_| {
+            let p1 = rng.permutation(vocab);
+            let p2 = rng.permutation(vocab);
+            Topic {
+                successor: p1.into_iter().map(|x| x as i32).collect(),
+                successor2: p2.into_iter().map(|x| x as i32).collect(),
+            }
+        })
+        .collect()
+}
+
+fn gen_sequence(
+    topic: &Topic,
+    vocab: usize,
+    len: usize,
+    temp: f32,
+    rng: &mut Pcg64,
+) -> Vec<i32> {
+    let mut seq = Vec::with_capacity(len);
+    let mut cur = rng.below(vocab as u64) as i32;
+    seq.push(cur);
+    for _ in 1..len {
+        let u = rng.f32();
+        cur = if u < 1.0 - temp {
+            topic.successor[cur as usize]
+        } else if u < 1.0 - temp / 2.0 {
+            topic.successor2[cur as usize]
+        } else {
+            // Zipf noise draw: frequent tokens dominate the noise floor.
+            rng.zipf(vocab, 1.1) as i32
+        };
+        seq.push(cur);
+    }
+    seq
+}
+
+fn make_split(
+    n: usize,
+    vocab: usize,
+    seq: usize,
+    topics: &[Topic],
+    rng: &mut Pcg64,
+) -> TensorDataset {
+    let mut x = Vec::with_capacity(n * seq);
+    let mut y = Vec::with_capacity(n * seq);
+    let mut difficulty = Vec::with_capacity(n);
+    let mut clean = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t = rng.below(topics.len() as u64) as usize;
+        // Temperature: easy bulk (0.05–0.3) + hard tail (0.5–0.9).
+        let temp = if rng.f64() < 0.2 { rng.range_f32(0.5, 0.9) } else { rng.range_f32(0.05, 0.3) };
+        let toks = gen_sequence(&topics[t], vocab, seq + 1, temp, rng);
+        x.extend_from_slice(&toks[..seq]);
+        y.extend_from_slice(&toks[1..seq + 1]);
+        difficulty.push(temp);
+        clean.push(t as i32);
+    }
+    let ds = TensorDataset {
+        modality: Modality::Tokens { seq },
+        n,
+        classes: 0,
+        x_f32: vec![],
+        x_i32: x,
+        y,
+        y_dim: seq,
+        difficulty,
+        clean_class: clean,
+    };
+    ds.validate().expect("corpus invariants");
+    ds
+}
+
+pub fn generate(n: usize, test_n: usize, vocab: usize, seq: usize, rng: &mut Pcg64) -> SplitDataset {
+    assert!(vocab >= 16, "vocab too small");
+    let mut topic_rng = rng.fork(0x70_71);
+    let topics = make_topics(vocab, &mut topic_rng);
+    let mut tr = rng.fork(1);
+    let mut te = rng.fork(2);
+    SplitDataset {
+        train: make_split(n, vocab, seq, &topics, &mut tr),
+        test: make_split(test_n, vocab, seq, &topics, &mut te),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let mut rng = Pcg64::new(1);
+        let split = generate(64, 16, 128, 32, &mut rng);
+        assert_eq!(split.train.x_i32.len(), 64 * 32);
+        assert_eq!(split.train.y.len(), 64 * 32);
+        assert!(split.train.x_i32.iter().all(|&t| (0..128).contains(&t)));
+    }
+
+    #[test]
+    fn y_is_next_token() {
+        let mut rng = Pcg64::new(2);
+        let split = generate(8, 2, 64, 16, &mut rng);
+        let ds = &split.train;
+        for i in 0..8 {
+            for j in 0..15 {
+                assert_eq!(ds.y[i * 16 + j], ds.x_i32[i * 16 + j + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn low_temp_sequences_are_predictable() {
+        // For easy sequences, next token should usually be successor(cur):
+        // verify the generator actually encodes learnable structure.
+        let mut rng = Pcg64::new(3);
+        let vocab = 64;
+        let mut topic_rng = rng.fork(0x70_71);
+        let topics = make_topics(vocab, &mut topic_rng);
+        let mut g = rng.fork(9);
+        let toks = gen_sequence(&topics[0], vocab, 200, 0.05, &mut g);
+        let hits = toks
+            .windows(2)
+            .filter(|w| topics[0].successor[w[0] as usize] == w[1])
+            .count();
+        assert!(hits as f64 / 199.0 > 0.85, "hits={hits}");
+    }
+
+    #[test]
+    fn difficulty_spread_present() {
+        let mut rng = Pcg64::new(4);
+        let split = generate(500, 8, 64, 16, &mut rng);
+        let hard = split.train.difficulty.iter().filter(|&&d| d >= 0.5).count();
+        assert!(hard > 50 && hard < 200, "hard={hard}");
+    }
+}

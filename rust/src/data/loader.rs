@@ -1,0 +1,161 @@
+//! Epoch loader: shuffled meta-batch iteration over (possibly pruned) sets.
+//!
+//! Every meta-batch has exactly `meta_batch` samples so batch shapes always
+//! match an AOT artifact; a ragged tail is padded by wrapping around the
+//! shuffled order (each padded sample is a legitimate training sample, just
+//! seen twice that epoch — standard drop-last-free practice).
+
+use crate::util::Pcg64;
+
+/// Iterator state for one epoch over a kept-index set.
+pub struct EpochLoader {
+    order: Vec<u32>,
+    meta_batch: usize,
+    cursor: usize,
+}
+
+impl EpochLoader {
+    /// `kept` are dataset indices that survived set-level pruning.
+    pub fn new(kept: &[u32], meta_batch: usize, rng: &mut Pcg64) -> Self {
+        assert!(meta_batch > 0, "meta_batch must be positive");
+        assert!(!kept.is_empty(), "cannot iterate an empty kept set");
+        let mut order = kept.to_vec();
+        rng.shuffle(&mut order);
+        EpochLoader { order, meta_batch, cursor: 0 }
+    }
+
+    /// Number of meta-batches this epoch (ceil(kept / B)).
+    pub fn num_batches(&self) -> usize {
+        self.order.len().div_ceil(self.meta_batch)
+    }
+
+    /// Next meta-batch of exactly `meta_batch` indices, or None when done.
+    pub fn next_batch(&mut self) -> Option<Vec<u32>> {
+        if self.cursor >= self.order.len() {
+            return None;
+        }
+        let mut batch = Vec::with_capacity(self.meta_batch);
+        for k in 0..self.meta_batch {
+            // Wrap around for the ragged tail.
+            batch.push(self.order[(self.cursor + k) % self.order.len()]);
+        }
+        self.cursor += self.meta_batch;
+        Some(batch)
+    }
+}
+
+/// Background prefetcher: assembles the next meta-batch's index list on a
+/// worker thread while the current step executes. Index assembly is cheap,
+/// but the same channel pattern covers future gather-offload; it also
+/// keeps the trainer loop allocation-free on the happy path.
+pub struct Prefetcher {
+    rx: Option<std::sync::mpsc::Receiver<Vec<u32>>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    pub fn spawn(kept: Vec<u32>, meta_batch: usize, mut rng: Pcg64, depth: usize) -> Self {
+        let (tx, rx) = std::sync::mpsc::sync_channel(depth.max(1));
+        let handle = std::thread::spawn(move || {
+            let mut loader = EpochLoader::new(&kept, meta_batch, &mut rng);
+            while let Some(batch) = loader.next_batch() {
+                if tx.send(batch).is_err() {
+                    return; // consumer dropped
+                }
+            }
+        });
+        Prefetcher { rx: Some(rx), handle: Some(handle) }
+    }
+
+    pub fn next(&mut self) -> Option<Vec<u32>> {
+        self.rx.as_ref().and_then(|rx| rx.recv().ok())
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Close the channel first so a worker blocked on send() observes
+        // the disconnect, then join.
+        drop(self.rx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_indices_once_when_divisible() {
+        let mut rng = Pcg64::new(1);
+        let kept: Vec<u32> = (0..64).collect();
+        let mut loader = EpochLoader::new(&kept, 16, &mut rng);
+        let mut seen = Vec::new();
+        while let Some(b) = loader.next_batch() {
+            assert_eq!(b.len(), 16);
+            seen.extend(b);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, kept);
+    }
+
+    #[test]
+    fn ragged_tail_pads_by_wraparound() {
+        let mut rng = Pcg64::new(2);
+        let kept: Vec<u32> = (0..10).collect();
+        let mut loader = EpochLoader::new(&kept, 4, &mut rng);
+        assert_eq!(loader.num_batches(), 3);
+        let mut count = 0;
+        let mut seen = std::collections::HashSet::new();
+        while let Some(b) = loader.next_batch() {
+            assert_eq!(b.len(), 4);
+            seen.extend(b);
+            count += 1;
+        }
+        assert_eq!(count, 3);
+        assert_eq!(seen.len(), 10, "every sample seen at least once");
+    }
+
+    #[test]
+    fn shuffles_between_epochs() {
+        let kept: Vec<u32> = (0..32).collect();
+        let mut rng = Pcg64::new(3);
+        let a: Vec<u32> = EpochLoader::new(&kept, 32, &mut rng).next_batch().unwrap();
+        let b: Vec<u32> = EpochLoader::new(&kept, 32, &mut rng).next_batch().unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn respects_kept_subset() {
+        let mut rng = Pcg64::new(4);
+        let kept = vec![3u32, 7, 11, 15];
+        let mut loader = EpochLoader::new(&kept, 2, &mut rng);
+        while let Some(b) = loader.next_batch() {
+            for i in b {
+                assert!(kept.contains(&i));
+            }
+        }
+    }
+
+    #[test]
+    fn prefetcher_yields_same_multiset_as_loader() {
+        let kept: Vec<u32> = (0..40).collect();
+        let mut pf = Prefetcher::spawn(kept.clone(), 8, Pcg64::new(5), 2);
+        let mut seen = Vec::new();
+        while let Some(b) = pf.next() {
+            seen.extend(b);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, kept);
+    }
+
+    #[test]
+    fn prefetcher_drop_mid_stream_is_clean() {
+        let kept: Vec<u32> = (0..1000).collect();
+        let mut pf = Prefetcher::spawn(kept, 8, Pcg64::new(6), 2);
+        let _ = pf.next();
+        drop(pf); // must not deadlock or panic
+    }
+}

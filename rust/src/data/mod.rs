@@ -1,0 +1,224 @@
+//! Dataset substrates: in-memory tensor datasets + procedural generators.
+//!
+//! The paper evaluates on CIFAR-10/100, ImageNet-1K, GLUE and NuminaMath.
+//! None are available offline, so each workload has a procedural synthetic
+//! substitute that preserves the *statistical structure data selection
+//! exploits* (DESIGN.md §3): a spread of per-sample difficulty, a tail of
+//! hard/slow-to-learn samples, label noise, and class structure. Every
+//! generator also records the ground-truth per-sample difficulty so tests
+//! and Fig. 9/10-style analyses can check that samplers actually find the
+//! hard samples.
+
+pub mod corpus;
+pub mod loader;
+pub mod nlu;
+pub mod synth_cifar;
+
+use crate::config::DatasetConfig;
+use crate::util::Pcg64;
+
+/// Input modality: flat float features (images) or token sequences (text).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Modality {
+    Float { dim: usize },
+    Tokens { seq: usize },
+}
+
+impl Modality {
+    pub fn x_len(&self) -> usize {
+        match *self {
+            Modality::Float { dim } => dim,
+            Modality::Tokens { seq } => seq,
+        }
+    }
+}
+
+/// An in-memory dataset with per-sample metadata.
+///
+/// Exactly one of `x_f32`/`x_i32` is populated depending on `modality`.
+/// Labels are always i32: one per sample for classification (`y_dim == 1`)
+/// or one per token for LM targets (`y_dim == seq`).
+#[derive(Clone, Debug)]
+pub struct TensorDataset {
+    pub modality: Modality,
+    pub n: usize,
+    pub classes: usize, // 0 for unlabeled (MAE) / LM
+    pub x_f32: Vec<f32>,
+    pub x_i32: Vec<i32>,
+    pub y: Vec<i32>,
+    pub y_dim: usize,
+    /// Ground-truth difficulty in [0, 1] (generator-side; analysis only).
+    pub difficulty: Vec<f32>,
+    /// True class before label noise (analysis only; == y when no noise).
+    pub clean_class: Vec<i32>,
+}
+
+impl TensorDataset {
+    pub fn x_len(&self) -> usize {
+        self.modality.x_len()
+    }
+
+    pub fn class_of(&self, i: usize) -> i32 {
+        debug_assert!(self.y_dim == 1);
+        self.y[i]
+    }
+
+    /// Gather float features for `indices` into a contiguous batch buffer.
+    pub fn gather_x_f32(&self, indices: &[u32], out: &mut Vec<f32>) {
+        let d = self.x_len();
+        out.clear();
+        out.reserve(indices.len() * d);
+        for &i in indices {
+            let i = i as usize;
+            out.extend_from_slice(&self.x_f32[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// Gather token features for `indices`.
+    pub fn gather_x_i32(&self, indices: &[u32], out: &mut Vec<i32>) {
+        let d = self.x_len();
+        out.clear();
+        out.reserve(indices.len() * d);
+        for &i in indices {
+            let i = i as usize;
+            out.extend_from_slice(&self.x_i32[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// Gather labels for `indices`.
+    pub fn gather_y(&self, indices: &[u32], out: &mut Vec<i32>) {
+        out.clear();
+        out.reserve(indices.len() * self.y_dim);
+        for &i in indices {
+            let i = i as usize;
+            out.extend_from_slice(&self.y[i * self.y_dim..(i + 1) * self.y_dim]);
+        }
+    }
+
+    /// Structural invariants; generators assert this before returning.
+    pub fn validate(&self) -> Result<(), String> {
+        let d = self.x_len();
+        match self.modality {
+            Modality::Float { .. } => {
+                if self.x_f32.len() != self.n * d {
+                    return Err(format!("x_f32 len {} != n*d {}", self.x_f32.len(), self.n * d));
+                }
+                if !self.x_i32.is_empty() {
+                    return Err("x_i32 must be empty for Float modality".into());
+                }
+            }
+            Modality::Tokens { .. } => {
+                if self.x_i32.len() != self.n * d {
+                    return Err(format!("x_i32 len {} != n*seq {}", self.x_i32.len(), self.n * d));
+                }
+                if !self.x_f32.is_empty() {
+                    return Err("x_f32 must be empty for Tokens modality".into());
+                }
+            }
+        }
+        if self.y.len() != self.n * self.y_dim {
+            return Err(format!("y len {} != n*y_dim {}", self.y.len(), self.n * self.y_dim));
+        }
+        if self.difficulty.len() != self.n || self.clean_class.len() != self.n {
+            return Err("metadata length mismatch".into());
+        }
+        if self.classes > 0 && self.y_dim == 1 {
+            if let Some(&bad) = self.y.iter().find(|&&c| c < 0 || c as usize >= self.classes) {
+                return Err(format!("label {bad} out of [0,{})", self.classes));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A train/test pair produced by every generator.
+#[derive(Clone, Debug)]
+pub struct SplitDataset {
+    pub train: TensorDataset,
+    pub test: TensorDataset,
+}
+
+/// Build the dataset a `RunConfig` asks for. `test_n` is the held-out size.
+pub fn build(cfg: &DatasetConfig, test_n: usize, seed: u64) -> SplitDataset {
+    let mut rng = Pcg64::with_stream(seed, 0xda7a);
+    match cfg {
+        DatasetConfig::SynthCifar { n, classes, label_noise, hard_frac } => {
+            synth_cifar::generate(*n, test_n, *classes, *label_noise, *hard_frac, &mut rng)
+        }
+        DatasetConfig::LmCorpus { n, vocab, seq } => {
+            corpus::generate(*n, test_n, *vocab, *seq, &mut rng)
+        }
+        DatasetConfig::Nlu { task, n, vocab, seq, classes } => {
+            nlu::generate(task, *n, test_n, *vocab, *seq, *classes, &mut rng)
+        }
+        DatasetConfig::MaeImages { n, dim } => synth_cifar::generate_unlabeled(*n, test_n, *dim, &mut rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> TensorDataset {
+        TensorDataset {
+            modality: Modality::Float { dim: 2 },
+            n: 3,
+            classes: 2,
+            x_f32: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+            x_i32: vec![],
+            y: vec![0, 1, 0],
+            y_dim: 1,
+            difficulty: vec![0.1, 0.5, 0.9],
+            clean_class: vec![0, 1, 0],
+        }
+    }
+
+    #[test]
+    fn gather_picks_rows() {
+        let ds = tiny();
+        let mut x = Vec::new();
+        ds.gather_x_f32(&[2, 0], &mut x);
+        assert_eq!(x, vec![4.0, 5.0, 0.0, 1.0]);
+        let mut y = Vec::new();
+        ds.gather_y(&[1, 1], &mut y);
+        assert_eq!(y, vec![1, 1]);
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let mut ds = tiny();
+        ds.validate().unwrap();
+        ds.y[1] = 5; // out of class range
+        assert!(ds.validate().is_err());
+        let mut ds = tiny();
+        ds.x_f32.pop();
+        assert!(ds.validate().is_err());
+    }
+
+    #[test]
+    fn build_dispatches_all_kinds() {
+        for cfg in [
+            DatasetConfig::SynthCifar { n: 64, classes: 4, label_noise: 0.1, hard_frac: 0.2 },
+            DatasetConfig::LmCorpus { n: 32, vocab: 64, seq: 16 },
+            DatasetConfig::Nlu { task: "sst2".into(), n: 32, vocab: 64, seq: 12, classes: 2 },
+            DatasetConfig::MaeImages { n: 32, dim: 48 },
+        ] {
+            let split = build(&cfg, 16, 7);
+            split.train.validate().unwrap();
+            split.test.validate().unwrap();
+            assert_eq!(split.train.n, cfg.n());
+            assert_eq!(split.test.n, 16);
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic_in_seed() {
+        let cfg = DatasetConfig::SynthCifar { n: 32, classes: 4, label_noise: 0.1, hard_frac: 0.2 };
+        let a = build(&cfg, 8, 3);
+        let b = build(&cfg, 8, 3);
+        let c = build(&cfg, 8, 4);
+        assert_eq!(a.train.x_f32, b.train.x_f32);
+        assert_eq!(a.train.y, b.train.y);
+        assert_ne!(a.train.x_f32, c.train.x_f32);
+    }
+}

@@ -1,0 +1,250 @@
+//! SynthCIFAR: procedural CIFAR-like image classification data.
+//!
+//! Each class gets a smooth low-frequency prototype image (random coarse
+//! 8×8 pattern bilinearly upsampled to 32×32×3). A sample is its class
+//! prototype plus per-sample noise whose magnitude follows a difficulty
+//! distribution: most samples are easy (low noise), a `hard_frac` tail is
+//! heavily corrupted, and `label_noise` of samples get a wrong label
+//! outright. This reproduces the structure that makes dynamic data
+//! selection interesting on real CIFAR: a learnable easy core, hard
+//! informative samples with persistently higher loss, and noisy samples
+//! whose loss never decreases.
+
+use super::{Modality, SplitDataset, TensorDataset};
+use crate::util::Pcg64;
+
+pub const IMG: usize = 32;
+pub const DIM: usize = IMG * IMG * 3;
+const COARSE: usize = 8;
+
+/// Build one smooth class prototype (flat [32*32*3], values roughly ±1).
+fn prototype(rng: &mut Pcg64) -> Vec<f32> {
+    // Random coarse grid per channel, bilinear upsample.
+    let mut out = vec![0.0f32; DIM];
+    for ch in 0..3 {
+        let coarse: Vec<f32> = (0..COARSE * COARSE).map(|_| rng.normal()).collect();
+        for y in 0..IMG {
+            for x in 0..IMG {
+                let fy = y as f32 / IMG as f32 * (COARSE - 1) as f32;
+                let fx = x as f32 / IMG as f32 * (COARSE - 1) as f32;
+                let (y0, x0) = (fy as usize, fx as usize);
+                let (y1, x1) = ((y0 + 1).min(COARSE - 1), (x0 + 1).min(COARSE - 1));
+                let (dy, dx) = (fy - y0 as f32, fx - x0 as f32);
+                let v = coarse[y0 * COARSE + x0] * (1.0 - dy) * (1.0 - dx)
+                    + coarse[y0 * COARSE + x1] * (1.0 - dy) * dx
+                    + coarse[y1 * COARSE + x0] * dy * (1.0 - dx)
+                    + coarse[y1 * COARSE + x1] * dy * dx;
+                out[(y * IMG + x) * 3 + ch] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Draw a per-sample difficulty in [0, 1]: easy bulk + hard tail.
+fn draw_difficulty(rng: &mut Pcg64, hard_frac: f64) -> f32 {
+    if (rng.f64()) < hard_frac {
+        rng.range_f32(0.6, 1.0) // hard tail
+    } else {
+        rng.range_f32(0.0, 0.4) // easy bulk
+    }
+}
+
+fn make_split(
+    n: usize,
+    classes: usize,
+    label_noise: f64,
+    hard_frac: f64,
+    protos: &[Vec<f32>],
+    rng: &mut Pcg64,
+) -> TensorDataset {
+    let mut x = Vec::with_capacity(n * DIM);
+    let mut y = Vec::with_capacity(n);
+    let mut difficulty = Vec::with_capacity(n);
+    let mut clean = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = (i % classes) as i32; // balanced classes
+        let d = draw_difficulty(rng, hard_frac);
+        // Noise std grows with difficulty: easy ≈ 0.35σ, hard ≈ 1.4σ.
+        let sigma = 0.3 + 1.2 * d;
+        let proto = &protos[c as usize];
+        for &p in proto {
+            x.push(p + sigma * rng.normal());
+        }
+        let noisy = rng.f64() < label_noise;
+        let label = if noisy {
+            // A wrong label chosen uniformly among the others.
+            let mut l = rng.below(classes as u64) as i32;
+            if l == c {
+                l = (l + 1) % classes as i32;
+            }
+            l
+        } else {
+            c
+        };
+        y.push(label);
+        clean.push(c);
+        // Label-noise samples are effectively unlearnable: difficulty 1.
+        difficulty.push(if noisy { 1.0 } else { d });
+    }
+    let ds = TensorDataset {
+        modality: Modality::Float { dim: DIM },
+        n,
+        classes,
+        x_f32: x,
+        x_i32: vec![],
+        y,
+        y_dim: 1,
+        difficulty,
+        clean_class: clean,
+    };
+    ds.validate().expect("synth_cifar invariants");
+    ds
+}
+
+/// Generate a train/test split. Test data is clean-labeled (standard
+/// benchmark practice: label noise only corrupts training data).
+pub fn generate(
+    n: usize,
+    test_n: usize,
+    classes: usize,
+    label_noise: f64,
+    hard_frac: f64,
+    rng: &mut Pcg64,
+) -> SplitDataset {
+    assert!(classes >= 2, "need >= 2 classes");
+    let mut proto_rng = rng.fork(0x9107);
+    let protos: Vec<Vec<f32>> = (0..classes).map(|_| prototype(&mut proto_rng)).collect();
+    let mut train_rng = rng.fork(0x7e57 + 1);
+    let mut test_rng = rng.fork(0x7e57 + 2);
+    SplitDataset {
+        train: make_split(n, classes, label_noise, hard_frac, &protos, &mut train_rng),
+        test: make_split(test_n, classes, 0.0, hard_frac, &protos, &mut test_rng),
+    }
+}
+
+/// Unlabeled images for MAE pre-training: mixture of smooth prototypes so
+/// there is structure to reconstruct, with difficulty-scaled noise.
+pub fn generate_unlabeled(n: usize, test_n: usize, dim: usize, rng: &mut Pcg64) -> SplitDataset {
+    let k = 16; // latent "scene" prototypes
+    let mut proto_rng = rng.fork(0x9108);
+    let protos: Vec<Vec<f32>> = (0..k)
+        .map(|_| {
+            let p = prototype(&mut proto_rng);
+            // Resize the flat 3072 prototype to `dim` by tiling/truncation.
+            (0..dim).map(|i| p[i % DIM]).collect()
+        })
+        .collect();
+    let make = |n: usize, rng: &mut Pcg64| {
+        let mut x = Vec::with_capacity(n * dim);
+        let mut difficulty = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.below(k as u64) as usize;
+            let d = draw_difficulty(rng, 0.2);
+            let sigma = 0.2 + 0.8 * d;
+            for &p in &protos[c] {
+                x.push(p + sigma * rng.normal());
+            }
+            difficulty.push(d);
+        }
+        let ds = TensorDataset {
+            modality: Modality::Float { dim },
+            n,
+            classes: 0,
+            x_f32: x,
+            x_i32: vec![],
+            y: vec![0; n],
+            y_dim: 1,
+            difficulty,
+            clean_class: vec![0; n],
+        };
+        ds.validate().expect("mae invariants");
+        ds
+    };
+    let mut tr = rng.fork(1);
+    let mut te = rng.fork(2);
+    SplitDataset { train: make(n, &mut tr), test: make(test_n, &mut te) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math;
+
+    #[test]
+    fn shapes_and_balance() {
+        let mut rng = Pcg64::new(1);
+        let split = generate(100, 20, 10, 0.0, 0.2, &mut rng);
+        assert_eq!(split.train.n, 100);
+        assert_eq!(split.train.x_f32.len(), 100 * DIM);
+        // Balanced: each class has exactly 10 train samples.
+        for c in 0..10 {
+            assert_eq!(split.train.y.iter().filter(|&&y| y == c).count(), 10);
+        }
+    }
+
+    #[test]
+    fn label_noise_rate_applied() {
+        let mut rng = Pcg64::new(2);
+        let split = generate(2000, 10, 10, 0.2, 0.2, &mut rng);
+        let flipped = split
+            .train
+            .y
+            .iter()
+            .zip(&split.train.clean_class)
+            .filter(|(a, b)| a != b)
+            .count();
+        let rate = flipped as f64 / 2000.0;
+        assert!((rate - 0.2).abs() < 0.04, "rate={rate}");
+        // Test split is always clean.
+        assert_eq!(
+            split.test.y, split.test.clean_class,
+            "test labels must be clean"
+        );
+    }
+
+    #[test]
+    fn hard_tail_exists() {
+        let mut rng = Pcg64::new(3);
+        let split = generate(1000, 10, 10, 0.0, 0.25, &mut rng);
+        let hard = split.train.difficulty.iter().filter(|&&d| d >= 0.6).count();
+        let rate = hard as f64 / 1000.0;
+        assert!((rate - 0.25).abs() < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn classes_are_separable_in_feature_space() {
+        // Same-class samples must be closer than cross-class on average —
+        // otherwise no model could learn and selection results would be
+        // meaningless noise.
+        let mut rng = Pcg64::new(4);
+        let split = generate(200, 40, 4, 0.0, 0.0, &mut rng);
+        let ds = &split.train;
+        let dist = |a: usize, b: usize| -> f64 {
+            (0..DIM)
+                .map(|j| (ds.x_f32[a * DIM + j] - ds.x_f32[b * DIM + j]) as f64)
+                .map(|d| d * d)
+                .sum::<f64>()
+        };
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for a in 0..40 {
+            for b in (a + 1)..40 {
+                if ds.y[a] == ds.y[b] {
+                    same.push(dist(a, b) as f32);
+                } else {
+                    diff.push(dist(a, b) as f32);
+                }
+            }
+        }
+        assert!(math::mean(&same) < math::mean(&diff));
+    }
+
+    #[test]
+    fn unlabeled_generator_shapes() {
+        let mut rng = Pcg64::new(5);
+        let split = generate_unlabeled(50, 10, 512, &mut rng);
+        assert_eq!(split.train.x_f32.len(), 50 * 512);
+        assert_eq!(split.train.classes, 0);
+    }
+}

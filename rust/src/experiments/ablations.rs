@@ -1,0 +1,80 @@
+//! Tab. 6 / 7 / 8 ablations:
+//!   6 — loss differences + annealing (Loss / NonDif / Dif × ±A),
+//!   7 — pruning strategies (Baseline / Random / ES / ESWP) on NLU,
+//!   8 — annealing-ratio sweep.
+//! Paper shape: "Dif" (β1≠β2) beats "NonDif" (β1=β2) consistently;
+//! annealing helps; random pruning is strictly worse than ESWP.
+
+use crate::config::presets::{tab6, tab7, tab8, Scale};
+use crate::metrics::Recorder;
+use crate::util::bench::table_header;
+
+use super::{make_runtime, mean_acc, run_config, total_cost, trials};
+
+pub fn run_tab6(scale: Scale) -> anyhow::Result<()> {
+    let rows = tab6(scale);
+    let rec = Recorder::new("tab6_differences")?;
+    let n_trials = trials(scale);
+    table_header("Table 6 — loss differences & annealing", &["variant", "acc%"]);
+    let mut rt = make_runtime(&rows[0].1)?;
+    for (label, cfg) in &rows {
+        let rs = run_config(cfg, rt.as_mut(), n_trials)?;
+        for r in &rs {
+            rec.record_result(r)?;
+        }
+        println!("{label:<12} | {:5.1}", mean_acc(&rs));
+    }
+    Ok(())
+}
+
+pub fn run_tab7(scale: Scale) -> anyhow::Result<()> {
+    let rows = tab7(scale);
+    let rec = Recorder::new("tab7_pruning")?;
+    let n_trials = trials(scale);
+    table_header("Table 7 — pruning strategies", &["task", "method", "acc%", "time saved"]);
+    let mut rt = make_runtime(&rows[0].2)?;
+    let mut base: Option<(f64, crate::coordinator::CostSummary)> = None;
+    let mut current_task = String::new();
+    for (task, label, cfg) in &rows {
+        if *task != current_task {
+            current_task = task.clone();
+            base = None;
+        }
+        let rs = run_config(cfg, rt.as_mut(), n_trials)?;
+        for r in &rs {
+            rec.record_result(r)?;
+        }
+        let acc = mean_acc(&rs);
+        let cost = total_cost(&rs);
+        match &base {
+            None => {
+                println!("{task:<6} | {label:<9} | {acc:5.1}       | —");
+                base = Some((acc, cost));
+            }
+            Some((bacc, bcost)) => {
+                println!(
+                    "{task:<6} | {label:<9} | {} | {}",
+                    super::fmt_acc(acc, *bacc),
+                    super::fmt_saved(bcost, &cost)
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn run_tab8(scale: Scale) -> anyhow::Result<()> {
+    let rows = tab8(scale);
+    let rec = Recorder::new("tab8_annealing")?;
+    let n_trials = trials(scale);
+    table_header("Table 8 — annealing ratio", &["ar", "acc%"]);
+    let mut rt = make_runtime(&rows[0].1)?;
+    for (ar, cfg) in &rows {
+        let rs = run_config(cfg, rt.as_mut(), n_trials)?;
+        for r in &rs {
+            rec.record_result(r)?;
+        }
+        println!("{ar:5.3} | {:5.2}", mean_acc(&rs));
+    }
+    Ok(())
+}

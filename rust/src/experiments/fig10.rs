@@ -1,0 +1,76 @@
+//! Fig. 10: test accuracy versus cumulative BP samples — the "learning
+//! efficiency" view. Paper shape: ES/ESWP reach each accuracy level with
+//! far fewer BP samples than Baseline.
+
+use crate::config::presets::Scale;
+use crate::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
+use crate::metrics::Recorder;
+use crate::util::bench::table_header;
+use crate::util::json::{num, obj, s, Json};
+
+use super::{make_runtime, run_config};
+
+pub fn run(scale: Scale) -> anyhow::Result<()> {
+    let n = match scale {
+        Scale::Smoke => 1024,
+        Scale::Full => 16384,
+    };
+    let base_cfg = {
+        let mut c = RunConfig::new(
+            "fig10",
+            "mlp_cifar10",
+            DatasetConfig::SynthCifar { n, classes: 10, label_noise: 0.05, hard_frac: 0.2 },
+        );
+        c.epochs = match scale {
+            Scale::Smoke => 6,
+            Scale::Full => 30,
+        };
+        c.meta_batch = 128;
+        c.mini_batch = 32;
+        c.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
+        c.eval_every = 1;
+        c.test_n = 512;
+        c
+    };
+    let rec = Recorder::new("fig10_bp_efficiency")?;
+    table_header(
+        "Fig. 10 — accuracy vs cumulative BP samples",
+        &["method", "series (bp_samples:acc%) ..."],
+    );
+    let mut rt = make_runtime(&base_cfg)?;
+    for (tag, sampler) in [
+        ("baseline", SamplerConfig::Uniform),
+        ("es", SamplerConfig::es_default()),
+        ("eswp", SamplerConfig::eswp_default()),
+    ] {
+        let mut cfg = base_cfg.clone();
+        cfg.name = format!("fig10/{tag}");
+        cfg.sampler = sampler;
+        let rs = run_config(&cfg, rt.as_mut(), 1)?;
+        let r = &rs[0];
+        let series: Vec<String> = r
+            .bp_at_eval
+            .iter()
+            .zip(&r.eval_curve)
+            .map(|(&bp, &(_, _, acc))| format!("{bp}:{:.1}", acc * 100.0))
+            .collect();
+        println!("{tag:<9} | {}", series.join("  "));
+        rec.record(&obj(vec![
+            ("fig", s("fig10")),
+            ("method", s(tag)),
+            (
+                "series",
+                Json::Arr(
+                    r.bp_at_eval
+                        .iter()
+                        .zip(&r.eval_curve)
+                        .map(|(&bp, &(_, _, acc))| {
+                            Json::Arr(vec![num(bp as f64), num(acc * 100.0)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Fig. 4 / Tab. 9: low-resource LM SFT with gradient accumulation
+//! (Qwen2.5-Math substitute: txf_lm on the synthetic corpus; B=32, b=8,
+//! b_micro=8). Paper shape: ESWP reaches each eval budget in ~half the
+//! wall-clock because baseline burns 4 BP passes per update vs ESWP's 1.
+
+use crate::config::presets::{fig4, Scale};
+use crate::metrics::Recorder;
+use crate::util::bench::table_header;
+use crate::util::json::{num, obj, s, Json};
+
+use super::{make_runtime, run_config, total_cost, trials};
+
+pub fn run(scale: Scale) -> anyhow::Result<()> {
+    let runs = fig4(scale);
+    let rec = Recorder::new("fig4_qwen_sft")?;
+    let n_trials = trials(scale);
+    table_header(
+        "Fig. 4 / Tab. 9 — low-resource SFT (grad accumulation)",
+        &["method", "final LM loss", "BP passes", "train wall s", "time saved"],
+    );
+    let mut rt = make_runtime(&runs[0])?;
+    let mut base_cost = None;
+    for cfg in &runs {
+        let rs = run_config(cfg, rt.as_mut(), n_trials)?;
+        let tag = cfg.name.split('/').next_back().unwrap_or("?");
+        for r in &rs {
+            rec.record_result(r)?;
+            rec.record(&obj(vec![
+                ("fig", s("fig4_curve")),
+                ("method", s(tag)),
+                (
+                    "eval_curve",
+                    Json::Arr(
+                        r.eval_curve
+                            .iter()
+                            .map(|&(e, l, _)| Json::Arr(vec![num(e as f64), num(l)]))
+                            .collect(),
+                    ),
+                ),
+            ]))?;
+        }
+        let loss = super::mean_loss(&rs);
+        let cost = total_cost(&rs);
+        let saved = match &base_cost {
+            None => "—".to_string(),
+            Some(b) => super::fmt_saved(b, &cost),
+        };
+        println!(
+            "{tag:<10} | {loss:8.4}      | {:>8} | {:>8.2} | {saved}",
+            cost.bp_passes,
+            cost.train_wall_s()
+        );
+        if tag == "baseline" {
+            base_cost = Some(cost);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Fig. 5: the performance/speed trade-offs.
+//! Left: b/B sweep for ES — lossless down to b/B=1/16; degradation below.
+//! Right: pruning-ratio sweep for ESWP — a knee around r ≈ 0.2–0.3.
+
+use crate::config::presets::{fig5_bb_sweep, fig5_prune_sweep, Scale};
+use crate::metrics::Recorder;
+use crate::util::bench::table_header;
+
+use super::{make_runtime, mean_acc, run_config, total_cost, trials};
+
+pub fn run(scale: Scale) -> anyhow::Result<()> {
+    let rec = Recorder::new("fig5_tradeoffs")?;
+    let n_trials = trials(scale);
+
+    // Left panel: b/B sweep.
+    let runs = fig5_bb_sweep(scale);
+    table_header("Fig. 5 (left) — ES b/B sweep", &["run", "b/B", "acc%", "time saved"]);
+    let mut rt = make_runtime(&runs[0])?;
+    let mut base_cost = None;
+    for cfg in &runs {
+        let rs = run_config(cfg, rt.as_mut(), n_trials)?;
+        for r in &rs {
+            rec.record_result(r)?;
+        }
+        let acc = mean_acc(&rs);
+        let cost = total_cost(&rs);
+        let ratio = format!("{}/{}", cfg.mini_batch, cfg.meta_batch);
+        let saved = match &base_cost {
+            None => "—".into(),
+            Some(b) => super::fmt_saved(b, &cost),
+        };
+        println!("{:<22} | {ratio:>7} | {acc:5.1} | {saved}", cfg.name);
+        if cfg.sampler.name() == "baseline" {
+            base_cost = Some(cost);
+        }
+    }
+
+    // Right panel: pruning-ratio sweep.
+    let runs = fig5_prune_sweep(scale);
+    table_header("Fig. 5 (right) — ESWP pruning-ratio sweep", &["run", "r", "acc%", "time saved"]);
+    let mut rt = make_runtime(&runs[0])?;
+    let mut es_cost = None;
+    for cfg in &runs {
+        let rs = run_config(cfg, rt.as_mut(), n_trials)?;
+        for r in &rs {
+            rec.record_result(r)?;
+        }
+        let acc = mean_acc(&rs);
+        let cost = total_cost(&rs);
+        let r_tag = cfg.name.split('r').next_back().unwrap_or("?").to_string();
+        let saved = match &es_cost {
+            None => "—".into(),
+            Some(b) => super::fmt_saved(b, &cost),
+        };
+        println!("{:<22} | {r_tag:>5} | {acc:5.1} | {saved}", cfg.name);
+        if es_cost.is_none() {
+            es_cost = Some(cost); // r=0 (plain ES) anchors the sweep
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Fig. 6 + 7: the (β1, β2) landscape for ES. Coarse grid (Fig. 6) and a
+//! dense grid around the default (0.2, 0.9) (Fig. 7) — the paper's claim
+//! is local optimality of the defaults and graceful degradation elsewhere
+//! (corners reduce to Loss (0,0) and Baseline (1,1)).
+
+use crate::config::presets::{fig6_beta_grid, Scale};
+use crate::metrics::Recorder;
+use crate::util::bench::table_header;
+
+use super::{make_runtime, mean_acc, run_config, trials};
+
+pub fn run(scale: Scale, dense: bool) -> anyhow::Result<()> {
+    let grid = fig6_beta_grid(scale, dense);
+    let rec = Recorder::new(if dense { "fig7_betas_dense" } else { "fig6_betas" })?;
+    let n_trials = trials(scale);
+    table_header(
+        if dense { "Fig. 7 — dense beta grid" } else { "Fig. 6 — beta grid" },
+        &["beta1", "beta2", "acc%"],
+    );
+    let mut rt = make_runtime(&grid[0].2)?;
+    let mut best = (0.0f32, 0.0f32, f64::MIN);
+    for (b1, b2, cfg) in &grid {
+        let rs = run_config(cfg, rt.as_mut(), n_trials)?;
+        for r in &rs {
+            rec.record_result(r)?;
+        }
+        let acc = mean_acc(&rs);
+        println!("{b1:5.2} | {b2:5.2} | {acc:5.1}");
+        if acc > best.2 {
+            best = (*b1, *b2, acc);
+        }
+    }
+    println!("best: (beta1, beta2) = ({}, {}) at {:.1}%", best.0, best.1, best.2);
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Fig. 9: per-class BP-sample counts under ESWP — the visualization that
+//! selection automatically re-balances effort across classes as training
+//! proceeds (harder classes get more BP samples; ranks shift per epoch).
+
+use crate::config::presets::Scale;
+use crate::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
+use crate::metrics::Recorder;
+use crate::util::bench::table_header;
+use crate::util::json::{num, obj, s, Json};
+
+use super::{make_runtime, run_config};
+
+pub fn run(scale: Scale) -> anyhow::Result<()> {
+    let n = match scale {
+        Scale::Smoke => 1024,
+        Scale::Full => 16384,
+    };
+    let classes = 10; // paper shows CIFAR-100's first 50; we use c10 scale
+    let mut cfg = RunConfig::new(
+        "fig9/class_counts",
+        "mlp_cifar10",
+        DatasetConfig::SynthCifar { n, classes, label_noise: 0.05, hard_frac: 0.2 },
+    );
+    cfg.epochs = match scale {
+        Scale::Smoke => 6,
+        Scale::Full => 30,
+    };
+    cfg.meta_batch = 128;
+    cfg.mini_batch = 32;
+    cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
+    cfg.sampler = SamplerConfig::eswp_default();
+    cfg.test_n = 512;
+
+    let mut rt = make_runtime(&cfg)?;
+    let rs = run_config(&cfg, rt.as_mut(), 1)?;
+    let r = &rs[0];
+
+    // Rank classes by BP count (descending), like the paper's column labels.
+    let mut order: Vec<usize> = (0..classes).collect();
+    order.sort_by_key(|&c| std::cmp::Reverse(r.class_bp_counts[c]));
+
+    table_header("Fig. 9 — BP samples per class (ESWP)", &["class", "bp samples", "rank"]);
+    for c in 0..classes {
+        let rank = order.iter().position(|&x| x == c).unwrap() + 1;
+        println!("{c:>5} | {:>10} | {rank:>4}", r.class_bp_counts[c]);
+    }
+    let rec = Recorder::new("fig9_class_counts")?;
+    rec.record(&obj(vec![
+        ("fig", s("fig9")),
+        (
+            "counts",
+            Json::Arr(r.class_bp_counts.iter().map(|&c| num(c as f64)).collect()),
+        ),
+    ]))?;
+
+    // Shape check the paper implies: selection is NOT uniform over classes.
+    let max = *r.class_bp_counts.iter().max().unwrap() as f64;
+    let min = *r.class_bp_counts.iter().min().unwrap() as f64;
+    println!("class imbalance max/min = {:.2}", max / min.max(1.0));
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Experiment drivers: one module per paper table/figure (DESIGN.md §4).
+//!
+//! Each module exposes `run(scale) -> anyhow::Result<()>` which trains the
+//! preset configs, prints a paper-style table to stdout, and records JSONL
+//! under `results/`. The `benches/*.rs` targets are thin wrappers so
+//! `cargo bench` regenerates every table and figure; `EVOSAMPLE_BENCH_FULL=1`
+//! switches from smoke to paper-faithful scale.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig10;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig9;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod theory;
+
+use crate::config::RunConfig;
+use crate::coordinator::{train, TrainResult};
+use crate::data;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::native::NativeRuntime;
+use crate::runtime::xla_rt::XlaRuntime;
+use crate::runtime::ModelRuntime;
+
+/// Number of independent trials per config (paper: 3-4; smoke: 1).
+pub fn trials(scale: crate::config::presets::Scale) -> usize {
+    match scale {
+        crate::config::presets::Scale::Smoke => 1,
+        crate::config::presets::Scale::Full => 3,
+    }
+}
+
+/// Build the runtime for a config: the XLA artifact path when available,
+/// otherwise a native fallback for float-feature models (tests/dev boxes
+/// without `make artifacts`).
+pub fn make_runtime(cfg: &RunConfig) -> anyhow::Result<Box<dyn ModelRuntime>> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(&dir)?;
+        if manifest.models.contains_key(&cfg.model) {
+            return Ok(Box::new(XlaRuntime::load(&manifest, &cfg.model)?));
+        }
+    }
+    // Native fallback (float features only).
+    match &cfg.dataset {
+        crate::config::DatasetConfig::SynthCifar { classes, .. } => {
+            Ok(Box::new(NativeRuntime::new(3072, 64, *classes)))
+        }
+        crate::config::DatasetConfig::MaeImages { .. } => anyhow::bail!(
+            "model {} needs artifacts (run `make artifacts`)",
+            cfg.model
+        ),
+        _ => anyhow::bail!("model {} needs artifacts (run `make artifacts`)", cfg.model),
+    }
+}
+
+/// Train `trials` seeds of one config on a (cached) runtime.
+pub fn run_config(
+    cfg: &RunConfig,
+    rt: &mut dyn ModelRuntime,
+    n_trials: usize,
+) -> anyhow::Result<Vec<TrainResult>> {
+    let split = data::build(&cfg.dataset, cfg.test_n, cfg.seed ^ 0xda7a_5eed);
+    let mut out = Vec::with_capacity(n_trials);
+    for t in 0..n_trials {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed + 1000 * t as u64;
+        out.push(train(&c, rt, &split)?);
+    }
+    Ok(out)
+}
+
+/// Mean accuracy% across trials.
+pub fn mean_acc(rs: &[TrainResult]) -> f64 {
+    rs.iter().map(|r| r.accuracy_pct()).sum::<f64>() / rs.len() as f64
+}
+
+/// Mean eval loss across trials.
+pub fn mean_loss(rs: &[TrainResult]) -> f64 {
+    rs.iter().map(|r| r.final_eval.loss).sum::<f64>() / rs.len() as f64
+}
+
+/// Sum the cost across trials.
+pub fn total_cost(rs: &[TrainResult]) -> crate::coordinator::CostSummary {
+    let mut total = crate::coordinator::CostSummary::default();
+    for r in rs {
+        let c = &r.cost;
+        total.fp_samples += c.fp_samples;
+        total.bp_samples += c.bp_samples;
+        total.bp_passes += c.bp_passes;
+        total.fp_flops += c.fp_flops;
+        total.bp_flops += c.bp_flops;
+        total.scoring_s += c.scoring_s;
+        total.train_s += c.train_s;
+        total.select_s += c.select_s;
+        total.data_s += c.data_s;
+        total.prune_s += c.prune_s;
+        total.eval_s += c.eval_s;
+    }
+    total
+}
+
+/// Format the paper's accuracy delta annotation, e.g. "84.7 (+0.3)".
+pub fn fmt_acc(acc: f64, baseline: f64) -> String {
+    let d = acc - baseline;
+    format!("{acc:5.1} ({}{d:.1})", if d >= 0.0 { "+" } else { "" })
+}
+
+/// Format measured + FLOPs-predicted saved time.
+pub fn fmt_saved(base: &crate::coordinator::CostSummary, c: &crate::coordinator::CostSummary) -> String {
+    let meas = crate::coordinator::saved_time_pct(base, c);
+    let pred = crate::coordinator::predicted_saved_time_pct(base, c);
+    format!("{meas:5.1}% ({pred:5.1}%)")
+}

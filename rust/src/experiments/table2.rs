@@ -1,0 +1,51 @@
+//! Tab. 2: CIFAR-scale classification — 8 sampling methods × 3 workloads.
+//! Paper shape to reproduce: all methods near-lossless on accuracy; batch-
+//! level methods (Loss/Order/ES) show smaller savings than set-level at
+//! this scale (the extra scoring FP is not negligible vs small-model BP);
+//! ESWP saves the most while staying near baseline.
+
+use crate::config::presets::{table2, Scale};
+use crate::metrics::Recorder;
+use crate::util::bench::table_header;
+
+use super::{fmt_acc, fmt_saved, make_runtime, mean_acc, run_config, total_cost, trials};
+
+pub fn run(scale: Scale) -> anyhow::Result<()> {
+    let runs = table2(scale);
+    let rec = Recorder::new("table2_cifar")?;
+    let n_trials = trials(scale);
+
+    // Group by workload (runs come ordered: 8 methods per workload).
+    for chunk in runs.chunks(8) {
+        let workload = chunk[0].name.split('/').nth(1).unwrap_or("?").to_string();
+        table_header(
+            &format!("Table 2 — {workload} (model {})", chunk[0].model),
+            &["method", "acc% (Δ)", "time saved (flops-pred)"],
+        );
+        let mut rt = make_runtime(&chunk[0])?;
+        let mut base_acc = 0.0;
+        let mut base_cost = None;
+        for cfg in chunk {
+            let rs = run_config(cfg, rt.as_mut(), n_trials)?;
+            for r in &rs {
+                rec.record_result(r)?;
+            }
+            let acc = mean_acc(&rs);
+            let cost = total_cost(&rs);
+            if cfg.sampler.name() == "baseline" {
+                base_acc = acc;
+                base_cost = Some(cost.clone());
+                println!("{:<12} | {acc:5.1}       | —", "baseline");
+            } else {
+                let b = base_cost.as_ref().expect("baseline first");
+                println!(
+                    "{:<12} | {} | {}",
+                    cfg.sampler.name(),
+                    fmt_acc(acc, base_acc),
+                    fmt_saved(b, &cost)
+                );
+            }
+        }
+    }
+    Ok(())
+}

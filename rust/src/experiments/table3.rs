@@ -1,0 +1,44 @@
+//! Tab. 3: large-model full fine-tuning (ViT-L/ImageNet substitute:
+//! txf_cls on a 16-class token task). Paper shape: batch-level methods'
+//! savings now DOMINATE (BP of a big model ≫ scoring FP), ES best among
+//! batch-level, ESWP best overall.
+
+use crate::config::presets::{table3, Scale};
+use crate::metrics::Recorder;
+use crate::util::bench::table_header;
+
+use super::{fmt_acc, fmt_saved, make_runtime, mean_acc, run_config, total_cost, trials};
+
+pub fn run(scale: Scale) -> anyhow::Result<()> {
+    let runs = table3(scale);
+    let rec = Recorder::new("table3_vit_ft")?;
+    let n_trials = trials(scale);
+    table_header(
+        "Table 3 — full fine-tune (ViT-L substitute txf_cls)",
+        &["method", "acc% (Δ)", "time saved (flops-pred)"],
+    );
+    let mut rt = make_runtime(&runs[0])?;
+    let mut base_acc = 0.0;
+    let mut base_cost = None;
+    for cfg in &runs {
+        let rs = run_config(cfg, rt.as_mut(), n_trials)?;
+        for r in &rs {
+            rec.record_result(r)?;
+        }
+        let acc = mean_acc(&rs);
+        let cost = total_cost(&rs);
+        if cfg.sampler.name() == "baseline" {
+            base_acc = acc;
+            base_cost = Some(cost);
+            println!("{:<12} | {acc:5.1}       | —", "baseline");
+        } else {
+            println!(
+                "{:<12} | {} | {}",
+                cfg.sampler.name(),
+                fmt_acc(acc, base_acc),
+                fmt_saved(base_cost.as_ref().unwrap(), &cost)
+            );
+        }
+    }
+    Ok(())
+}

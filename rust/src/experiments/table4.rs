@@ -1,0 +1,50 @@
+//! Tab. 4 + Fig. 3: MAE pre-training under 4-worker data-parallel
+//! simulation. Rows: Baseline / InfoBatch / ESWP r=0.3 / ESWP r=0.5.
+//! Paper shape: ESWP r=0.3 lossless with more savings than InfoBatch;
+//! r=0.5 saves ~45% with a small loss. Also emits the Fig. 3
+//! reconstruction-loss curves (per-epoch) to results/.
+
+use crate::config::presets::{table4, Scale};
+use crate::metrics::Recorder;
+use crate::util::bench::table_header;
+use crate::util::json::{num, obj, s, Json};
+
+use super::{fmt_saved, make_runtime, mean_loss, run_config, total_cost, trials};
+
+pub fn run(scale: Scale) -> anyhow::Result<()> {
+    let runs = table4(scale);
+    let rec = Recorder::new("table4_mae_pretrain")?;
+    let n_trials = trials(scale);
+    table_header(
+        "Table 4 / Fig. 3 — MAE pre-training (4 simulated workers)",
+        &["method", "final recon loss", "time saved (flops-pred)"],
+    );
+    let mut rt = make_runtime(&runs[0])?;
+    let mut base_cost = None;
+    for cfg in &runs {
+        let rs = run_config(cfg, rt.as_mut(), n_trials)?;
+        let tag = cfg.name.split('/').next_back().unwrap_or("?");
+        // Fig. 3 curves: per-epoch reconstruction loss.
+        for r in &rs {
+            rec.record_result(r)?;
+            rec.record(&obj(vec![
+                ("fig", s("fig3_curve")),
+                ("method", s(tag)),
+                ("curve", Json::Arr(r.loss_curve.iter().map(|&l| num(l)).collect())),
+            ]))?;
+        }
+        let loss = mean_loss(&rs);
+        let cost = total_cost(&rs);
+        if tag == "baseline" {
+            base_cost = Some(cost);
+            println!("{tag:<12} | {loss:8.4}         | —");
+        } else {
+            println!(
+                "{tag:<12} | {loss:8.4}         | {}",
+                fmt_saved(base_cost.as_ref().unwrap(), &cost)
+            );
+        }
+    }
+    println!("(fig3 loss curves in results/table4_mae_pretrain.jsonl)");
+    Ok(())
+}

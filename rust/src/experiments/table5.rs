@@ -1,0 +1,74 @@
+//! Tab. 5: GLUE fine-tuning (8 synthetic NLU tasks). Rows: Baseline /
+//! InfoBatch / Loss / Order / ES / ESWP. Paper shape: ES best average with
+//! ~20% savings; ESWP close with the largest (~33%) savings; Order
+//! degrades on the unstable tasks (RTE/MNLI analogues).
+
+use crate::config::presets::{table5, Scale, GLUE_TASKS};
+use crate::config::SamplerConfig;
+use crate::metrics::Recorder;
+use crate::util::bench::table_header;
+
+use super::{make_runtime, mean_acc, run_config, total_cost, trials};
+
+pub fn samplers() -> Vec<SamplerConfig> {
+    vec![
+        SamplerConfig::Uniform,
+        SamplerConfig::infobatch_default(),
+        SamplerConfig::Loss,
+        SamplerConfig::Ordered,
+        SamplerConfig::es_default(),
+        SamplerConfig::eswp_default(),
+    ]
+}
+
+pub fn run(scale: Scale) -> anyhow::Result<()> {
+    let methods = samplers();
+    let runs = table5(scale, &methods);
+    let rec = Recorder::new("table5_glue")?;
+    let n_trials = trials(scale);
+
+    // results[method][task] = (acc, cost)
+    let mut accs = vec![vec![0.0f64; GLUE_TASKS.len()]; methods.len()];
+    let mut costs: Vec<crate::coordinator::CostSummary> = vec![Default::default(); methods.len()];
+    let mut rt = make_runtime(&runs[0])?;
+    for (ti, (task, _)) in GLUE_TASKS.iter().enumerate() {
+        for (mi, _) in methods.iter().enumerate() {
+            let cfg = &runs[ti * methods.len() + mi];
+            assert!(cfg.name.contains(task));
+            let rs = run_config(cfg, rt.as_mut(), n_trials)?;
+            for r in &rs {
+                rec.record_result(r)?;
+            }
+            accs[mi][ti] = mean_acc(&rs);
+            let c = total_cost(&rs);
+            let t = &mut costs[mi];
+            t.fp_flops += c.fp_flops;
+            t.bp_flops += c.bp_flops;
+            t.scoring_s += c.scoring_s;
+            t.train_s += c.train_s;
+            t.select_s += c.select_s;
+            t.data_s += c.data_s;
+            t.prune_s += c.prune_s;
+        }
+    }
+
+    let mut cols: Vec<&str> = vec!["method"];
+    cols.extend(GLUE_TASKS.iter().map(|(t, _)| *t));
+    cols.extend(["avg", "time saved"]);
+    table_header("Table 5 — GLUE (synthetic NLU substitutes)", &cols);
+    for (mi, m) in methods.iter().enumerate() {
+        let avg = accs[mi].iter().sum::<f64>() / accs[mi].len() as f64;
+        let mut row = format!("{:<10}", m.name());
+        for a in &accs[mi] {
+            row += &format!(" | {a:5.1}");
+        }
+        row += &format!(" | {avg:5.1}");
+        if mi == 0 {
+            row += " | —";
+        } else {
+            row += &format!(" | {}", super::fmt_saved(&costs[0], &costs[mi]));
+        }
+        println!("{row}");
+    }
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Theory checks — Prop. 2.1/B.1 (loss-weighted GD converges faster than
+//! vanilla GD on realizable convex problems), Prop. 3.1 (recursion ≡
+//! explicit expansion, error = O(β2^t)) and Thm. 3.2 (transfer-function
+//! table). These are exact numerical verifications of the paper's math,
+//! independent of any neural workload.
+
+use crate::sampler::analysis::{explicit_weight, scalar_step, transfer_magnitude};
+use crate::util::bench::table_header;
+use crate::util::Pcg64;
+
+/// Realizable least-squares: ℓ_i(θ) = 0.5 (a_iᵀθ − b_i)², b = Aθ*.
+struct LeastSquares {
+    a: Vec<Vec<f32>>,
+    b: Vec<f32>,
+    dim: usize,
+}
+
+impl LeastSquares {
+    fn new(n: usize, dim: usize, rng: &mut Pcg64) -> Self {
+        let theta_star: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        let a: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect();
+        let b: Vec<f32> = a
+            .iter()
+            .map(|ai| ai.iter().zip(&theta_star).map(|(x, t)| x * t).sum())
+            .collect();
+        LeastSquares { a, b, dim }
+    }
+
+    fn losses(&self, theta: &[f32]) -> Vec<f32> {
+        self.a
+            .iter()
+            .zip(&self.b)
+            .map(|(ai, &bi)| {
+                let r: f32 = ai.iter().zip(theta).map(|(x, t)| x * t).sum::<f32>() - bi;
+                0.5 * r * r
+            })
+            .collect()
+    }
+
+    fn mean_loss(&self, theta: &[f32]) -> f64 {
+        let l = self.losses(theta);
+        l.iter().map(|&x| x as f64).sum::<f64>() / l.len() as f64
+    }
+
+    /// One step of (optionally loss-weighted) GD.
+    fn gd_step(&self, theta: &mut [f32], lr: f32, loss_weighted: bool) {
+        let losses = self.losses(theta);
+        let z: f32 = if loss_weighted {
+            losses.iter().sum::<f32>().max(1e-12)
+        } else {
+            losses.len() as f32
+        };
+        let mut grad = vec![0.0f32; self.dim];
+        for (i, ai) in self.a.iter().enumerate() {
+            let r: f32 = ai.iter().zip(theta.iter()).map(|(x, t)| x * t).sum::<f32>() - self.b[i];
+            let w = if loss_weighted { losses[i] / z } else { 1.0 / z };
+            for (g, &x) in grad.iter_mut().zip(ai) {
+                *g += w * r * x;
+            }
+        }
+        for (t, g) in theta.iter_mut().zip(&grad) {
+            *t -= lr * g;
+        }
+    }
+}
+
+/// Prop. 2.1: iterations to reach a loss threshold, loss-weighted vs plain.
+pub fn run_prop21() -> anyhow::Result<()> {
+    table_header(
+        "Prop. 2.1 — loss-weighted GD vs GD (realizable least squares)",
+        &["trial", "iters (GD)", "iters (loss-weighted)", "speedup"],
+    );
+    let mut total_speedup = 0.0;
+    let trials = 5;
+    for trial in 0..trials {
+        let mut rng = Pcg64::new(100 + trial);
+        let ls = LeastSquares::new(64, 16, &mut rng);
+        let theta0: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        let threshold = ls.mean_loss(&theta0) * 1e-4;
+        let run = |loss_weighted: bool| -> usize {
+            let mut theta = theta0.clone();
+            for it in 0..200_000 {
+                if ls.mean_loss(&theta) < threshold {
+                    return it;
+                }
+                ls.gd_step(&mut theta, 0.01, loss_weighted);
+            }
+            200_000
+        };
+        let plain = run(false);
+        let weighted = run(true);
+        let speedup = plain as f64 / weighted as f64;
+        total_speedup += speedup;
+        println!("{trial:>5} | {plain:>10} | {weighted:>21} | {speedup:5.2}x");
+    }
+    let avg = total_speedup / trials as f64;
+    println!("average speedup {avg:.2}x (paper: loss-weighted flow converges more than sub-linearly)");
+    anyhow::ensure!(avg > 1.0, "loss-weighted GD should dominate on realizable convex problems");
+    Ok(())
+}
+
+/// Prop. 3.1: |recursion − explicit Eq. 3.2| shrinks like β2^t.
+pub fn run_prop31() -> anyhow::Result<()> {
+    table_header("Prop. 3.1 — recursion vs explicit expansion", &["T", "max err", "bound 5·β2^T"]);
+    let (b1, b2) = (0.2f32, 0.9f32);
+    let mut rng = Pcg64::new(7);
+    for t_max in [5usize, 10, 20, 40, 80] {
+        let mut max_err = 0.0f32;
+        for _ in 0..50 {
+            let losses: Vec<f32> = (0..t_max).map(|_| rng.f32() * 4.0).collect();
+            let s0 = 1.0 / 8.0;
+            let (mut s, mut w) = (s0, s0);
+            for &l in &losses {
+                let (w2, s2) = scalar_step(s, l, b1, b2);
+                w = w2;
+                s = s2;
+            }
+            // Truncated Eq. 3.2 (drop the boundary terms == the O(β2^t)
+            // remainder the paper hides in big-O).
+            let truncated = {
+                let full = explicit_weight(&losses, b1, b2, s0);
+                let boundary = explicit_weight(&losses, b1, b2, 0.0);
+                // full - (terms ∝ s0) isolates the kept sums; compare the
+                // recursion against the s0-free truncation:
+                let _ = full;
+                boundary
+            };
+            max_err = max_err.max((w - truncated).abs());
+        }
+        let bound = 5.0 * (b2 as f32).powi(t_max as i32);
+        println!("{t_max:>3} | {max_err:9.2e} | {bound:9.2e}");
+        anyhow::ensure!(max_err <= bound + 1e-5, "T={t_max}: err {max_err} > bound {bound}");
+    }
+    Ok(())
+}
+
+/// Thm. 3.2: transfer-magnitude table over frequencies.
+pub fn run_thm32() -> anyhow::Result<()> {
+    table_header(
+        "Thm. 3.2 — |H(iω)| (β1=0.2, β2=0.9)",
+        &["omega", "|H|", "", "high-freq limit |β2-β1| = 0.7"],
+    );
+    for &omega in &[1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0, 1e4] {
+        let h = transfer_magnitude(0.2, 0.9, omega);
+        anyhow::ensure!(h <= 1.0 + 1e-12);
+        println!("{omega:8.0e} | {h:6.4} |  |");
+    }
+    Ok(())
+}
+
+pub fn run_all() -> anyhow::Result<()> {
+    run_prop21()?;
+    run_prop31()?;
+    run_thm32()
+}

@@ -1,0 +1,30 @@
+//! # evosample — Data-Efficient Training by Evolved Sampling
+//!
+//! A three-layer reproduction of "Data-Efficient Training by Evolved
+//! Sampling" (Cheng, Li, Bian; 2025):
+//!
+//! - **Layer 3 (this crate)**: the training coordinator — the paper's
+//!   contribution. Dynamic data selection (ES / ESWP and six baselines),
+//!   epoch/step orchestration, datasets, schedules, accounting, metrics.
+//! - **Layer 2 (python/compile/model.py)**: JAX forward/backward passes of
+//!   the workloads (MLP/CNN classifiers, transformer LM/classifier, MAE),
+//!   AOT-lowered to HLO text once at build time.
+//! - **Layer 1 (python/compile/kernels/)**: Pallas kernels for the compute
+//!   hot-spots (fused cross-entropy, flash-style attention, evolved-score
+//!   update), lowered into the same HLO.
+//!
+//! Python is never on the training path: the rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and runs
+//! everything natively.
+
+pub mod util;
+pub mod config;
+pub mod data;
+pub mod sampler;
+pub mod runtime;
+pub mod coordinator;
+pub mod metrics;
+pub mod experiments;
+pub mod cli;
+
+pub use sampler::{Sampler, SamplerKind};

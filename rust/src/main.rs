@@ -1,0 +1,113 @@
+//! `evosample` CLI — train with any sampler, inspect artifacts, run the
+//! paper experiments.
+//!
+//! Subcommands:
+//!   train        --config <run.toml> [--trials N]
+//!   list-models                       (artifact inventory)
+//!   experiment   --id <table2|table3|table4|table5|fig4|fig5|fig6|fig7|
+//!                      fig1|fig9|fig10|tab6|tab7|tab8|theory> [--full]
+//!   illustrate                        (fig1 weight-signal traces)
+//!   help
+
+use evosample::cli::Args;
+use evosample::config;
+use evosample::config::presets::Scale;
+use evosample::coordinator::train;
+use evosample::experiments;
+use evosample::metrics::Recorder;
+use evosample::runtime::manifest::Manifest;
+
+const USAGE: &str = "\
+evosample — Data-Efficient Training by Evolved Sampling (ES/ESWP)
+
+USAGE:
+  evosample train --config <run.toml> [--trials N]
+  evosample list-models
+  evosample experiment --id <table2|table3|table4|table5|fig1|fig4|fig5|
+                             fig6|fig7|fig9|fig10|tab6|tab7|tab8|theory>
+                       [--full]
+  evosample illustrate
+  evosample help
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(argv, &["full"]).map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
+    match args.subcommand.as_str() {
+        "train" => {
+            let path = args
+                .flag("config")
+                .ok_or_else(|| anyhow::anyhow!("train needs --config <run.toml>"))?;
+            let cfg = config::load(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let trials = args.usize_flag("trials").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap_or(1);
+            let mut rt = experiments::make_runtime(&cfg)?;
+            let rec = Recorder::new("cli_train")?;
+            for t in 0..trials {
+                let mut c = cfg.clone();
+                c.seed = cfg.seed + 1000 * t as u64;
+                let split = evosample::data::build(&c.dataset, c.test_n, c.seed ^ 0xda7a_5eed);
+                let r = train(&c, rt.as_mut(), &split)?;
+                rec.record_result(&r)?;
+                println!(
+                    "trial {t}: acc {:.2}%  eval loss {:.4}  wall {:.2}s  bp_samples {}  ({})",
+                    r.accuracy_pct(),
+                    r.final_eval.loss,
+                    r.cost.train_wall_s(),
+                    r.cost.bp_samples,
+                    r.timers.summary(),
+                );
+            }
+            Ok(())
+        }
+        "list-models" => {
+            let m = Manifest::load_default()?;
+            println!("{:<16} {:>10} {:>8} {:>14} train_steps", "model", "params", "classes", "fwd GFLOP/sample");
+            for (name, e) in &m.models {
+                println!(
+                    "{name:<16} {:>10} {:>8} {:>14.4} {:?}",
+                    e.param_count,
+                    e.classes,
+                    e.flops_per_sample_fwd as f64 / 1e9,
+                    e.train_step.keys().collect::<Vec<_>>()
+                );
+            }
+            Ok(())
+        }
+        "experiment" => {
+            let id = args
+                .flag("id")
+                .ok_or_else(|| anyhow::anyhow!("experiment needs --id <...>"))?;
+            let scale = if args.has("full") { Scale::Full } else { Scale::from_env() };
+            match id {
+                "table2" => experiments::table2::run(scale),
+                "table3" => experiments::table3::run(scale),
+                "table4" => experiments::table4::run(scale),
+                "table5" => experiments::table5::run(scale),
+                "fig1" => experiments::fig1::run(400),
+                "fig4" => experiments::fig4::run(scale),
+                "fig5" => experiments::fig5::run(scale),
+                "fig6" => experiments::fig6::run(scale, false),
+                "fig7" => experiments::fig6::run(scale, true),
+                "fig9" => experiments::fig9::run(scale),
+                "fig10" => experiments::fig10::run(scale),
+                "tab6" => experiments::ablations::run_tab6(scale),
+                "tab7" => experiments::ablations::run_tab7(scale),
+                "tab8" => experiments::ablations::run_tab8(scale),
+                "theory" => experiments::theory::run_all(),
+                other => anyhow::bail!("unknown experiment {other:?}\n{USAGE}"),
+            }
+        }
+        "illustrate" => experiments::fig1::run(400),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}

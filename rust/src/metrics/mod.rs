@@ -1,0 +1,124 @@
+//! Result recording: JSONL writers under `results/` + summary helpers.
+//!
+//! Every bench/example writes one JSON object per training run so paper
+//! tables can be regenerated or re-aggregated without re-running.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::TrainResult;
+use crate::util::json::{num, obj, s, Json};
+
+/// Serialize a TrainResult to a flat JSON record.
+pub fn result_to_json(r: &TrainResult) -> Json {
+    obj(vec![
+        ("name", s(r.name.clone())),
+        ("sampler", s(r.sampler.clone())),
+        ("seed", num(r.seed as f64)),
+        ("epochs", num(r.epochs as f64)),
+        ("steps", num(r.steps as f64)),
+        ("accuracy_pct", num(r.accuracy_pct())),
+        ("eval_loss", num(r.final_eval.loss)),
+        ("train_wall_s", num(r.cost.train_wall_s())),
+        ("scoring_s", num(r.cost.scoring_s)),
+        ("train_s", num(r.cost.train_s)),
+        ("select_s", num(r.cost.select_s)),
+        ("fp_samples", num(r.cost.fp_samples as f64)),
+        ("bp_samples", num(r.cost.bp_samples as f64)),
+        ("bp_passes", num(r.cost.bp_passes as f64)),
+        ("total_flops", num(r.cost.total_flops() as f64)),
+        (
+            "loss_curve",
+            Json::Arr(r.loss_curve.iter().map(|&l| num(l)).collect()),
+        ),
+        (
+            "eval_curve",
+            Json::Arr(
+                r.eval_curve
+                    .iter()
+                    .map(|&(e, l, a)| {
+                        Json::Arr(vec![num(e as f64), num(l), num(a)])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Append-only JSONL recorder.
+pub struct Recorder {
+    path: PathBuf,
+}
+
+impl Recorder {
+    /// Records under `results/<name>.jsonl` (dir created on demand).
+    pub fn new(name: &str) -> std::io::Result<Recorder> {
+        let dir = Path::new("results");
+        std::fs::create_dir_all(dir)?;
+        Ok(Recorder { path: dir.join(format!("{name}.jsonl")) })
+    }
+
+    pub fn in_dir(dir: &Path, name: &str) -> std::io::Result<Recorder> {
+        std::fs::create_dir_all(dir)?;
+        Ok(Recorder { path: dir.join(format!("{name}.jsonl")) })
+    }
+
+    pub fn record(&self, j: &Json) -> std::io::Result<()> {
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
+        writeln!(f, "{}", j.to_string_compact())
+    }
+
+    pub fn record_result(&self, r: &TrainResult) -> std::io::Result<()> {
+        self.record(&result_to_json(r))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CostSummary, EvalStats};
+    use crate::util::timer::PhaseTimers;
+
+    fn dummy() -> TrainResult {
+        TrainResult {
+            name: "t".into(),
+            sampler: "es".into(),
+            seed: 1,
+            epochs: 2,
+            steps: 10,
+            loss_curve: vec![1.0, 0.5],
+            eval_curve: vec![(1, 0.4, 0.9)],
+            final_eval: EvalStats { loss: 0.4, accuracy: 0.9 },
+            timers: PhaseTimers::new(),
+            cost: CostSummary::default(),
+            class_bp_counts: vec![],
+            bp_at_eval: vec![100],
+        }
+    }
+
+    #[test]
+    fn result_roundtrips_through_json() {
+        let j = result_to_json(&dummy());
+        let txt = j.to_string_compact();
+        let back = Json::parse(&txt).unwrap();
+        assert_eq!(back.get("sampler").unwrap().as_str(), Some("es"));
+        assert_eq!(back.get("accuracy_pct").unwrap().as_f64(), Some(90.0));
+        assert_eq!(back.get("loss_curve").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn recorder_appends_lines() {
+        let dir = std::env::temp_dir().join("evosample_test_rec");
+        let rec = Recorder::in_dir(&dir, "unit").unwrap();
+        // unique content per test run; just check append semantics
+        rec.record(&result_to_json(&dummy())).unwrap();
+        rec.record(&result_to_json(&dummy())).unwrap();
+        let text = std::fs::read_to_string(rec.path()).unwrap();
+        assert!(text.lines().count() >= 2);
+        let _ = std::fs::remove_file(rec.path());
+    }
+}

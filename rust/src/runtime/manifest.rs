@@ -1,0 +1,210 @@
+//! artifacts/manifest.json loader — the contract between python's aot.py
+//! and the rust runtime. Shapes, dtypes, parameter counts and artifact
+//! file names for every model variant.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum XDtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub kind: String,
+    pub param_count: usize,
+    pub classes: usize,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: XDtype,
+    pub y_shape: Vec<usize>,
+    pub flops_per_sample_fwd: u64,
+    pub optimizer: String,
+    pub init: PathBuf,
+    /// batch size -> artifact path
+    pub train_step: BTreeMap<usize, PathBuf>,
+    pub loss_fwd: BTreeMap<usize, PathBuf>,
+    pub eval_step: BTreeMap<usize, PathBuf>,
+}
+
+impl ModelEntry {
+    /// Per-sample feature length (flattened).
+    pub fn x_len(&self) -> usize {
+        self.x_shape.iter().product::<usize>().max(1)
+    }
+
+    /// Per-sample label length.
+    pub fn y_len(&self) -> usize {
+        self.y_shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    /// kernel name -> (block size -> artifact path)
+    pub kernels: BTreeMap<String, BTreeMap<usize, PathBuf>>,
+}
+
+impl Manifest {
+    /// Default artifact directory: $EVOSAMPLE_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("EVOSAMPLE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> anyhow::Result<Manifest> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&src, dir)
+    }
+
+    pub fn parse(src: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::parse(src).map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+        let mut models = BTreeMap::new();
+        let model_obj = j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing models object"))?;
+        for (name, entry) in model_obj {
+            models.insert(name.clone(), Self::parse_model(name, entry, dir)?);
+        }
+        let mut kernels = BTreeMap::new();
+        if let Some(kobj) = j.get("kernels").and_then(Json::as_obj) {
+            for (kname, sizes) in kobj {
+                let mut m = BTreeMap::new();
+                for (sz, file) in sizes.as_obj().into_iter().flatten() {
+                    let n: usize = sz.parse().map_err(|_| anyhow::anyhow!("bad kernel size {sz}"))?;
+                    m.insert(n, dir.join(file.as_str().unwrap_or_default()));
+                }
+                kernels.insert(kname.clone(), m);
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models, kernels })
+    }
+
+    fn parse_model(name: &str, j: &Json, dir: &Path) -> anyhow::Result<ModelEntry> {
+        let req = |k: &str| {
+            j.get(k).ok_or_else(|| anyhow::anyhow!("model {name}: missing key {k:?}"))
+        };
+        let shape = |k: &str| -> anyhow::Result<Vec<usize>> {
+            Ok(req(k)?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect())
+        };
+        let arts = req("artifacts")?;
+        let sized = |group: &str| -> anyhow::Result<BTreeMap<usize, PathBuf>> {
+            let mut out = BTreeMap::new();
+            let obj = arts
+                .get(group)
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow::anyhow!("model {name}: missing artifacts.{group}"))?;
+            for (sz, file) in obj {
+                let n: usize = sz
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("model {name}: bad batch size {sz:?}"))?;
+                let f = file
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("model {name}: non-string artifact"))?;
+                out.insert(n, dir.join(f));
+            }
+            Ok(out)
+        };
+        let x_dtype = match req("x_dtype")?.as_str() {
+            Some("f32") => XDtype::F32,
+            Some("i32") => XDtype::I32,
+            other => anyhow::bail!("model {name}: bad x_dtype {other:?}"),
+        };
+        Ok(ModelEntry {
+            name: name.to_string(),
+            kind: req("kind")?.as_str().unwrap_or_default().to_string(),
+            param_count: req("param_count")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("model {name}: bad param_count"))?,
+            classes: req("classes")?.as_usize().unwrap_or(0),
+            x_shape: shape("x_shape")?,
+            x_dtype,
+            y_shape: shape("y_shape")?,
+            flops_per_sample_fwd: req("flops_per_sample_fwd")?.as_f64().unwrap_or(0.0) as u64,
+            optimizer: req("optimizer")?.as_str().unwrap_or_default().to_string(),
+            init: dir.join(
+                arts.get("init")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("model {name}: missing artifacts.init"))?,
+            ),
+            train_step: sized("train_step")?,
+            loss_fwd: sized("loss_fwd")?,
+            eval_step: sized("eval_step")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "mlp": {
+          "kind": "mlp", "param_count": 100, "classes": 10,
+          "x_shape": [8], "x_dtype": "f32", "y_shape": [],
+          "flops_per_sample_fwd": 1234, "optimizer": "sgdm",
+          "artifacts": {
+            "init": "mlp_init.hlo.txt",
+            "train_step": {"4": "mlp_ts4.hlo.txt", "16": "mlp_ts16.hlo.txt"},
+            "loss_fwd": {"16": "mlp_lf.hlo.txt"},
+            "eval_step": {"32": "mlp_ev.hlo.txt"}
+          }
+        }
+      },
+      "kernels": {"es_update": {"4096": "es.hlo.txt"}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let e = &m.models["mlp"];
+        assert_eq!(e.param_count, 100);
+        assert_eq!(e.x_len(), 8);
+        assert_eq!(e.y_len(), 1, "scalar label");
+        assert_eq!(e.x_dtype, XDtype::F32);
+        assert_eq!(e.train_step.len(), 2);
+        assert!(e.train_step[&4].ends_with("mlp_ts4.hlo.txt"));
+        assert_eq!(m.kernels["es_update"][&4096], Path::new("/tmp/a/es.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_fields_error_clearly() {
+        let bad = r#"{"models": {"m": {"kind": "mlp"}}}"#;
+        let err = Manifest::parse(bad, Path::new(".")).unwrap_err().to_string();
+        assert!(err.contains("missing key"), "{err}");
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        // Exercised for real by integration tests; here only if built.
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.models.contains_key("mlp_cifar10"));
+            let e = &m.models["mlp_cifar10"];
+            assert_eq!(e.x_len(), 3072);
+            assert!(e.init.exists());
+        }
+    }
+}

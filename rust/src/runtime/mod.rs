@@ -1,0 +1,165 @@
+//! Model runtimes: where the coordinator's compute actually runs.
+//!
+//! Two interchangeable backends behind one trait:
+//!
+//! * [`xla_rt::XlaRuntime`] — the production path. Loads the AOT-lowered
+//!   HLO text artifacts (L2 JAX models + L1 Pallas kernels) through the
+//!   PJRT C API and executes them natively. Python is never involved.
+//! * [`native::NativeRuntime`] — a pure-rust MLP with hand-written
+//!   forward/backward. Used by the test suite and the L3-isolation benches
+//!   so coordinator logic is exercised without artifacts, and as an
+//!   independent implementation to cross-check the XLA path's training
+//!   behavior.
+//!
+//! The runtime owns the model/optimizer state; the coordinator only sees
+//! batches in, per-sample losses out.
+
+pub mod manifest;
+pub mod native;
+pub mod xla_rt;
+
+use crate::data::{Modality, TensorDataset};
+
+/// Borrowed batch features, matching the dataset's modality.
+#[derive(Clone, Copy, Debug)]
+pub enum BatchX<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> BatchX<'a> {
+    pub fn len_elems(&self) -> usize {
+        match self {
+            BatchX::F32(v) => v.len(),
+            BatchX::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Output of one training step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    /// Per-sample (unweighted) losses of the trained batch.
+    pub losses: Vec<f32>,
+    /// Weighted mean loss actually optimized.
+    pub mean_loss: f32,
+}
+
+/// A loaded model + optimizer state that the trainer drives.
+///
+/// Contract notes:
+/// * `batch` sizes passed to `train_step`/`loss_fwd`/`eval` must be among
+///   `train_sizes()` / `fwd_size()` / `eval_size()` — artifact shapes are
+///   static. The trainer guarantees this via config validation.
+/// * `init` resets parameters AND optimizer state (fresh trial).
+pub trait ModelRuntime {
+    fn param_count(&self) -> usize;
+
+    /// (Re-)initialize parameters from a seed; resets optimizer state.
+    fn init(&mut self, seed: i32) -> anyhow::Result<()>;
+
+    /// Forward-only per-sample losses (the sampler scoring pass).
+    fn loss_fwd(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> anyhow::Result<Vec<f32>>;
+
+    /// One optimizer step on a weighted batch; increments the step count.
+    fn train_step(
+        &mut self,
+        x: BatchX<'_>,
+        y: &[i32],
+        weights: &[f32],
+        lr: f32,
+        n: usize,
+    ) -> anyhow::Result<StepOutput>;
+
+    /// Eval pass: per-sample (losses, correct∈[0,1]).
+    fn eval(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> anyhow::Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Batch sizes with a compiled train_step.
+    fn train_sizes(&self) -> Vec<usize>;
+
+    /// Scoring-FP batch size (meta-batch).
+    fn fwd_size(&self) -> usize;
+
+    /// Eval chunk size.
+    fn eval_size(&self) -> usize;
+
+    /// Snapshot / install flat parameters (checkpointing, distributed sync).
+    fn get_params(&mut self) -> anyhow::Result<Vec<f32>>;
+    fn set_params(&mut self, params: &[f32]) -> anyhow::Result<()>;
+
+    /// Analytic forward FLOPs per sample (for the accounting cost model).
+    fn flops_per_sample_fwd(&self) -> u64;
+}
+
+/// Assemble a batch's features/labels from a dataset. Helper shared by the
+/// trainer and tests.
+pub struct BatchBuf {
+    pub xf: Vec<f32>,
+    pub xi: Vec<i32>,
+    pub y: Vec<i32>,
+}
+
+impl BatchBuf {
+    pub fn new() -> Self {
+        BatchBuf { xf: Vec::new(), xi: Vec::new(), y: Vec::new() }
+    }
+
+    pub fn fill(&mut self, ds: &TensorDataset, indices: &[u32]) {
+        match ds.modality {
+            Modality::Float { .. } => ds.gather_x_f32(indices, &mut self.xf),
+            Modality::Tokens { .. } => ds.gather_x_i32(indices, &mut self.xi),
+        }
+        ds.gather_y(indices, &mut self.y);
+    }
+
+    pub fn x(&self, ds: &TensorDataset) -> BatchX<'_> {
+        match ds.modality {
+            Modality::Float { .. } => BatchX::F32(&self.xf),
+            Modality::Tokens { .. } => BatchX::I32(&self.xi),
+        }
+    }
+}
+
+impl Default for BatchBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Modality, TensorDataset};
+
+    fn float_ds() -> TensorDataset {
+        TensorDataset {
+            modality: Modality::Float { dim: 2 },
+            n: 3,
+            classes: 2,
+            x_f32: vec![0., 1., 2., 3., 4., 5.],
+            x_i32: vec![],
+            y: vec![0, 1, 0],
+            y_dim: 1,
+            difficulty: vec![0.0; 3],
+            clean_class: vec![0, 1, 0],
+        }
+    }
+
+    #[test]
+    fn batchbuf_fills_float() {
+        let ds = float_ds();
+        let mut buf = BatchBuf::new();
+        buf.fill(&ds, &[2, 1]);
+        match buf.x(&ds) {
+            BatchX::F32(v) => assert_eq!(v, &[4., 5., 2., 3.]),
+            _ => panic!("wrong modality"),
+        }
+        assert_eq!(buf.y, vec![0, 1]);
+    }
+
+    #[test]
+    fn batchx_len() {
+        assert_eq!(BatchX::F32(&[1.0, 2.0]).len_elems(), 2);
+        assert_eq!(BatchX::I32(&[1, 2, 3]).len_elems(), 3);
+    }
+}

@@ -1,0 +1,386 @@
+//! NativeRuntime: a pure-rust one-hidden-layer MLP classifier with
+//! hand-written forward/backward and SGD-momentum.
+//!
+//! Purpose (DESIGN.md §3): (a) lets the entire coordinator stack be tested
+//! and benchmarked without AOT artifacts, (b) provides an independent
+//! second implementation of weighted-batch training to cross-check the XLA
+//! path, and (c) isolates L3 overhead in the perf benches (selection cost
+//! vs BP cost with a known-cost backend).
+//!
+//! Model: x[in_dim] → relu(W1 x + b1)[hidden] → W2 h + b2 → softmax CE.
+//! Per-sample losses, weighted gradient (Σ w_i ∇ℓ_i / Σ w_i) — the same
+//! objective the L2 train_step lowers.
+
+use super::{BatchX, ModelRuntime, StepOutput};
+use crate::util::Pcg64;
+
+pub struct NativeRuntime {
+    in_dim: usize,
+    hidden: usize,
+    classes: usize,
+    momentum: f32,
+    weight_decay: f32,
+    /// [W1 (in*h) | b1 (h) | W2 (h*c) | b2 (c)]
+    params: Vec<f32>,
+    velocity: Vec<f32>,
+    grads: Vec<f32>,
+    /// Supported batch sizes are unconstrained for the native path, but we
+    /// report the configured ones so the trainer's validation still runs.
+    fwd_size: usize,
+    eval_size: usize,
+    // scratch
+    h_buf: Vec<f32>,
+    logits_buf: Vec<f32>,
+}
+
+impl NativeRuntime {
+    pub fn new(in_dim: usize, hidden: usize, classes: usize) -> Self {
+        let pc = in_dim * hidden + hidden + hidden * classes + classes;
+        NativeRuntime {
+            in_dim,
+            hidden,
+            classes,
+            momentum: 0.9,
+            weight_decay: 0.0,
+            params: vec![0.0; pc],
+            velocity: vec![0.0; pc],
+            grads: vec![0.0; pc],
+            fwd_size: 0,
+            eval_size: 0,
+            h_buf: Vec::new(),
+            logits_buf: Vec::new(),
+        }
+    }
+
+    fn layout(&self) -> (usize, usize, usize, usize) {
+        let w1 = 0;
+        let b1 = self.in_dim * self.hidden;
+        let w2 = b1 + self.hidden;
+        let b2 = w2 + self.hidden * self.classes;
+        (w1, b1, w2, b2)
+    }
+
+    /// Forward one batch; fills h_buf [n*hidden] and logits_buf [n*classes].
+    fn forward(&mut self, x: &[f32], n: usize) {
+        let (w1, b1, w2, b2) = self.layout();
+        let (d, h, c) = (self.in_dim, self.hidden, self.classes);
+        self.h_buf.resize(n * h, 0.0);
+        self.logits_buf.resize(n * c, 0.0);
+        for i in 0..n {
+            let xi = &x[i * d..(i + 1) * d];
+            let hi = &mut self.h_buf[i * h..(i + 1) * h];
+            for j in 0..h {
+                // W1 stored row-major [d][h]: column j dotted with x.
+                let mut acc = self.params[b1 + j];
+                for k in 0..d {
+                    acc += self.params[w1 + k * h + j] * xi[k];
+                }
+                hi[j] = acc.max(0.0); // relu
+            }
+            let li = &mut self.logits_buf[i * c..(i + 1) * c];
+            for j in 0..c {
+                let mut acc = self.params[b2 + j];
+                for k in 0..h {
+                    acc += self.params[w2 + k * c + j] * self.h_buf[i * h + k];
+                }
+                li[j] = acc;
+            }
+        }
+    }
+
+    /// Per-sample CE losses from logits_buf.
+    fn ce_losses(&self, y: &[i32], n: usize) -> Vec<f32> {
+        let c = self.classes;
+        (0..n)
+            .map(|i| {
+                let li = &self.logits_buf[i * c..(i + 1) * c];
+                let m = li.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let lse = li.iter().map(|&v| (v - m).exp()).sum::<f32>().ln() + m;
+                lse - li[y[i] as usize]
+            })
+            .collect()
+    }
+
+    fn expect_f32<'a>(x: BatchX<'a>) -> anyhow::Result<&'a [f32]> {
+        match x {
+            BatchX::F32(v) => Ok(v),
+            BatchX::I32(_) => anyhow::bail!("NativeRuntime supports float features only"),
+        }
+    }
+}
+
+impl ModelRuntime for NativeRuntime {
+    fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    fn init(&mut self, seed: i32) -> anyhow::Result<()> {
+        let mut rng = Pcg64::new(seed as u64 ^ 0xab5e1);
+        let (_, b1, w2, b2) = self.layout();
+        let std1 = (2.0 / self.in_dim as f32).sqrt();
+        let std2 = (2.0 / self.hidden as f32).sqrt();
+        for i in 0..self.params.len() {
+            self.params[i] = if i < b1 {
+                std1 * rng.normal()
+            } else if i < w2 {
+                0.0
+            } else if i < b2 {
+                std2 * rng.normal()
+            } else {
+                0.0
+            };
+        }
+        self.velocity.iter_mut().for_each(|v| *v = 0.0);
+        Ok(())
+    }
+
+    fn loss_fwd(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> anyhow::Result<Vec<f32>> {
+        let x = Self::expect_f32(x)?;
+        anyhow::ensure!(x.len() == n * self.in_dim && y.len() == n, "batch shape mismatch");
+        self.forward(x, n);
+        Ok(self.ce_losses(y, n))
+    }
+
+    fn train_step(
+        &mut self,
+        x: BatchX<'_>,
+        y: &[i32],
+        weights: &[f32],
+        lr: f32,
+        n: usize,
+    ) -> anyhow::Result<StepOutput> {
+        let x = Self::expect_f32(x)?;
+        anyhow::ensure!(x.len() == n * self.in_dim, "x shape");
+        anyhow::ensure!(y.len() == n && weights.len() == n, "y/weights shape");
+        self.forward(x, n);
+        let losses = self.ce_losses(y, n);
+        let wsum: f32 = weights.iter().sum::<f32>().max(1e-12);
+        let mean_loss =
+            losses.iter().zip(weights).map(|(&l, &w)| l * w).sum::<f32>() / wsum;
+
+        // Backward: dlogits = w_i/Σw * (softmax - onehot).
+        let (w1o, b1o, w2o, b2o) = self.layout();
+        let (d, h, c) = (self.in_dim, self.hidden, self.classes);
+        self.grads.iter_mut().for_each(|g| *g = 0.0);
+        let mut dh = vec![0.0f32; h];
+        for i in 0..n {
+            let scale = weights[i] / wsum;
+            if scale == 0.0 {
+                continue;
+            }
+            let li = &self.logits_buf[i * c..(i + 1) * c];
+            let m = li.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = li.iter().map(|&v| (v - m).exp()).sum();
+            let hi = &self.h_buf[i * h..(i + 1) * h];
+            let xi = &x[i * d..(i + 1) * d];
+            dh.iter_mut().for_each(|v| *v = 0.0);
+            for j in 0..c {
+                let p = (li[j] - m).exp() / z;
+                let dl = scale * (p - if y[i] as usize == j { 1.0 } else { 0.0 });
+                self.grads[b2o + j] += dl;
+                for k in 0..h {
+                    self.grads[w2o + k * c + j] += dl * hi[k];
+                    dh[k] += dl * self.params[w2o + k * c + j];
+                }
+            }
+            for k in 0..h {
+                if hi[k] <= 0.0 {
+                    continue; // relu gate
+                }
+                self.grads[b1o + k] += dh[k];
+                let g = dh[k];
+                for q in 0..d {
+                    self.grads[w1o + q * h + k] += g * xi[q];
+                }
+            }
+        }
+        // SGD momentum + weight decay.
+        for i in 0..self.params.len() {
+            let g = self.grads[i] + self.weight_decay * self.params[i];
+            self.velocity[i] = self.momentum * self.velocity[i] + g;
+            self.params[i] -= lr * self.velocity[i];
+        }
+        Ok(StepOutput { losses, mean_loss })
+    }
+
+    fn eval(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let xs = Self::expect_f32(x)?;
+        self.forward(xs, n);
+        let losses = self.ce_losses(y, n);
+        let c = self.classes;
+        let correct = (0..n)
+            .map(|i| {
+                let li = &self.logits_buf[i * c..(i + 1) * c];
+                let argmax = li
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                (argmax == y[i] as usize) as u8 as f32
+            })
+            .collect();
+        Ok((losses, correct))
+    }
+
+    fn train_sizes(&self) -> Vec<usize> {
+        Vec::new() // native path accepts any batch size
+    }
+
+    fn fwd_size(&self) -> usize {
+        self.fwd_size
+    }
+
+    fn eval_size(&self) -> usize {
+        self.eval_size
+    }
+
+    fn get_params(&mut self) -> anyhow::Result<Vec<f32>> {
+        Ok(self.params.clone())
+    }
+
+    fn set_params(&mut self, params: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(params.len() == self.params.len(), "param count mismatch");
+        self.params.copy_from_slice(params);
+        Ok(())
+    }
+
+    fn flops_per_sample_fwd(&self) -> u64 {
+        (2 * self.in_dim * self.hidden + 2 * self.hidden * self.classes) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_batch(n: usize, d: usize, classes: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        // Linearly separable blobs: class c centered at unit vector e_c.
+        let mut rng = Pcg64::new(seed);
+        let mut x = vec![0.0f32; n * d];
+        let mut y = vec![0i32; n];
+        for i in 0..n {
+            let c = i % classes;
+            y[i] = c as i32;
+            for j in 0..d {
+                x[i * d + j] = if j == c { 2.0 } else { 0.0 } + 0.3 * rng.normal();
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn overfits_separable_blobs() {
+        let mut rt = NativeRuntime::new(8, 16, 4);
+        rt.init(0).unwrap();
+        let (x, y) = toy_batch(32, 8, 4, 1);
+        let w = vec![1.0; 32];
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..60 {
+            let out = rt.train_step(BatchX::F32(&x), &y, &w, 0.1, 32).unwrap();
+            first.get_or_insert(out.mean_loss);
+            last = out.mean_loss;
+        }
+        assert!(last < 0.2 * first.unwrap(), "{} -> {last}", first.unwrap());
+        let (_, correct) = rt.eval(BatchX::F32(&x), &y, 32).unwrap();
+        let acc: f32 = correct.iter().sum::<f32>() / 32.0;
+        assert!(acc > 0.95, "acc={acc}");
+    }
+
+    #[test]
+    fn losses_match_loss_fwd() {
+        let mut rt = NativeRuntime::new(8, 16, 4);
+        rt.init(3).unwrap();
+        let (x, y) = toy_batch(16, 8, 4, 2);
+        let fwd = rt.loss_fwd(BatchX::F32(&x), &y, 16).unwrap();
+        let w = vec![1.0; 16];
+        // train_step computes losses at the SAME params before updating.
+        let out = rt.train_step(BatchX::F32(&x), &y, &w, 0.01, 16).unwrap();
+        for (a, b) in fwd.iter().zip(&out.losses) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn zero_weight_samples_do_not_affect_update() {
+        let (x, y) = toy_batch(8, 8, 4, 3);
+        let mut rt1 = NativeRuntime::new(8, 8, 4);
+        rt1.init(7).unwrap();
+        let mut rt2 = NativeRuntime::new(8, 8, 4);
+        rt2.init(7).unwrap();
+        let mut w = vec![1.0f32; 8];
+        w[4..].iter_mut().for_each(|v| *v = 0.0);
+        // rt2 sees garbage in the zero-weighted rows.
+        let mut x2 = x.clone();
+        for v in &mut x2[4 * 8..] {
+            *v = 99.0;
+        }
+        rt1.train_step(BatchX::F32(&x), &y, &w, 0.1, 8).unwrap();
+        rt2.train_step(BatchX::F32(&x2), &y, &w, 0.1, 8).unwrap();
+        let p1 = rt1.get_params().unwrap();
+        let p2 = rt2.get_params().unwrap();
+        for (a, b) in p1.iter().zip(&p2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gradcheck_against_finite_differences() {
+        // Weighted-CE gradient vs central differences on a tiny model.
+        let mut rt = NativeRuntime::new(3, 4, 3);
+        rt.init(11).unwrap();
+        let (x, y) = toy_batch(4, 3, 3, 5);
+        let w = vec![0.7f32, 1.3, 0.0, 2.0];
+
+        let loss_at = |rt: &mut NativeRuntime, params: &[f32]| -> f32 {
+            rt.set_params(params).unwrap();
+            let l = rt.loss_fwd(BatchX::F32(&x), &y, 4).unwrap();
+            let ws: f32 = w.iter().sum();
+            l.iter().zip(&w).map(|(&l, &wi)| l * wi).sum::<f32>() / ws
+        };
+
+        let p0 = rt.get_params().unwrap();
+        // Analytic grads: run one step with lr so small the params barely
+        // move, but read rt.grads directly instead.
+        rt.set_params(&p0).unwrap();
+        rt.train_step(BatchX::F32(&x), &y, &w, 0.0, 4).unwrap();
+        let analytic = rt.grads.clone();
+
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        for idx in (0..p0.len()).step_by(p0.len() / 13 + 1) {
+            let mut pp = p0.clone();
+            pp[idx] += eps;
+            let lp = loss_at(&mut rt, &pp);
+            pp[idx] -= 2.0 * eps;
+            let lm = loss_at(&mut rt, &pp);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - analytic[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {idx}: fd={fd} analytic={}",
+                analytic[idx]
+            );
+            checked += 1;
+        }
+        assert!(checked >= 10);
+    }
+
+    #[test]
+    fn init_resets_state_deterministically() {
+        let mut rt = NativeRuntime::new(4, 4, 2);
+        rt.init(5).unwrap();
+        let a = rt.get_params().unwrap();
+        let (x, y) = toy_batch(4, 4, 2, 6);
+        rt.train_step(BatchX::F32(&x), &y, &[1.0; 4], 0.1, 4).unwrap();
+        rt.init(5).unwrap();
+        assert_eq!(rt.get_params().unwrap(), a);
+    }
+
+    #[test]
+    fn rejects_token_batches() {
+        let mut rt = NativeRuntime::new(4, 4, 2);
+        rt.init(0).unwrap();
+        assert!(rt.loss_fwd(BatchX::I32(&[1, 2]), &[0], 1).is_err());
+    }
+}

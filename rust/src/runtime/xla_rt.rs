@@ -1,0 +1,372 @@
+//! XlaRuntime: loads AOT HLO-text artifacts and executes them via PJRT.
+//!
+//! This is the production request path: `HloModuleProto::from_text_file`
+//! → `PjRtClient::compile` → `execute`. HLO *text* is the interchange
+//! format because the image's xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit-instruction-id protos; the text parser reassigns ids (see
+//! aot.py / /opt/xla-example/README.md).
+//!
+//! Parameters and optimizer state stay **literal-resident** across steps:
+//! the train_step output tuple is decomposed without copy
+//! (`literal_decompose_tuple`) and its params/m/v elements are fed straight
+//! back as the next step's inputs. This avoids the Literal↔Vec<f32> round
+//! trip per step that otherwise dominates small-model training on the CPU
+//! backend (≈3×param_count copied each way) — the headline L3 optimization
+//! in EXPERIMENTS.md §Perf. Host vectors are materialized only on demand
+//! (`get_params`/`set_params`, checkpointing, distributed sync).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::manifest::{Manifest, ModelEntry, XDtype};
+use super::{BatchX, ModelRuntime, StepOutput};
+
+/// Configure XLA's CPU backend for the available parallelism, once,
+/// before the first client is created. On low-core boxes XLA's
+/// multi-threaded Eigen contractions busy-wait and collapse throughput
+/// (measured 14x on batch-128 train steps at nproc=1 — EXPERIMENTS.md
+/// §Perf); respect a user-provided XLA_FLAGS if already set.
+fn configure_xla_flags() {
+    static ONCE: std::sync::OnceLock<()> = std::sync::OnceLock::new();
+    ONCE.get_or_init(|| {
+        if std::env::var_os("XLA_FLAGS").is_none() {
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            if cores <= 2 {
+                std::env::set_var("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false");
+            }
+        }
+    });
+}
+
+/// Compile one HLO text artifact on a PJRT client.
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+}
+
+/// Execute and unpack the (return_tuple=True) single tuple output.
+fn run_tuple<L: std::borrow::Borrow<xla::Literal>>(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[L],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<L>(args).map_err(|e| anyhow!("execute: {e:?}"))?;
+    let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+    lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape f32{dims:?}: {e:?}"))
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape i32{dims:?}: {e:?}"))
+}
+
+pub struct XlaRuntime {
+    entry: ModelEntry,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    init_exe: xla::PjRtLoadedExecutable,
+    train_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    fwd_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    eval_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    params: xla::Literal,
+    m: xla::Literal,
+    v: xla::Literal,
+    step: f32,
+}
+
+fn zeros_lit(n: usize) -> xla::Literal {
+    xla::Literal::vec1(&vec![0.0f32; n])
+}
+
+impl XlaRuntime {
+    /// Load every artifact of `model` from the manifest and compile.
+    pub fn load(manifest: &Manifest, model: &str) -> Result<XlaRuntime> {
+        let entry = manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("model {model:?} not in manifest (re-run `make artifacts`)"))?
+            .clone();
+        configure_xla_flags();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let init_exe = compile(&client, &entry.init).context("init artifact")?;
+        let mut train_exes = BTreeMap::new();
+        for (&n, path) in &entry.train_step {
+            train_exes.insert(n, compile(&client, path).context("train_step artifact")?);
+        }
+        let mut fwd_exes = BTreeMap::new();
+        for (&n, path) in &entry.loss_fwd {
+            fwd_exes.insert(n, compile(&client, path).context("loss_fwd artifact")?);
+        }
+        let mut eval_exes = BTreeMap::new();
+        for (&n, path) in &entry.eval_step {
+            eval_exes.insert(n, compile(&client, path).context("eval artifact")?);
+        }
+        let pc = entry.param_count;
+        Ok(XlaRuntime {
+            entry,
+            client,
+            init_exe,
+            train_exes,
+            fwd_exes,
+            eval_exes,
+            params: zeros_lit(pc),
+            m: zeros_lit(pc),
+            v: zeros_lit(pc),
+            step: 0.0,
+        })
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn x_literal(&self, x: BatchX<'_>, n: usize) -> Result<xla::Literal> {
+        let mut dims: Vec<i64> = vec![n as i64];
+        dims.extend(self.entry.x_shape.iter().map(|&d| d as i64));
+        let per = self.entry.x_len();
+        match (x, &self.entry.x_dtype) {
+            (BatchX::F32(v), XDtype::F32) => {
+                ensure!(v.len() == n * per, "x len {} != {}", v.len(), n * per);
+                lit_f32(v, &dims)
+            }
+            (BatchX::I32(v), XDtype::I32) => {
+                ensure!(v.len() == n * per, "x len {} != {}", v.len(), n * per);
+                lit_i32(v, &dims)
+            }
+            _ => bail!("batch modality does not match model {}", self.entry.name),
+        }
+    }
+
+    fn y_literal(&self, y: &[i32], n: usize) -> Result<xla::Literal> {
+        let per = self.entry.y_len();
+        ensure!(y.len() == n * per, "y len {} != {}", y.len(), n * per);
+        let dims: Vec<i64> = if self.entry.y_shape.is_empty() {
+            vec![n as i64]
+        } else {
+            let mut d: Vec<i64> = vec![n as i64];
+            d.extend(self.entry.y_shape.iter().map(|&s| s as i64));
+            d
+        };
+        lit_i32(y, &dims)
+    }
+}
+
+impl ModelRuntime for XlaRuntime {
+    fn param_count(&self) -> usize {
+        self.entry.param_count
+    }
+
+    fn init(&mut self, seed: i32) -> Result<()> {
+        let mut out = run_tuple(&self.init_exe, &[xla::Literal::scalar(seed)])?;
+        ensure!(!out.is_empty(), "init output");
+        let params = out.remove(0);
+        ensure!(params.element_count() == self.entry.param_count, "init param count");
+        self.params = params;
+        self.m = zeros_lit(self.entry.param_count);
+        self.v = zeros_lit(self.entry.param_count);
+        self.step = 0.0;
+        Ok(())
+    }
+
+    fn loss_fwd(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> Result<Vec<f32>> {
+        let exe = self
+            .fwd_exes
+            .get(&n)
+            .ok_or_else(|| anyhow!("{}: no loss_fwd artifact for n={n}", self.entry.name))?;
+        let xl = self.x_literal(x, n)?;
+        let yl = self.y_literal(y, n)?;
+        let args: [&xla::Literal; 3] = [&self.params, &xl, &yl];
+        let out = run_tuple(exe, &args)?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("losses: {e:?}"))
+    }
+
+    fn train_step(
+        &mut self,
+        x: BatchX<'_>,
+        y: &[i32],
+        weights: &[f32],
+        lr: f32,
+        n: usize,
+    ) -> Result<StepOutput> {
+        let exe = self
+            .train_exes
+            .get(&n)
+            .ok_or_else(|| anyhow!("{}: no train_step artifact for n={n}", self.entry.name))?;
+        ensure!(weights.len() == n, "weights len");
+        let xl = self.x_literal(x, n)?;
+        let yl = self.y_literal(y, n)?;
+        let wl = xla::Literal::vec1(weights);
+        let lrl = xla::Literal::scalar(lr);
+        let stepl = xla::Literal::scalar(self.step);
+        let args: [&xla::Literal; 8] =
+            [&self.params, &self.m, &self.v, &xl, &yl, &wl, &lrl, &stepl];
+        let mut out = run_tuple(exe, &args)?;
+        ensure!(out.len() == 5, "train_step arity {}", out.len());
+        // Keep the state literal-resident: no host round-trip.
+        let mean_loss = out[4]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("mean loss: {e:?}"))?;
+        let losses = out[3].to_vec::<f32>().map_err(|e| anyhow!("losses: {e:?}"))?;
+        self.v = out.swap_remove(2);
+        self.m = out.swap_remove(1);
+        self.params = out.swap_remove(0);
+        self.step += 1.0;
+        Ok(StepOutput { losses, mean_loss })
+    }
+
+    fn eval(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let exe = self
+            .eval_exes
+            .get(&n)
+            .ok_or_else(|| anyhow!("{}: no eval artifact for n={n}", self.entry.name))?;
+        let xl = self.x_literal(x, n)?;
+        let yl = self.y_literal(y, n)?;
+        let args: [&xla::Literal; 3] = [&self.params, &xl, &yl];
+        let out = run_tuple(exe, &args)?;
+        ensure!(out.len() == 2, "eval arity");
+        let losses = out[0].to_vec::<f32>().map_err(|e| anyhow!("losses: {e:?}"))?;
+        let correct = out[1].to_vec::<f32>().map_err(|e| anyhow!("correct: {e:?}"))?;
+        Ok((losses, correct))
+    }
+
+    fn train_sizes(&self) -> Vec<usize> {
+        self.train_exes.keys().copied().collect()
+    }
+
+    fn fwd_size(&self) -> usize {
+        self.fwd_exes.keys().next_back().copied().unwrap_or(0)
+    }
+
+    fn eval_size(&self) -> usize {
+        self.eval_exes.keys().next_back().copied().unwrap_or(0)
+    }
+
+    fn get_params(&mut self) -> Result<Vec<f32>> {
+        self.params.to_vec::<f32>().map_err(|e| anyhow!("params: {e:?}"))
+    }
+
+    fn set_params(&mut self, params: &[f32]) -> Result<()> {
+        ensure!(params.len() == self.entry.param_count, "param count");
+        self.params = xla::Literal::vec1(params);
+        Ok(())
+    }
+
+    fn flops_per_sample_fwd(&self) -> u64 {
+        self.entry.flops_per_sample_fwd
+    }
+}
+
+/// The standalone L1 dual-EMA table-refresh kernel (`es_update_n{N}`),
+/// used for dense score-table refreshes at epoch boundaries. The rust
+/// scalar loop in `sampler::evolved` handles scattered per-step updates;
+/// this kernel demonstrates (and benches) the fused path for web-scale
+/// tables, chunked through the artifact's fixed block size.
+pub struct EsUpdateKernel {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    block: usize,
+}
+
+impl EsUpdateKernel {
+    pub fn load(manifest: &Manifest) -> Result<EsUpdateKernel> {
+        let sizes = manifest
+            .kernels
+            .get("es_update")
+            .ok_or_else(|| anyhow!("manifest has no es_update kernel"))?;
+        let (&block, path) =
+            sizes.iter().next_back().ok_or_else(|| anyhow!("empty es_update entry"))?;
+        configure_xla_flags();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+        let exe = compile(&client, path)?;
+        Ok(EsUpdateKernel { client, exe, block })
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Fused (s, w) refresh over a full table; `mask[i] = 1.0` applies the
+    /// update to entry i. Tables of any size are processed in `block`-sized
+    /// chunks with a zero-padded tail.
+    pub fn refresh(
+        &self,
+        s: &mut [f32],
+        w: &mut [f32],
+        losses: &[f32],
+        mask: &[f32],
+        beta1: f32,
+        beta2: f32,
+    ) -> Result<()> {
+        let n = s.len();
+        ensure!(w.len() == n && losses.len() == n && mask.len() == n, "table lengths");
+        let betas = xla::Literal::vec1(&[beta1, beta2]);
+        let b = self.block;
+        let mut buf_s = vec![0.0f32; b];
+        let mut buf_w = vec![0.0f32; b];
+        let mut buf_l = vec![0.0f32; b];
+        let mut buf_m = vec![0.0f32; b];
+        let mut off = 0;
+        while off < n {
+            let len = b.min(n - off);
+            buf_s[..len].copy_from_slice(&s[off..off + len]);
+            buf_w[..len].copy_from_slice(&w[off..off + len]);
+            buf_l[..len].copy_from_slice(&losses[off..off + len]);
+            buf_m[..len].copy_from_slice(&mask[off..off + len]);
+            buf_m[len..].iter_mut().for_each(|x| *x = 0.0); // pad: no-op
+            // Arg order matches aot.py's `fn(s, w, l, mask, betas)`.
+            let args = vec![
+                xla::Literal::vec1(&buf_s),
+                xla::Literal::vec1(&buf_w),
+                xla::Literal::vec1(&buf_l),
+                xla::Literal::vec1(&buf_m),
+                betas.clone(),
+            ];
+            let out = run_tuple(&self.exe, &args)?;
+            let s2 = out[0].to_vec::<f32>().map_err(|e| anyhow!("s': {e:?}"))?;
+            let w2 = out[1].to_vec::<f32>().map_err(|e| anyhow!("w': {e:?}"))?;
+            s[off..off + len].copy_from_slice(&s2[..len]);
+            w[off..off + len].copy_from_slice(&w2[..len]);
+            off += len;
+        }
+        Ok(())
+    }
+}
+
+// NOTE ON Clone FOR LITERAL: xla::Literal implements Clone via C-side copy.
+// The betas literal is tiny; cloning per chunk is negligible.
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests here only cover argument validation; real end-to-end
+    //! XLA execution is exercised by tests/xla_integration.rs (gated on
+    //! artifacts/ being built).
+
+    use super::*;
+
+    #[test]
+    fn manifest_missing_model_is_clear_error() {
+        let m = Manifest {
+            dir: std::path::PathBuf::from("."),
+            models: Default::default(),
+            kernels: Default::default(),
+        };
+        let err = match XlaRuntime::load(&m, "nope") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("load should fail"),
+        };
+        assert!(err.contains("not in manifest"), "{err}");
+    }
+}

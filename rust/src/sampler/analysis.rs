@@ -1,0 +1,194 @@
+//! Analytical tools for the paper's theory: the explicit Eq. 3.2 weight
+//! expansion (Prop. 3.1), the Thm. 3.2 transfer function, and the Fig. 1/8
+//! synthetic weight-signal traces.
+
+/// Explicit form of the ES weight after observing `losses[0..T]` at steps
+/// 1..=T (paper Eq. 3.2, *without* truncating the O(β2^t) boundary terms,
+/// so it matches the recursion exactly):
+///
+///   w(T) = (1-β2)·Σ_{k=1..T} β2^{T-k} ℓ(k)
+///        + (β2-β1)·Σ_{k=1..T-1} β2^{T-1-k} (ℓ(k+1)-ℓ(k))
+///        + boundary(s0, ℓ(1))
+pub fn explicit_weight(losses: &[f32], beta1: f32, beta2: f32, s0: f32) -> f32 {
+    let t_max = losses.len();
+    if t_max == 0 {
+        return s0;
+    }
+    let (b1, b2) = (beta1 as f64, beta2 as f64);
+    // s(T) expansion: s(T) = β2^T s0 + (1-β2) Σ β2^{T-k} ℓ(k).
+    let mut s_t = b2.powi(t_max as i32) * s0 as f64;
+    for (k, &l) in losses.iter().enumerate() {
+        // losses[k] is ℓ(k+1)
+        s_t += (1.0 - b2) * b2.powi((t_max - 1 - k) as i32) * l as f64;
+    }
+    // w(T) = s(T) + (β2-β1)/(1-β2) · (s(T) - s(T-1))  [Eq. B.18]
+    // with s(T)-s(T-1) expanded per Eq. B.20 including boundary terms.
+    let mut diff = -(1.0 - b2) * b2.powi(t_max as i32 - 1) * s0 as f64;
+    diff += (1.0 - b2) * b2.powi(t_max as i32 - 1) * losses[0] as f64;
+    for k in 1..t_max {
+        diff += (1.0 - b2)
+            * b2.powi((t_max - 1 - k) as i32)
+            * (losses[k] - losses[k - 1]) as f64;
+    }
+    let w = if (1.0 - b2).abs() < 1e-12 {
+        // β2 = 1: s never moves, w = β1 s0 + (1-β1) ℓ(T).
+        b1 * s0 as f64 + (1.0 - b1) * *losses.last().unwrap() as f64
+    } else {
+        s_t + (b2 - b1) / (1.0 - b2) * diff
+    };
+    w as f32
+}
+
+/// |H(iω)| for the Thm. 3.2 transfer function
+/// H(ω) = ((β2-β1)ω + (1-β2)) / (ω + (1-β2)).
+pub fn transfer_magnitude(beta1: f64, beta2: f64, omega: f64) -> f64 {
+    let a = beta2 - beta1;
+    let b = 1.0 - beta2;
+    (((a * omega).powi(2) + b * b) / (omega * omega + b * b)).sqrt()
+}
+
+/// One step of the coupled recursion for a single scalar signal; returns
+/// (w, s'). Used by the Fig. 1/8 signal traces.
+pub fn scalar_step(s: f32, loss: f32, beta1: f32, beta2: f32) -> (f32, f32) {
+    let w = beta1 * s + (1.0 - beta1) * loss;
+    let s2 = beta2 * s + (1.0 - beta2) * loss;
+    (w, s2)
+}
+
+/// Generate the Fig. 1 / Fig. 8 illustration: a decaying loss signal with
+/// random perturbations, plus the weight signals of Loss (Eq. 2.3) and ES
+/// (Eq. 3.1) for the given betas. Returns (loss, w_loss, w_es) traces.
+pub fn fig1_traces(
+    steps: usize,
+    beta1: f32,
+    beta2: f32,
+    rng: &mut crate::util::Pcg64,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut loss = Vec::with_capacity(steps);
+    let mut w_loss = Vec::with_capacity(steps);
+    let mut w_es = Vec::with_capacity(steps);
+    let mut s = 1.0f32 / 8.0;
+    for t in 0..steps {
+        // Decaying trend with oscillatory noise — "typical behaviors of
+        // loss curves in general machine learning" (Fig. 1 caption).
+        let trend = 2.5 * (-(t as f32) / (steps as f32 * 0.35)).exp() + 0.3;
+        let noise = 0.35 * rng.normal() * (1.0 + 0.5 * (t as f32 * 0.9).sin());
+        let l = (trend + noise).max(0.02);
+        let (w, s2) = scalar_step(s, l, beta1, beta2);
+        s = s2;
+        loss.push(l);
+        w_loss.push(l); // Eq. 2.3: weight == current loss
+        w_es.push(w);
+    }
+    (loss, w_loss, w_es)
+}
+
+/// Discrete total variation of a signal — the quantitative "oscillation"
+/// measure used to verify the smoothing claim of Thm. 3.2 numerically.
+pub fn total_variation(xs: &[f32]) -> f64 {
+    xs.windows(2).map(|w| (w[1] - w[0]).abs() as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn transfer_magnitude_bounded_by_one() {
+        // Thm. 3.2 (i): |H(iω)| <= 1 for all frequencies, β ∈ (0,1).
+        check("|H| <= 1", 300, |g| {
+            let b1 = g.f64_in(0.001, 0.999);
+            let b2 = g.f64_in(0.001, 0.999);
+            let omega = 10f64.powf(g.f64_in(-4.0, 4.0));
+            let h = transfer_magnitude(b1, b2, omega);
+            prop_assert!(h <= 1.0 + 1e-12, "|H|={h} at b1={b1} b2={b2} w={omega}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn transfer_high_freq_limit_is_beta_gap() {
+        // Thm. 3.2 (ii): |H(iω)| → |β2-β1| as ω → ∞.
+        for (b1, b2) in [(0.2, 0.9), (0.5, 0.9), (0.8, 0.9), (0.9, 0.2)] {
+            let h = transfer_magnitude(b1, b2, 1e8);
+            assert!((h - ((b2 - b1) as f64).abs()).abs() < 1e-6, "b1={b1} b2={b2}: {h}");
+        }
+    }
+
+    #[test]
+    fn transfer_dc_gain_is_one() {
+        // ω → 0: |H| → 1 (the overall trend passes through unattenuated).
+        let h = transfer_magnitude(0.2, 0.9, 1e-9);
+        assert!((h - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn explicit_weight_beta2_one_special_case() {
+        let w = explicit_weight(&[1.0, 2.0, 3.0], 0.5, 1.0, 0.125);
+        assert!((w - (0.5 * 0.125 + 0.5 * 3.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn explicit_matches_scalar_recursion_exactly() {
+        check("explicit == recursion", 100, |g| {
+            let t = g.usize_in(1, 50);
+            let b1 = g.f32_in(0.0, 1.0);
+            let b2 = g.f32_in(0.0, 0.99);
+            let losses = g.vec_f32(t, 0.0, 5.0);
+            let s0 = 0.125f32;
+            let mut s = s0;
+            let mut w = s0;
+            for &l in &losses {
+                let (w2, s2) = scalar_step(s, l, b1, b2);
+                w = w2;
+                s = s2;
+            }
+            let we = explicit_weight(&losses, b1, b2, s0);
+            prop_assert!(
+                (w - we).abs() < 1e-3 * (1.0 + w.abs()),
+                "rec={w} explicit={we} (b1={b1} b2={b2} t={t})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn es_weights_smoother_than_loss_weights() {
+        // The Fig. 1 claim, checked numerically: total variation of the ES
+        // weight signal is strictly below the raw loss signal's for the
+        // paper's default betas.
+        let mut rng = Pcg64::new(42);
+        let (_, w_loss, w_es) = fig1_traces(400, 0.5, 0.9, &mut rng);
+        let tv_loss = total_variation(&w_loss);
+        let tv_es = total_variation(&w_es);
+        assert!(
+            tv_es < 0.8 * tv_loss,
+            "tv_es={tv_es} not < 0.8 * tv_loss={tv_loss}"
+        );
+    }
+
+    #[test]
+    fn es_weights_track_the_trend() {
+        // Smoothing must not destroy the signal: the ES weights still
+        // correlate strongly with the loss trend.
+        let mut rng = Pcg64::new(7);
+        let (loss, _, w_es) = fig1_traces(400, 0.5, 0.9, &mut rng);
+        // Pearson correlation.
+        let n = loss.len() as f64;
+        let mx = loss.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let my = w_es.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let mut num = 0.0;
+        let mut dx = 0.0;
+        let mut dy = 0.0;
+        for (&x, &y) in loss.iter().zip(&w_es) {
+            num += (x as f64 - mx) * (y as f64 - my);
+            dx += (x as f64 - mx).powi(2);
+            dy += (y as f64 - my).powi(2);
+        }
+        let r = num / (dx.sqrt() * dy.sqrt());
+        assert!(r > 0.7, "correlation {r}");
+    }
+}

@@ -1,0 +1,78 @@
+//! Annealing window (paper Alg. 1): run standard batched sampling — no
+//! data selection — during the first and last `anneal_frac` of epochs.
+//! The leading window warm-starts the score tables (losses still observed
+//! from training steps); the trailing window removes selection bias before
+//! convergence, following InfoBatch (Qin et al. 2024).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Annealing {
+    /// First epoch (inclusive) where selection is active.
+    pub start: usize,
+    /// First epoch (exclusive) after which selection is disabled again.
+    pub end: usize,
+}
+
+impl Annealing {
+    /// `frac` of `epochs` is annealed at each side (ceil, min 0).
+    pub fn new(epochs: usize, frac: f64) -> Self {
+        let k = (epochs as f64 * frac).ceil() as usize;
+        // Degenerate configs (window swallows everything) => never active.
+        if 2 * k >= epochs {
+            if frac > 0.0 {
+                return Annealing { start: epochs, end: epochs };
+            }
+        }
+        Annealing { start: k, end: epochs - k }
+    }
+
+    /// No annealing at all.
+    pub fn none(epochs: usize) -> Self {
+        Annealing { start: 0, end: epochs }
+    }
+
+    /// Is data selection active at `epoch`?
+    pub fn active(&self, epoch: usize) -> bool {
+        (self.start..self.end).contains(&epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_percent_of_twenty_is_one_epoch_each_side() {
+        let a = Annealing::new(20, 0.05);
+        assert!(!a.active(0));
+        assert!(a.active(1));
+        assert!(a.active(18));
+        assert!(!a.active(19));
+    }
+
+    #[test]
+    fn zero_frac_is_always_active() {
+        let a = Annealing::new(10, 0.0);
+        assert!((0..10).all(|e| a.active(e)));
+    }
+
+    #[test]
+    fn window_swallowing_everything_disables_selection() {
+        let a = Annealing::new(2, 0.5);
+        assert!((0..2).all(|e| !a.active(e)));
+        let a = Annealing::new(1, 0.05);
+        assert!(!a.active(0));
+    }
+
+    #[test]
+    fn none_matches_zero_frac() {
+        assert_eq!(Annealing::none(7), Annealing::new(7, 0.0));
+    }
+
+    #[test]
+    fn fractional_windows_round_up() {
+        // 0.05 * 30 = 1.5 -> 2 epochs annealed each side.
+        let a = Annealing::new(30, 0.05);
+        assert_eq!(a.start, 2);
+        assert_eq!(a.end, 28);
+    }
+}

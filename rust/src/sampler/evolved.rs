@@ -1,0 +1,331 @@
+//! Evolved Sampling (ES) and ES With Pruning (ESWP) — paper §3, Alg. 1.
+//!
+//! State per sample i (Eq. 3.1), with s(0) = w(0) = 1/n:
+//!
+//! ```text
+//! w_i(t) = β1·s_i(t-1) + (1-β1)·ℓ_i(θ(t))
+//! s_i(t) = β2·s_i(t-1) + (1-β2)·ℓ_i(θ(t))
+//! ```
+//!
+//! Prop. 3.1 shows w implicitly augments discounted historical losses with
+//! discounted loss *differences* (the (β2-β1) term of Eq. 3.2) — no loss
+//! history is stored; the dual EMA is the entire memory cost (2 f32 per
+//! sample).
+//!
+//! Per step (Alg. 1): the trainer draws a uniform meta-batch, obtains its
+//! fresh losses (scoring FP at the *latest* parameters), calls
+//! `observe_meta` (the Eq. 3.1 update), then `select` draws the BP
+//! mini-batch with probability ∝ w (without replacement). During annealing
+//! epochs selection is off, but losses from the standard training steps
+//! still warm the tables via `observe_train`.
+//!
+//! ESWP (prune_ratio > 0) additionally prunes the dataset at each active
+//! epoch start, keeping (1−r)·n samples with probability ∝ w — the paper's
+//! set-level extension. Both selections use the shared Gumbel top-k
+//! machinery in `weights.rs`, which floors degenerate weights so
+//! low-weight samples stay reachable (Remark 1).
+
+use super::annealing::Annealing;
+use super::{weights, Sampler, Selection};
+use crate::util::Pcg64;
+
+pub struct Evolved {
+    beta1: f32,
+    beta2: f32,
+    prune_ratio: f64,
+    anneal: Annealing,
+    /// Score state s (Eq. 3.1).
+    s: Vec<f32>,
+    /// Sampling weight w (Eq. 3.1).
+    w: Vec<f32>,
+    /// Scratch for gathering meta-batch weights in `select` (no per-step
+    /// allocation on the hot path).
+    scratch: Vec<f32>,
+}
+
+impl Evolved {
+    pub fn new(
+        n: usize,
+        epochs: usize,
+        beta1: f32,
+        beta2: f32,
+        anneal_frac: f64,
+        prune_ratio: f64,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&beta1) && (0.0..=1.0).contains(&beta2));
+        assert!((0.0..1.0).contains(&prune_ratio));
+        let init = 1.0 / n as f32;
+        Evolved {
+            beta1,
+            beta2,
+            prune_ratio,
+            anneal: Annealing::new(epochs, anneal_frac),
+            s: vec![init; n],
+            w: vec![init; n],
+            scratch: Vec::new(),
+        }
+    }
+
+    /// The Eq. 3.1 dual-EMA update for one batch of fresh losses.
+    /// (Same computation as the L1 `es_update` Pallas kernel; the rust
+    /// path handles the scattered per-step updates, the kernel handles
+    /// dense full-table refreshes.)
+    fn update(&mut self, indices: &[u32], losses: &[f32]) {
+        debug_assert_eq!(indices.len(), losses.len());
+        for (&i, &l) in indices.iter().zip(losses) {
+            let i = i as usize;
+            let s_old = self.s[i];
+            self.w[i] = self.beta1 * s_old + (1.0 - self.beta1) * l;
+            self.s[i] = self.beta2 * s_old + (1.0 - self.beta2) * l;
+        }
+    }
+
+    pub fn weights_table(&self) -> &[f32] {
+        &self.w
+    }
+
+    pub fn scores_table(&self) -> &[f32] {
+        &self.s
+    }
+
+    /// Replace both tables (used by the distributed simulation to install
+    /// the synchronized state, and by the XLA-kernel refresh path).
+    pub fn install_tables(&mut self, s: Vec<f32>, w: Vec<f32>) {
+        assert_eq!(s.len(), self.s.len());
+        assert_eq!(w.len(), self.w.len());
+        self.s = s;
+        self.w = w;
+    }
+
+    pub fn betas(&self) -> (f32, f32) {
+        (self.beta1, self.beta2)
+    }
+
+    pub fn is_pruning(&self) -> bool {
+        self.prune_ratio > 0.0
+    }
+}
+
+impl Sampler for Evolved {
+    fn name(&self) -> &'static str {
+        if self.is_pruning() {
+            "eswp"
+        } else {
+            "es"
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.s.len()
+    }
+
+    fn on_epoch_start(&mut self, epoch: usize, rng: &mut Pcg64) -> Vec<u32> {
+        let n = self.n();
+        if !self.is_pruning() || !self.anneal.active(epoch) {
+            return (0..n as u32).collect();
+        }
+        let keep = ((1.0 - self.prune_ratio) * n as f64).ceil() as usize;
+        weights::prune_keep(&self.w, keep.max(1), rng)
+    }
+
+    fn needs_meta_losses(&self, epoch: usize) -> bool {
+        self.anneal.active(epoch)
+    }
+
+    fn observe_meta(&mut self, indices: &[u32], losses: &[f32], _epoch: usize) {
+        self.update(indices, losses);
+    }
+
+    fn observe_train(&mut self, indices: &[u32], losses: &[f32], epoch: usize) {
+        // During annealing the BP batch *is* the meta-batch and its losses
+        // already flowed through observe_meta when selection was active;
+        // only warm the tables here when selection is off.
+        if !self.anneal.active(epoch) {
+            self.update(indices, losses);
+        }
+    }
+
+    fn select(&mut self, meta: &[u32], mini: usize, epoch: usize, rng: &mut Pcg64) -> Selection {
+        if !self.anneal.active(epoch) || mini >= meta.len() {
+            return Selection::unweighted(meta.to_vec());
+        }
+        self.scratch.clear();
+        self.scratch.extend(meta.iter().map(|&i| self.w[i as usize]));
+        let picked = weights::sample_without_replacement(&self.scratch, mini, rng);
+        Selection::unweighted(picked.into_iter().map(|p| meta[p as usize]).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::sampler::analysis;
+    use crate::util::proptest::check;
+
+    fn es(n: usize) -> Evolved {
+        Evolved::new(n, 10, 0.2, 0.9, 0.0, 0.0)
+    }
+
+    #[test]
+    fn initial_state_uniform() {
+        let e = es(4);
+        assert!(e.w.iter().all(|&w| (w - 0.25).abs() < 1e-7));
+        assert!(e.s.iter().all(|&s| (s - 0.25).abs() < 1e-7));
+    }
+
+    #[test]
+    fn update_follows_eq_3_1() {
+        let mut e = es(2);
+        e.observe_meta(&[0], &[2.0], 0);
+        // w = 0.2*0.5 + 0.8*2.0 = 1.7 ; s = 0.9*0.5 + 0.1*2.0 = 0.65
+        assert!((e.w[0] - 1.7).abs() < 1e-6, "w={}", e.w[0]);
+        assert!((e.s[0] - 0.65).abs() < 1e-6, "s={}", e.s[0]);
+        // Untouched sample unchanged.
+        assert!((e.w[1] - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn recursion_equals_explicit_expansion() {
+        // Prop. 3.1: run the recursion for T steps on one sample, compare
+        // to the explicit Eq. 3.2 expansion (up to the O(β2^T) remainder).
+        check("es recursion == eq 3.2", 60, |g| {
+            let t_max = g.usize_in(5, 40);
+            let b1 = g.f32_in(0.0, 1.0);
+            let b2 = g.f32_in(0.05, 0.95);
+            let losses: Vec<f32> = g.vec_f32(t_max + 1, 0.01, 5.0);
+            let n = 8.0f32;
+            let mut e = Evolved::new(8, 10, b1, b2, 0.0, 0.0);
+            for t in 1..=t_max {
+                e.observe_meta(&[0], &[losses[t]], 0);
+            }
+            let w_rec = e.w[0];
+            let w_exp = analysis::explicit_weight(&losses[1..=t_max], b1, b2, 1.0 / n);
+            let tol = 8.0 * (b2 as f64).powi(t_max as i32) as f32 + 1e-4;
+            prop_assert!(
+                (w_rec - w_exp).abs() <= tol,
+                "rec={w_rec} exp={w_exp} tol={tol} (b1={b1} b2={b2} T={t_max})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn beta_zero_reduces_to_loss_sampling() {
+        // β1=β2=0 => w == current loss (Eq. 2.3).
+        let mut e = Evolved::new(3, 10, 0.0, 0.0, 0.0, 0.0);
+        e.observe_meta(&[0, 1, 2], &[1.0, 2.0, 3.0], 0);
+        assert_eq!(e.w, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn beta_one_is_standard_sampling() {
+        // β1=β2=1 => w frozen at the uniform init regardless of losses.
+        let mut e = Evolved::new(4, 10, 1.0, 1.0, 0.0, 0.0);
+        e.observe_meta(&[0, 1], &[9.0, 9.0], 0);
+        assert!(e.w.iter().all(|&w| (w - 0.25).abs() < 1e-7));
+    }
+
+    #[test]
+    fn select_prefers_high_weight_samples() {
+        let mut e = es(8);
+        // Sample 3 has seen large losses repeatedly.
+        for _ in 0..5 {
+            e.observe_meta(&[3], &[10.0], 1);
+            e.observe_meta(&[0, 1, 2], &[0.01, 0.01, 0.01], 1);
+        }
+        let meta: Vec<u32> = (0..8).collect();
+        let mut rng = Pcg64::new(1);
+        let hits = (0..500)
+            .filter(|_| e.select(&meta, 2, 1, &mut rng).indices.contains(&3))
+            .count();
+        assert!(hits > 450, "hits={hits}");
+    }
+
+    #[test]
+    fn select_returns_subset_of_meta_without_duplicates() {
+        check("es select subset", 80, |g| {
+            let n = g.usize_in(8, 128);
+            let mut e = es(n);
+            let losses = g.vec_f32(n, 0.0, 4.0);
+            let all: Vec<u32> = (0..n as u32).collect();
+            e.observe_meta(&all, &losses, 1);
+            let meta: Vec<u32> = all.iter().copied().take(n.min(32)).collect();
+            let mini = g.usize_in(1, meta.len());
+            let sel = e.select(&meta, mini, 1, g.rng());
+            prop_assert!(sel.indices.len() == mini, "len {}", sel.indices.len());
+            let mut sorted = sel.indices.clone();
+            sorted.sort_unstable();
+            let before = sorted.len();
+            sorted.dedup();
+            prop_assert!(sorted.len() == before, "duplicates in selection");
+            for i in &sel.indices {
+                prop_assert!(meta.contains(i), "{i} not in meta");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn annealing_disables_selection_and_scoring() {
+        let e = Evolved::new(16, 20, 0.2, 0.9, 0.05, 0.0);
+        assert!(!e.needs_meta_losses(0), "first epoch annealed");
+        assert!(e.needs_meta_losses(1));
+        assert!(!e.needs_meta_losses(19), "last epoch annealed");
+        let mut e = e;
+        let meta: Vec<u32> = (0..16).collect();
+        let sel = e.select(&meta, 4, 0, &mut Pcg64::new(0));
+        assert_eq!(sel.indices, meta, "annealed select = whole meta");
+    }
+
+    #[test]
+    fn observe_train_warms_tables_only_when_annealed() {
+        let mut e = Evolved::new(4, 20, 0.2, 0.9, 0.05, 0.0);
+        let w0 = e.w[0];
+        e.observe_train(&[0], &[5.0], 1); // active epoch: ignored
+        assert_eq!(e.w[0], w0);
+        e.observe_train(&[0], &[5.0], 0); // annealed epoch: applied
+        assert_ne!(e.w[0], w0);
+    }
+
+    #[test]
+    fn eswp_prunes_to_keep_ratio() {
+        let mut e = Evolved::new(100, 10, 0.2, 0.8, 0.0, 0.3);
+        let kept = e.on_epoch_start(5, &mut Pcg64::new(2));
+        assert_eq!(kept.len(), 70);
+        assert!(kept.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn eswp_pruning_prefers_high_weight() {
+        let mut e = Evolved::new(50, 10, 0.2, 0.8, 0.0, 0.5);
+        // First half of the dataset has 100x the loss of the second half.
+        let idx: Vec<u32> = (0..50).collect();
+        let losses: Vec<f32> = (0..50).map(|i| if i < 25 { 10.0 } else { 0.1 }).collect();
+        for _ in 0..4 {
+            e.observe_meta(&idx, &losses, 1);
+        }
+        let mut low_kept = 0;
+        let mut rng = Pcg64::new(3);
+        for _ in 0..200 {
+            let kept = e.on_epoch_start(1, &mut rng);
+            low_kept += kept.iter().filter(|&&i| i >= 25).count();
+        }
+        // Of 25 kept per trial, high-loss samples should dominate.
+        let frac_low = low_kept as f64 / (200.0 * 25.0);
+        assert!(frac_low < 0.25, "frac_low={frac_low}");
+    }
+
+    #[test]
+    fn es_never_prunes() {
+        let mut e = es(30);
+        let kept = e.on_epoch_start(3, &mut Pcg64::new(4));
+        assert_eq!(kept.len(), 30);
+    }
+
+    #[test]
+    fn name_reflects_pruning() {
+        assert_eq!(es(4).name(), "es");
+        assert_eq!(Evolved::new(4, 10, 0.2, 0.8, 0.0, 0.2).name(), "eswp");
+    }
+}

@@ -1,0 +1,181 @@
+//! InfoBatch (Qin et al. 2024): unbiased set-level dynamic pruning.
+//!
+//! Per epoch: samples whose running score (last observed loss) is *below
+//! the mean* are pruned with probability `r`; the survivors among them get
+//! their gradients rescaled by 1/(1−r) so the expected gradient matches
+//! full-data training (the method's unbiasedness trick). The final
+//! `anneal_frac` of epochs trains on the full set (the paper's δ).
+//!
+//! Scores update from training-step losses — InfoBatch performs no extra
+//! forward pass (set-level only; "# of samples for BP" = (1−r) in Tab. 1).
+
+use super::{Sampler, Selection};
+use crate::util::Pcg64;
+
+pub struct InfoBatch {
+    prune_ratio: f64,
+    /// Selection is active for epochs < active_end (then annealed).
+    active_end: usize,
+    /// Running score: last observed loss; NaN = never seen (kept + no rescale).
+    score: Vec<f32>,
+    /// Rescale factor to apply to each sample's next gradient contribution.
+    rescale: Vec<f32>,
+}
+
+impl InfoBatch {
+    pub fn new(n: usize, epochs: usize, prune_ratio: f64, anneal_frac: f64) -> Self {
+        assert!((0.0..1.0).contains(&prune_ratio));
+        let anneal_epochs = (epochs as f64 * anneal_frac).ceil() as usize;
+        InfoBatch {
+            prune_ratio,
+            active_end: epochs.saturating_sub(anneal_epochs),
+            score: vec![f32::NAN; n],
+            rescale: vec![1.0; n],
+        }
+    }
+
+    fn mean_score(&self) -> f32 {
+        let mut sum = 0.0f64;
+        let mut cnt = 0usize;
+        for &s in &self.score {
+            if s.is_finite() {
+                sum += s as f64;
+                cnt += 1;
+            }
+        }
+        if cnt == 0 {
+            f32::INFINITY // nothing seen yet => nobody is "below mean"
+        } else {
+            (sum / cnt as f64) as f32
+        }
+    }
+}
+
+impl Sampler for InfoBatch {
+    fn name(&self) -> &'static str {
+        "infobatch"
+    }
+
+    fn n(&self) -> usize {
+        self.score.len()
+    }
+
+    fn on_epoch_start(&mut self, epoch: usize, rng: &mut Pcg64) -> Vec<u32> {
+        let n = self.n();
+        self.rescale.iter_mut().for_each(|r| *r = 1.0);
+        if epoch >= self.active_end {
+            return (0..n as u32).collect();
+        }
+        let mean = self.mean_score();
+        let mut kept = Vec::with_capacity(n);
+        for i in 0..n {
+            let below = self.score[i].is_finite() && self.score[i] < mean;
+            if below {
+                if rng.f64() < self.prune_ratio {
+                    continue; // pruned this epoch
+                }
+                // Survivor below the mean: rescale to stay unbiased.
+                self.rescale[i] = (1.0 / (1.0 - self.prune_ratio)) as f32;
+            }
+            kept.push(i as u32);
+        }
+        if kept.is_empty() {
+            // Pathological (r≈1 with all-below-mean): keep everything.
+            return (0..n as u32).collect();
+        }
+        kept
+    }
+
+    fn observe_train(&mut self, indices: &[u32], losses: &[f32], _epoch: usize) {
+        for (&i, &l) in indices.iter().zip(losses) {
+            self.score[i as usize] = l;
+        }
+    }
+
+    fn select(&mut self, meta: &[u32], _mini: usize, _epoch: usize, _rng: &mut Pcg64) -> Selection {
+        // Set-level only: BP on the whole meta-batch with rescale weights.
+        let weights = meta.iter().map(|&i| self.rescale[i as usize]).collect();
+        Selection { indices: meta.to_vec(), weights }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_epoch_keeps_all_unseen() {
+        let mut ib = InfoBatch::new(32, 10, 0.5, 0.125);
+        let kept = ib.on_epoch_start(0, &mut Pcg64::new(0));
+        assert_eq!(kept.len(), 32, "no scores yet -> nothing below mean");
+    }
+
+    #[test]
+    fn prunes_below_mean_at_rate_r() {
+        let mut ib = InfoBatch::new(1000, 10, 0.5, 0.0);
+        let idx: Vec<u32> = (0..1000).collect();
+        // Half the samples at loss 0.1 (below), half at 10.0 (above mean 5.05).
+        let losses: Vec<f32> = (0..1000).map(|i| if i < 500 { 0.1 } else { 10.0 }).collect();
+        ib.observe_train(&idx, &losses, 0);
+        let kept = ib.on_epoch_start(1, &mut Pcg64::new(1));
+        let below_kept = kept.iter().filter(|&&i| i < 500).count();
+        let above_kept = kept.iter().filter(|&&i| i >= 500).count();
+        assert_eq!(above_kept, 500, "above-mean never pruned");
+        let rate = below_kept as f64 / 500.0;
+        assert!((rate - 0.5).abs() < 0.08, "kept rate={rate}");
+    }
+
+    #[test]
+    fn survivors_below_mean_get_rescaled() {
+        let mut ib = InfoBatch::new(100, 10, 0.5, 0.0);
+        let idx: Vec<u32> = (0..100).collect();
+        let losses: Vec<f32> = (0..100).map(|i| if i < 50 { 0.1 } else { 10.0 }).collect();
+        ib.observe_train(&idx, &losses, 0);
+        let kept = ib.on_epoch_start(1, &mut Pcg64::new(2));
+        let sel = ib.select(&kept, kept.len(), 1, &mut Pcg64::new(3));
+        for (pos, &i) in sel.indices.iter().enumerate() {
+            if i < 50 {
+                assert!((sel.weights[pos] - 2.0).abs() < 1e-6, "below-mean survivor w=2");
+            } else {
+                assert_eq!(sel.weights[pos], 1.0, "above-mean w=1");
+            }
+        }
+    }
+
+    #[test]
+    fn annealing_tail_trains_full_set() {
+        // epochs=8, anneal=0.125 -> last epoch (7) is annealed.
+        let mut ib = InfoBatch::new(50, 8, 0.5, 0.125);
+        let idx: Vec<u32> = (0..50).collect();
+        let losses: Vec<f32> = (0..50).map(|i| if i < 25 { 0.1 } else { 10.0 }).collect();
+        ib.observe_train(&idx, &losses, 0);
+        assert!(ib.on_epoch_start(6, &mut Pcg64::new(4)).len() < 50);
+        assert_eq!(ib.on_epoch_start(7, &mut Pcg64::new(4)).len(), 50);
+    }
+
+    #[test]
+    fn no_extra_forward_pass_needed() {
+        let ib = InfoBatch::new(10, 10, 0.5, 0.0);
+        assert!(!ib.needs_meta_losses(3));
+    }
+
+    #[test]
+    fn expected_gradient_mass_preserved() {
+        // Sum of selection weights over many epochs ≈ n per epoch
+        // (the unbiasedness property, in expectation).
+        let mut ib = InfoBatch::new(400, 10, 0.5, 0.0);
+        let idx: Vec<u32> = (0..400).collect();
+        let losses: Vec<f32> = (0..400).map(|i| (i % 20) as f32 / 10.0).collect();
+        ib.observe_train(&idx, &losses, 0);
+        let mut total = 0.0f64;
+        let trials = 200;
+        let mut rng = Pcg64::new(5);
+        for _ in 0..trials {
+            let kept = ib.on_epoch_start(1, &mut rng);
+            let sel = ib.select(&kept, kept.len(), 1, &mut rng);
+            total += sel.weights.iter().map(|&w| w as f64).sum::<f64>();
+        }
+        let per_epoch = total / trials as f64;
+        assert!((per_epoch - 400.0).abs() < 12.0, "mass={per_epoch}");
+    }
+}

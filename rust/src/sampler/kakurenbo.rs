@@ -1,0 +1,157 @@
+//! KAKURENBO (Thao Nguyen et al. 2023): adaptively *hide* the easiest
+//! samples each epoch, with a "moving-back" correction.
+//!
+//! Original method combines loss ranking with prediction confidence and
+//! accuracy. Our scoring FP exposes losses only, so the reproduction uses
+//! the loss-rank hiding rule plus move-back — a sample scheduled for
+//! hiding is moved back into the epoch if its loss *increased* since the
+//! last time it was seen (the paper's signal that the model started
+//! forgetting it). The confidence threshold τ maps onto a loss threshold:
+//! samples with loss below −ln(τ) are confidently fit and eligible for
+//! hiding regardless of rank. Documented as a substitution in DESIGN.md §3.
+
+use super::{Sampler, Selection};
+use crate::util::math;
+use crate::util::Pcg64;
+
+pub struct Kakurenbo {
+    hide_ratio: f64,
+    /// Loss threshold derived from the confidence threshold τ.
+    loss_threshold: f32,
+    /// Last observed loss (NaN = unseen).
+    last: Vec<f32>,
+    /// Loss at the previous epoch (for the move-back rule).
+    prev_epoch: Vec<f32>,
+}
+
+impl Kakurenbo {
+    pub fn new(n: usize, hide_ratio: f64, conf_threshold: f32) -> Self {
+        assert!((0.0..1.0).contains(&hide_ratio));
+        assert!((0.0..1.0).contains(&conf_threshold));
+        Kakurenbo {
+            hide_ratio,
+            loss_threshold: -(conf_threshold.ln()),
+            last: vec![f32::NAN; n],
+            prev_epoch: vec![f32::NAN; n],
+        }
+    }
+}
+
+impl Sampler for Kakurenbo {
+    fn name(&self) -> &'static str {
+        "ka"
+    }
+
+    fn n(&self) -> usize {
+        self.last.len()
+    }
+
+    fn on_epoch_start(&mut self, epoch: usize, _rng: &mut Pcg64) -> Vec<u32> {
+        let n = self.n();
+        if epoch == 0 {
+            return (0..n as u32).collect();
+        }
+        // Rank by current loss ascending; the lowest `hide_ratio` fraction
+        // that is also confidently fit is a candidate for hiding.
+        let scores: Vec<f32> =
+            self.last.iter().map(|&l| if l.is_finite() { l } else { f32::INFINITY }).collect();
+        let order = math::argsort(&scores);
+        let max_hidden = (self.hide_ratio * n as f64).floor() as usize;
+        let mut hidden = vec![false; n];
+        let mut count = 0usize;
+        for &i in order.iter() {
+            if count >= max_hidden {
+                break;
+            }
+            let i = i as usize;
+            let l = self.last[i];
+            if !l.is_finite() || l > self.loss_threshold {
+                break; // remaining samples are not confidently fit
+            }
+            // Moving-back: if the loss increased since last epoch, the
+            // model is forgetting this sample — keep it in.
+            let moving_back = self.prev_epoch[i].is_finite() && l > self.prev_epoch[i] + 1e-6;
+            if !moving_back {
+                hidden[i] = true;
+                count += 1;
+            }
+        }
+        // Snapshot losses for next epoch's move-back comparison.
+        self.prev_epoch.copy_from_slice(&self.last);
+        let kept: Vec<u32> = (0..n as u32).filter(|&i| !hidden[i as usize]).collect();
+        if kept.is_empty() {
+            (0..n as u32).collect()
+        } else {
+            kept
+        }
+    }
+
+    fn observe_train(&mut self, indices: &[u32], losses: &[f32], _epoch: usize) {
+        for (&i, &l) in indices.iter().zip(losses) {
+            self.last[i as usize] = l;
+        }
+    }
+
+    fn select(&mut self, meta: &[u32], _mini: usize, _epoch: usize, _rng: &mut Pcg64) -> Selection {
+        Selection::unweighted(meta.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn observed(n: usize, losses: &[f32]) -> Kakurenbo {
+        let mut ka = Kakurenbo::new(n, 0.3, 0.7);
+        let idx: Vec<u32> = (0..n as u32).collect();
+        ka.observe_train(&idx, losses, 0);
+        ka
+    }
+
+    #[test]
+    fn hides_lowest_loss_confident_samples() {
+        // τ=0.7 => threshold ≈ 0.357. Samples 0..3 are confidently fit.
+        let losses = [0.01, 0.02, 0.03, 0.04, 2.0, 2.0, 2.0, 2.0, 2.0, 2.0];
+        let mut ka = observed(10, &losses);
+        let kept = ka.on_epoch_start(1, &mut Pcg64::new(0));
+        // hide_ratio 0.3 => up to 3 hidden; the 3 lowest-loss hidden.
+        assert_eq!(kept.len(), 7);
+        for h in [0u32, 1, 2] {
+            assert!(!kept.contains(&h), "{h} should be hidden");
+        }
+        assert!(kept.contains(&3));
+    }
+
+    #[test]
+    fn unconfident_samples_never_hidden() {
+        let losses = [1.0f32; 10]; // all above -ln(0.7)
+        let mut ka = observed(10, &losses);
+        let kept = ka.on_epoch_start(1, &mut Pcg64::new(0));
+        assert_eq!(kept.len(), 10);
+    }
+
+    #[test]
+    fn moving_back_rescues_forgotten_samples() {
+        let mut ka = Kakurenbo::new(6, 0.5, 0.7);
+        let idx: Vec<u32> = (0..6).collect();
+        ka.observe_train(&idx, &[0.01, 0.02, 0.03, 1.0, 1.0, 1.0], 0);
+        let _ = ka.on_epoch_start(1, &mut Pcg64::new(0)); // snapshots prev
+        // Sample 0's loss increased since the snapshot => moved back.
+        ka.observe_train(&idx, &[0.2, 0.02, 0.03, 1.0, 1.0, 1.0], 1);
+        let kept = ka.on_epoch_start(2, &mut Pcg64::new(0));
+        assert!(kept.contains(&0), "increased-loss sample moved back");
+        assert!(!kept.contains(&1), "still-easy sample hidden");
+    }
+
+    #[test]
+    fn epoch_zero_keeps_everything() {
+        let mut ka = Kakurenbo::new(5, 0.3, 0.7);
+        assert_eq!(ka.on_epoch_start(0, &mut Pcg64::new(0)).len(), 5);
+    }
+
+    #[test]
+    fn is_set_level_only() {
+        let ka = Kakurenbo::new(5, 0.3, 0.7);
+        assert!(!ka.needs_meta_losses(1));
+    }
+}

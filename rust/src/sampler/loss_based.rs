@@ -1,0 +1,93 @@
+//! "Loss" baseline (Katharopoulos & Fleuret 2017) — paper Eq. 2.3:
+//! batch-level sampling with probability proportional to the *current*
+//! loss, no history. Equivalent to ES with β1 = β2 = 0 (Prop. 3.1), kept
+//! as an independent implementation so the equivalence is testable.
+
+use super::{weights, Sampler, Selection};
+use crate::util::Pcg64;
+
+pub struct LossSampler {
+    /// Most recent loss per sample (init 1/n like ES for a fair cold start).
+    last: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+impl LossSampler {
+    pub fn new(n: usize) -> Self {
+        LossSampler { last: vec![1.0 / n as f32; n], scratch: Vec::new() }
+    }
+}
+
+impl Sampler for LossSampler {
+    fn name(&self) -> &'static str {
+        "loss"
+    }
+
+    fn n(&self) -> usize {
+        self.last.len()
+    }
+
+    fn needs_meta_losses(&self, _epoch: usize) -> bool {
+        true
+    }
+
+    fn observe_meta(&mut self, indices: &[u32], losses: &[f32], _epoch: usize) {
+        for (&i, &l) in indices.iter().zip(losses) {
+            self.last[i as usize] = l;
+        }
+    }
+
+    fn select(&mut self, meta: &[u32], mini: usize, _epoch: usize, rng: &mut Pcg64) -> Selection {
+        if mini >= meta.len() {
+            return Selection::unweighted(meta.to_vec());
+        }
+        self.scratch.clear();
+        self.scratch.extend(meta.iter().map(|&i| self.last[i as usize]));
+        let picked = weights::sample_without_replacement(&self.scratch, mini, rng);
+        Selection::unweighted(picked.into_iter().map(|p| meta[p as usize]).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::evolved::Evolved;
+
+    #[test]
+    fn tracks_only_current_loss() {
+        let mut s = LossSampler::new(4);
+        s.observe_meta(&[2], &[3.0], 0);
+        s.observe_meta(&[2], &[0.5], 0);
+        assert_eq!(s.last[2], 0.5, "no history: overwritten");
+    }
+
+    #[test]
+    fn equivalent_to_es_with_zero_betas() {
+        // After identical observations, the sampling weights must match.
+        let mut loss = LossSampler::new(8);
+        let mut es0 = Evolved::new(8, 10, 0.0, 0.0, 0.0, 0.0);
+        let idx: Vec<u32> = (0..8).collect();
+        let rng = Pcg64::new(9);
+        for t in 0..5 {
+            let ls: Vec<f32> = (0..8).map(|i| ((i + t) % 8) as f32 + 0.1).collect();
+            loss.observe_meta(&idx, &ls, 1);
+            es0.observe_meta(&idx, &ls, 1);
+        }
+        assert_eq!(loss.last, es0.weights_table());
+        // And identical RNG draws give identical selections.
+        let a = loss.select(&idx, 3, 1, &mut rng.clone());
+        let b = es0.select(&idx, 3, 1, &mut rng.clone());
+        assert_eq!(a.indices, b.indices);
+    }
+
+    #[test]
+    fn prefers_high_loss() {
+        let mut s = LossSampler::new(10);
+        let idx: Vec<u32> = (0..10).collect();
+        let losses: Vec<f32> = (0..10).map(|i| if i == 7 { 50.0 } else { 0.1 }).collect();
+        s.observe_meta(&idx, &losses, 0);
+        let mut rng = Pcg64::new(1);
+        let hits = (0..300).filter(|_| s.select(&idx, 1, 0, &mut rng).indices[0] == 7).count();
+        assert!(hits > 270, "hits={hits}");
+    }
+}

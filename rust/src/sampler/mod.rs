@@ -1,0 +1,157 @@
+//! Dynamic data selection — the paper's contribution (ES/ESWP) plus every
+//! baseline it compares against (Tab. 1).
+//!
+//! The trainer drives samplers through one trait with four hooks:
+//!
+//! 1. `on_epoch_start` — *set-level* selection: return the kept dataset
+//!    indices for this epoch (pruning methods shrink the set; batch-level
+//!    methods return everything).
+//! 2. `needs_meta_losses` — whether this epoch's steps require a scoring
+//!    forward pass over the meta-batch (batch-level methods only; this is
+//!    the "extra FP" of the paper's §3.3 cost analysis).
+//! 3. `observe_meta` / `observe_train` — fresh per-sample losses, either
+//!    from the scoring FP (meta) or as a free byproduct of the training
+//!    step (train). ES updates its Eq. 3.1 state from both, so the
+//!    annealing epochs double as weight warm-up exactly as in Alg. 1.
+//! 4. `select` — *batch-level* selection of the BP mini-batch from the
+//!    meta-batch, with per-sample gradient weights (InfoBatch's rescale).
+
+pub mod analysis;
+pub mod annealing;
+pub mod evolved;
+pub mod infobatch;
+pub mod kakurenbo;
+pub mod loss_based;
+pub mod ordered;
+pub mod ucb;
+pub mod uniform;
+pub mod weights;
+
+use crate::config::SamplerConfig;
+use crate::util::Pcg64;
+
+/// The mini-batch chosen for the backward pass.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Selection {
+    /// Dataset indices to run BP on (subset or all of the meta-batch).
+    pub indices: Vec<u32>,
+    /// Per-sample gradient weights (all 1.0 unless the method rescales).
+    pub weights: Vec<f32>,
+}
+
+impl Selection {
+    pub fn unweighted(indices: Vec<u32>) -> Self {
+        let weights = vec![1.0; indices.len()];
+        Selection { indices, weights }
+    }
+}
+
+/// One dynamic sampling method. See module docs for the call protocol.
+pub trait Sampler: Send {
+    fn name(&self) -> &'static str;
+
+    /// Set-level selection at epoch start; returns kept dataset indices.
+    fn on_epoch_start(&mut self, _epoch: usize, _rng: &mut Pcg64) -> Vec<u32> {
+        (0..self.n() as u32).collect()
+    }
+
+    /// Does this epoch's step loop need a scoring FP over meta-batches?
+    fn needs_meta_losses(&self, _epoch: usize) -> bool {
+        false
+    }
+
+    /// Fresh losses from the scoring FP on a meta-batch.
+    fn observe_meta(&mut self, _indices: &[u32], _losses: &[f32], _epoch: usize) {}
+
+    /// Fresh losses from the training step itself (free, no extra FP).
+    fn observe_train(&mut self, _indices: &[u32], _losses: &[f32], _epoch: usize) {}
+
+    /// Batch-level selection of `mini` samples from the meta-batch.
+    /// Default: train on the whole meta-batch, unweighted.
+    fn select(&mut self, meta: &[u32], _mini: usize, _epoch: usize, _rng: &mut Pcg64) -> Selection {
+        Selection::unweighted(meta.to_vec())
+    }
+
+    /// Dataset size this sampler was built for.
+    fn n(&self) -> usize;
+}
+
+/// Instantiate a sampler from config for a dataset of `n` samples trained
+/// for `epochs` epochs.
+pub fn build(cfg: &SamplerConfig, n: usize, epochs: usize) -> Box<dyn Sampler> {
+    match cfg {
+        SamplerConfig::Uniform => Box::new(uniform::Uniform::new(n)),
+        SamplerConfig::Loss => Box::new(loss_based::LossSampler::new(n)),
+        SamplerConfig::Ordered => Box::new(ordered::OrderedSgd::new(n)),
+        SamplerConfig::Es { beta1, beta2, anneal_frac } => Box::new(evolved::Evolved::new(
+            n,
+            epochs,
+            *beta1,
+            *beta2,
+            *anneal_frac,
+            0.0,
+        )),
+        SamplerConfig::Eswp { beta1, beta2, anneal_frac, prune_ratio } => Box::new(
+            evolved::Evolved::new(n, epochs, *beta1, *beta2, *anneal_frac, *prune_ratio),
+        ),
+        SamplerConfig::InfoBatch { prune_ratio, anneal_frac } => {
+            Box::new(infobatch::InfoBatch::new(n, epochs, *prune_ratio, *anneal_frac))
+        }
+        SamplerConfig::Kakurenbo { prune_ratio, conf_threshold } => {
+            Box::new(kakurenbo::Kakurenbo::new(n, *prune_ratio, *conf_threshold))
+        }
+        SamplerConfig::Ucb { prune_ratio, decay, c } => {
+            Box::new(ucb::Ucb::new(n, *prune_ratio, *decay, *c))
+        }
+        SamplerConfig::RandomPrune { prune_ratio } => {
+            Box::new(uniform::RandomPrune::new(n, *prune_ratio))
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    Baseline,
+    BatchLevel,
+    SetLevel,
+    Both,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SamplerConfig as SC;
+
+    #[test]
+    fn build_constructs_every_method() {
+        let cfgs = [
+            SC::Uniform,
+            SC::Loss,
+            SC::Ordered,
+            SC::es_default(),
+            SC::eswp_default(),
+            SC::infobatch_default(),
+            SC::kakurenbo_default(),
+            SC::ucb_default(),
+            SC::RandomPrune { prune_ratio: 0.2 },
+        ];
+        for cfg in cfgs {
+            let s = build(&cfg, 100, 10);
+            assert_eq!(s.n(), 100);
+            assert_eq!(s.name(), cfg.name());
+        }
+    }
+
+    #[test]
+    fn default_epoch_start_keeps_everything() {
+        let mut s = build(&SC::Uniform, 50, 10);
+        let kept = s.on_epoch_start(0, &mut Pcg64::new(0));
+        assert_eq!(kept, (0..50).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn selection_unweighted_has_unit_weights() {
+        let sel = Selection::unweighted(vec![3, 1]);
+        assert_eq!(sel.weights, vec![1.0, 1.0]);
+    }
+}

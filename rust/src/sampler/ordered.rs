@@ -1,0 +1,83 @@
+//! Ordered SGD (Kawaguchi & Lu 2020): deterministic top-q batch-level
+//! selection — take the `mini` highest-loss samples of each meta-batch.
+//! The paper treats this as the deterministic limit of loss-weighted
+//! sampling (a realization of Kumar et al. 2023's g(·) re-weighting).
+
+use super::{Sampler, Selection};
+use crate::util::math;
+use crate::util::Pcg64;
+
+pub struct OrderedSgd {
+    last: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+impl OrderedSgd {
+    pub fn new(n: usize) -> Self {
+        OrderedSgd { last: vec![1.0 / n as f32; n], scratch: Vec::new() }
+    }
+}
+
+impl Sampler for OrderedSgd {
+    fn name(&self) -> &'static str {
+        "order"
+    }
+
+    fn n(&self) -> usize {
+        self.last.len()
+    }
+
+    fn needs_meta_losses(&self, _epoch: usize) -> bool {
+        true
+    }
+
+    fn observe_meta(&mut self, indices: &[u32], losses: &[f32], _epoch: usize) {
+        for (&i, &l) in indices.iter().zip(losses) {
+            self.last[i as usize] = l;
+        }
+    }
+
+    fn select(&mut self, meta: &[u32], mini: usize, _epoch: usize, _rng: &mut Pcg64) -> Selection {
+        if mini >= meta.len() {
+            return Selection::unweighted(meta.to_vec());
+        }
+        self.scratch.clear();
+        self.scratch.extend(meta.iter().map(|&i| self.last[i as usize]));
+        let top = math::top_k_indices(&self.scratch, mini);
+        Selection::unweighted(top.into_iter().map(|p| meta[p as usize]).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_exact_top_q() {
+        let mut s = OrderedSgd::new(8);
+        let idx: Vec<u32> = (0..8).collect();
+        let losses = [0.1, 5.0, 0.2, 4.0, 0.3, 3.0, 0.4, 0.5];
+        s.observe_meta(&idx, &losses, 0);
+        let sel = s.select(&idx, 3, 0, &mut Pcg64::new(0));
+        let mut got = sel.indices.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn deterministic_across_rng_states() {
+        let mut s = OrderedSgd::new(8);
+        let idx: Vec<u32> = (0..8).collect();
+        s.observe_meta(&idx, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], 0);
+        let a = s.select(&idx, 2, 0, &mut Pcg64::new(1)).indices;
+        let b = s.select(&idx, 2, 0, &mut Pcg64::new(999)).indices;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn full_mini_returns_meta() {
+        let mut s = OrderedSgd::new(4);
+        let idx: Vec<u32> = (0..4).collect();
+        assert_eq!(s.select(&idx, 4, 0, &mut Pcg64::new(0)).indices, idx);
+    }
+}

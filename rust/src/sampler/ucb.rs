@@ -1,0 +1,142 @@
+//! UCB dynamic data pruning (Raju et al. 2021): treat sample selection as
+//! a multi-armed bandit. Each sample keeps an exponentially-decayed loss
+//! estimate; the epoch keeps the top (1−r)·n samples by upper confidence
+//! bound  ucb_i = ema_i + c·sqrt(ln(t) / n_i), where n_i counts how often
+//! the sample was trained on — unseen/rarely-seen samples get wide bounds
+//! and are explored.
+
+use super::{Sampler, Selection};
+use crate::util::math;
+use crate::util::Pcg64;
+
+pub struct Ucb {
+    prune_ratio: f64,
+    decay: f32,
+    c: f32,
+    ema: Vec<f32>,
+    seen: Vec<u32>,
+    t: u64,
+}
+
+impl Ucb {
+    pub fn new(n: usize, prune_ratio: f64, decay: f32, c: f32) -> Self {
+        assert!((0.0..1.0).contains(&prune_ratio));
+        Ucb {
+            prune_ratio,
+            decay,
+            c,
+            ema: vec![0.0; n],
+            seen: vec![0; n],
+            t: 1,
+        }
+    }
+
+    fn ucb_score(&self, i: usize) -> f32 {
+        let n_i = self.seen[i].max(1) as f32;
+        let bonus = self.c * ((self.t as f32).ln().max(0.0) / n_i).sqrt();
+        // Unseen samples get the maximum exploration bonus on top of a
+        // neutral estimate.
+        let base = if self.seen[i] == 0 { f32::MAX / 4.0 } else { self.ema[i] };
+        base + bonus
+    }
+}
+
+impl Sampler for Ucb {
+    fn name(&self) -> &'static str {
+        "ucb"
+    }
+
+    fn n(&self) -> usize {
+        self.ema.len()
+    }
+
+    fn on_epoch_start(&mut self, epoch: usize, _rng: &mut Pcg64) -> Vec<u32> {
+        let n = self.n();
+        if epoch == 0 {
+            return (0..n as u32).collect();
+        }
+        let keep = ((1.0 - self.prune_ratio) * n as f64).ceil() as usize;
+        let scores: Vec<f32> = (0..n).map(|i| self.ucb_score(i)).collect();
+        let mut kept = math::top_k_indices(&scores, keep.max(1));
+        kept.sort_unstable();
+        kept
+    }
+
+    fn observe_train(&mut self, indices: &[u32], losses: &[f32], _epoch: usize) {
+        for (&i, &l) in indices.iter().zip(losses) {
+            let i = i as usize;
+            self.ema[i] = if self.seen[i] == 0 {
+                l
+            } else {
+                math::ema(self.ema[i], l, self.decay)
+            };
+            self.seen[i] += 1;
+        }
+        self.t += indices.len() as u64;
+    }
+
+    fn select(&mut self, meta: &[u32], _mini: usize, _epoch: usize, _rng: &mut Pcg64) -> Selection {
+        Selection::unweighted(meta.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_ratio() {
+        let mut u = Ucb::new(100, 0.3, 0.8, 1.0);
+        let idx: Vec<u32> = (0..100).collect();
+        u.observe_train(&idx, &vec![1.0; 100], 0);
+        let kept = u.on_epoch_start(1, &mut Pcg64::new(0));
+        assert_eq!(kept.len(), 70);
+    }
+
+    #[test]
+    fn high_loss_samples_survive() {
+        let mut u = Ucb::new(10, 0.5, 0.8, 0.01);
+        let idx: Vec<u32> = (0..10).collect();
+        let losses: Vec<f32> = (0..10).map(|i| if i < 5 { 10.0 } else { 0.01 }).collect();
+        for _ in 0..3 {
+            u.observe_train(&idx, &losses, 0);
+        }
+        let kept = u.on_epoch_start(1, &mut Pcg64::new(0));
+        for i in 0..5u32 {
+            assert!(kept.contains(&i), "{i} has high loss, must be kept");
+        }
+    }
+
+    #[test]
+    fn unseen_samples_are_explored() {
+        let mut u = Ucb::new(10, 0.5, 0.8, 1.0);
+        // Only samples 0..5 observed, with high loss.
+        let idx: Vec<u32> = (0..5).collect();
+        u.observe_train(&idx, &vec![5.0; 5], 0);
+        let kept = u.on_epoch_start(1, &mut Pcg64::new(0));
+        // The 5 unseen samples have max exploration score: all kept.
+        for i in 5..10u32 {
+            assert!(kept.contains(&i), "unseen {i} must be explored");
+        }
+    }
+
+    #[test]
+    fn confidence_bonus_shrinks_with_visits() {
+        let mut u = Ucb::new(2, 0.5, 0.8, 1.0);
+        u.observe_train(&[0], &[1.0], 0);
+        for _ in 0..50 {
+            u.observe_train(&[1], &[1.0], 0);
+        }
+        assert!(u.ucb_score(0) > u.ucb_score(1), "fewer visits => wider bound");
+    }
+
+    #[test]
+    fn ema_decays_toward_recent() {
+        let mut u = Ucb::new(1, 0.3, 0.8, 1.0);
+        u.observe_train(&[0], &[10.0], 0);
+        for _ in 0..30 {
+            u.observe_train(&[0], &[0.0], 0);
+        }
+        assert!(u.ema[0] < 0.1, "ema={}", u.ema[0]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Baseline samplers: standard batched sampling (no selection) and purely
+//! random set-level pruning (the Tab. 7 "Random" ablation).
+
+use super::{Sampler, Selection};
+use crate::util::Pcg64;
+
+/// Standard batched sampling — the paper's Baseline. No selection at all:
+/// every meta-batch trains in full.
+pub struct Uniform {
+    n: usize,
+}
+
+impl Uniform {
+    pub fn new(n: usize) -> Self {
+        Uniform { n }
+    }
+}
+
+impl Sampler for Uniform {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn select(&mut self, meta: &[u32], _mini: usize, _epoch: usize, _rng: &mut Pcg64) -> Selection {
+        Selection::unweighted(meta.to_vec())
+    }
+}
+
+/// Random set-level pruning: keep a uniform (1−r)·n subset each epoch,
+/// ignoring all loss information. The Tab. 7 control showing that ESWP's
+/// gains come from *informed* pruning.
+pub struct RandomPrune {
+    n: usize,
+    prune_ratio: f64,
+}
+
+impl RandomPrune {
+    pub fn new(n: usize, prune_ratio: f64) -> Self {
+        assert!((0.0..1.0).contains(&prune_ratio));
+        RandomPrune { n, prune_ratio }
+    }
+}
+
+impl Sampler for RandomPrune {
+    fn name(&self) -> &'static str {
+        "random_prune"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn on_epoch_start(&mut self, _epoch: usize, rng: &mut Pcg64) -> Vec<u32> {
+        let keep = ((1.0 - self.prune_ratio) * self.n as f64).ceil() as usize;
+        let mut kept = rng.choose_k(self.n, keep.max(1));
+        kept.sort_unstable();
+        kept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_trains_whole_meta() {
+        let mut u = Uniform::new(10);
+        let meta = vec![1u32, 5, 9];
+        let sel = u.select(&meta, 1, 0, &mut Pcg64::new(0));
+        assert_eq!(sel.indices, meta);
+        assert!(!u.needs_meta_losses(0));
+    }
+
+    #[test]
+    fn random_prune_keeps_ratio_uniformly() {
+        let mut rp = RandomPrune::new(200, 0.25);
+        let mut rng = Pcg64::new(1);
+        let mut counts = vec![0u32; 200];
+        for _ in 0..400 {
+            let kept = rp.on_epoch_start(0, &mut rng);
+            assert_eq!(kept.len(), 150);
+            for i in kept {
+                counts[i as usize] += 1;
+            }
+        }
+        // Every sample kept ~75% of the time.
+        for (i, &c) in counts.iter().enumerate() {
+            let p = c as f64 / 400.0;
+            assert!((p - 0.75).abs() < 0.09, "idx {i}: p={p}");
+        }
+    }
+
+    #[test]
+    fn random_prune_varies_across_epochs() {
+        let mut rp = RandomPrune::new(50, 0.5);
+        let mut rng = Pcg64::new(2);
+        let a = rp.on_epoch_start(0, &mut rng);
+        let b = rp.on_epoch_start(1, &mut rng);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,173 @@
+//! Weighted sampling without replacement — the numerical workhorse behind
+//! both batch-level selection (b from B, probability ∝ w) and set-level
+//! pruning (keep (1−r)·n, probability ∝ w).
+//!
+//! Implementation: Gumbel top-k (equivalent to Efraimidis–Spirakis A-Res):
+//! key_i = ln(w_i) + Gumbel_i; the k largest keys are a without-replacement
+//! sample from the normalized weight distribution. Selection uses
+//! `select_nth_unstable` for O(n) average time — this is the sampler's
+//! hot path (called every training step).
+//!
+//! Degenerate weights (zero/negative/NaN) are floored to a tiny positive
+//! value rather than excluded: the paper's Remark 1 keeps low-weight
+//! samples reachable to reduce bias, and a sampler must never stall on a
+//! degenerate score table.
+
+use crate::util::Pcg64;
+
+const FLOOR: f64 = 1e-30;
+
+#[inline]
+fn key(w: f32, rng: &mut Pcg64) -> f64 {
+    let w = if w.is_finite() && w > 0.0 { w as f64 } else { FLOOR };
+    w.max(FLOOR).ln() + rng.gumbel()
+}
+
+/// Sample `k` distinct positions from `0..weights.len()` with probability
+/// proportional to `weights` (without replacement).
+pub fn sample_without_replacement(weights: &[f32], k: usize, rng: &mut Pcg64) -> Vec<u32> {
+    let n = weights.len();
+    assert!(k <= n, "k={k} > n={n}");
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == n {
+        return (0..n as u32).collect();
+    }
+    let mut keyed: Vec<(f64, u32)> =
+        weights.iter().enumerate().map(|(i, &w)| (key(w, rng), i as u32)).collect();
+    // Partition so the k largest keys land in the front, then sort just
+    // that prefix for determinism of the output order.
+    keyed.select_nth_unstable_by(k - 1, |a, b| b.0.total_cmp(&a.0));
+    keyed.truncate(k);
+    keyed.sort_unstable_by(|a, b| b.0.total_cmp(&a.0));
+    keyed.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Set-level pruning: keep `keep_n` of `n` dataset indices, probability
+/// proportional to the global weight table. Returns sorted indices.
+pub fn prune_keep(weights: &[f32], keep_n: usize, rng: &mut Pcg64) -> Vec<u32> {
+    let mut kept = sample_without_replacement(weights, keep_n.min(weights.len()), rng);
+    kept.sort_unstable();
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn returns_k_distinct_indices() {
+        let mut rng = Pcg64::new(1);
+        let w = vec![1.0f32; 100];
+        for k in [0, 1, 10, 99, 100] {
+            let s = sample_without_replacement(&w, k, &mut rng);
+            assert_eq!(s.len(), k);
+            let mut d = s.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), k);
+        }
+    }
+
+    #[test]
+    fn heavy_weight_dominates() {
+        // One sample with 100x weight should appear in a k=1 draw ~91% of
+        // the time with 10 others at weight 1 (100/110).
+        let mut rng = Pcg64::new(2);
+        let mut w = vec![1.0f32; 11];
+        w[5] = 100.0;
+        let trials = 5000;
+        let hits = (0..trials)
+            .filter(|_| sample_without_replacement(&w, 1, &mut rng)[0] == 5)
+            .count();
+        let p = hits as f64 / trials as f64;
+        assert!((p - 100.0 / 110.0).abs() < 0.03, "p={p}");
+    }
+
+    #[test]
+    fn matches_expected_inclusion_probability() {
+        // For k=2 of [2, 1, 1]: P(include idx0) = 2/4 + (1/4)(2/3) + (1/4)(2/3) = 5/6.
+        let mut rng = Pcg64::new(3);
+        let w = [2.0f32, 1.0, 1.0];
+        let trials = 20_000;
+        let hits = (0..trials)
+            .filter(|_| sample_without_replacement(&w, 2, &mut rng).contains(&0))
+            .count();
+        let p = hits as f64 / trials as f64;
+        assert!((p - 5.0 / 6.0).abs() < 0.015, "p={p}");
+    }
+
+    #[test]
+    fn zero_and_nan_weights_still_sampleable() {
+        let mut rng = Pcg64::new(4);
+        let w = [0.0f32, f32::NAN, -3.0, 0.0];
+        // k == n: everything must be returned without panicking.
+        let all = sample_without_replacement(&w, 4, &mut rng);
+        assert_eq!(all.len(), 4);
+        // k < n: draws still succeed.
+        let one = sample_without_replacement(&w, 2, &mut rng);
+        assert_eq!(one.len(), 2);
+    }
+
+    #[test]
+    fn extreme_spread_prefers_large() {
+        let mut rng = Pcg64::new(5);
+        let w = [1e-20f32, 1e20];
+        let hits = (0..1000)
+            .filter(|_| sample_without_replacement(&w, 1, &mut rng)[0] == 1)
+            .count();
+        assert!(hits > 990, "hits={hits}");
+    }
+
+    #[test]
+    fn prune_keep_sorted_and_sized() {
+        let mut rng = Pcg64::new(6);
+        let w = vec![1.0f32; 50];
+        let kept = prune_keep(&w, 30, &mut rng);
+        assert_eq!(kept.len(), 30);
+        assert!(kept.windows(2).all(|p| p[0] < p[1]));
+    }
+
+    #[test]
+    fn prop_distinct_and_in_range() {
+        check("swor distinct+range", 150, |g| {
+            let n = g.usize_in(1, 200);
+            let k = g.usize_in(0, n);
+            let w = g.weights(n);
+            let s = sample_without_replacement(&w, k, g.rng());
+            prop_assert!(s.len() == k, "len {} != {k}", s.len());
+            let mut d = s.clone();
+            d.sort_unstable();
+            for win in d.windows(2) {
+                prop_assert!(win[0] != win[1], "duplicate {}", win[0]);
+            }
+            for &i in &s {
+                prop_assert!((i as usize) < n, "oob {i}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_uniform_weights_are_unbiased() {
+        // Under equal weights, inclusion frequency must be ~k/n for all i.
+        let mut rng = Pcg64::new(7);
+        let n = 20;
+        let k = 5;
+        let w = vec![1.0f32; n];
+        let mut counts = vec![0u32; n];
+        let trials = 20_000;
+        for _ in 0..trials {
+            for i in sample_without_replacement(&w, k, &mut rng) {
+                counts[i as usize] += 1;
+            }
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let p = c as f64 / trials as f64;
+            assert!((p - 0.25).abs() < 0.02, "idx {i}: p={p}");
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Criterion-lite benchmark harness (criterion is not available offline).
+//!
+//! Used by every `benches/*.rs` target (all declared `harness = false`).
+//! Methodology mirrors criterion's core loop: warmup, then timed batches
+//! until a time budget or iteration cap is reached; report median and MAD
+//! (median absolute deviation) which are robust to scheduler noise.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mad: Duration,
+    pub total: Duration,
+}
+
+impl BenchResult {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10.3} ms/iter  (±{:.3} ms, {} iters)",
+            self.name,
+            self.median.as_secs_f64() * 1e3,
+            self.mad.as_secs_f64() * 1e3,
+            self.iters
+        )
+    }
+}
+
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(300),
+            max_iters: 1_000,
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Time `f` repeatedly; `f` should perform ONE unit of work and return
+    /// a value that is passed to `std::hint::black_box`.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Timed samples.
+        let mut samples: Vec<Duration> = Vec::new();
+        let t0 = Instant::now();
+        let mut iters = 0u64;
+        while t0.elapsed() < self.budget && iters < self.max_iters {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples.push(s.elapsed());
+            iters += 1;
+        }
+        samples.sort_unstable();
+        let median = samples[samples.len() / 2];
+        let mut dev: Vec<i128> = samples
+            .iter()
+            .map(|&s| (s.as_nanos() as i128 - median.as_nanos() as i128).abs())
+            .collect();
+        dev.sort_unstable();
+        let mad = Duration::from_nanos(dev[dev.len() / 2] as u64);
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            median,
+            mad,
+            total: t0.elapsed(),
+        };
+        println!("{res}");
+        res
+    }
+}
+
+/// True when the benches should run their scaled-down "smoke" variant
+/// (default). Set `EVOSAMPLE_BENCH_FULL=1` for paper-scale runs.
+pub fn smoke_mode() -> bool {
+    std::env::var("EVOSAMPLE_BENCH_FULL").map(|v| v != "1").unwrap_or(true)
+}
+
+/// Print a markdown-ish table header used by the experiment benches.
+pub fn table_header(title: &str, cols: &[&str]) {
+    println!("\n== {title} ==");
+    println!("{}", cols.join(" | "));
+    println!("{}", cols.iter().map(|c| "-".repeat(c.len())).collect::<Vec<_>>().join("-|-"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let b = Bencher::quick();
+        let r = b.run("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters > 0);
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.median < Duration::from_millis(10));
+    }
+
+    #[test]
+    fn smoke_mode_defaults_true() {
+        // Unless the caller exported EVOSAMPLE_BENCH_FULL=1, smoke mode is on.
+        if std::env::var("EVOSAMPLE_BENCH_FULL").is_err() {
+            assert!(smoke_mode());
+        }
+    }
+}

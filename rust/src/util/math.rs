@@ -1,0 +1,170 @@
+//! Small numeric helpers shared across the coordinator.
+
+/// Numerically-stable softmax over a slice (in place not required).
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let m = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|&x| (x - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / z).collect()
+}
+
+/// Normalize non-negative weights into a probability vector. All-zero or
+/// non-finite inputs degrade to uniform — the sampler must never stall on
+/// a degenerate score table.
+pub fn normalize_probs(ws: &[f32]) -> Vec<f32> {
+    let n = ws.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut clean: Vec<f32> = ws.iter().map(|&w| if w.is_finite() && w > 0.0 { w } else { 0.0 }).collect();
+    let z: f64 = clean.iter().map(|&w| w as f64).sum();
+    if z <= 0.0 {
+        return vec![1.0 / n as f32; n];
+    }
+    for w in &mut clean {
+        *w = (*w as f64 / z) as f32;
+    }
+    clean
+}
+
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mu = mean(xs);
+    xs.iter().map(|&x| (x as f64 - mu).powi(2)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn stddev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// p-th percentile (0..=100) by sorting a copy; p interpolated linearly.
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    assert!((0.0..=100.0).contains(&p));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let pos = p / 100.0 * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = (pos - lo as f64) as f32;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Median via `percentile(50)`.
+pub fn median(xs: &[f32]) -> f32 {
+    percentile(xs, 50.0)
+}
+
+/// Indices of the k largest values (descending). Deterministic: ties break
+/// toward the lower index, which keeps runs reproducible across platforms.
+pub fn top_k_indices(xs: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(xs.len());
+    let mut idx: Vec<u32> = (0..xs.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b as usize]
+            .total_cmp(&xs[a as usize])
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// argsort ascending, stable on ties.
+pub fn argsort(xs: &[f32]) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..xs.len() as u32).collect();
+    idx.sort_by(|&a, &b| xs[a as usize].total_cmp(&xs[b as usize]).then(a.cmp(&b)));
+    idx
+}
+
+/// Exponential moving average update: `ema = beta*ema + (1-beta)*x`.
+#[inline]
+pub fn ema(prev: f32, x: f32, beta: f32) -> f32 {
+    beta * prev + (1.0 - beta) * x
+}
+
+/// Linear interpolation.
+#[inline]
+pub fn lerp(a: f64, b: f64, t: f64) -> f64 {
+    a + (b - a) * t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        let s: f32 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_stable_on_large_inputs() {
+        let p = softmax(&[1000.0, 1000.0]);
+        assert!((p[0] - 0.5).abs() < 1e-6);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn normalize_handles_zeros_and_nans() {
+        let p = normalize_probs(&[0.0, 0.0]);
+        assert_eq!(p, vec![0.5, 0.5]);
+        let p = normalize_probs(&[f32::NAN, 1.0]);
+        assert!((p[1] - 1.0).abs() < 1e-6 && p[0] == 0.0);
+        let p = normalize_probs(&[2.0, 2.0, 4.0]);
+        assert!((p[2] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_median() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn top_k_descending_and_tie_stable() {
+        let xs = [1.0, 5.0, 5.0, 0.0];
+        assert_eq!(top_k_indices(&xs, 2), vec![1, 2]);
+        assert_eq!(top_k_indices(&xs, 10).len(), 4);
+    }
+
+    #[test]
+    fn argsort_ascending() {
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(argsort(&xs), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn variance_of_constant_is_zero() {
+        assert_eq!(variance(&[2.0, 2.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn mean_and_var_simple() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-9);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-6);
+    }
+}

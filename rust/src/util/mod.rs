@@ -1,0 +1,12 @@
+//! Foundation substrates built from scratch (no external crates offline):
+//! RNG, math helpers, JSON, property-testing, benchmarking, timing, logs.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod math;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Pcg64;

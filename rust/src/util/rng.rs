@@ -1,0 +1,292 @@
+//! Deterministic, seedable RNG (PCG64 DXSM) + sampling distributions.
+//!
+//! No external RNG crates are available offline, so the coordinator ships
+//! its own generator. PCG64-DXSM is the numpy default generator family:
+//! 128-bit LCG state with a double-xor-shift-multiply output permutation —
+//! small, fast, and statistically solid for simulation workloads.
+//!
+//! Everything downstream (dataset synthesis, shuffling, weighted sampling,
+//! trial seeds) flows from this type, which is what makes whole training
+//! runs bit-reproducible from a single seed.
+
+/// PCG64 DXSM generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0xda94_2042_e4dd_58b5;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream id fixed).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xa02b_df4a_57e8_5a5a)
+    }
+
+    /// Create a generator with an explicit stream (used to give each
+    /// worker in the distributed simulation an independent sequence).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Self { state: (seed as u128).wrapping_add(inc), inc };
+        // Burn a few outputs so low-entropy seeds decorrelate.
+        for _ in 0..4 {
+            rng.next_u64();
+        }
+        rng
+    }
+
+    /// Derive a child generator; deterministic function of (self, tag).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        let s = self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        Pcg64::with_stream(s, tag | 1)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // DXSM output permutation over the pre-advance state.
+        let state = self.state;
+        self.state = state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let mut hi = (state >> 64) as u64;
+        let lo = (state as u64) | 1;
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(PCG_MULT as u64);
+        hi ^= hi >> 48;
+        hi.wrapping_mul(lo)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let l = m as u64;
+            if l >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi).
+    #[inline]
+    pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi > lo);
+        lo + self.below((hi - lo) as u64) as i64
+    }
+
+    /// Standard normal via Box–Muller (cached second draw omitted to keep
+    /// the generator state a pure function of the draw count).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Gumbel(0, 1) draw — the key ingredient of top-k weighted sampling.
+    pub fn gumbel(&mut self) -> f64 {
+        let u = self.f64().max(1e-300);
+        -(-u.ln()).ln()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        self.shuffle(&mut idx);
+        idx
+    }
+
+    /// Sample k distinct indices uniformly from 0..n (partial Fisher–Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<u32> {
+        assert!(k <= n, "choose_k: k={k} > n={n}");
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        for i in 0..k {
+            let j = i + self.below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Zipf-ish draw over [0, n): rank r with probability ∝ 1/(r+1)^a.
+    /// Uses inverse-CDF over a precomputed table-free approximation
+    /// (rejection sampling per Devroye).
+    pub fn zipf(&mut self, n: usize, a: f64) -> usize {
+        debug_assert!(a > 0.0);
+        if a == 1.0 {
+            // Harmonic special case via inverse CDF approximation.
+            let h = (n as f64).ln() + 0.5772;
+            let target = self.f64() * h;
+            return ((target.exp() - 1.0).max(0.0) as usize).min(n - 1);
+        }
+        let b = 1.0 - a;
+        loop {
+            let u = self.f64();
+            // Inverse CDF of density ∝ x^{-a} on [1, n+1); rank = floor(x)-1.
+            let x = (u * (((n + 1) as f64).powf(b) - 1.0) + 1.0).powf(1.0 / b);
+            let k = (x as usize).saturating_sub(1);
+            if k < n {
+                return k;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn forked_streams_decorrelate() {
+        let mut root = Pcg64::new(7);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut rng = Pcg64::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Pcg64::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = rng.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(13);
+        let n = 200_000;
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let var = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn gumbel_mean_is_euler_gamma() {
+        let mut rng = Pcg64::new(17);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| rng.gumbel()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5772).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(19);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut rng = Pcg64::new(23);
+        for _ in 0..50 {
+            let k = rng.below(64) as usize + 1;
+            let picked = rng.choose_k(64, k);
+            let mut s = picked.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), k);
+        }
+    }
+
+    #[test]
+    fn choose_k_uniformity() {
+        // Each of n=8 indices should appear in a k=4 draw about half the time.
+        let mut rng = Pcg64::new(29);
+        let mut counts = [0u32; 8];
+        let trials = 20_000;
+        for _ in 0..trials {
+            for i in rng.choose_k(8, 4) {
+                counts[i as usize] += 1;
+            }
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let p = c as f64 / trials as f64;
+            assert!((p - 0.5).abs() < 0.02, "idx {i}: p={p}");
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let mut rng = Pcg64::new(31);
+        let mut counts = vec![0u32; 50];
+        for _ in 0..20_000 {
+            let k = rng.zipf(50, 1.2);
+            assert!(k < 50);
+            counts[k] += 1;
+        }
+        assert!(counts[0] > counts[10] && counts[10] > counts[40]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Section timers: accumulate wall-clock per labeled phase of training.
+//!
+//! The paper's headline metric is *saved wall-clock time*, which requires
+//! attributing every second of a run to forward-pass scoring (FP), backward
+//! training steps (BP), selection overhead, or data movement. `PhaseTimers`
+//! is that ledger; `coordinator::accounting` turns it into the paper's
+//! "Time ↓" percentages.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Well-known phase labels (free-form labels also allowed).
+pub mod phase {
+    pub const SCORING_FP: &str = "scoring_fp";
+    pub const TRAIN_BP: &str = "train_bp";
+    pub const SELECT: &str = "select";
+    pub const DATA: &str = "data";
+    pub const EVAL: &str = "eval";
+    pub const PRUNE: &str = "prune";
+}
+
+#[derive(Default, Clone, Debug)]
+pub struct PhaseTimers {
+    acc: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `label`.
+    pub fn time<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(label, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, label: &str, d: Duration) {
+        *self.acc.entry(label.to_string()).or_default() += d;
+        *self.counts.entry(label.to_string()).or_default() += 1;
+    }
+
+    pub fn get(&self, label: &str) -> Duration {
+        self.acc.get(label).copied().unwrap_or_default()
+    }
+
+    pub fn count(&self, label: &str) -> u64 {
+        self.counts.get(label).copied().unwrap_or_default()
+    }
+
+    /// Total across all phases.
+    pub fn total(&self) -> Duration {
+        self.acc.values().sum()
+    }
+
+    /// Merge another ledger into this one (distributed-sim reduction).
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        for (k, v) in &other.acc {
+            *self.acc.entry(k.clone()).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += *v;
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        let total = self.total().as_secs_f64().max(1e-12);
+        let mut parts: Vec<String> = self
+            .acc
+            .iter()
+            .map(|(k, v)| {
+                format!("{k}={:.2}s ({:.0}%)", v.as_secs_f64(), 100.0 * v.as_secs_f64() / total)
+            })
+            .collect();
+        parts.push(format!("total={total:.2}s"));
+        parts.join(" ")
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, Duration)> {
+        self.acc.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_counts() {
+        let mut t = PhaseTimers::new();
+        t.add("a", Duration::from_millis(10));
+        t.add("a", Duration::from_millis(20));
+        t.add("b", Duration::from_millis(5));
+        assert_eq!(t.get("a"), Duration::from_millis(30));
+        assert_eq!(t.count("a"), 2);
+        assert_eq!(t.total(), Duration::from_millis(35));
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = PhaseTimers::new();
+        let x = t.time("work", || 42);
+        assert_eq!(x, 42);
+        assert!(t.get("work") > Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_sums_ledgers() {
+        let mut a = PhaseTimers::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = PhaseTimers::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.get("x"), Duration::from_millis(3));
+        assert_eq!(a.get("y"), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn summary_mentions_phases() {
+        let mut t = PhaseTimers::new();
+        t.add(phase::TRAIN_BP, Duration::from_millis(90));
+        t.add(phase::SCORING_FP, Duration::from_millis(10));
+        let s = t.summary();
+        assert!(s.contains("train_bp") && s.contains("scoring_fp"));
+    }
+}

@@ -1,0 +1,242 @@
+//! Integration tests: the full coordinator stack on the pure-rust
+//! NativeRuntime (no artifacts needed). These pin the paper-level
+//! *behavioral* claims at miniature scale: ES reduces BP samples without
+//! hurting accuracy, ESWP prunes, samplers find hard samples, gradient
+//! accumulation counts BP passes correctly, and runs are deterministic.
+
+use evosample::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
+use evosample::coordinator::{predicted_saved_time_pct, train};
+use evosample::data;
+use evosample::runtime::native::NativeRuntime;
+use evosample::runtime::ModelRuntime;
+
+/// A small, learnable float-feature task + matching native runtime.
+fn setup(n: usize, classes: usize) -> (RunConfig, data::SplitDataset, NativeRuntime) {
+    let cfg_ds = DatasetConfig::SynthCifar {
+        n,
+        classes,
+        label_noise: 0.05,
+        hard_frac: 0.2,
+    };
+    let split = data::build(&cfg_ds, 256, 42);
+    let rt = NativeRuntime::new(split.train.x_len(), 32, classes);
+    let mut cfg = RunConfig::new("itest", "native", cfg_ds);
+    cfg.epochs = 6;
+    cfg.meta_batch = 64;
+    cfg.mini_batch = 16;
+    cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
+    cfg.test_n = 256;
+    (cfg, split, rt)
+}
+
+#[test]
+fn baseline_learns_the_synthetic_task() {
+    let (mut cfg, split, mut rt) = setup(512, 4);
+    cfg.sampler = SamplerConfig::Uniform;
+    let r = train(&cfg, &mut rt, &split).unwrap();
+    assert!(
+        r.final_eval.accuracy > 0.5,
+        "baseline acc {} should beat 4-class chance",
+        r.final_eval.accuracy
+    );
+    assert!(r.loss_curve.first().unwrap() > r.loss_curve.last().unwrap());
+}
+
+#[test]
+fn es_reduces_bp_samples_with_comparable_accuracy() {
+    let (mut cfg, split, mut rt) = setup(1024, 4);
+    cfg.sampler = SamplerConfig::Uniform;
+    let base = train(&cfg, &mut rt, &split).unwrap();
+
+    cfg.sampler = SamplerConfig::es_default();
+    let es = train(&cfg, &mut rt, &split).unwrap();
+
+    // Paper Tab. 1: ES uses b/B of the baseline's BP samples (modulo
+    // annealing epochs that run full batches).
+    assert!(
+        (es.cost.bp_samples as f64) < 0.6 * base.cost.bp_samples as f64,
+        "es bp={} base bp={}",
+        es.cost.bp_samples,
+        base.cost.bp_samples
+    );
+    // Scoring FPs appear only for ES.
+    assert_eq!(base.cost.fp_samples, 0);
+    assert!(es.cost.fp_samples > 0);
+    // Lossless-ish at miniature scale: within 12 points absolute.
+    assert!(
+        es.final_eval.accuracy > base.final_eval.accuracy - 0.12,
+        "es acc {} vs base {}",
+        es.final_eval.accuracy,
+        base.final_eval.accuracy
+    );
+    // The analytic model predicts meaningful savings at b/B=25%.
+    assert!(predicted_saved_time_pct(&base.cost, &es.cost) > 25.0);
+}
+
+#[test]
+fn eswp_prunes_and_saves_more_flops_than_es() {
+    let (mut cfg, split, mut rt) = setup(1024, 4);
+    cfg.sampler = SamplerConfig::es_default();
+    let es = train(&cfg, &mut rt, &split).unwrap();
+    cfg.sampler = SamplerConfig::eswp_default();
+    let eswp = train(&cfg, &mut rt, &split).unwrap();
+    assert!(
+        eswp.cost.total_flops() < es.cost.total_flops(),
+        "eswp {} !< es {}",
+        eswp.cost.total_flops(),
+        es.cost.total_flops()
+    );
+    assert!(eswp.steps < es.steps, "pruning must shorten epochs");
+}
+
+#[test]
+fn every_sampler_trains_end_to_end() {
+    let (mut cfg, split, mut rt) = setup(512, 4);
+    for sampler in [
+        SamplerConfig::Uniform,
+        SamplerConfig::Loss,
+        SamplerConfig::Ordered,
+        SamplerConfig::es_default(),
+        SamplerConfig::eswp_default(),
+        SamplerConfig::infobatch_default(),
+        SamplerConfig::kakurenbo_default(),
+        SamplerConfig::ucb_default(),
+        SamplerConfig::RandomPrune { prune_ratio: 0.2 },
+    ] {
+        cfg.sampler = sampler;
+        let r = train(&cfg, &mut rt, &split)
+            .unwrap_or_else(|e| panic!("{}: {e}", cfg.sampler.name()));
+        assert!(r.final_eval.accuracy > 0.3, "{} collapsed", r.sampler);
+        assert!(r.steps > 0);
+    }
+}
+
+#[test]
+fn training_is_deterministic_per_seed() {
+    let (mut cfg, split, mut rt) = setup(256, 4);
+    cfg.sampler = SamplerConfig::es_default();
+    let a = train(&cfg, &mut rt, &split).unwrap();
+    let b = train(&cfg, &mut rt, &split).unwrap();
+    assert_eq!(a.final_eval.accuracy, b.final_eval.accuracy);
+    assert_eq!(a.loss_curve, b.loss_curve);
+    assert_eq!(a.cost.bp_samples, b.cost.bp_samples);
+
+    cfg.seed = 99;
+    let c = train(&cfg, &mut rt, &split).unwrap();
+    assert_ne!(a.loss_curve, c.loss_curve, "different seed, different run");
+}
+
+#[test]
+fn grad_accum_counts_bp_passes() {
+    let (mut cfg, split, mut rt) = setup(256, 4);
+    cfg.sampler = SamplerConfig::Uniform;
+    cfg.meta_batch = 32;
+    cfg.mini_batch = 32;
+    cfg.micro_batch = 8;
+    let r = train(&cfg, &mut rt, &split).unwrap();
+    // Every step: 32 samples / 8 micro = 4 BP passes.
+    assert_eq!(r.cost.bp_passes, r.steps * 4);
+
+    // ESWP in the same low-resource setting: b=8 => 1 BP pass per step.
+    cfg.mini_batch = 8;
+    cfg.micro_batch = 8;
+    cfg.sampler = SamplerConfig::eswp_default();
+    let r2 = train(&cfg, &mut rt, &split).unwrap();
+    let active_passes = r2.cost.bp_passes;
+    // Annealed epochs still run 4 passes; active ones run 1. So strictly
+    // fewer than baseline's uniform 4/step.
+    assert!(active_passes < r2.steps * 4, "{active_passes} vs {}", r2.steps * 4);
+}
+
+#[test]
+fn distributed_simulation_matches_single_worker_statistically() {
+    let (mut cfg, split, mut rt) = setup(512, 4);
+    cfg.sampler = SamplerConfig::eswp_default();
+    cfg.workers = 4;
+    let r = train(&cfg, &mut rt, &split).unwrap();
+    assert!(r.final_eval.accuracy > 0.4, "dist acc {}", r.final_eval.accuracy);
+    // All kept samples still flow through training.
+    assert!(r.cost.bp_samples > 0);
+}
+
+#[test]
+fn es_concentrates_bp_on_hard_and_noisy_samples() {
+    // The mechanism test: after training, samples that ES selected most
+    // should skew toward the generator's high-difficulty tail.
+    let cfg_ds = DatasetConfig::SynthCifar {
+        n: 512,
+        classes: 4,
+        label_noise: 0.1,
+        hard_frac: 0.2,
+    };
+    let split = data::build(&cfg_ds, 128, 7);
+    let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+    let mut cfg = RunConfig::new("mech", "native", cfg_ds);
+    cfg.epochs = 8;
+    cfg.meta_batch = 64;
+    cfg.mini_batch = 16;
+    cfg.sampler = SamplerConfig::Es { beta1: 0.2, beta2: 0.9, anneal_frac: 0.0 };
+    cfg.lr = LrSchedule::Const { lr: 0.02 };
+    cfg.test_n = 128;
+
+    // Track selection counts via the class_bp-like route: instead use the
+    // sampler's weights after training — high-difficulty samples should
+    // have higher weights. We train and then re-derive by difficulty split.
+    let r = train(&cfg, &mut rt, &split).unwrap();
+    assert!(r.cost.bp_samples > 0);
+
+    // Use an explicit Evolved sampler fed by a real loss oracle to assert
+    // the weight ordering (trainer API does not expose sampler state).
+    use evosample::runtime::BatchBuf;
+    use evosample::sampler::evolved::Evolved;
+    use evosample::sampler::Sampler;
+    let mut es = Evolved::new(split.train.n, 8, 0.2, 0.9, 0.0, 0.0);
+    let mut buf = BatchBuf::new();
+    let all: Vec<u32> = (0..split.train.n as u32).collect();
+    for chunk in all.chunks(64) {
+        buf.fill(&split.train, chunk);
+        let losses = rt.loss_fwd(buf.x(&split.train), &buf.y, chunk.len()).unwrap();
+        es.observe_meta(chunk, &losses, 1);
+    }
+    let w = es.weights_table();
+    let hard_mean: f32 = all
+        .iter()
+        .filter(|&&i| split.train.difficulty[i as usize] >= 0.6)
+        .map(|&i| w[i as usize])
+        .sum::<f32>()
+        / all.iter().filter(|&&i| split.train.difficulty[i as usize] >= 0.6).count() as f32;
+    let easy_mean: f32 = all
+        .iter()
+        .filter(|&&i| split.train.difficulty[i as usize] < 0.4)
+        .map(|&i| w[i as usize])
+        .sum::<f32>()
+        / all.iter().filter(|&&i| split.train.difficulty[i as usize] < 0.4).count() as f32;
+    assert!(
+        hard_mean > 1.5 * easy_mean,
+        "hard weight {hard_mean} vs easy {easy_mean}: selection should find hard samples"
+    );
+}
+
+#[test]
+fn annealing_window_disables_selection_at_edges() {
+    let (mut cfg, split, mut rt) = setup(256, 4);
+    cfg.epochs = 10;
+    cfg.sampler = SamplerConfig::Es { beta1: 0.2, beta2: 0.9, anneal_frac: 0.1 };
+    let r = train(&cfg, &mut rt, &split).unwrap();
+    // 1 annealed epoch at each side: those run BP on full meta-batches.
+    // steps/epoch = 256/64 = 4; annealed epochs contribute 64*4 BP samples,
+    // active ones 16*4.
+    let expected = 2 * 4 * 64 + 8 * 4 * 16;
+    assert_eq!(r.cost.bp_samples, expected as u64);
+}
+
+#[test]
+fn eval_handles_ragged_test_sets() {
+    let cfg_ds = DatasetConfig::SynthCifar { n: 256, classes: 4, label_noise: 0.0, hard_frac: 0.2 };
+    let split = data::build(&cfg_ds, 100, 3); // 100 not divisible by chunk
+    let mut rt = NativeRuntime::new(split.train.x_len(), 16, 4);
+    rt.init(0).unwrap();
+    let stats = evosample::coordinator::evaluate(&mut rt, &split).unwrap();
+    assert!(stats.loss.is_finite());
+    assert!((0.0..=1.0).contains(&stats.accuracy));
+}

@@ -1,0 +1,194 @@
+//! Cross-method property tests: invariants every dynamic sampler must
+//! satisfy regardless of its policy. These run the real Sampler trait
+//! objects through randomized observe/prune/select schedules (no model
+//! runtime needed), pinning the contracts the trainer depends on.
+
+use evosample::config::SamplerConfig;
+use evosample::prop_assert;
+use evosample::sampler::{build, Selection};
+use evosample::util::proptest::check;
+use evosample::util::Pcg64;
+
+fn all_methods() -> Vec<SamplerConfig> {
+    vec![
+        SamplerConfig::Uniform,
+        SamplerConfig::Loss,
+        SamplerConfig::Ordered,
+        SamplerConfig::es_default(),
+        SamplerConfig::eswp_default(),
+        SamplerConfig::infobatch_default(),
+        SamplerConfig::kakurenbo_default(),
+        SamplerConfig::ucb_default(),
+        SamplerConfig::RandomPrune { prune_ratio: 0.2 },
+    ]
+}
+
+/// Drive one sampler through a random epoch schedule, checking contracts.
+fn drive(cfg: &SamplerConfig, n: usize, epochs: usize, rng_seed: u64) -> Result<(), String> {
+    let mut sampler = build(cfg, n, epochs);
+    let mut rng = Pcg64::new(rng_seed);
+    for epoch in 0..epochs {
+        let kept = sampler.on_epoch_start(epoch, &mut rng);
+        prop_assert!(!kept.is_empty(), "{}: empty kept set", cfg.name());
+        prop_assert!(kept.len() <= n, "{}: kept > n", cfg.name());
+        let mut sorted = kept.clone();
+        sorted.dedup();
+        prop_assert!(sorted.len() == kept.len(), "{}: duplicate kept indices", cfg.name());
+        for &i in &kept {
+            prop_assert!((i as usize) < n, "{}: kept idx {i} out of range", cfg.name());
+        }
+        // Simulate a few steps.
+        for _ in 0..3 {
+            let bsz = kept.len().min(16);
+            let meta: Vec<u32> = (0..bsz).map(|k| kept[k * kept.len() / bsz.max(1)]).collect();
+            let losses: Vec<f32> = meta.iter().map(|_| rng.f32() * 4.0).collect();
+            if sampler.needs_meta_losses(epoch) {
+                sampler.observe_meta(&meta, &losses, epoch);
+            }
+            let mini = (bsz / 2).max(1);
+            let sel: Selection = sampler.select(&meta, mini, epoch, &mut rng);
+            prop_assert!(!sel.indices.is_empty(), "{}: empty selection", cfg.name());
+            prop_assert!(
+                sel.indices.len() == sel.weights.len(),
+                "{}: weights/indices length mismatch",
+                cfg.name()
+            );
+            for &i in &sel.indices {
+                prop_assert!(meta.contains(&i), "{}: selected {i} not in meta", cfg.name());
+            }
+            for &w in &sel.weights {
+                prop_assert!(w.is_finite() && w > 0.0, "{}: bad weight {w}", cfg.name());
+            }
+            // Batch-level methods must respect the mini budget when active;
+            // set-level/annealed return the full meta. Either is legal, but
+            // nothing in between or beyond.
+            prop_assert!(
+                sel.indices.len() == mini || sel.indices.len() == meta.len(),
+                "{}: selection size {} (mini {mini}, meta {})",
+                cfg.name(),
+                sel.indices.len(),
+                meta.len()
+            );
+            let train_losses: Vec<f32> = sel.indices.iter().map(|_| rng.f32() * 4.0).collect();
+            sampler.observe_train(&sel.indices, &train_losses, epoch);
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn all_samplers_uphold_contracts_under_random_schedules() {
+    for cfg in all_methods() {
+        check(&format!("contract:{}", cfg.name()), 40, |g| {
+            let n = g.usize_in(16, 300);
+            let epochs = g.usize_in(1, 12);
+            let seed = g.rng().next_u64();
+            drive(&cfg, n, epochs, seed)
+        });
+    }
+}
+
+#[test]
+fn samplers_are_deterministic_given_rng_seed() {
+    for cfg in all_methods() {
+        let run = |seed: u64| -> Vec<u32> {
+            let mut s = build(&cfg, 64, 6);
+            let mut rng = Pcg64::new(seed);
+            let mut out = Vec::new();
+            for epoch in 0..6 {
+                let kept = s.on_epoch_start(epoch, &mut rng);
+                let meta: Vec<u32> = kept.iter().copied().take(16).collect();
+                let losses: Vec<f32> = meta.iter().map(|&i| (i % 7) as f32).collect();
+                s.observe_meta(&meta, &losses, epoch);
+                s.observe_train(&meta, &losses, epoch);
+                out.extend(s.select(&meta, 4, epoch, &mut rng).indices);
+            }
+            out
+        };
+        assert_eq!(run(9), run(9), "{} nondeterministic", cfg.name());
+    }
+}
+
+#[test]
+fn degenerate_loss_tables_never_break_selection() {
+    // NaN/inf/zero losses must degrade gracefully (Remark 1 / weights.rs
+    // flooring), never panic or return empty selections.
+    for cfg in all_methods() {
+        let mut s = build(&cfg, 32, 4);
+        let mut rng = Pcg64::new(3);
+        let meta: Vec<u32> = (0..16).collect();
+        let horror = vec![
+            f32::NAN,
+            f32::INFINITY,
+            -1.0,
+            0.0,
+            1e38,
+            1e-38,
+            f32::NEG_INFINITY,
+            2.0,
+            f32::NAN,
+            0.0,
+            0.0,
+            0.0,
+            5.0,
+            f32::INFINITY,
+            -0.0,
+            1.0,
+        ];
+        s.observe_meta(&meta, &horror, 1);
+        s.observe_train(&meta, &horror, 1);
+        let kept = s.on_epoch_start(2, &mut rng);
+        assert!(!kept.is_empty(), "{}", cfg.name());
+        let sel = s.select(&meta, 4, 2, &mut rng);
+        assert!(!sel.indices.is_empty(), "{}", cfg.name());
+        assert!(sel.weights.iter().all(|w| w.is_finite()), "{}", cfg.name());
+    }
+}
+
+#[test]
+fn batch_level_methods_skew_selection_toward_high_loss() {
+    // Loss, Order and ES must all prefer high-loss samples; set-level
+    // methods pass the meta-batch through untouched.
+    for cfg in [SamplerConfig::Loss, SamplerConfig::Ordered, SamplerConfig::es_default()] {
+        let mut s = build(&cfg, 32, 4);
+        let mut rng = Pcg64::new(11);
+        let meta: Vec<u32> = (0..16).collect();
+        // First half high loss, second half near zero — observed repeatedly.
+        let losses: Vec<f32> =
+            (0..16).map(|i| if i < 8 { 5.0 } else { 0.01 }).collect();
+        for _ in 0..4 {
+            s.observe_meta(&meta, &losses, 1);
+        }
+        let mut high = 0usize;
+        let mut total = 0usize;
+        for _ in 0..200 {
+            let sel = s.select(&meta, 4, 1, &mut rng);
+            high += sel.indices.iter().filter(|&&i| i < 8).count();
+            total += sel.indices.len();
+        }
+        let frac = high as f64 / total as f64;
+        assert!(frac > 0.75, "{}: high-loss fraction {frac}", cfg.name());
+    }
+}
+
+#[test]
+fn set_level_methods_reduce_epoch_size_by_configured_ratio() {
+    let cases = [
+        (SamplerConfig::eswp_default(), 0.2),
+        (SamplerConfig::ucb_default(), 0.3),
+        (SamplerConfig::RandomPrune { prune_ratio: 0.2 }, 0.2),
+    ];
+    for (cfg, r) in cases {
+        let n = 200;
+        let mut s = build(&cfg, n, 10);
+        let mut rng = Pcg64::new(5);
+        // Warm the state so pruning has scores to act on.
+        let all: Vec<u32> = (0..n as u32).collect();
+        let losses: Vec<f32> = (0..n).map(|i| (i % 13) as f32).collect();
+        s.observe_train(&all, &losses, 0);
+        s.observe_meta(&all, &losses, 1);
+        let kept = s.on_epoch_start(2, &mut rng);
+        let expected = ((1.0 - r) * n as f64).ceil() as usize;
+        assert_eq!(kept.len(), expected, "{}", cfg.name());
+    }
+}
