@@ -1,0 +1,91 @@
+//! Engine throughput: sequential data-parallel simulation vs real
+//! `std::thread` worker replicas at W=4 on the NativeRuntime.
+//!
+//! The acceptance bar for the threaded engine is >1.5x step throughput at
+//! W=4 over the sequential simulation on a 4-core box (the workload is
+//! BP-dominated, so data-parallel replicas scale near-linearly until the
+//! sync rounds bite). `EVOSAMPLE_BENCH_FULL=1` runs the larger shape.
+
+use std::time::Instant;
+
+use evosample::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
+use evosample::coordinator::train;
+use evosample::data;
+use evosample::runtime::native::NativeRuntime;
+use evosample::util::bench::smoke_mode;
+
+fn base_cfg(n: usize, epochs: usize) -> RunConfig {
+    let mut cfg = RunConfig::new(
+        "perf_engine",
+        "native",
+        DatasetConfig::SynthCifar { n, classes: 10, label_noise: 0.05, hard_frac: 0.2 },
+    );
+    cfg.epochs = epochs;
+    // No batch-level selection: every step is one full-batch BP, the
+    // §D.5 pre-training shape (B == b), so the comparison isolates the
+    // execution engine rather than the sampler.
+    cfg.meta_batch = 64;
+    cfg.mini_batch = 64;
+    cfg.lr = LrSchedule::Const { lr: 0.01 };
+    cfg.test_n = 64; // keep the (excluded) eval cheap
+    cfg.sampler = SamplerConfig::Uniform;
+    cfg
+}
+
+/// Train once and report steps/second of wall-clock (eval excluded by
+/// subtracting the measured eval phase from elapsed).
+fn throughput(cfg: &RunConfig, split: &data::SplitDataset, hidden: usize) -> (f64, u64) {
+    let mut rt = NativeRuntime::new(split.train.x_len(), hidden, 10);
+    let t0 = Instant::now();
+    let r = train(cfg, &mut rt, split).expect(&cfg.name);
+    let elapsed = t0.elapsed().as_secs_f64() - r.cost.eval_s;
+    (r.steps as f64 / elapsed.max(1e-9), r.steps)
+}
+
+fn main() {
+    let (n, epochs, hidden) = if smoke_mode() { (2048, 3, 48) } else { (8192, 6, 96) };
+    let workers = 4usize;
+
+    let mut cfg = base_cfg(n, epochs);
+    let split = data::build(&cfg.dataset, cfg.test_n, 42);
+
+    println!(
+        "== engine throughput (n={n}, B=b={}, hidden={hidden}, W={workers}, {} cores) ==",
+        cfg.meta_batch,
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1),
+    );
+
+    // Single worker (the refactored legacy path) as the anchor.
+    cfg.workers = 1;
+    let (tput_single, steps_single) = throughput(&cfg, &split, hidden);
+    println!("single worker            {tput_single:8.1} steps/s  ({steps_single} steps)");
+
+    // Sequential simulation at W=4.
+    cfg.workers = workers;
+    cfg.threaded_workers = false;
+    let (tput_sim, steps_sim) = throughput(&cfg, &split, hidden);
+    println!("sequential sim   (W={workers})   {tput_sim:8.1} steps/s  ({steps_sim} steps)");
+
+    // Real threads at W=4, epoch-boundary sync only.
+    cfg.threaded_workers = true;
+    cfg.sync_every = 0;
+    let (tput_thr, steps_thr) = throughput(&cfg, &split, hidden);
+    println!("threaded         (W={workers})   {tput_thr:8.1} steps/s  ({steps_thr} steps)");
+
+    // Real threads with a mid-epoch parameter sync every 8 steps.
+    cfg.sync_every = 8;
+    let (tput_thr_sync, _) = throughput(&cfg, &split, hidden);
+    println!("threaded + sync8 (W={workers})   {tput_thr_sync:8.1} steps/s");
+
+    let speedup = tput_thr / tput_sim;
+    println!(
+        "\nthreaded vs sequential sim: {speedup:.2}x step throughput (target > 1.5x at W=4)"
+    );
+    if speedup < 1.5 {
+        println!(
+            "NOTE: below target — expected on boxes with < {workers} free cores \
+             (this host reports {})",
+            std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+        );
+    }
+}

@@ -185,8 +185,15 @@ pub struct RunConfig {
     pub test_n: usize,
     /// Gradient-accumulation micro-batch (0 = off). Fig. 4 low-resource mode.
     pub micro_batch: usize,
-    /// Data-parallel simulated workers (1 = off). Table 4 pre-training mode.
+    /// Data-parallel workers (1 = off). Table 4 pre-training mode.
     pub workers: usize,
+    /// Run `workers` as real `std::thread` replicas instead of the
+    /// sequential simulation. Requires a runtime with `spawn_replica`
+    /// (NativeRuntime); see DESIGN.md §2.
+    pub threaded_workers: bool,
+    /// Threaded mode: average replica parameters every `sync_every` local
+    /// steps (0 = only at epoch boundaries, the §D.5 default).
+    pub sync_every: usize,
 }
 
 impl RunConfig {
@@ -206,6 +213,8 @@ impl RunConfig {
             test_n: 512,
             micro_batch: 0,
             workers: 1,
+            threaded_workers: false,
+            sync_every: 0,
         }
     }
 
@@ -239,6 +248,12 @@ impl RunConfig {
         }
         if self.workers == 0 {
             return Err("workers must be >= 1".into());
+        }
+        if self.threaded_workers && self.workers < 2 {
+            return Err("threaded_workers requires workers >= 2".into());
+        }
+        if self.sync_every > 0 && !self.threaded_workers {
+            return Err("sync_every requires threaded_workers".into());
         }
         let ratios: &[f64] = match &self.sampler {
             SamplerConfig::Eswp { prune_ratio, anneal_frac, .. } => &[*prune_ratio, *anneal_frac],
@@ -359,6 +374,8 @@ impl RunConfig {
             test_n: doc.i64_or("run.test_n", 512) as usize,
             micro_batch: doc.i64_or("run.micro_batch", 0) as usize,
             workers: doc.i64_or("run.workers", 1) as usize,
+            threaded_workers: doc.bool_or("run.threaded_workers", false),
+            sync_every: doc.i64_or("run.sync_every", 0) as usize,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -445,6 +462,39 @@ max_lr = 0.05
         assert_eq!(cfg.sampler.name(), "eswp");
         assert!(matches!(cfg.lr, LrSchedule::OneCycle { .. }));
         assert!(matches!(cfg.dataset, DatasetConfig::SynthCifar { classes: 100, .. }));
+    }
+
+    #[test]
+    fn threaded_knobs_validate() {
+        let mut c = base();
+        c.threaded_workers = true;
+        assert!(c.validate().is_err(), "threaded with workers=1 must fail");
+        c.workers = 4;
+        c.validate().unwrap();
+        c.sync_every = 8;
+        c.validate().unwrap();
+        c.threaded_workers = false;
+        assert!(c.validate().is_err(), "sync_every without threaded must fail");
+    }
+
+    #[test]
+    fn threaded_knobs_parse_from_toml() {
+        let src = r#"
+[run]
+model = "mlp_cifar10"
+workers = 4
+threaded_workers = true
+sync_every = 16
+
+[dataset]
+kind = "synth_cifar"
+n = 1024
+"#;
+        let doc = Doc::parse(src).unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert!(cfg.threaded_workers);
+        assert_eq!(cfg.sync_every, 16);
+        assert_eq!(cfg.workers, 4);
     }
 
     #[test]

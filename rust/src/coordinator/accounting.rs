@@ -31,6 +31,7 @@ pub struct CostSummary {
     pub select_s: f64,
     pub data_s: f64,
     pub prune_s: f64,
+    pub sync_s: f64,
     pub eval_s: f64,
 }
 
@@ -53,14 +54,17 @@ impl CostSummary {
             select_s: timers.get(phase::SELECT).as_secs_f64(),
             data_s: timers.get(phase::DATA).as_secs_f64(),
             prune_s: timers.get(phase::PRUNE).as_secs_f64(),
+            sync_s: timers.get(phase::SYNC).as_secs_f64(),
             eval_s: timers.get(phase::EVAL).as_secs_f64(),
         }
     }
 
     /// Total *training* seconds (what the paper's Time columns measure —
     /// eval excluded, exactly as wall-clock comparisons in the paper).
+    /// Synchronization rounds count as training time (§D.5: the sync is
+    /// on the critical path of distributed pre-training).
     pub fn train_wall_s(&self) -> f64 {
-        self.scoring_s + self.train_s + self.select_s + self.data_s + self.prune_s
+        self.scoring_s + self.train_s + self.select_s + self.data_s + self.prune_s + self.sync_s
     }
 
     /// Total analytic FLOPs (scoring + training).

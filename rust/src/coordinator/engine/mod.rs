@@ -1,0 +1,341 @@
+//! The pipelined execution engine behind the training coordinator.
+//!
+//! [`Engine`] runs the paper's Alg. 1 loop by driving a [`StepPipeline`]
+//! (explicit data-gather → scoring-FP → select → BP → observe stages) in
+//! one of three modes:
+//!
+//! * **Single worker** (`workers == 1`): the pre-engine trainer loop,
+//!   bit-for-bit — same RNG schedule, same arithmetic, same results —
+//!   with meta-batch index assembly moved onto the double-buffered
+//!   [`Prefetcher`] so it overlaps compute.
+//! * **Sequential simulation** (`workers > 1`, `threaded_workers` off):
+//!   W simulated workers share the runtime and sampler, take turns
+//!   stepping round-robin over disjoint shards, and defer loss
+//!   observations to an epoch-end sync — the historical Table 4 mode.
+//! * **Threaded replicas** (`workers > 1`, `threaded_workers` on): W real
+//!   `std::thread` workers, each owning a runtime replica
+//!   ([`ModelRuntime::spawn_replica`]) and a sampler replica. Parameters
+//!   average at sync rounds via `get_params`/`set_params`; sampler tables
+//!   synchronize by all-gathering shard observation logs — the paper's
+//!   §D.5 "additional round of synchronization". See DESIGN.md §2.
+
+pub mod pipeline;
+mod threaded;
+
+pub use pipeline::{ObservationRoute, Stage, StageObserver, StepCtx, StepPipeline, StepStats};
+
+use crate::config::RunConfig;
+use crate::data::loader::{EpochLoader, Prefetcher};
+use crate::data::SplitDataset;
+use crate::runtime::ModelRuntime;
+use crate::sampler::Sampler;
+use crate::util::timer::{phase, PhaseTimers};
+use crate::util::Pcg64;
+
+use super::accounting::CostSummary;
+use super::trainer::{evaluate, EvalStats, TrainResult};
+
+/// One training run: configuration + runtime + data + sampler.
+pub struct Engine<'a> {
+    cfg: &'a RunConfig,
+    rt: &'a mut dyn ModelRuntime,
+    data: &'a SplitDataset,
+    sampler: Box<dyn Sampler>,
+    observer: Option<Box<dyn StageObserver>>,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        cfg: &'a RunConfig,
+        rt: &'a mut dyn ModelRuntime,
+        data: &'a SplitDataset,
+        sampler: Box<dyn Sampler>,
+    ) -> Engine<'a> {
+        Engine { cfg, rt, data, sampler, observer: None }
+    }
+
+    /// Install a per-stage accounting hook (single-worker and simulation
+    /// modes; threaded workers run without one — their stage wall-clock
+    /// still lands in the merged phase ledger).
+    pub fn with_observer(mut self, observer: Box<dyn StageObserver>) -> Engine<'a> {
+        self.observer = Some(observer);
+        self
+    }
+
+    /// Post-run sampler inspection (tests, table analyses).
+    pub fn sampler(&self) -> &dyn Sampler {
+        self.sampler.as_ref()
+    }
+
+    pub fn into_sampler(self) -> Box<dyn Sampler> {
+        self.sampler
+    }
+
+    /// Execute the full run.
+    pub fn run(&mut self) -> anyhow::Result<TrainResult> {
+        if self.cfg.threaded_workers && self.cfg.workers > 1 {
+            threaded::run(self.cfg, self.rt, self.data, self.sampler.as_mut())
+        } else {
+            self.run_sequential()
+        }
+    }
+
+    /// Single-worker path and the sequential data-parallel simulation.
+    fn run_sequential(&mut self) -> anyhow::Result<TrainResult> {
+        let cfg = self.cfg;
+        let mut rng = Pcg64::new(cfg.seed);
+        self.rt.init(cfg.seed as i32)?;
+
+        let mut timers = PhaseTimers::new();
+        let train_ds = &self.data.train;
+        let n = train_ds.n;
+        let mut pipeline = StepPipeline::new(train_ds.classes);
+
+        // LR horizon: full-data steps so every method sees the same
+        // schedule (pruning shortens the run, not the schedule — matches
+        // InfoBatch).
+        let total_steps = cfg.epochs * n.div_ceil(cfg.meta_batch);
+        let mut step_idx = 0usize;
+
+        let mut loss_curve = Vec::with_capacity(cfg.epochs);
+        let mut eval_curve = Vec::new();
+        let mut bp_at_eval = Vec::new();
+
+        let workers = cfg.workers.max(1);
+
+        for epoch in 0..cfg.epochs {
+            // ---- set-level selection -----------------------------------
+            let kept =
+                timers.time(phase::PRUNE, || self.sampler.on_epoch_start(epoch, &mut rng));
+            anyhow::ensure!(!kept.is_empty(), "sampler kept nothing at epoch {epoch}");
+
+            let mut epoch_loss_sum = 0.0f64;
+            let mut epoch_loss_cnt = 0u64;
+
+            if workers == 1 {
+                // The loader is shuffled on this thread (consuming the
+                // main RNG exactly as direct iteration would), then
+                // streamed through the double-buffered prefetcher so
+                // index assembly overlaps the step.
+                let loader = EpochLoader::new(&kept, cfg.meta_batch, &mut rng);
+                let mut pf = Prefetcher::from_loader(loader, 2);
+                while let Some(meta) = pf.next() {
+                    let ctx = StepCtx {
+                        cfg,
+                        train_ds,
+                        epoch,
+                        lr: cfg.lr.lr_at(step_idx, total_steps) as f32,
+                    };
+                    let mut route = ObservationRoute::Immediate;
+                    let step_mean = pipeline.run_step(
+                        &ctx,
+                        self.rt,
+                        self.sampler.as_mut(),
+                        &meta,
+                        &mut rng,
+                        &mut timers,
+                        self.observer.as_deref_mut(),
+                        &mut route,
+                    )?;
+                    epoch_loss_sum += step_mean;
+                    epoch_loss_cnt += 1;
+                    step_idx += 1;
+                    pf.recycle(meta);
+                }
+            } else {
+                // ---- sequential data-parallel simulation ---------------
+                // Shard round-robin; every worker sees a disjoint subset.
+                let mut loaders: Vec<EpochLoader> = (0..workers)
+                    .map(|w| {
+                        let shard: Vec<u32> =
+                            kept.iter().copied().skip(w).step_by(workers).collect();
+                        let shard = if shard.is_empty() { kept.clone() } else { shard };
+                        let mut wrng = rng.fork(0xd15c0 + w as u64);
+                        EpochLoader::new(&shard, cfg.meta_batch, &mut wrng)
+                    })
+                    .collect();
+                // Deferred sampler observations (the simulated §D.5 sync).
+                let mut sync_buf: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+                let mut meta_scratch: Vec<u32> = Vec::new();
+
+                'rounds: loop {
+                    let mut progressed = false;
+                    for loader in loaders.iter_mut() {
+                        if !loader.next_batch_into(&mut meta_scratch) {
+                            continue;
+                        }
+                        progressed = true;
+                        let ctx = StepCtx {
+                            cfg,
+                            train_ds,
+                            epoch,
+                            lr: cfg.lr.lr_at(step_idx, total_steps) as f32,
+                        };
+                        let mut route = ObservationRoute::Deferred(&mut sync_buf);
+                        let step_mean = pipeline.run_step(
+                            &ctx,
+                            self.rt,
+                            self.sampler.as_mut(),
+                            &meta_scratch,
+                            &mut rng,
+                            &mut timers,
+                            self.observer.as_deref_mut(),
+                            &mut route,
+                        )?;
+                        epoch_loss_sum += step_mean;
+                        epoch_loss_cnt += 1;
+                        step_idx += 1;
+                    }
+                    if !progressed {
+                        break 'rounds;
+                    }
+                }
+
+                // ---- simulated score synchronization -------------------
+                if !sync_buf.is_empty() {
+                    timers.time(phase::SELECT, || {
+                        for (idx, losses) in sync_buf.drain(..) {
+                            self.sampler.observe_train(&idx, &losses, epoch);
+                        }
+                    });
+                }
+            }
+
+            loss_curve.push(if epoch_loss_cnt > 0 {
+                epoch_loss_sum / epoch_loss_cnt as f64
+            } else {
+                f64::NAN
+            });
+
+            // ---- eval --------------------------------------------------
+            let at_eval_point = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
+            if at_eval_point || epoch + 1 == cfg.epochs {
+                let stats = timers.time(phase::EVAL, || evaluate(self.rt, self.data))?;
+                eval_curve.push((epoch, stats.loss, stats.accuracy));
+                bp_at_eval.push(pipeline.stats.bp_samples);
+            }
+        }
+
+        Ok(assemble_result(
+            cfg,
+            self.sampler.name(),
+            self.rt,
+            &timers,
+            &pipeline.stats,
+            loss_curve,
+            eval_curve,
+            bp_at_eval,
+            pipeline.class_bp_counts.clone(),
+        ))
+    }
+}
+
+/// Shared result assembly across engine modes.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn assemble_result(
+    cfg: &RunConfig,
+    sampler_name: &str,
+    rt: &mut dyn ModelRuntime,
+    timers: &PhaseTimers,
+    stats: &StepStats,
+    loss_curve: Vec<f64>,
+    eval_curve: Vec<(usize, f64, f64)>,
+    bp_at_eval: Vec<u64>,
+    class_bp_counts: Vec<u64>,
+) -> TrainResult {
+    let final_eval = eval_curve
+        .last()
+        .map(|&(_, l, a)| EvalStats { loss: l, accuracy: a })
+        .unwrap_or_default();
+    let cost = CostSummary::from_run(
+        timers,
+        stats.fp_samples,
+        stats.bp_samples,
+        stats.bp_passes,
+        rt.flops_per_sample_fwd(),
+    );
+    TrainResult {
+        name: cfg.name.clone(),
+        sampler: sampler_name.to_string(),
+        seed: cfg.seed,
+        epochs: cfg.epochs,
+        steps: stats.steps,
+        loss_curve,
+        eval_curve,
+        final_eval,
+        timers: timers.clone(),
+        cost,
+        class_bp_counts,
+        bp_at_eval,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, LrSchedule, SamplerConfig};
+    use crate::runtime::native::NativeRuntime;
+    use crate::{data, sampler};
+    use std::sync::{Arc, Mutex};
+
+    fn small_cfg(sampler: SamplerConfig) -> RunConfig {
+        let mut cfg = RunConfig::new(
+            "engine_unit",
+            "native",
+            DatasetConfig::SynthCifar { n: 128, classes: 4, label_noise: 0.0, hard_frac: 0.2 },
+        );
+        // 4 epochs so the 5% annealing window leaves active epochs and
+        // the scoring-FP stage actually runs.
+        cfg.epochs = 4;
+        cfg.meta_batch = 32;
+        cfg.mini_batch = 8;
+        cfg.lr = LrSchedule::Const { lr: 0.02 };
+        cfg.test_n = 64;
+        cfg.sampler = sampler;
+        cfg
+    }
+
+    struct Recorder(Arc<Mutex<Vec<Stage>>>);
+
+    impl StageObserver for Recorder {
+        fn on_stage(&mut self, stage: Stage, _elapsed: std::time::Duration) {
+            self.0.lock().unwrap().push(stage);
+        }
+    }
+
+    #[test]
+    fn observer_sees_all_five_stages() {
+        let cfg = small_cfg(SamplerConfig::es_default());
+        let split = data::build(&cfg.dataset, cfg.test_n, 1);
+        let mut rt = NativeRuntime::new(split.train.x_len(), 16, 4);
+        let s = sampler::build(&cfg.sampler, split.train.n, cfg.epochs);
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let mut engine = Engine::new(&cfg, &mut rt, &split, s)
+            .with_observer(Box::new(Recorder(seen.clone())));
+        engine.run().unwrap();
+        let seen = seen.lock().unwrap();
+        for stage in
+            [Stage::DataGather, Stage::ScoringFp, Stage::Select, Stage::TrainBp, Stage::Observe]
+        {
+            assert!(seen.contains(&stage), "stage {stage:?} never observed");
+        }
+    }
+
+    #[test]
+    fn engine_exposes_sampler_after_run() {
+        let cfg = small_cfg(SamplerConfig::es_default());
+        let split = data::build(&cfg.dataset, cfg.test_n, 2);
+        let mut rt = NativeRuntime::new(split.train.x_len(), 16, 4);
+        let s = sampler::build(&cfg.sampler, split.train.n, cfg.epochs);
+        let mut engine = Engine::new(&cfg, &mut rt, &split, s);
+        engine.run().unwrap();
+        let es = engine
+            .sampler()
+            .as_any()
+            .downcast_ref::<crate::sampler::evolved::Evolved>()
+            .expect("es sampler");
+        // Tables moved off the uniform init during training.
+        let init = 1.0 / split.train.n as f32;
+        assert!(es.weights_table().iter().any(|&w| (w - init).abs() > 1e-6));
+    }
+}

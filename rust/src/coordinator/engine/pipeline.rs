@@ -1,0 +1,290 @@
+//! StepPipeline: one training step decomposed into explicit stages
+//! (data-gather → scoring-FP → select → BP → observe) with per-stage
+//! accounting hooks.
+//!
+//! The pipeline is the single implementation of the paper's Alg. 1 step
+//! body. Every engine mode drives it: the sequential path (bit-for-bit
+//! the pre-engine trainer loop), the sequential data-parallel simulation
+//! (observations deferred to the epoch-end sync), and the threaded worker
+//! replicas (observations applied locally and buffered by the sampler's
+//! shard log). Stage wall-clock flows into the `PhaseTimers` ledger under
+//! the same phase labels the accounting layer has always used, and is
+//! additionally surfaced to an optional [`StageObserver`].
+
+use std::time::{Duration, Instant};
+
+use crate::config::RunConfig;
+use crate::data::TensorDataset;
+use crate::runtime::{BatchBuf, BatchX, ModelRuntime};
+use crate::sampler::Sampler;
+use crate::util::timer::{phase, PhaseTimers};
+use crate::util::Pcg64;
+
+/// The explicit stages of one training step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Assemble batch features/labels from the dataset.
+    DataGather,
+    /// Scoring forward pass over the meta-batch (batch-level methods).
+    ScoringFp,
+    /// Draw the BP mini-batch from the meta-batch.
+    Select,
+    /// The optimizer step(s), micro-batched under gradient accumulation.
+    TrainBp,
+    /// Feed fresh losses back to the sampler (or defer them to a sync).
+    Observe,
+}
+
+impl Stage {
+    /// Phase-ledger label. `Observe` books under `select` — sampler state
+    /// maintenance has always been part of selection overhead in the
+    /// paper's cost model (§3.3).
+    pub fn phase_label(self) -> &'static str {
+        match self {
+            Stage::DataGather => phase::DATA,
+            Stage::ScoringFp => phase::SCORING_FP,
+            Stage::Select => phase::SELECT,
+            Stage::TrainBp => phase::TRAIN_BP,
+            Stage::Observe => phase::SELECT,
+        }
+    }
+}
+
+/// Per-stage accounting hook. Receives every stage execution with its
+/// wall-clock; the timers ledger is maintained independently, so an
+/// observer is purely additive (benches, tracing, regression tests).
+pub trait StageObserver: Send {
+    fn on_stage(&mut self, stage: Stage, elapsed: Duration);
+}
+
+/// Where a step's loss observations go.
+pub enum ObservationRoute<'a> {
+    /// Apply to the sampler immediately (single-worker path).
+    Immediate,
+    /// Sequential data-parallel simulation: apply meta losses immediately
+    /// (every simulated worker shares the sampler — its "local view") and
+    /// defer a copy, plus all train losses, to the epoch-end sync buffer.
+    Deferred(&'a mut Vec<(Vec<u32>, Vec<f32>)>),
+    /// Threaded worker replica: apply to the worker-local sampler; its
+    /// shard log buffers what was applied for the §D.5 sync round.
+    Replica,
+}
+
+/// Cumulative step counters, accumulated across every `run_step` call.
+#[derive(Clone, Debug, Default)]
+pub struct StepStats {
+    pub fp_samples: u64,
+    pub bp_samples: u64,
+    pub bp_passes: u64,
+    pub steps: u64,
+}
+
+impl StepStats {
+    pub fn accumulate(&mut self, other: &StepStats) {
+        self.fp_samples += other.fp_samples;
+        self.bp_samples += other.bp_samples;
+        self.bp_passes += other.bp_passes;
+        self.steps += other.steps;
+    }
+}
+
+/// Per-step context that is constant within an epoch.
+pub struct StepCtx<'a> {
+    pub cfg: &'a RunConfig,
+    pub train_ds: &'a TensorDataset,
+    pub epoch: usize,
+    pub lr: f32,
+}
+
+/// Reusable step executor: owns the batch buffers, counters, and per-class
+/// BP tallies so the hot path allocates nothing in steady state.
+pub struct StepPipeline {
+    meta_buf: BatchBuf,
+    mini_buf: BatchBuf,
+    pub stats: StepStats,
+    pub class_bp_counts: Vec<u64>,
+}
+
+/// Run a closure as one pipeline stage: book it in the phase ledger and
+/// forward it to the observer hook.
+fn staged<T>(
+    timers: &mut PhaseTimers,
+    observer: &mut Option<&mut dyn StageObserver>,
+    stage: Stage,
+    f: impl FnOnce() -> T,
+) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    let elapsed = t0.elapsed();
+    timers.add(stage.phase_label(), elapsed);
+    if let Some(obs) = observer.as_deref_mut() {
+        obs.on_stage(stage, elapsed);
+    }
+    out
+}
+
+impl StepPipeline {
+    /// `classes` sizes the Fig. 9 per-class BP tally (>= 1).
+    pub fn new(classes: usize) -> StepPipeline {
+        StepPipeline {
+            meta_buf: BatchBuf::new(),
+            mini_buf: BatchBuf::new(),
+            stats: StepStats::default(),
+            class_bp_counts: vec![0u64; classes.max(1)],
+        }
+    }
+
+    /// Execute one full step over `meta` and return its mean train loss.
+    ///
+    /// Stage-for-stage this is the pre-engine trainer loop body: identical
+    /// call order, RNG usage, and arithmetic, so a single-worker run
+    /// reproduces the pre-refactor loss curve bit-for-bit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_step(
+        &mut self,
+        ctx: &StepCtx<'_>,
+        rt: &mut dyn ModelRuntime,
+        sampler: &mut dyn Sampler,
+        meta: &[u32],
+        rng: &mut Pcg64,
+        timers: &mut PhaseTimers,
+        mut observer: Option<&mut dyn StageObserver>,
+        route: &mut ObservationRoute<'_>,
+    ) -> anyhow::Result<f64> {
+        let cfg = ctx.cfg;
+        let train_ds = ctx.train_ds;
+
+        // ---- stage 1: data-gather (meta-batch) -------------------------
+        staged(timers, &mut observer, Stage::DataGather, || {
+            self.meta_buf.fill(train_ds, meta)
+        });
+
+        // ---- stage 2: scoring FP (batch-level methods, active epochs) --
+        let selecting = cfg.mini_batch < cfg.meta_batch;
+        if selecting && sampler.needs_meta_losses(ctx.epoch) {
+            let losses = staged(timers, &mut observer, Stage::ScoringFp, || {
+                rt.loss_fwd(self.meta_buf.x(train_ds), &self.meta_buf.y, meta.len())
+            })?;
+            self.stats.fp_samples += meta.len() as u64;
+            match route {
+                ObservationRoute::Immediate | ObservationRoute::Replica => {
+                    staged(timers, &mut observer, Stage::Observe, || {
+                        sampler.observe_meta(meta, &losses, ctx.epoch)
+                    });
+                }
+                ObservationRoute::Deferred(buf) => {
+                    // Feed this worker's local view AND defer a copy to
+                    // the sync round — both are selection overhead.
+                    staged(timers, &mut observer, Stage::Observe, || {
+                        sampler.observe_meta(meta, &losses, ctx.epoch);
+                        buf.push((meta.to_vec(), losses));
+                    });
+                }
+            }
+        }
+
+        // ---- stage 3: select -------------------------------------------
+        let sel = staged(timers, &mut observer, Stage::Select, || {
+            sampler.select(meta, cfg.mini_batch, ctx.epoch, rng)
+        });
+        debug_assert!(!sel.indices.is_empty());
+
+        // ---- stage 4: BP (assemble + micro-batched train steps) --------
+        // Reuse the meta buffer when the selection is the identity — the
+        // common set-level path.
+        let bsz = sel.indices.len();
+        if sel.indices.as_slice() != meta {
+            staged(timers, &mut observer, Stage::DataGather, || {
+                self.mini_buf.fill(train_ds, &sel.indices)
+            });
+        }
+        let (buf, y_ref): (&BatchBuf, &Vec<i32>) = if sel.indices.as_slice() == meta {
+            (&self.meta_buf, &self.meta_buf.y)
+        } else {
+            (&self.mini_buf, &self.mini_buf.y)
+        };
+
+        // Gradient accumulation: chunk into micro-batches.
+        let micro = if cfg.micro_batch > 0 && cfg.micro_batch < bsz {
+            cfg.micro_batch
+        } else {
+            bsz
+        };
+        let mut all_losses = Vec::with_capacity(bsz);
+        let mut mean_acc = 0.0f64;
+        let mut off = 0usize;
+        let x_len = train_ds.x_len();
+        let y_len = train_ds.y_dim;
+        while off < bsz {
+            let m = micro.min(bsz - off);
+            let out = staged(timers, &mut observer, Stage::TrainBp, || {
+                let x = match buf.x(train_ds) {
+                    BatchX::F32(v) => BatchX::F32(&v[off * x_len..(off + m) * x_len]),
+                    BatchX::I32(v) => BatchX::I32(&v[off * x_len..(off + m) * x_len]),
+                };
+                rt.train_step(
+                    x,
+                    &y_ref[off * y_len..(off + m) * y_len],
+                    &sel.weights[off..off + m],
+                    ctx.lr,
+                    m,
+                )
+            })?;
+            self.stats.bp_passes += 1;
+            self.stats.bp_samples += m as u64;
+            mean_acc += out.mean_loss as f64 * m as f64;
+            all_losses.extend_from_slice(&out.losses);
+            off += m;
+        }
+        let step_mean = mean_acc / bsz as f64;
+
+        // Per-class BP counts (Fig. 9).
+        if train_ds.y_dim == 1 && train_ds.classes > 0 {
+            for &i in &sel.indices {
+                self.class_bp_counts[train_ds.clean_class[i as usize] as usize] += 1;
+            }
+        }
+
+        // ---- stage 5: observe (free training losses) -------------------
+        match route {
+            ObservationRoute::Immediate | ObservationRoute::Replica => {
+                staged(timers, &mut observer, Stage::Observe, || {
+                    sampler.observe_train(&sel.indices, &all_losses, ctx.epoch)
+                });
+            }
+            ObservationRoute::Deferred(buf) => {
+                staged(timers, &mut observer, Stage::Observe, || {
+                    buf.push((sel.indices, all_losses))
+                });
+            }
+        }
+
+        self.stats.steps += 1;
+        Ok(step_mean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_labels_map_to_phase_ledger() {
+        assert_eq!(Stage::DataGather.phase_label(), phase::DATA);
+        assert_eq!(Stage::ScoringFp.phase_label(), phase::SCORING_FP);
+        assert_eq!(Stage::Select.phase_label(), phase::SELECT);
+        assert_eq!(Stage::TrainBp.phase_label(), phase::TRAIN_BP);
+        assert_eq!(Stage::Observe.phase_label(), phase::SELECT);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut a = StepStats { fp_samples: 1, bp_samples: 2, bp_passes: 3, steps: 4 };
+        let b = StepStats { fp_samples: 10, bp_samples: 20, bp_passes: 30, steps: 40 };
+        a.accumulate(&b);
+        assert_eq!(a.fp_samples, 11);
+        assert_eq!(a.bp_samples, 22);
+        assert_eq!(a.bp_passes, 33);
+        assert_eq!(a.steps, 44);
+    }
+}

@@ -1,0 +1,412 @@
+//! Threaded data-parallel mode: W real `std::thread` worker replicas.
+//!
+//! Topology per epoch (DESIGN.md §2.3):
+//!
+//! 1. Epoch-start selection runs on a dedicated forked RNG stream that is
+//!    *replayed* on every worker sampler replica: identical tables (kept
+//!    in sync by the merge rounds) plus an identical RNG stream give every
+//!    replica the same epoch-start decisions — ESWP's pruned set,
+//!    InfoBatch's rescale table, Kakurenbo's move-back snapshot.
+//! 2. The kept set is sharded round-robin across `min(W, kept)` effective
+//!    workers, so shards are always disjoint and non-empty.
+//! 3. Each effective worker owns a runtime replica (`spawn_replica`) and a
+//!    sampler replica, and steps its shard through the shared
+//!    [`StepPipeline`] with worker-local RNG, timers, and counters. A
+//!    panic inside a step is caught and demoted to an error so the worker
+//!    can keep honoring the barrier schedule.
+//! 4. Mid-epoch (every `sync_every` local steps, if configured) workers
+//!    rendezvous on a barrier and average parameters through
+//!    `get_params`/`set_params`.
+//! 5. At the epoch boundary the main thread all-gathers every replica's
+//!    shard observation log and replays it into the canonical sampler and
+//!    all peer replicas (`merge_observations`), then averages parameters
+//!    into every replica and the main runtime — the paper's §D.5
+//!    "additional round of synchronization".
+//!
+//! Because shards are disjoint, per-index observation order is preserved
+//! under the all-gather and every sampler table converges to the state a
+//! single shared sampler would have reached (property-tested in
+//! tests/engine_determinism.rs).
+//!
+//! Accounting: per-worker phase timers are merged at scale 1/W_eff, so a
+//! threaded run's `train_wall_s` stays wall-clock-equivalent (ideal
+//! scaling) instead of summed CPU-seconds; sync rounds book under `sync`.
+
+use std::sync::{Barrier, Mutex};
+
+use crate::config::RunConfig;
+use crate::data::loader::EpochLoader;
+use crate::data::SplitDataset;
+use crate::runtime::ModelRuntime;
+use crate::sampler::{self, Sampler, ShardObservations};
+use crate::util::timer::{phase, PhaseTimers};
+use crate::util::Pcg64;
+
+use super::super::trainer::TrainResult;
+use super::pipeline::{ObservationRoute, StepCtx, StepPipeline, StepStats};
+use super::{assemble_result, evaluate};
+
+/// Everything one worker hands back at the epoch boundary.
+struct WorkerReport {
+    timers: PhaseTimers,
+    stats: StepStats,
+    class_bp_counts: Vec<u64>,
+    loss_sum: f64,
+    loss_cnt: u64,
+    observations: ShardObservations,
+}
+
+/// Shared state for the mid-epoch parameter-averaging rendezvous.
+struct SyncShared {
+    barrier: Barrier,
+    /// Per-worker parameter snapshots published before the barrier.
+    slots: Mutex<Vec<Option<Vec<f32>>>>,
+    /// The averaged parameters, written by the barrier leader.
+    avg: Mutex<Vec<f32>>,
+}
+
+/// Element-wise mean of parameter snapshots (empty iterator => empty vec).
+fn mean_params<'p>(snaps: impl Iterator<Item = &'p Vec<f32>>) -> Vec<f32> {
+    let mut avg: Vec<f32> = Vec::new();
+    let mut count = 0usize;
+    for p in snaps {
+        if avg.is_empty() {
+            avg.extend_from_slice(p);
+        } else {
+            for (a, b) in avg.iter_mut().zip(p.iter()) {
+                *a += *b;
+            }
+        }
+        count += 1;
+    }
+    if count > 0 {
+        let inv = 1.0 / count as f32;
+        for a in avg.iter_mut() {
+            *a *= inv;
+        }
+    }
+    avg
+}
+
+pub(super) fn run(
+    cfg: &RunConfig,
+    rt: &mut dyn ModelRuntime,
+    data: &SplitDataset,
+    canonical: &mut dyn Sampler,
+) -> anyhow::Result<TrainResult> {
+    let workers = cfg.workers;
+    rt.init(cfg.seed as i32)?;
+
+    // Replicas spawn AFTER init so every worker starts from the same
+    // parameters.
+    let mut replicas: Vec<Box<dyn ModelRuntime + Send>> = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        replicas.push(rt.spawn_replica()?);
+    }
+    let train_ds = &data.train;
+    let n = train_ds.n;
+    // Worker sampler replicas are rebuilt from the config; refuse a
+    // mismatched custom sampler rather than silently selecting with the
+    // wrong method (the canonical only drives epoch-start pruning).
+    let mut worker_samplers: Vec<Box<dyn Sampler>> =
+        (0..workers).map(|_| sampler::build(&cfg.sampler, n, cfg.epochs)).collect();
+    anyhow::ensure!(
+        worker_samplers[0].name() == canonical.name(),
+        "threaded_workers rebuilds worker samplers from cfg.sampler ({:?}), which does \
+         not match the provided sampler ({:?}); construct the sampler from the config \
+         (coordinator::train) or disable threaded_workers",
+        worker_samplers[0].name(),
+        canonical.name()
+    );
+
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut timers = PhaseTimers::new();
+    let mut stats = StepStats::default();
+    let mut class_bp_counts = vec![0u64; train_ds.classes.max(1)];
+
+    let total_steps = cfg.epochs * n.div_ceil(cfg.meta_batch);
+    let mut base_step = 0usize;
+
+    let mut loss_curve = Vec::with_capacity(cfg.epochs);
+    let mut eval_curve = Vec::new();
+    let mut bp_at_eval = Vec::new();
+
+    for epoch in 0..cfg.epochs {
+        // ---- set-level selection, replayed on every replica ------------
+        // Identical tables + an identical (cloned) RNG stream reproduce
+        // the canonical's epoch-start decisions on each worker sampler.
+        let prune_rng = rng.fork(0x5e1ec7 + epoch as u64);
+        let kept = timers.time(phase::PRUNE, || {
+            let kept = canonical.on_epoch_start(epoch, &mut prune_rng.clone());
+            for ws in worker_samplers.iter_mut() {
+                let _ = ws.on_epoch_start(epoch, &mut prune_rng.clone());
+            }
+            kept
+        });
+        anyhow::ensure!(!kept.is_empty(), "sampler kept nothing at epoch {epoch}");
+
+        // ---- disjoint round-robin shards over effective workers --------
+        // Clamping to kept.len() keeps every shard non-empty AND disjoint
+        // (the §D.5 merge relies on disjointness); surplus replicas sit
+        // the epoch out and are re-synced at the boundary.
+        let eff = workers.min(kept.len()).max(1);
+        let shards: Vec<Vec<u32>> = (0..eff)
+            .map(|w| kept.iter().copied().skip(w).step_by(eff).collect())
+            .collect();
+        let mut inputs: Vec<(EpochLoader, Pcg64)> = Vec::with_capacity(eff);
+        for (w, shard) in shards.iter().enumerate() {
+            let mut wrng = rng.fork(0xd15c0 + w as u64);
+            let loader = EpochLoader::new(shard, cfg.meta_batch, &mut wrng);
+            worker_samplers[w].begin_shard(shard);
+            inputs.push((loader, wrng));
+        }
+
+        // Mid-epoch sync schedule: only rounds every worker can reach
+        // (ragged shards stop syncing after the shortest one is done).
+        let min_batches = inputs.iter().map(|(l, _)| l.num_batches()).min().unwrap_or(0);
+        let n_syncs = if cfg.sync_every > 0 { min_batches / cfg.sync_every } else { 0 };
+
+        let shared = SyncShared {
+            barrier: Barrier::new(eff),
+            slots: Mutex::new((0..eff).map(|_| None).collect()),
+            avg: Mutex::new(Vec::new()),
+        };
+
+        // ---- run the epoch on real threads -----------------------------
+        let epoch_base = base_step;
+        let reports: Vec<anyhow::Result<WorkerReport>> = std::thread::scope(|scope| {
+            let shared = &shared;
+            let mut handles = Vec::with_capacity(eff);
+            for (w, ((replica, wsampler), (loader, wrng))) in replicas[..eff]
+                .iter_mut()
+                .zip(worker_samplers[..eff].iter_mut())
+                .zip(inputs.into_iter())
+                .enumerate()
+            {
+                handles.push(scope.spawn(move || {
+                    run_worker(
+                        cfg,
+                        train_ds,
+                        epoch,
+                        w,
+                        eff,
+                        epoch_base,
+                        total_steps,
+                        n_syncs,
+                        shared,
+                        replica.as_mut(),
+                        wsampler.as_mut(),
+                        loader,
+                        wrng,
+                    )
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow::anyhow!("threaded worker panicked")))
+                })
+                .collect()
+        });
+        let reports: Vec<WorkerReport> =
+            reports.into_iter().collect::<anyhow::Result<Vec<_>>>()?;
+
+        // ---- reduce worker accounting ----------------------------------
+        // Workers ran concurrently: merge their phase times at 1/eff so
+        // totals stay wall-clock-equivalent under ideal scaling.
+        let mut epoch_loss_sum = 0.0f64;
+        let mut epoch_loss_cnt = 0u64;
+        for r in &reports {
+            timers.merge_scaled(&r.timers, 1.0 / eff as f64);
+            stats.accumulate(&r.stats);
+            for (t, &c) in class_bp_counts.iter_mut().zip(&r.class_bp_counts) {
+                *t += c;
+            }
+            epoch_loss_sum += r.loss_sum;
+            epoch_loss_cnt += r.loss_cnt;
+            base_step += r.stats.steps as usize;
+        }
+
+        // ---- §D.5 sync round: tables + parameters ----------------------
+        timers.time(phase::SYNC, || -> anyhow::Result<()> {
+            // All-gather shard observation logs: the canonical gets every
+            // log, every replica (including idle ones) gets every peer's
+            // (its own is already applied).
+            for (w, r) in reports.iter().enumerate() {
+                canonical.merge_observations(&r.observations, epoch);
+                for (v, ws) in worker_samplers.iter_mut().enumerate() {
+                    if v != w {
+                        ws.merge_observations(&r.observations, epoch);
+                    }
+                }
+            }
+            // Average the ACTIVE replicas' parameters, install everywhere
+            // (idle replicas included) and into the main runtime for eval.
+            let mut snaps: Vec<Vec<f32>> = Vec::with_capacity(eff);
+            for replica in replicas[..eff].iter_mut() {
+                snaps.push(replica.get_params()?);
+            }
+            let avg = mean_params(snaps.iter());
+            for replica in replicas.iter_mut() {
+                replica.set_params(&avg)?;
+            }
+            rt.set_params(&avg)?;
+            Ok(())
+        })?;
+
+        loss_curve.push(if epoch_loss_cnt > 0 {
+            epoch_loss_sum / epoch_loss_cnt as f64
+        } else {
+            f64::NAN
+        });
+
+        // ---- eval ------------------------------------------------------
+        let at_eval_point = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
+        if at_eval_point || epoch + 1 == cfg.epochs {
+            let s = timers.time(phase::EVAL, || evaluate(rt, data))?;
+            eval_curve.push((epoch, s.loss, s.accuracy));
+            bp_at_eval.push(stats.bp_samples);
+        }
+    }
+
+    Ok(assemble_result(
+        cfg,
+        canonical.name(),
+        rt,
+        &timers,
+        &stats,
+        loss_curve,
+        eval_curve,
+        bp_at_eval,
+        class_bp_counts,
+    ))
+}
+
+/// One worker's epoch: step the shard, rendezvous at each scheduled sync.
+///
+/// Failures do not abort the barrier schedule — panics are caught and
+/// demoted to errors, and a failed worker keeps publishing its (stale)
+/// parameters at every remaining sync so peers never deadlock; the error
+/// surfaces after the epoch joins.
+#[allow(clippy::too_many_arguments)]
+fn run_worker(
+    cfg: &RunConfig,
+    train_ds: &crate::data::TensorDataset,
+    epoch: usize,
+    w: usize,
+    eff_workers: usize,
+    epoch_base: usize,
+    total_steps: usize,
+    n_syncs: usize,
+    shared: &SyncShared,
+    replica: &mut dyn ModelRuntime,
+    wsampler: &mut dyn Sampler,
+    mut loader: EpochLoader,
+    mut wrng: Pcg64,
+) -> anyhow::Result<WorkerReport> {
+    let mut pipeline = StepPipeline::new(train_ds.classes);
+    let mut timers = PhaseTimers::new();
+    let mut loss_sum = 0.0f64;
+    let mut loss_cnt = 0u64;
+    let mut meta = Vec::new();
+    let mut local_step = 0usize;
+    let mut first_err: Option<anyhow::Error> = None;
+
+    for sync_round in 0..=n_syncs {
+        let target = if sync_round < n_syncs {
+            (sync_round + 1) * cfg.sync_every
+        } else {
+            usize::MAX
+        };
+        if first_err.is_none() {
+            // Catch panics so a poisoned step cannot strand peers at the
+            // barrier; the worker degrades to sync-only participation.
+            let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || -> anyhow::Result<()> {
+                    while local_step < target {
+                        if !loader.next_batch_into(&mut meta) {
+                            break;
+                        }
+                        // Global-step approximation for the LR schedule:
+                        // the sim interleaves workers round-robin, so
+                        // local step r of worker w lands near global step
+                        // r*W + w.
+                        let step_idx = epoch_base + local_step * eff_workers + w;
+                        let ctx = StepCtx {
+                            cfg,
+                            train_ds,
+                            epoch,
+                            lr: cfg.lr.lr_at(step_idx, total_steps) as f32,
+                        };
+                        let mut route = ObservationRoute::Replica;
+                        let step_mean = pipeline.run_step(
+                            &ctx,
+                            replica,
+                            wsampler,
+                            &meta,
+                            &mut wrng,
+                            &mut timers,
+                            None,
+                            &mut route,
+                        )?;
+                        loss_sum += step_mean;
+                        loss_cnt += 1;
+                        local_step += 1;
+                    }
+                    Ok(())
+                },
+            ));
+            match stepped {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = Some(e),
+                Err(_) => {
+                    first_err = Some(anyhow::anyhow!("worker {w} panicked mid-step"));
+                }
+            }
+        }
+        if sync_round < n_syncs {
+            sync_params(shared, w, replica, &mut timers);
+        }
+    }
+
+    let observations = wsampler.export_observations();
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(WorkerReport {
+            timers,
+            stats: pipeline.stats.clone(),
+            class_bp_counts: pipeline.class_bp_counts,
+            loss_sum,
+            loss_cnt,
+            observations,
+        }),
+    }
+}
+
+/// One mid-epoch parameter-averaging rendezvous: publish → barrier →
+/// leader averages → barrier → install. Always runs to completion so the
+/// barrier schedule stays aligned across workers.
+fn sync_params(
+    shared: &SyncShared,
+    w: usize,
+    replica: &mut dyn ModelRuntime,
+    timers: &mut PhaseTimers,
+) {
+    let t0 = std::time::Instant::now();
+    let params = replica.get_params().ok();
+    shared.slots.lock().unwrap()[w] = params;
+    let wait = shared.barrier.wait();
+    if wait.is_leader() {
+        let slots = shared.slots.lock().unwrap();
+        *shared.avg.lock().unwrap() = mean_params(slots.iter().flatten());
+    }
+    shared.barrier.wait();
+    {
+        let avg = shared.avg.lock().unwrap();
+        if !avg.is_empty() {
+            let _ = replica.set_params(&avg);
+        }
+    }
+    timers.add(phase::SYNC, t0.elapsed());
+}

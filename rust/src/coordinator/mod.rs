@@ -1,9 +1,12 @@
-//! L3 coordination: the training loop (trainer), cost accounting, and the
-//! trial/sweep drivers used by the experiment benches.
+//! L3 coordination: the pipelined execution engine, the trainer facade,
+//! cost accounting, and the trial/sweep drivers used by the experiment
+//! benches.
 
 pub mod accounting;
 pub mod checkpoint;
+pub mod engine;
 pub mod trainer;
 
 pub use accounting::{predicted_saved_time_pct, saved_time_pct, CostSummary};
+pub use engine::{Engine, Stage, StageObserver, StepPipeline};
 pub use trainer::{evaluate, run_trials, train, train_with_sampler, EvalStats, TrainResult, TrialSummary};

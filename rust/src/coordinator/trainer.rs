@@ -19,22 +19,24 @@
 //! and a standard small-scale approximation of true gradient accumulation
 //! (documented in DESIGN.md §3).
 //!
-//! Data-parallel simulation (`workers > 1`): the kept set is sharded
-//! round-robin across W simulated workers which take turns stepping; each
-//! worker's loss observations are buffered locally and merged into the
-//! sampler at epoch boundaries — the paper's "additional round of
-//! synchronization" for ESWP pre-training (§D.5). Wall-clock is measured
-//! sequentially and reported both raw and /W (ideal scaling).
+//! Execution lives in `coordinator::engine`: a [`StepPipeline`]
+//! decomposes each step into explicit stages and an [`Engine`] runs them
+//! single-threaded (`workers == 1`), as a sequential data-parallel
+//! simulation (`workers > 1`), or across real `std::thread` worker
+//! replicas (`threaded_workers`) with §D.5 synchronization rounds. The
+//! stage contract and sync model are specified in DESIGN.md §2.
+//!
+//! [`StepPipeline`]: super::engine::StepPipeline
+//! [`Engine`]: super::engine::Engine
 
 use crate::config::RunConfig;
-use crate::data::loader::EpochLoader;
 use crate::data::SplitDataset;
 use crate::runtime::{BatchBuf, ModelRuntime};
 use crate::sampler::{self, Sampler};
-use crate::util::timer::{phase, PhaseTimers};
-use crate::util::Pcg64;
+use crate::util::timer::PhaseTimers;
 
 use super::accounting::CostSummary;
+use super::engine::Engine;
 
 #[derive(Clone, Debug, Default)]
 pub struct EvalStats {
@@ -81,223 +83,16 @@ pub fn train(
 }
 
 /// Train with an externally-constructed sampler (ablations, tests).
+///
+/// Thin wrapper over [`Engine`]: construct one directly to install a
+/// per-stage accounting hook or to inspect sampler state after the run.
 pub fn train_with_sampler(
     cfg: &RunConfig,
     rt: &mut dyn ModelRuntime,
     data: &SplitDataset,
-    mut sampler: Box<dyn Sampler>,
+    sampler: Box<dyn Sampler>,
 ) -> anyhow::Result<TrainResult> {
-    let mut rng = Pcg64::new(cfg.seed);
-    rt.init(cfg.seed as i32)?;
-
-    let mut timers = PhaseTimers::new();
-    let mut meta_buf = BatchBuf::new();
-    let mut mini_buf = BatchBuf::new();
-    let train_ds = &data.train;
-    let n = train_ds.n;
-    let classes = train_ds.classes.max(1);
-    let mut class_bp_counts = vec![0u64; classes];
-
-    // LR horizon: full-data steps so every method sees the same schedule
-    // (pruning shortens the run, not the schedule — matches InfoBatch).
-    let total_steps = cfg.epochs * n.div_ceil(cfg.meta_batch);
-    let mut step_idx = 0usize;
-
-    let mut fp_samples = 0u64;
-    let mut bp_samples = 0u64;
-    let mut bp_passes = 0u64;
-    let mut steps = 0u64;
-    let mut loss_curve = Vec::with_capacity(cfg.epochs);
-    let mut eval_curve = Vec::new();
-    let mut bp_at_eval = Vec::new();
-
-    let workers = cfg.workers.max(1);
-
-    for epoch in 0..cfg.epochs {
-        // ---- set-level selection -------------------------------------
-        let kept = timers.time(phase::PRUNE, || sampler.on_epoch_start(epoch, &mut rng));
-        anyhow::ensure!(!kept.is_empty(), "sampler kept nothing at epoch {epoch}");
-
-        // ---- build per-worker loaders ---------------------------------
-        let mut loaders: Vec<EpochLoader> = if workers == 1 {
-            vec![EpochLoader::new(&kept, cfg.meta_batch, &mut rng)]
-        } else {
-            // Shard round-robin; every worker sees a disjoint subset.
-            (0..workers)
-                .map(|w| {
-                    let shard: Vec<u32> =
-                        kept.iter().copied().skip(w).step_by(workers).collect();
-                    let shard = if shard.is_empty() { kept.clone() } else { shard };
-                    let mut wrng = rng.fork(0xd15c0 + w as u64);
-                    EpochLoader::new(&shard, cfg.meta_batch, &mut wrng)
-                })
-                .collect()
-        };
-        // Deferred sampler observations per worker (distributed sim).
-        let mut sync_buf: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
-
-        let mut epoch_loss_sum = 0.0f64;
-        let mut epoch_loss_cnt = 0u64;
-
-        // ---- step loop: round-robin across workers --------------------
-        'rounds: loop {
-            let mut progressed = false;
-            for w in 0..workers {
-                let Some(meta) = loaders[w].next_batch() else { continue };
-                progressed = true;
-
-                timers.time(phase::DATA, || meta_buf.fill(train_ds, &meta));
-
-                // Scoring FP (batch-level methods during active epochs).
-                let selecting = cfg.mini_batch < cfg.meta_batch;
-                if selecting && sampler.needs_meta_losses(epoch) {
-                    let losses = timers.time(phase::SCORING_FP, || {
-                        rt.loss_fwd(meta_buf.x(train_ds), &meta_buf.y, meta.len())
-                    })?;
-                    fp_samples += meta.len() as u64;
-                    if workers == 1 {
-                        timers.time(phase::SELECT, || {
-                            sampler.observe_meta(&meta, &losses, epoch)
-                        });
-                    } else {
-                        // Distributed: defer to the sync round, but still
-                        // feed this worker's local view for selection.
-                        sampler.observe_meta(&meta, &losses, epoch);
-                        sync_buf.push((meta.clone(), losses));
-                    }
-                }
-
-                let sel = timers.time(phase::SELECT, || {
-                    sampler.select(&meta, cfg.mini_batch, epoch, &mut rng)
-                });
-                debug_assert!(!sel.indices.is_empty());
-
-                // Assemble the BP batch (reuse the meta buffer when the
-                // selection is the identity — the common set-level path).
-                let bsz = sel.indices.len();
-                let (buf, y_ref): (&BatchBuf, &Vec<i32>) = if sel.indices == meta {
-                    (&meta_buf, &meta_buf.y)
-                } else {
-                    timers.time(phase::DATA, || mini_buf.fill(train_ds, &sel.indices));
-                    (&mini_buf, &mini_buf.y)
-                };
-
-                let lr = cfg.lr.lr_at(step_idx, total_steps) as f32;
-
-                // Gradient accumulation: chunk into micro-batches.
-                let micro = if cfg.micro_batch > 0 && cfg.micro_batch < bsz {
-                    cfg.micro_batch
-                } else {
-                    bsz
-                };
-                let mut all_losses = Vec::with_capacity(bsz);
-                let mut mean_acc = 0.0f64;
-                let mut off = 0usize;
-                let x_len = train_ds.x_len();
-                let y_len = train_ds.y_dim;
-                while off < bsz {
-                    let m = micro.min(bsz - off);
-                    let out = timers.time(phase::TRAIN_BP, || {
-                        let x = match buf.x(train_ds) {
-                            crate::runtime::BatchX::F32(v) => crate::runtime::BatchX::F32(
-                                &v[off * x_len..(off + m) * x_len],
-                            ),
-                            crate::runtime::BatchX::I32(v) => crate::runtime::BatchX::I32(
-                                &v[off * x_len..(off + m) * x_len],
-                            ),
-                        };
-                        rt.train_step(
-                            x,
-                            &y_ref[off * y_len..(off + m) * y_len],
-                            &sel.weights[off..off + m],
-                            lr,
-                            m,
-                        )
-                    })?;
-                    bp_passes += 1;
-                    bp_samples += m as u64;
-                    mean_acc += out.mean_loss as f64 * m as f64;
-                    all_losses.extend_from_slice(&out.losses);
-                    off += m;
-                }
-                let step_mean = mean_acc / bsz as f64;
-                epoch_loss_sum += step_mean;
-                epoch_loss_cnt += 1;
-
-                // Per-class BP counts (Fig. 9).
-                if train_ds.y_dim == 1 && train_ds.classes > 0 {
-                    for &i in &sel.indices {
-                        class_bp_counts[train_ds.clean_class[i as usize] as usize] += 1;
-                    }
-                }
-
-                // Free training losses back to the sampler.
-                if workers == 1 {
-                    timers.time(phase::SELECT, || {
-                        sampler.observe_train(&sel.indices, &all_losses, epoch)
-                    });
-                } else {
-                    sync_buf.push((sel.indices.clone(), all_losses));
-                }
-
-                step_idx += 1;
-                steps += 1;
-            }
-            if !progressed {
-                break 'rounds;
-            }
-        }
-
-        // ---- distributed score synchronization ------------------------
-        if workers > 1 && !sync_buf.is_empty() {
-            timers.time(phase::SELECT, || {
-                for (idx, losses) in sync_buf.drain(..) {
-                    sampler.observe_train(&idx, &losses, epoch);
-                }
-            });
-        }
-
-        loss_curve.push(if epoch_loss_cnt > 0 {
-            epoch_loss_sum / epoch_loss_cnt as f64
-        } else {
-            f64::NAN
-        });
-
-        // ---- eval ------------------------------------------------------
-        let at_eval_point = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
-        if at_eval_point || epoch + 1 == cfg.epochs {
-            let stats = timers.time(phase::EVAL, || evaluate(rt, data))?;
-            eval_curve.push((epoch, stats.loss, stats.accuracy));
-            bp_at_eval.push(bp_samples);
-        }
-    }
-
-    let final_eval = eval_curve
-        .last()
-        .map(|&(_, l, a)| EvalStats { loss: l, accuracy: a })
-        .unwrap_or_default();
-    let cost = CostSummary::from_run(
-        &timers,
-        fp_samples,
-        bp_samples,
-        bp_passes,
-        rt.flops_per_sample_fwd(),
-    );
-
-    Ok(TrainResult {
-        name: cfg.name.clone(),
-        sampler: sampler.name().to_string(),
-        seed: cfg.seed,
-        epochs: cfg.epochs,
-        steps,
-        loss_curve,
-        eval_curve,
-        final_eval,
-        timers,
-        cost,
-        class_bp_counts,
-        bp_at_eval,
-    })
+    Engine::new(cfg, rt, data, sampler).run()
 }
 
 /// Evaluate on the held-out set, chunked to the runtime's eval batch size
@@ -363,6 +158,7 @@ impl TrialSummary {
             total.select_s += r.cost.select_s;
             total.data_s += r.cost.data_s;
             total.prune_s += r.cost.prune_s;
+            total.sync_s += r.cost.sync_s;
             total.eval_s += r.cost.eval_s;
         }
         total

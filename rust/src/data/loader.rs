@@ -29,54 +29,100 @@ impl EpochLoader {
         self.order.len().div_ceil(self.meta_batch)
     }
 
-    /// Next meta-batch of exactly `meta_batch` indices, or None when done.
-    pub fn next_batch(&mut self) -> Option<Vec<u32>> {
+    /// Fill `out` with the next meta-batch of exactly `meta_batch` indices;
+    /// returns false when the epoch is exhausted. The engine's hot path —
+    /// reuses the caller's buffer so steady-state iteration allocates
+    /// nothing.
+    pub fn next_batch_into(&mut self, out: &mut Vec<u32>) -> bool {
         if self.cursor >= self.order.len() {
-            return None;
+            return false;
         }
-        let mut batch = Vec::with_capacity(self.meta_batch);
+        out.clear();
+        out.reserve(self.meta_batch);
         for k in 0..self.meta_batch {
             // Wrap around for the ragged tail.
-            batch.push(self.order[(self.cursor + k) % self.order.len()]);
+            out.push(self.order[(self.cursor + k) % self.order.len()]);
         }
         self.cursor += self.meta_batch;
-        Some(batch)
+        true
+    }
+
+    /// Allocating convenience wrapper around `next_batch_into`.
+    pub fn next_batch(&mut self) -> Option<Vec<u32>> {
+        let mut batch = Vec::with_capacity(self.meta_batch);
+        if self.next_batch_into(&mut batch) {
+            Some(batch)
+        } else {
+            None
+        }
     }
 }
 
-/// Background prefetcher: assembles the next meta-batch's index list on a
-/// worker thread while the current step executes. Index assembly is cheap,
-/// but the same channel pattern covers future gather-offload; it also
-/// keeps the trainer loop allocation-free on the happy path.
+/// Background prefetcher: streams a loader's meta-batches through a
+/// double-buffered channel so index assembly overlaps the training step.
+///
+/// Buffer lifecycle: `depth` (≥2) index buffers circulate between an
+/// `empty` channel (consumer → worker) and a `full` channel (worker →
+/// consumer). The worker fills each buffer with `next_batch_into`, so the
+/// steady state allocates nothing; consumers hand buffers back with
+/// [`Prefetcher::recycle`]. The same channel pattern covers future
+/// gather-offload (moving `BatchBuf::fill` off the compute thread).
 pub struct Prefetcher {
-    rx: Option<std::sync::mpsc::Receiver<Vec<u32>>>,
+    full_rx: Option<std::sync::mpsc::Receiver<Vec<u32>>>,
+    empty_tx: Option<std::sync::mpsc::SyncSender<Vec<u32>>>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Prefetcher {
-    pub fn spawn(kept: Vec<u32>, meta_batch: usize, mut rng: Pcg64, depth: usize) -> Self {
-        let (tx, rx) = std::sync::mpsc::sync_channel(depth.max(1));
+    /// Stream an existing loader (already shuffled — the caller's RNG has
+    /// been consumed exactly as in direct iteration, so prefetching never
+    /// perturbs determinism).
+    pub fn from_loader(mut loader: EpochLoader, depth: usize) -> Self {
+        let depth = depth.max(2); // double-buffered at minimum
+        let (full_tx, full_rx) = std::sync::mpsc::sync_channel::<Vec<u32>>(depth);
+        let (empty_tx, empty_rx) = std::sync::mpsc::sync_channel::<Vec<u32>>(depth);
+        for _ in 0..depth {
+            let _ = empty_tx.send(Vec::new());
+        }
         let handle = std::thread::spawn(move || {
-            let mut loader = EpochLoader::new(&kept, meta_batch, &mut rng);
-            while let Some(batch) = loader.next_batch() {
-                if tx.send(batch).is_err() {
+            while let Ok(mut buf) = empty_rx.recv() {
+                if !loader.next_batch_into(&mut buf) {
+                    return; // epoch exhausted
+                }
+                if full_tx.send(buf).is_err() {
                     return; // consumer dropped
                 }
             }
         });
-        Prefetcher { rx: Some(rx), handle: Some(handle) }
+        Prefetcher { full_rx: Some(full_rx), empty_tx: Some(empty_tx), handle: Some(handle) }
     }
 
+    /// Shuffle + stream a kept set with an owned RNG.
+    pub fn spawn(kept: Vec<u32>, meta_batch: usize, mut rng: Pcg64, depth: usize) -> Self {
+        let loader = EpochLoader::new(&kept, meta_batch, &mut rng);
+        Self::from_loader(loader, depth)
+    }
+
+    /// Next prefetched meta-batch, or None when the epoch is done.
     pub fn next(&mut self) -> Option<Vec<u32>> {
-        self.rx.as_ref().and_then(|rx| rx.recv().ok())
+        self.full_rx.as_ref().and_then(|rx| rx.recv().ok())
+    }
+
+    /// Hand a consumed buffer back for reuse. Optional — dropping the
+    /// buffer instead merely costs the worker a fresh allocation.
+    pub fn recycle(&mut self, buf: Vec<u32>) {
+        if let Some(tx) = &self.empty_tx {
+            let _ = tx.try_send(buf);
+        }
     }
 }
 
 impl Drop for Prefetcher {
     fn drop(&mut self) {
-        // Close the channel first so a worker blocked on send() observes
-        // the disconnect, then join.
-        drop(self.rx.take());
+        // Close both channels first so a worker blocked on either side
+        // observes the disconnect, then join.
+        drop(self.full_rx.take());
+        drop(self.empty_tx.take());
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -86,6 +132,8 @@ impl Drop for Prefetcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
 
     #[test]
     fn covers_all_indices_once_when_divisible() {
@@ -119,6 +167,56 @@ mod tests {
     }
 
     #[test]
+    fn ragged_wraparound_property() {
+        // Every kept index appears >= 1x per epoch; the pad (duplicate
+        // appearances) is bounded by meta_batch - 1 in total.
+        check("loader ragged wraparound", 120, |g| {
+            let kept_n = g.usize_in(1, 300);
+            let meta_batch = g.usize_in(1, 64);
+            let kept: Vec<u32> = (0..kept_n as u32).map(|i| i * 3 + 1).collect();
+            let mut loader = EpochLoader::new(&kept, meta_batch, g.rng());
+            let mut counts = std::collections::BTreeMap::<u32, usize>::new();
+            let mut batches = 0usize;
+            let mut buf = Vec::new();
+            while loader.next_batch_into(&mut buf) {
+                prop_assert!(buf.len() == meta_batch, "short batch {}", buf.len());
+                for &i in &buf {
+                    *counts.entry(i).or_default() += 1;
+                }
+                batches += 1;
+            }
+            prop_assert!(batches == kept_n.div_ceil(meta_batch), "batches {batches}");
+            for &i in &kept {
+                prop_assert!(counts.contains_key(&i), "index {i} never emitted");
+            }
+            let total: usize = counts.values().sum();
+            let padded = total - kept_n;
+            prop_assert!(
+                padded <= meta_batch.saturating_sub(1),
+                "padded {padded} > meta_batch-1 ({})",
+                meta_batch - 1
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn next_batch_into_matches_next_batch() {
+        let kept: Vec<u32> = (0..50).collect();
+        let mut a = EpochLoader::new(&kept, 8, &mut Pcg64::new(9));
+        let mut b = EpochLoader::new(&kept, 8, &mut Pcg64::new(9));
+        let mut buf = Vec::new();
+        loop {
+            let via_into = if a.next_batch_into(&mut buf) { Some(buf.clone()) } else { None };
+            let via_alloc = b.next_batch();
+            assert_eq!(via_into, via_alloc);
+            if via_alloc.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
     fn shuffles_between_epochs() {
         let kept: Vec<u32> = (0..32).collect();
         let mut rng = Pcg64::new(3);
@@ -145,10 +243,33 @@ mod tests {
         let mut pf = Prefetcher::spawn(kept.clone(), 8, Pcg64::new(5), 2);
         let mut seen = Vec::new();
         while let Some(b) = pf.next() {
-            seen.extend(b);
+            seen.extend(b.iter().copied());
+            pf.recycle(b);
         }
         seen.sort_unstable();
         assert_eq!(seen, kept);
+    }
+
+    #[test]
+    fn prefetcher_matches_direct_iteration_exactly() {
+        // Same loader state streamed through the channel == direct calls.
+        let kept: Vec<u32> = (0..100).collect();
+        let rng = Pcg64::new(8);
+        let direct_loader = EpochLoader::new(&kept, 16, &mut rng.clone());
+        let mut direct = Vec::new();
+        {
+            let mut l = direct_loader;
+            while let Some(b) = l.next_batch() {
+                direct.push(b);
+            }
+        }
+        let loader = EpochLoader::new(&kept, 16, &mut rng.clone());
+        let mut pf = Prefetcher::from_loader(loader, 2);
+        let mut streamed = Vec::new();
+        while let Some(b) = pf.next() {
+            streamed.push(b);
+        }
+        assert_eq!(direct, streamed);
     }
 
     #[test]

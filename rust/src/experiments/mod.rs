@@ -100,6 +100,7 @@ pub fn total_cost(rs: &[TrainResult]) -> crate::coordinator::CostSummary {
         total.select_s += c.select_s;
         total.data_s += c.data_s;
         total.prune_s += c.prune_s;
+        total.sync_s += c.sync_s;
         total.eval_s += c.eval_s;
     }
     total

@@ -2,7 +2,8 @@
 //! paper experiments.
 //!
 //! Subcommands:
-//!   train        --config <run.toml> [--trials N]
+//!   train        --config <run.toml> [--trials N] [--workers W]
+//!                [--threaded-workers] [--sync-every K]
 //!   list-models                       (artifact inventory)
 //!   experiment   --id <table2|table3|table4|table5|fig4|fig5|fig6|fig7|
 //!                      fig1|fig9|fig10|tab6|tab7|tab8|theory> [--full]
@@ -21,7 +22,8 @@ const USAGE: &str = "\
 evosample — Data-Efficient Training by Evolved Sampling (ES/ESWP)
 
 USAGE:
-  evosample train --config <run.toml> [--trials N]
+  evosample train --config <run.toml> [--trials N] [--workers W]
+                  [--threaded-workers] [--sync-every K]
   evosample list-models
   evosample experiment --id <table2|table3|table4|table5|fig1|fig4|fig5|
                              fig6|fig7|fig9|fig10|tab6|tab7|tab8|theory>
@@ -39,14 +41,37 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> anyhow::Result<()> {
-    let args = Args::parse(argv, &["full"]).map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
+    let args =
+        Args::parse(argv, &["full", "threaded-workers"]).map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
     match args.subcommand.as_str() {
         "train" => {
             let path = args
                 .flag("config")
                 .ok_or_else(|| anyhow::anyhow!("train needs --config <run.toml>"))?;
-            let cfg = config::load(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let mut cfg = config::load(path).map_err(|e| anyhow::anyhow!("{e}"))?;
             let trials = args.usize_flag("trials").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap_or(1);
+            // Engine knobs: CLI overrides on top of the TOML config.
+            if let Some(w) = args.usize_flag("workers").map_err(|e| anyhow::anyhow!("{e}"))? {
+                cfg.workers = w;
+            }
+            if args.has("threaded-workers") {
+                cfg.threaded_workers = true;
+            }
+            if let Some(k) = args.usize_flag("sync-every").map_err(|e| anyhow::anyhow!("{e}"))? {
+                cfg.sync_every = k;
+            }
+            cfg.validate().map_err(|e| anyhow::anyhow!("config: {e}"))?;
+            if cfg.threaded_workers {
+                println!(
+                    "engine: {} threaded workers (param sync every {})",
+                    cfg.workers,
+                    if cfg.sync_every > 0 {
+                        format!("{} steps", cfg.sync_every)
+                    } else {
+                        "epoch".to_string()
+                    }
+                );
+            }
             let mut rt = experiments::make_runtime(&cfg)?;
             let rec = Recorder::new("cli_train")?;
             for t in 0..trials {

@@ -23,6 +23,7 @@ pub fn result_to_json(r: &TrainResult) -> Json {
         ("scoring_s", num(r.cost.scoring_s)),
         ("train_s", num(r.cost.train_s)),
         ("select_s", num(r.cost.select_s)),
+        ("sync_s", num(r.cost.sync_s)),
         ("fp_samples", num(r.cost.fp_samples as f64)),
         ("bp_samples", num(r.cost.bp_samples as f64)),
         ("bp_passes", num(r.cost.bp_passes as f64)),

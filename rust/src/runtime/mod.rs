@@ -89,6 +89,19 @@ pub trait ModelRuntime {
 
     /// Analytic forward FLOPs per sample (for the accounting cost model).
     fn flops_per_sample_fwd(&self) -> u64;
+
+    /// Spawn an independent replica — own parameters and optimizer state,
+    /// initialized to a copy of this runtime's *current* state — for the
+    /// engine's threaded data-parallel mode. Replicas synchronize through
+    /// `get_params`/`set_params` averaging at sync rounds. Default:
+    /// graceful Unsupported for backends whose device state cannot be
+    /// duplicated across threads.
+    fn spawn_replica(&self) -> anyhow::Result<Box<dyn ModelRuntime + Send>> {
+        anyhow::bail!(
+            "this runtime does not support threaded replicas (spawn_replica \
+             unimplemented); run with threaded_workers = false"
+        )
+    }
 }
 
 /// Assemble a batch's features/labels from a dataset. Helper shared by the

@@ -14,6 +14,7 @@
 use super::{BatchX, ModelRuntime, StepOutput};
 use crate::util::Pcg64;
 
+#[derive(Clone)]
 pub struct NativeRuntime {
     in_dim: usize,
     hidden: usize,
@@ -248,6 +249,12 @@ impl ModelRuntime for NativeRuntime {
     fn flops_per_sample_fwd(&self) -> u64 {
         (2 * self.in_dim * self.hidden + 2 * self.hidden * self.classes) as u64
     }
+
+    fn spawn_replica(&self) -> anyhow::Result<Box<dyn ModelRuntime + Send>> {
+        // Pure host state: a replica is a deep copy (params, velocity,
+        // scratch) sharing nothing with the parent.
+        Ok(Box::new(self.clone()))
+    }
 }
 
 #[cfg(test)]
@@ -382,5 +389,26 @@ mod tests {
         let mut rt = NativeRuntime::new(4, 4, 2);
         rt.init(0).unwrap();
         assert!(rt.loss_fwd(BatchX::I32(&[1, 2]), &[0], 1).is_err());
+    }
+
+    #[test]
+    fn replica_starts_equal_then_diverges_independently() {
+        let mut rt = NativeRuntime::new(8, 8, 4);
+        rt.init(2).unwrap();
+        let mut replica = rt.spawn_replica().unwrap();
+        assert_eq!(rt.get_params().unwrap(), replica.get_params().unwrap());
+
+        let (x, y) = toy_batch(8, 8, 4, 4);
+        replica.train_step(BatchX::F32(&x), &y, &[1.0; 8], 0.1, 8).unwrap();
+        assert_ne!(
+            rt.get_params().unwrap(),
+            replica.get_params().unwrap(),
+            "replica steps must not touch the parent"
+        );
+
+        // Param-averaging round brings them back together.
+        let p = replica.get_params().unwrap();
+        rt.set_params(&p).unwrap();
+        assert_eq!(rt.get_params().unwrap(), p);
     }
 }

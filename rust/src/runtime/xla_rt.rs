@@ -266,6 +266,18 @@ impl ModelRuntime for XlaRuntime {
     fn flops_per_sample_fwd(&self) -> u64 {
         self.entry.flops_per_sample_fwd
     }
+
+    fn spawn_replica(&self) -> Result<Box<dyn ModelRuntime + Send>> {
+        // PJRT executables and device-resident literals are bound to the
+        // client that compiled them; duplicating them per thread would
+        // need one client (and one artifact re-compile) per replica.
+        bail!(
+            "XlaRuntime does not support threaded replicas: PJRT state is \
+             client-bound ({}); use the sequential data-parallel simulation \
+             (threaded_workers = false) or the NativeRuntime",
+            self.entry.name
+        )
+    }
 }
 
 /// The standalone L1 dual-EMA table-refresh kernel (`es_update_n{N}`),

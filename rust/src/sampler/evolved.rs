@@ -26,7 +26,7 @@
 //! low-weight samples stay reachable (Remark 1).
 
 use super::annealing::Annealing;
-use super::{weights, Sampler, Selection};
+use super::{weights, Sampler, Selection, ShardLog, ShardObservations};
 use crate::util::Pcg64;
 
 pub struct Evolved {
@@ -41,6 +41,8 @@ pub struct Evolved {
     /// Scratch for gathering meta-batch weights in `select` (no per-step
     /// allocation on the hot path).
     scratch: Vec<f32>,
+    /// Applied-observation buffer for worker-replica mode (§D.5 sync).
+    shard_log: ShardLog,
 }
 
 impl Evolved {
@@ -63,6 +65,7 @@ impl Evolved {
             s: vec![init; n],
             w: vec![init; n],
             scratch: Vec::new(),
+            shard_log: ShardLog::default(),
         }
     }
 
@@ -133,6 +136,7 @@ impl Sampler for Evolved {
     }
 
     fn observe_meta(&mut self, indices: &[u32], losses: &[f32], _epoch: usize) {
+        self.shard_log.record(indices, losses);
         self.update(indices, losses);
     }
 
@@ -141,8 +145,33 @@ impl Sampler for Evolved {
         // already flowed through observe_meta when selection was active;
         // only warm the tables here when selection is off.
         if !self.anneal.active(epoch) {
+            self.shard_log.record(indices, losses);
             self.update(indices, losses);
         }
+    }
+
+    fn begin_shard(&mut self, _shard: &[u32]) {
+        self.shard_log.begin();
+    }
+
+    fn export_observations(&mut self) -> ShardObservations {
+        self.shard_log.export()
+    }
+
+    fn merge_observations(&mut self, obs: &[(Vec<u32>, Vec<f32>)], _epoch: usize) {
+        // Peers export only observations they *applied* (the annealing
+        // gate already ran on the owning worker), so replay them raw —
+        // re-gating through observe_train would drop active-epoch scoring
+        // losses and leave the canonical tables stale. Not routed through
+        // the shard log: merged batches are peer state, not local
+        // observations, and must not be re-exported next round.
+        for (indices, losses) in obs {
+            self.update(indices, losses);
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 
     fn select(&mut self, meta: &[u32], mini: usize, epoch: usize, rng: &mut Pcg64) -> Selection {
@@ -327,5 +356,57 @@ mod tests {
     fn name_reflects_pruning() {
         assert_eq!(es(4).name(), "es");
         assert_eq!(Evolved::new(4, 10, 0.2, 0.8, 0.0, 0.2).name(), "eswp");
+    }
+
+    #[test]
+    fn export_then_merge_reproduces_replica_tables() {
+        // A replica that observed a shard, exported, and a fresh peer that
+        // merges the export must end with identical tables (the §D.5 sync
+        // contract). install_tables rebases both to a common start state.
+        let start_s: Vec<f32> = (0..8).map(|i| 0.1 * i as f32 + 0.05).collect();
+        let start_w: Vec<f32> = (0..8).map(|i| 0.2 * i as f32 + 0.01).collect();
+
+        let mut replica = es(8);
+        replica.install_tables(start_s.clone(), start_w.clone());
+        replica.begin_shard(&[0, 2, 4, 6]);
+        replica.observe_meta(&[0, 2], &[1.5, 0.3], 1);
+        replica.observe_meta(&[4, 6], &[2.0, 0.9], 1);
+        replica.observe_meta(&[0], &[0.7], 1);
+        let exported = replica.export_observations();
+        assert_eq!(exported.len(), 3);
+
+        let mut peer = es(8);
+        peer.install_tables(start_s, start_w);
+        peer.merge_observations(&exported, 1);
+        assert_eq!(peer.weights_table(), replica.weights_table());
+        assert_eq!(peer.scores_table(), replica.scores_table());
+        // The merge must not be re-exported by the peer.
+        peer.begin_shard(&[1, 3, 5, 7]);
+        peer.merge_observations(&[(vec![1], vec![4.0])], 1);
+        assert!(peer.export_observations().is_empty());
+    }
+
+    #[test]
+    fn merge_bypasses_annealing_gate() {
+        // Peer scoring losses from an active epoch must land even though
+        // observe_train would drop them.
+        let mut e = Evolved::new(4, 20, 0.2, 0.9, 0.05, 0.0);
+        let w0 = e.w[0];
+        assert!(e.anneal.active(1), "epoch 1 is active");
+        e.merge_observations(&[(vec![0], vec![5.0])], 1);
+        assert_ne!(e.w[0], w0, "merged observation applied raw");
+    }
+
+    #[test]
+    fn shard_log_only_buffers_applied_observations() {
+        let mut e = Evolved::new(4, 20, 0.2, 0.9, 0.05, 0.0);
+        e.begin_shard(&[0, 1]);
+        e.observe_train(&[0], &[5.0], 1); // active epoch: dropped, not logged
+        e.observe_train(&[1], &[5.0], 0); // annealed epoch: applied + logged
+        e.observe_meta(&[0], &[2.0], 1); // always applied + logged
+        let obs = e.export_observations();
+        assert_eq!(obs.len(), 2);
+        assert_eq!(obs[0].0, vec![1]);
+        assert_eq!(obs[1].0, vec![0]);
     }
 }

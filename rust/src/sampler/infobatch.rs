@@ -9,7 +9,7 @@
 //! Scores update from training-step losses — InfoBatch performs no extra
 //! forward pass (set-level only; "# of samples for BP" = (1−r) in Tab. 1).
 
-use super::{Sampler, Selection};
+use super::{Sampler, Selection, ShardLog, ShardObservations};
 use crate::util::Pcg64;
 
 pub struct InfoBatch {
@@ -20,6 +20,8 @@ pub struct InfoBatch {
     score: Vec<f32>,
     /// Rescale factor to apply to each sample's next gradient contribution.
     rescale: Vec<f32>,
+    /// Applied-observation buffer for worker-replica mode (§D.5 sync).
+    shard_log: ShardLog,
 }
 
 impl InfoBatch {
@@ -31,6 +33,7 @@ impl InfoBatch {
             active_end: epochs.saturating_sub(anneal_epochs),
             score: vec![f32::NAN; n],
             rescale: vec![1.0; n],
+            shard_log: ShardLog::default(),
         }
     }
 
@@ -87,6 +90,7 @@ impl Sampler for InfoBatch {
     }
 
     fn observe_train(&mut self, indices: &[u32], losses: &[f32], _epoch: usize) {
+        self.shard_log.record(indices, losses);
         for (&i, &l) in indices.iter().zip(losses) {
             self.score[i as usize] = l;
         }
@@ -96,6 +100,28 @@ impl Sampler for InfoBatch {
         // Set-level only: BP on the whole meta-batch with rescale weights.
         let weights = meta.iter().map(|&i| self.rescale[i as usize]).collect();
         Selection { indices: meta.to_vec(), weights }
+    }
+
+    fn begin_shard(&mut self, _shard: &[u32]) {
+        self.shard_log.begin();
+    }
+
+    fn export_observations(&mut self) -> ShardObservations {
+        self.shard_log.export()
+    }
+
+    fn merge_observations(&mut self, obs: &[(Vec<u32>, Vec<f32>)], _epoch: usize) {
+        // Last-loss score table: apply directly, skipping the local log so
+        // merged peer state is not re-exported.
+        for (indices, losses) in obs {
+            for (&i, &l) in indices.iter().zip(losses) {
+                self.score[i as usize] = l;
+            }
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 

@@ -10,7 +10,7 @@
 //! samples with loss below −ln(τ) are confidently fit and eligible for
 //! hiding regardless of rank. Documented as a substitution in DESIGN.md §3.
 
-use super::{Sampler, Selection};
+use super::{Sampler, Selection, ShardLog, ShardObservations};
 use crate::util::math;
 use crate::util::Pcg64;
 
@@ -22,6 +22,8 @@ pub struct Kakurenbo {
     last: Vec<f32>,
     /// Loss at the previous epoch (for the move-back rule).
     prev_epoch: Vec<f32>,
+    /// Applied-observation buffer for worker-replica mode (§D.5 sync).
+    shard_log: ShardLog,
 }
 
 impl Kakurenbo {
@@ -33,6 +35,7 @@ impl Kakurenbo {
             loss_threshold: -(conf_threshold.ln()),
             last: vec![f32::NAN; n],
             prev_epoch: vec![f32::NAN; n],
+            shard_log: ShardLog::default(),
         }
     }
 }
@@ -87,6 +90,7 @@ impl Sampler for Kakurenbo {
     }
 
     fn observe_train(&mut self, indices: &[u32], losses: &[f32], _epoch: usize) {
+        self.shard_log.record(indices, losses);
         for (&i, &l) in indices.iter().zip(losses) {
             self.last[i as usize] = l;
         }
@@ -94,6 +98,28 @@ impl Sampler for Kakurenbo {
 
     fn select(&mut self, meta: &[u32], _mini: usize, _epoch: usize, _rng: &mut Pcg64) -> Selection {
         Selection::unweighted(meta.to_vec())
+    }
+
+    fn begin_shard(&mut self, _shard: &[u32]) {
+        self.shard_log.begin();
+    }
+
+    fn export_observations(&mut self) -> ShardObservations {
+        self.shard_log.export()
+    }
+
+    fn merge_observations(&mut self, obs: &[(Vec<u32>, Vec<f32>)], _epoch: usize) {
+        // Apply directly (not via observe_train) so merged peer state is
+        // not re-exported from the local shard log.
+        for (indices, losses) in obs {
+            for (&i, &l) in indices.iter().zip(losses) {
+                self.last[i as usize] = l;
+            }
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 

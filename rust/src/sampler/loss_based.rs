@@ -46,6 +46,13 @@ impl Sampler for LossSampler {
         let picked = weights::sample_without_replacement(&self.scratch, mini, rng);
         Selection::unweighted(picked.into_iter().map(|p| meta[p as usize]).collect())
     }
+
+    // Batch-level only: selection state is per-shard-local by construction
+    // (a worker only selects within its own shard), so no §D.5 sync.
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
 }
 
 #[cfg(test)]

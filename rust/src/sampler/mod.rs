@@ -46,6 +46,41 @@ impl Selection {
     }
 }
 
+/// One shard's buffered loss observations, exported by a worker-replica
+/// sampler for the engine's §D.5 synchronization round: each entry is one
+/// (indices, losses) batch in observation order.
+pub type ShardObservations = Vec<(Vec<u32>, Vec<f32>)>;
+
+/// Observation buffer for worker-replica samplers. Inert until `begin`
+/// is called (zero overhead on the single-worker path); thereafter every
+/// `record` appends one observed batch for the next `export`.
+#[derive(Default, Debug)]
+pub struct ShardLog {
+    buf: Option<ShardObservations>,
+}
+
+impl ShardLog {
+    /// Start (or restart) buffering. Called by the engine when the sampler
+    /// becomes a worker-local replica.
+    pub fn begin(&mut self) {
+        if self.buf.is_none() {
+            self.buf = Some(Vec::new());
+        }
+    }
+
+    /// Record one applied observation batch (no-op unless begun).
+    pub fn record(&mut self, indices: &[u32], losses: &[f32]) {
+        if let Some(b) = &mut self.buf {
+            b.push((indices.to_vec(), losses.to_vec()));
+        }
+    }
+
+    /// Drain everything recorded since the last export.
+    pub fn export(&mut self) -> ShardObservations {
+        self.buf.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+}
+
 /// One dynamic sampling method. See module docs for the call protocol.
 pub trait Sampler: Send {
     fn name(&self) -> &'static str;
@@ -74,6 +109,40 @@ pub trait Sampler: Send {
 
     /// Dataset size this sampler was built for.
     fn n(&self) -> usize;
+
+    // ---- shard synchronization (§D.5, threaded engine) -----------------
+    //
+    // In threaded data-parallel mode every worker drives its own sampler
+    // replica over a disjoint index shard. At each sync round the engine
+    // all-gathers the observations every replica *applied* since the last
+    // round and replays them into the canonical sampler and all peers:
+    // because shards are disjoint, per-index update order is preserved and
+    // every table converges to the same state a single shared sampler
+    // would have reached.
+
+    /// Switch this sampler into worker-replica mode for `shard`: start
+    /// buffering applied observations for later export. Default: no-op
+    /// (samplers without cross-shard state need no synchronization).
+    fn begin_shard(&mut self, _shard: &[u32]) {}
+
+    /// Drain the observations buffered since `begin_shard` / the last
+    /// export — the payload of the sync round. Default: empty.
+    fn export_observations(&mut self) -> ShardObservations {
+        Vec::new()
+    }
+
+    /// Apply a peer shard's exported observations. The default replays
+    /// them through `observe_train`, matching the sequential simulation's
+    /// epoch-end merge; samplers whose `observe_train` gates on epoch
+    /// (e.g. ES annealing) override this to apply the updates raw.
+    fn merge_observations(&mut self, obs: &[(Vec<u32>, Vec<f32>)], epoch: usize) {
+        for (indices, losses) in obs {
+            self.observe_train(indices, losses, epoch);
+        }
+    }
+
+    /// Concrete-type access for table inspection (tests, analysis).
+    fn as_any(&self) -> &dyn std::any::Any;
 }
 
 /// Instantiate a sampler from config for a dataset of `n` samples trained
@@ -153,5 +222,32 @@ mod tests {
     fn selection_unweighted_has_unit_weights() {
         let sel = Selection::unweighted(vec![3, 1]);
         assert_eq!(sel.weights, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn shard_log_inert_until_begun() {
+        let mut log = ShardLog::default();
+        log.record(&[1, 2], &[0.5, 0.7]);
+        assert!(log.export().is_empty(), "recording before begin is a no-op");
+        log.begin();
+        log.record(&[1, 2], &[0.5, 0.7]);
+        log.record(&[3], &[0.1]);
+        let obs = log.export();
+        assert_eq!(obs.len(), 2);
+        assert_eq!(obs[0], (vec![1, 2], vec![0.5, 0.7]));
+        assert!(log.export().is_empty(), "export drains");
+        log.record(&[4], &[9.0]);
+        assert_eq!(log.export().len(), 1, "still buffering after export");
+    }
+
+    #[test]
+    fn default_shard_api_is_inert() {
+        let mut s = build(&SC::Uniform, 10, 4);
+        s.begin_shard(&[0, 1, 2]);
+        s.observe_train(&[0], &[1.0], 0);
+        assert!(s.export_observations().is_empty());
+        // Default merge replays observe_train; for Uniform that's a no-op,
+        // but it must not panic.
+        s.merge_observations(&[(vec![1], vec![2.0])], 0);
     }
 }

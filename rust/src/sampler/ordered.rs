@@ -46,6 +46,13 @@ impl Sampler for OrderedSgd {
         let top = math::top_k_indices(&self.scratch, mini);
         Selection::unweighted(top.into_iter().map(|p| meta[p as usize]).collect())
     }
+
+    // Batch-level only: selection state is per-shard-local by construction
+    // (a worker only selects within its own shard), so no §D.5 sync.
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
 }
 
 #[cfg(test)]

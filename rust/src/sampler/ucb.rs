@@ -5,7 +5,7 @@
 //! the sample was trained on — unseen/rarely-seen samples get wide bounds
 //! and are explored.
 
-use super::{Sampler, Selection};
+use super::{Sampler, Selection, ShardLog, ShardObservations};
 use crate::util::math;
 use crate::util::Pcg64;
 
@@ -16,6 +16,8 @@ pub struct Ucb {
     ema: Vec<f32>,
     seen: Vec<u32>,
     t: u64,
+    /// Applied-observation buffer for worker-replica mode (§D.5 sync).
+    shard_log: ShardLog,
 }
 
 impl Ucb {
@@ -28,7 +30,23 @@ impl Ucb {
             ema: vec![0.0; n],
             seen: vec![0; n],
             t: 1,
+            shard_log: ShardLog::default(),
         }
+    }
+
+    /// The EMA/visit-count update shared by local observation and the
+    /// §D.5 merge path.
+    fn apply(&mut self, indices: &[u32], losses: &[f32]) {
+        for (&i, &l) in indices.iter().zip(losses) {
+            let i = i as usize;
+            self.ema[i] = if self.seen[i] == 0 {
+                l
+            } else {
+                math::ema(self.ema[i], l, self.decay)
+            };
+            self.seen[i] += 1;
+        }
+        self.t += indices.len() as u64;
     }
 
     fn ucb_score(&self, i: usize) -> f32 {
@@ -63,20 +81,31 @@ impl Sampler for Ucb {
     }
 
     fn observe_train(&mut self, indices: &[u32], losses: &[f32], _epoch: usize) {
-        for (&i, &l) in indices.iter().zip(losses) {
-            let i = i as usize;
-            self.ema[i] = if self.seen[i] == 0 {
-                l
-            } else {
-                math::ema(self.ema[i], l, self.decay)
-            };
-            self.seen[i] += 1;
-        }
-        self.t += indices.len() as u64;
+        self.shard_log.record(indices, losses);
+        self.apply(indices, losses);
     }
 
     fn select(&mut self, meta: &[u32], _mini: usize, _epoch: usize, _rng: &mut Pcg64) -> Selection {
         Selection::unweighted(meta.to_vec())
+    }
+
+    fn begin_shard(&mut self, _shard: &[u32]) {
+        self.shard_log.begin();
+    }
+
+    fn export_observations(&mut self) -> ShardObservations {
+        self.shard_log.export()
+    }
+
+    fn merge_observations(&mut self, obs: &[(Vec<u32>, Vec<f32>)], _epoch: usize) {
+        // Apply directly so merged peer state is not re-exported.
+        for (indices, losses) in obs {
+            self.apply(indices, losses);
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 

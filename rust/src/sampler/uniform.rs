@@ -28,6 +28,10 @@ impl Sampler for Uniform {
     fn select(&mut self, meta: &[u32], _mini: usize, _epoch: usize, _rng: &mut Pcg64) -> Selection {
         Selection::unweighted(meta.to_vec())
     }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
 }
 
 /// Random set-level pruning: keep a uniform (1−r)·n subset each epoch,
@@ -59,6 +63,10 @@ impl Sampler for RandomPrune {
         let mut kept = rng.choose_k(self.n, keep.max(1));
         kept.sort_unstable();
         kept
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 

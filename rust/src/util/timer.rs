@@ -17,6 +17,9 @@ pub mod phase {
     pub const DATA: &str = "data";
     pub const EVAL: &str = "eval";
     pub const PRUNE: &str = "prune";
+    /// Data-parallel synchronization rounds (§D.5): parameter averaging
+    /// and cross-shard sampler-table merges in the threaded engine.
+    pub const SYNC: &str = "sync";
 }
 
 #[derive(Default, Clone, Debug)]
@@ -58,8 +61,16 @@ impl PhaseTimers {
 
     /// Merge another ledger into this one (distributed-sim reduction).
     pub fn merge(&mut self, other: &PhaseTimers) {
+        self.merge_scaled(other, 1.0);
+    }
+
+    /// Merge with durations scaled by `scale`. The threaded engine merges
+    /// each of W concurrent workers at scale 1/W so phase totals stay
+    /// wall-clock-equivalent (ideal scaling) rather than summed
+    /// CPU-seconds; counts are always summed unscaled.
+    pub fn merge_scaled(&mut self, other: &PhaseTimers, scale: f64) {
         for (k, v) in &other.acc {
-            *self.acc.entry(k.clone()).or_default() += *v;
+            *self.acc.entry(k.clone()).or_default() += v.mul_f64(scale);
         }
         for (k, v) in &other.counts {
             *self.counts.entry(k.clone()).or_default() += *v;
@@ -105,6 +116,17 @@ mod tests {
         let x = t.time("work", || 42);
         assert_eq!(x, 42);
         assert!(t.get("work") > Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_scaled_divides_durations_keeps_counts() {
+        let mut a = PhaseTimers::new();
+        let mut b = PhaseTimers::new();
+        b.add("x", Duration::from_millis(40));
+        b.add("x", Duration::from_millis(40));
+        a.merge_scaled(&b, 0.25);
+        assert_eq!(a.get("x"), Duration::from_millis(20));
+        assert_eq!(a.count("x"), 2);
     }
 
     #[test]

@@ -1,0 +1,571 @@
+//! Engine regression tests: the refactored execution engine must
+//! reproduce the pre-engine trainer bit-for-bit on the sequential paths,
+//! and the threaded mode must be deterministic and uphold the §D.5 sync
+//! model.
+//!
+//! `reference_train` below is the pre-refactor `train_with_sampler` loop,
+//! kept verbatim (modulo paths) as an executable specification. If the
+//! engine ever drifts from it on `workers == 1` or the sequential
+//! simulation, these tests fail with the exact curves in hand.
+
+use evosample::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
+use evosample::coordinator::{evaluate, train, CostSummary, TrainResult};
+use evosample::data::loader::EpochLoader;
+use evosample::data::{self, SplitDataset};
+use evosample::runtime::native::NativeRuntime;
+use evosample::runtime::{BatchBuf, BatchX, ModelRuntime};
+use evosample::sampler::evolved::Evolved;
+use evosample::sampler::{self, Sampler};
+use evosample::util::timer::{phase, PhaseTimers};
+use evosample::util::Pcg64;
+
+/// The pre-refactor trainer loop, verbatim (an executable specification).
+fn reference_train(
+    cfg: &RunConfig,
+    rt: &mut dyn ModelRuntime,
+    data: &SplitDataset,
+    mut sampler: Box<dyn Sampler>,
+) -> anyhow::Result<TrainResult> {
+    let mut rng = Pcg64::new(cfg.seed);
+    rt.init(cfg.seed as i32)?;
+
+    let mut timers = PhaseTimers::new();
+    let mut meta_buf = BatchBuf::new();
+    let mut mini_buf = BatchBuf::new();
+    let train_ds = &data.train;
+    let n = train_ds.n;
+    let classes = train_ds.classes.max(1);
+    let mut class_bp_counts = vec![0u64; classes];
+
+    let total_steps = cfg.epochs * n.div_ceil(cfg.meta_batch);
+    let mut step_idx = 0usize;
+
+    let mut fp_samples = 0u64;
+    let mut bp_samples = 0u64;
+    let mut bp_passes = 0u64;
+    let mut steps = 0u64;
+    let mut loss_curve = Vec::with_capacity(cfg.epochs);
+    let mut eval_curve = Vec::new();
+    let mut bp_at_eval = Vec::new();
+
+    let workers = cfg.workers.max(1);
+
+    for epoch in 0..cfg.epochs {
+        let kept = timers.time(phase::PRUNE, || sampler.on_epoch_start(epoch, &mut rng));
+        anyhow::ensure!(!kept.is_empty(), "sampler kept nothing at epoch {epoch}");
+
+        let mut loaders: Vec<EpochLoader> = if workers == 1 {
+            vec![EpochLoader::new(&kept, cfg.meta_batch, &mut rng)]
+        } else {
+            (0..workers)
+                .map(|w| {
+                    let shard: Vec<u32> =
+                        kept.iter().copied().skip(w).step_by(workers).collect();
+                    let shard = if shard.is_empty() { kept.clone() } else { shard };
+                    let mut wrng = rng.fork(0xd15c0 + w as u64);
+                    EpochLoader::new(&shard, cfg.meta_batch, &mut wrng)
+                })
+                .collect()
+        };
+        let mut sync_buf: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+
+        let mut epoch_loss_sum = 0.0f64;
+        let mut epoch_loss_cnt = 0u64;
+
+        'rounds: loop {
+            let mut progressed = false;
+            for loader in loaders.iter_mut() {
+                let Some(meta) = loader.next_batch() else { continue };
+                progressed = true;
+
+                timers.time(phase::DATA, || meta_buf.fill(train_ds, &meta));
+
+                let selecting = cfg.mini_batch < cfg.meta_batch;
+                if selecting && sampler.needs_meta_losses(epoch) {
+                    let losses = timers.time(phase::SCORING_FP, || {
+                        rt.loss_fwd(meta_buf.x(train_ds), &meta_buf.y, meta.len())
+                    })?;
+                    fp_samples += meta.len() as u64;
+                    if workers == 1 {
+                        timers.time(phase::SELECT, || {
+                            sampler.observe_meta(&meta, &losses, epoch)
+                        });
+                    } else {
+                        sampler.observe_meta(&meta, &losses, epoch);
+                        sync_buf.push((meta.clone(), losses));
+                    }
+                }
+
+                let sel = timers.time(phase::SELECT, || {
+                    sampler.select(&meta, cfg.mini_batch, epoch, &mut rng)
+                });
+
+                let bsz = sel.indices.len();
+                let (buf, y_ref): (&BatchBuf, &Vec<i32>) = if sel.indices == meta {
+                    (&meta_buf, &meta_buf.y)
+                } else {
+                    timers.time(phase::DATA, || mini_buf.fill(train_ds, &sel.indices));
+                    (&mini_buf, &mini_buf.y)
+                };
+
+                let lr = cfg.lr.lr_at(step_idx, total_steps) as f32;
+
+                let micro = if cfg.micro_batch > 0 && cfg.micro_batch < bsz {
+                    cfg.micro_batch
+                } else {
+                    bsz
+                };
+                let mut all_losses = Vec::with_capacity(bsz);
+                let mut mean_acc = 0.0f64;
+                let mut off = 0usize;
+                let x_len = train_ds.x_len();
+                let y_len = train_ds.y_dim;
+                while off < bsz {
+                    let m = micro.min(bsz - off);
+                    let out = timers.time(phase::TRAIN_BP, || {
+                        let x = match buf.x(train_ds) {
+                            BatchX::F32(v) => BatchX::F32(&v[off * x_len..(off + m) * x_len]),
+                            BatchX::I32(v) => BatchX::I32(&v[off * x_len..(off + m) * x_len]),
+                        };
+                        rt.train_step(
+                            x,
+                            &y_ref[off * y_len..(off + m) * y_len],
+                            &sel.weights[off..off + m],
+                            lr,
+                            m,
+                        )
+                    })?;
+                    bp_passes += 1;
+                    bp_samples += m as u64;
+                    mean_acc += out.mean_loss as f64 * m as f64;
+                    all_losses.extend_from_slice(&out.losses);
+                    off += m;
+                }
+                let step_mean = mean_acc / bsz as f64;
+                epoch_loss_sum += step_mean;
+                epoch_loss_cnt += 1;
+
+                if train_ds.y_dim == 1 && train_ds.classes > 0 {
+                    for &i in &sel.indices {
+                        class_bp_counts[train_ds.clean_class[i as usize] as usize] += 1;
+                    }
+                }
+
+                if workers == 1 {
+                    timers.time(phase::SELECT, || {
+                        sampler.observe_train(&sel.indices, &all_losses, epoch)
+                    });
+                } else {
+                    sync_buf.push((sel.indices.clone(), all_losses));
+                }
+
+                step_idx += 1;
+                steps += 1;
+            }
+            if !progressed {
+                break 'rounds;
+            }
+        }
+
+        if workers > 1 && !sync_buf.is_empty() {
+            timers.time(phase::SELECT, || {
+                for (idx, losses) in sync_buf.drain(..) {
+                    sampler.observe_train(&idx, &losses, epoch);
+                }
+            });
+        }
+
+        loss_curve.push(if epoch_loss_cnt > 0 {
+            epoch_loss_sum / epoch_loss_cnt as f64
+        } else {
+            f64::NAN
+        });
+
+        let at_eval_point = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
+        if at_eval_point || epoch + 1 == cfg.epochs {
+            let stats = timers.time(phase::EVAL, || evaluate(rt, data))?;
+            eval_curve.push((epoch, stats.loss, stats.accuracy));
+            bp_at_eval.push(bp_samples);
+        }
+    }
+
+    let final_eval = eval_curve
+        .last()
+        .map(|&(_, l, a)| evosample::coordinator::EvalStats { loss: l, accuracy: a })
+        .unwrap_or_default();
+    let cost = CostSummary::from_run(
+        &timers,
+        fp_samples,
+        bp_samples,
+        bp_passes,
+        rt.flops_per_sample_fwd(),
+    );
+
+    Ok(TrainResult {
+        name: cfg.name.clone(),
+        sampler: sampler.name().to_string(),
+        seed: cfg.seed,
+        epochs: cfg.epochs,
+        steps,
+        loss_curve,
+        eval_curve,
+        final_eval,
+        timers,
+        cost,
+        class_bp_counts,
+        bp_at_eval,
+    })
+}
+
+fn setup(sampler_cfg: SamplerConfig, n: usize, seed: u64) -> (RunConfig, SplitDataset) {
+    let ds = DatasetConfig::SynthCifar { n, classes: 4, label_noise: 0.05, hard_frac: 0.2 };
+    let split = data::build(&ds, 128, 42);
+    let mut cfg = RunConfig::new("engine_det", "native", ds);
+    cfg.epochs = 5;
+    cfg.meta_batch = 64;
+    cfg.mini_batch = 16;
+    cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
+    cfg.test_n = 128;
+    cfg.seed = seed;
+    cfg.sampler = sampler_cfg;
+    (cfg, split)
+}
+
+fn assert_identical(a: &TrainResult, b: &TrainResult) {
+    assert_eq!(a.loss_curve, b.loss_curve, "loss curves diverged");
+    assert_eq!(a.eval_curve, b.eval_curve, "eval curves diverged");
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.cost.fp_samples, b.cost.fp_samples);
+    assert_eq!(a.cost.bp_samples, b.cost.bp_samples);
+    assert_eq!(a.cost.bp_passes, b.cost.bp_passes);
+    assert_eq!(a.class_bp_counts, b.class_bp_counts);
+    assert_eq!(a.bp_at_eval, b.bp_at_eval);
+}
+
+#[test]
+fn engine_single_worker_matches_pre_refactor_loop_exactly() {
+    for sampler_cfg in [
+        SamplerConfig::Uniform,
+        SamplerConfig::es_default(),
+        SamplerConfig::eswp_default(),
+        SamplerConfig::infobatch_default(),
+    ] {
+        let (cfg, split) = setup(sampler_cfg.clone(), 512, 7);
+        let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+        let engine_run = train(&cfg, &mut rt, &split).unwrap();
+        let reference_sampler = sampler::build(&cfg.sampler, split.train.n, cfg.epochs);
+        let reference = reference_train(&cfg, &mut rt, &split, reference_sampler).unwrap();
+        assert_identical(&engine_run, &reference);
+    }
+}
+
+#[test]
+fn engine_simulation_matches_pre_refactor_loop_exactly() {
+    let (mut cfg, split) = setup(SamplerConfig::eswp_default(), 512, 11);
+    cfg.workers = 4;
+    let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+    let engine_run = train(&cfg, &mut rt, &split).unwrap();
+    let reference_sampler = sampler::build(&cfg.sampler, split.train.n, cfg.epochs);
+    let reference = reference_train(&cfg, &mut rt, &split, reference_sampler).unwrap();
+    assert_identical(&engine_run, &reference);
+}
+
+#[test]
+fn grad_accum_path_matches_pre_refactor_loop_exactly() {
+    let (mut cfg, split) = setup(SamplerConfig::es_default(), 256, 3);
+    cfg.meta_batch = 32;
+    cfg.mini_batch = 16;
+    cfg.micro_batch = 4;
+    let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+    let engine_run = train(&cfg, &mut rt, &split).unwrap();
+    let reference_sampler = sampler::build(&cfg.sampler, split.train.n, cfg.epochs);
+    let reference = reference_train(&cfg, &mut rt, &split, reference_sampler).unwrap();
+    assert_identical(&engine_run, &reference);
+}
+
+// ---- §D.5 sync-model property: sharded == single-table -----------------
+
+#[test]
+fn sharded_simulation_tables_equal_single_worker_batched_observation() {
+    // The sequential simulation interleaves per-worker observations
+    // round-robin into the shared table and defers train losses to the
+    // epoch end. An equivalent single-worker run sees each worker's whole
+    // epoch stream *grouped* (worker 0's batches, then worker 1's, ...)
+    // with the same batched end-of-epoch train observation. Because
+    // shards are disjoint, the two orders must leave the ES tables
+    // bit-identical — the commutativity the §D.5 sync model rests on.
+    evosample::util::proptest::check("sim tables == single batched", 40, |g| {
+        let n = g.usize_in(16, 160);
+        let workers = g.usize_in(2, 5);
+        let epochs = 5;
+        // anneal_frac 0.2 => epochs 0 and 4 annealed, so both the
+        // immediate (meta) and the deferred (train) update paths apply.
+        let mut sim = Evolved::new(n, epochs, 0.2, 0.9, 0.2, 0.0);
+        let mut single = Evolved::new(n, epochs, 0.2, 0.9, 0.2, 0.0);
+
+        for epoch in 0..epochs {
+            // Disjoint round-robin shards of the full index set.
+            let shards: Vec<Vec<u32>> = (0..workers)
+                .map(|w| (0..n as u32).skip(w).step_by(workers).collect())
+                .collect();
+            // per_worker[w] = (meta batches, deferred train batches).
+            let mut per_worker: Vec<(Vec<(Vec<u32>, Vec<f32>)>, Vec<(Vec<u32>, Vec<f32>)>)> =
+                vec![(Vec::new(), Vec::new()); workers];
+            for round in 0..3 {
+                for (w, shard) in shards.iter().enumerate() {
+                    if shard.is_empty() {
+                        continue;
+                    }
+                    let take = shard.len().min(8);
+                    let start = (round * take) % shard.len();
+                    let idx: Vec<u32> =
+                        (0..take).map(|k| shard[(start + k) % shard.len()]).collect();
+                    let meta_losses: Vec<f32> = idx.iter().map(|_| g.f32_in(0.0, 4.0)).collect();
+                    let train_losses: Vec<f32> =
+                        idx.iter().map(|_| g.f32_in(0.0, 4.0)).collect();
+                    // Sim: apply meta immediately, in interleaved order.
+                    sim.observe_meta(&idx, &meta_losses, epoch);
+                    per_worker[w].0.push((idx.clone(), meta_losses));
+                    per_worker[w].1.push((idx, train_losses));
+                }
+            }
+            // Sim: epoch-end sync replays deferred train losses,
+            // interleaved as they were pushed.
+            for round in 0..3 {
+                for (_, deferred) in &per_worker {
+                    if let Some((idx, losses)) = deferred.get(round) {
+                        sim.observe_train(idx, losses, epoch);
+                    }
+                }
+            }
+            // Single worker: each worker's stream grouped, then all train
+            // losses batched at the epoch end.
+            for (metas, _) in &per_worker {
+                for (idx, losses) in metas {
+                    single.observe_meta(idx, losses, epoch);
+                }
+            }
+            for (_, deferred) in &per_worker {
+                for (idx, losses) in deferred {
+                    single.observe_train(idx, losses, epoch);
+                }
+            }
+        }
+        evosample::prop_assert!(
+            sim.weights_table() == single.weights_table(),
+            "weight tables diverged (n={n}, W={workers})"
+        );
+        evosample::prop_assert!(
+            sim.scores_table() == single.scores_table(),
+            "score tables diverged (n={n}, W={workers})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn threaded_sync_round_reconverges_replica_tables() {
+    // End-to-end check of the engine's all-gather contract: three replicas
+    // observe disjoint shards, the canonical merges every log and each
+    // replica merges its peers' logs; afterwards all four tables agree.
+    let n = 30usize;
+    let epochs = 4;
+    let make = || Evolved::new(n, epochs, 0.2, 0.8, 0.0, 0.3);
+    let mut canonical = make();
+    let mut replicas: Vec<Evolved> = (0..3).map(|_| make()).collect();
+    let shards: Vec<Vec<u32>> =
+        (0..3).map(|w| (0..n as u32).skip(w).step_by(3).collect()).collect();
+    let mut rng = Pcg64::new(5);
+    for (replica, shard) in replicas.iter_mut().zip(&shards) {
+        replica.begin_shard(shard);
+        for chunk in shard.chunks(4) {
+            let losses: Vec<f32> = chunk.iter().map(|_| rng.f32() * 3.0).collect();
+            replica.observe_meta(chunk, &losses, 1);
+        }
+    }
+    let logs: Vec<_> = replicas.iter_mut().map(|r| r.export_observations()).collect();
+    for (w, log) in logs.iter().enumerate() {
+        canonical.merge_observations(log, 1);
+        for (v, replica) in replicas.iter_mut().enumerate() {
+            if v != w {
+                replica.merge_observations(log, 1);
+            }
+        }
+    }
+    for replica in &replicas {
+        assert_eq!(replica.weights_table(), canonical.weights_table());
+        assert_eq!(replica.scores_table(), canonical.scores_table());
+    }
+    // And the canonical can prune on the merged view.
+    let kept = canonical.on_epoch_start(1, &mut rng);
+    assert_eq!(kept.len(), 21, "30 * (1 - 0.3) = 21 kept");
+}
+
+// ---- threaded mode ------------------------------------------------------
+
+#[test]
+fn threaded_engine_runs_deterministically_and_learns() {
+    let (mut cfg, split) = setup(SamplerConfig::eswp_default(), 512, 13);
+    cfg.workers = 4;
+    cfg.threaded_workers = true;
+    cfg.epochs = 6;
+    let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+    let a = train(&cfg, &mut rt, &split).unwrap();
+    let b = train(&cfg, &mut rt, &split).unwrap();
+    assert_eq!(a.loss_curve, b.loss_curve, "threaded runs must be seed-deterministic");
+    assert_eq!(a.cost.bp_samples, b.cost.bp_samples);
+    assert!(a.steps > 0);
+    assert!(
+        a.final_eval.accuracy > 0.3,
+        "threaded acc {} should beat 4-class chance",
+        a.final_eval.accuracy
+    );
+    assert!(a.loss_curve.first().unwrap() > a.loss_curve.last().unwrap());
+    assert!(a.cost.sync_s >= 0.0);
+}
+
+#[test]
+fn threaded_engine_with_midepoch_param_sync() {
+    let (mut cfg, split) = setup(SamplerConfig::Uniform, 512, 17);
+    cfg.workers = 2;
+    cfg.threaded_workers = true;
+    cfg.sync_every = 1;
+    let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+    let r = train(&cfg, &mut rt, &split).unwrap();
+    assert!(r.final_eval.accuracy > 0.35, "acc {}", r.final_eval.accuracy);
+    // 512 samples, 4 shards of 128... workers=2 => shards of 256 => 4
+    // meta-batches each; sync_every=1 => 4 mid-epoch syncs + 1 boundary.
+    assert!(r.cost.sync_s > 0.0, "mid-epoch syncs must be accounted");
+}
+
+#[test]
+fn threaded_engine_covers_all_kept_samples() {
+    let (mut cfg, split) = setup(SamplerConfig::Uniform, 256, 19);
+    cfg.workers = 4;
+    cfg.threaded_workers = true;
+    cfg.mini_batch = cfg.meta_batch; // no batch selection: full coverage
+    let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+    let r = train(&cfg, &mut rt, &split).unwrap();
+    // Every kept sample flows through BP once per epoch (modulo ragged
+    // padding, which only adds).
+    assert!(r.cost.bp_samples >= (cfg.epochs * 256) as u64);
+}
+
+#[test]
+fn threaded_engine_handles_fewer_kept_samples_than_workers() {
+    // kept.len() < workers must clamp to disjoint non-empty shards rather
+    // than duplicating the kept set across replicas.
+    let ds = DatasetConfig::SynthCifar { n: 3, classes: 2, label_noise: 0.0, hard_frac: 0.0 };
+    let split = data::build(&ds, 16, 5);
+    let mut cfg = RunConfig::new("tiny_threaded", "native", ds);
+    cfg.epochs = 2;
+    cfg.meta_batch = 1;
+    cfg.mini_batch = 1;
+    cfg.lr = LrSchedule::Const { lr: 0.01 };
+    cfg.test_n = 16;
+    cfg.workers = 4;
+    cfg.threaded_workers = true;
+    cfg.sampler = SamplerConfig::Uniform;
+    let mut rt = NativeRuntime::new(split.train.x_len(), 8, 2);
+    let a = train(&cfg, &mut rt, &split).unwrap();
+    let b = train(&cfg, &mut rt, &split).unwrap();
+    // 3 kept / 4 workers => 3 effective workers, 1 sample each, 2 epochs.
+    assert_eq!(a.cost.bp_samples, 6);
+    assert_eq!(a.loss_curve, b.loss_curve);
+}
+
+#[test]
+fn replayed_epoch_start_reproduces_infobatch_rescale_on_replicas() {
+    // The threaded engine replays on_epoch_start on every replica with a
+    // clone of the canonical's pruning RNG; with synced score tables this
+    // must reproduce both the kept set and the 1/(1-r) rescale weights
+    // that InfoBatch's select() applies.
+    use evosample::sampler::infobatch::InfoBatch;
+    let n = 200usize;
+    let mut canonical = InfoBatch::new(n, 10, 0.5, 0.0);
+    let mut replica = InfoBatch::new(n, 10, 0.5, 0.0);
+    let idx: Vec<u32> = (0..n as u32).collect();
+    let losses: Vec<f32> = (0..n).map(|i| if i < 100 { 0.1 } else { 10.0 }).collect();
+    // Canonical observes directly; the replica receives the same state
+    // through the sync-round merge path.
+    canonical.observe_train(&idx, &losses, 0);
+    replica.merge_observations(&[(idx.clone(), losses)], 0);
+
+    let prune_rng = Pcg64::new(77);
+    let kept_canonical = canonical.on_epoch_start(1, &mut prune_rng.clone());
+    let kept_replica = replica.on_epoch_start(1, &mut prune_rng.clone());
+    assert_eq!(kept_canonical, kept_replica, "replayed RNG must reproduce the prune");
+    assert!(kept_canonical.len() < n, "something must have been pruned");
+
+    let mut rng = Pcg64::new(1);
+    let sel_c = canonical.select(&kept_canonical, kept_canonical.len(), 1, &mut rng.clone());
+    let sel_r = replica.select(&kept_replica, kept_replica.len(), 1, &mut rng.clone());
+    assert_eq!(sel_c.weights, sel_r.weights, "rescale tables must match");
+    assert!(
+        sel_r.weights.iter().any(|&w| (w - 2.0).abs() < 1e-6),
+        "below-mean survivors must carry the 1/(1-r) rescale on the replica"
+    );
+}
+
+#[test]
+fn spawn_replica_default_is_graceful_unsupported() {
+    struct NoReplicas;
+    impl ModelRuntime for NoReplicas {
+        fn param_count(&self) -> usize {
+            0
+        }
+        fn init(&mut self, _seed: i32) -> anyhow::Result<()> {
+            Ok(())
+        }
+        fn loss_fwd(&mut self, _x: BatchX<'_>, _y: &[i32], n: usize) -> anyhow::Result<Vec<f32>> {
+            Ok(vec![0.0; n])
+        }
+        fn train_step(
+            &mut self,
+            _x: BatchX<'_>,
+            _y: &[i32],
+            _w: &[f32],
+            _lr: f32,
+            n: usize,
+        ) -> anyhow::Result<evosample::runtime::StepOutput> {
+            Ok(evosample::runtime::StepOutput { losses: vec![0.0; n], mean_loss: 0.0 })
+        }
+        fn eval(
+            &mut self,
+            _x: BatchX<'_>,
+            _y: &[i32],
+            n: usize,
+        ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+            Ok((vec![0.0; n], vec![0.0; n]))
+        }
+        fn train_sizes(&self) -> Vec<usize> {
+            Vec::new()
+        }
+        fn fwd_size(&self) -> usize {
+            0
+        }
+        fn eval_size(&self) -> usize {
+            0
+        }
+        fn get_params(&mut self) -> anyhow::Result<Vec<f32>> {
+            Ok(Vec::new())
+        }
+        fn set_params(&mut self, _params: &[f32]) -> anyhow::Result<()> {
+            Ok(())
+        }
+        fn flops_per_sample_fwd(&self) -> u64 {
+            1
+        }
+    }
+    let rt = NoReplicas;
+    let err = rt.spawn_replica().unwrap_err().to_string();
+    assert!(err.contains("threaded replicas"), "{err}");
+
+    // And a threaded run on such a runtime fails cleanly, not silently.
+    let (mut cfg, split) = setup(SamplerConfig::Uniform, 256, 23);
+    cfg.workers = 2;
+    cfg.threaded_workers = true;
+    let mut rt = NoReplicas;
+    let err = train(&cfg, &mut rt, &split).unwrap_err().to_string();
+    assert!(err.contains("threaded replicas"), "{err}");
+}

@@ -1,0 +1,218 @@
+//! API-compatible stub of the `xla` (xla-rs / PJRT) bindings.
+//!
+//! The container image for this repo does not ship the XLA extension, so
+//! this crate keeps `runtime::xla_rt` compiling unchanged while every
+//! operation that would need a real PJRT device errors out with a clear
+//! message. `Literal` is implemented for real (host-side tensors) because
+//! construction must be infallible; clients, compilation and execution
+//! fail at `PjRtClient::cpu()`, the first call on every load path.
+//!
+//! To run against real artifacts, replace this path dependency with the
+//! actual `xla` crate (see DESIGN.md §5); no source changes are needed.
+
+const UNAVAILABLE: &str =
+    "XLA/PJRT backend unavailable: this build links the in-tree stub `xla` crate. \
+     Replace rust/vendor/xla with the real xla-rs bindings (DESIGN.md §5) to execute \
+     HLO artifacts; the NativeRuntime path is fully functional without them.";
+
+/// Stub error type; formatted with `{:?}` at call sites.
+pub struct Error(pub String);
+
+impl Error {
+    fn unavailable() -> Error {
+        Error(UNAVAILABLE.to_string())
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side tensor storage for the element types the runtime moves.
+#[derive(Clone, Debug, PartialEq)]
+enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host literal: flat data + dims. Fully functional (the runtime builds
+/// literals before execution, which must not fail).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+/// Element types a `Literal` can hold / yield.
+pub trait NativeType: Copy + Sized {
+    fn store(v: &[Self]) -> Storage;
+    fn load(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn store(v: &[Self]) -> Storage {
+        Storage::F32(v.to_vec())
+    }
+    fn load(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.storage {
+            Storage::F32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn store(v: &[Self]) -> Storage {
+        Storage::I32(v.to_vec())
+    }
+    fn load(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.storage {
+            Storage::I32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not i32".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], storage: T::store(v) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: Vec::new(), storage: T::store(&[v]) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} incompatible with {} elements",
+                dims,
+                self.element_count()
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(self)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::load(self)?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".into()))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error("stub literal is never a tuple".into()))
+    }
+
+    pub fn shape_dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module handle. Parsing requires the XLA extension.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. `cpu()` is the first call on every load path and
+/// is where the stub reports itself.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape_dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(Literal::scalar(7i32).get_first_element::<i32>().unwrap(), 7);
+        assert!(Literal::scalar(7i32).to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn device_paths_error_clearly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err:?}").contains("stub"));
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
