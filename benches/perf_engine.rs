@@ -8,9 +8,8 @@
 
 use std::time::Instant;
 
-use evosample::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
-use evosample::coordinator::train;
-use evosample::data;
+use evosample::coordinator::train_with_sampler;
+use evosample::prelude::*;
 use evosample::runtime::native::NativeRuntime;
 use evosample::util::bench::smoke_mode;
 
@@ -34,10 +33,16 @@ fn base_cfg(n: usize, epochs: usize) -> RunConfig {
 
 /// Train once and report steps/second of wall-clock (eval excluded by
 /// subtracting the measured eval phase from elapsed).
-fn throughput(cfg: &RunConfig, split: &data::SplitDataset, hidden: usize) -> (f64, u64) {
+///
+/// Uses `train_with_sampler` (the Engine escape hatch) rather than a
+/// `Session` so the big split stays borrowed instead of owned per run —
+/// this bench measures engine throughput, not the session wiring.
+fn throughput(cfg: &RunConfig, split: &SplitDataset, hidden: usize) -> (f64, u64) {
     let mut rt = NativeRuntime::new(split.train.x_len(), hidden, 10);
+    let sampler =
+        evosample::sampler::build(&cfg.sampler, split.train.n, cfg.epochs).expect(&cfg.name);
     let t0 = Instant::now();
-    let r = train(cfg, &mut rt, split).expect(&cfg.name);
+    let r = train_with_sampler(cfg, &mut rt, split, sampler).expect(&cfg.name);
     let elapsed = t0.elapsed().as_secs_f64() - r.cost.eval_s;
     (r.steps as f64 / elapsed.max(1e-9), r.steps)
 }

@@ -1,15 +1,12 @@
 //! CIFAR-style scenario: the Table-2 workload on one dataset, comparing
-//! the full method zoo (baseline + 3 set-level + 3 batch-level + ESWP).
+//! the full method zoo (baseline + 3 set-level + 3 batch-level + ESWP)
+//! through one shared [`Session`] — swap the sampler, rerun.
 //!
 //!     make artifacts && cargo run --release --example cifar_selection
 //!
 //! Flags via env: EVOSAMPLE_BENCH_FULL=1 for paper-scale sizes.
 
-use evosample::config::presets::{all_samplers, Scale};
-use evosample::config::{DatasetConfig, LrSchedule, RunConfig};
-use evosample::coordinator::{predicted_saved_time_pct, saved_time_pct, train};
-use evosample::data;
-use evosample::experiments::make_runtime;
+use evosample::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let scale = Scale::from_env();
@@ -18,21 +15,20 @@ fn main() -> anyhow::Result<()> {
         Scale::Full => (16384, 60),
     };
     let dataset = DatasetConfig::SynthCifar { n, classes: 100, label_noise: 0.05, hard_frac: 0.2 };
-    let mut cfg = RunConfig::new("cifar_selection", "cnn_small_c100", dataset);
-    cfg.epochs = epochs;
-    cfg.meta_batch = 128;
-    cfg.mini_batch = 32;
-    cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
-    cfg.test_n = 512;
-
-    let split = data::build(&cfg.dataset, cfg.test_n, 7);
-    let mut rt = make_runtime(&cfg)?;
+    let mut session = SessionBuilder::new("cnn_small_c100", dataset)
+        .named("cifar_selection")
+        .epochs(epochs)
+        .batch_sizes(128, 32)
+        .lr(LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 })
+        .test_n(512)
+        .seed(7)
+        .build()?;
 
     println!("{:<14} {:>7} {:>9} {:>16}", "method", "acc%", "wall s", "saved (pred)");
     let mut base_cost = None;
     for sampler in all_samplers() {
-        cfg.sampler = sampler;
-        let r = train(&cfg, rt.as_mut(), &split)?;
+        session.set_sampler(sampler);
+        let r = session.run()?;
         match &base_cost {
             None => {
                 println!(

@@ -1,19 +1,18 @@
 //! END-TO-END DRIVER (DESIGN.md "End-to-end validation"): pre-train a real
-//! transformer LM through the full three-layer stack — rust coordinator →
-//! PJRT-compiled AOT artifacts (JAX L2 + Pallas L1 kernels) — on the
-//! synthetic corpus, for several hundred optimizer steps, with ES/ESWP
-//! against the baseline. Logs the loss curves (results/e2e_pretrain.jsonl)
-//! and prints the summary recorded in EXPERIMENTS.md.
+//! transformer LM through the full three-layer stack — session API →
+//! engine → PJRT-compiled AOT artifacts (JAX L2 + Pallas L1 kernels) — on
+//! the synthetic corpus, for several hundred optimizer steps, with ES/ESWP
+//! against the baseline. Streams typed engine events into
+//! results/e2e_pretrain_events.jsonl, logs loss curves
+//! (results/e2e_pretrain.jsonl), and prints the summary recorded in
+//! EXPERIMENTS.md.
 //!
 //!     make artifacts && cargo run --release --example end_to_end_pretrain
 //!
 //! EVOSAMPLE_E2E_STEPS overrides the target step count (default ~300).
 
-use evosample::config::presets::{e2e_pretrain, Scale};
-use evosample::coordinator::{predicted_saved_time_pct, saved_time_pct, train};
-use evosample::data;
-use evosample::experiments::make_runtime;
-use evosample::metrics::Recorder;
+use evosample::config::presets::e2e_pretrain;
+use evosample::prelude::*;
 use evosample::util::json::{num, obj, s, Json};
 
 fn main() -> anyhow::Result<()> {
@@ -30,19 +29,24 @@ fn main() -> anyhow::Result<()> {
     }
 
     let rec = Recorder::new("e2e_pretrain")?;
-    let split = data::build(&runs[0].dataset, runs[0].test_n, 1234);
-    let mut rt = make_runtime(&runs[0])?;
+    // One session hosts all three methods: shared runtime + data split,
+    // per-method name/sampler swaps, events streamed to JSONL.
+    let mut session = SessionBuilder::from_config(runs[0].clone())
+        .sink(Box::new(EventLog::new("e2e_pretrain_events")?))
+        .sink(Box::new(ProgressSink::new()))
+        .build()?;
     println!(
-        "e2e: pre-training txf_lm ({} params) for ~{} steps per method on {} sequences",
-        rt.param_count(),
+        "e2e: pre-training txf_lm for ~{} steps per method on {} sequences",
         target_steps,
-        split.train.n
+        session.data().train.n
     );
 
-    let mut base = None;
+    let mut base: Option<RunResult> = None;
     for cfg in &runs {
+        session.set_name(&cfg.name);
+        session.set_sampler(cfg.sampler.clone());
         let t0 = std::time::Instant::now();
-        let r = train(cfg, rt.as_mut(), &split)?;
+        let r = session.run()?;
         rec.record_result(&r)?;
         rec.record(&obj(vec![
             ("fig", s("e2e_loss_curve")),

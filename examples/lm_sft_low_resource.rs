@@ -1,37 +1,34 @@
 //! Low-resource LM SFT (the paper's Fig. 4 scenario): gradient
 //! accumulation with B=32, b=8, b_micro=8 — baseline pays 4 BP passes per
-//! update, ESWP pays 1 plus a cheap scoring FP.
+//! update, ESWP pays 1 plus a cheap scoring FP. Built on the prelude's
+//! session API; the transformer runtime needs AOT artifacts.
 //!
 //!     make artifacts && cargo run --release --example lm_sft_low_resource
 
-use evosample::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
-use evosample::coordinator::{saved_time_pct, train};
-use evosample::data;
-use evosample::experiments::make_runtime;
+use evosample::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let dataset = DatasetConfig::LmCorpus { n: 1024, vocab: 1024, seq: 64 };
-    let mut cfg = RunConfig::new("lm_sft", "txf_lm", dataset);
-    cfg.epochs = 3;
-    cfg.meta_batch = 32;
-    cfg.mini_batch = 8;
-    cfg.micro_batch = 8; // A100-40GB style micro-batching
-    cfg.lr = LrSchedule::WarmupCosine { base_lr: 1e-4, warmup_frac: 0.1, min_lr: 0.0 };
-    cfg.test_n = 128;
-    cfg.eval_every = 1;
+    let mut session = SessionBuilder::new("txf_lm", dataset)
+        .named("lm_sft")
+        .epochs(3)
+        .batch_sizes(32, 8)
+        .micro_batch(8) // A100-40GB style micro-batching
+        .lr(LrSchedule::WarmupCosine { base_lr: 1e-4, warmup_frac: 0.1, min_lr: 0.0 })
+        .test_n(128)
+        .eval_every(1)
+        .seed(3)
+        .build()?;
 
-    let split = data::build(&cfg.dataset, cfg.test_n, 3);
-    let mut rt = make_runtime(&cfg)?;
-
-    cfg.sampler = SamplerConfig::Uniform;
-    let base = train(&cfg, rt.as_mut(), &split)?;
-    cfg.sampler = SamplerConfig::Eswp {
+    session.set_sampler(SamplerConfig::Uniform);
+    let base = session.run()?;
+    session.set_sampler(SamplerConfig::Eswp {
         beta1: 0.2,
         beta2: 0.8,
         anneal_frac: 0.05,
         prune_ratio: 0.2,
-    };
-    let eswp = train(&cfg, rt.as_mut(), &split)?;
+    });
+    let eswp = session.run()?;
 
     println!("\n{:<10} {:>10} {:>10} {:>10} {:>10}", "method", "LM loss", "BP passes", "wall s", "eval loss");
     for r in [&base, &eswp] {

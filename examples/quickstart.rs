@@ -1,15 +1,26 @@
-//! Quickstart: train a classifier twice — standard sampling vs Evolved
-//! Sampling — and compare accuracy, BP samples, and wall-clock.
+//! Quickstart for the public session API: everything comes in through
+//! `evosample::prelude`.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! Uses the AOT XLA path when `artifacts/` exists, else the pure-rust
-//! native runtime (same coordinator, no python either way).
+//! The flow is three steps:
+//!
+//! 1. **Describe the run** with [`SessionBuilder`]: dataset → batching →
+//!    schedule → sampler → event sinks. `build()` validates the config,
+//!    generates the data split, and picks the runtime (AOT XLA artifacts
+//!    when `artifacts/` exists, else the pure-rust native runtime — same
+//!    coordinator, no python either way).
+//! 2. **Run it**: `session.run()` executes the paper's Alg. 1 loop and
+//!    returns a typed [`RunResult`] (accuracy, loss curves, BP/FP sample
+//!    counts, per-phase wall-clock). Sinks subscribed with `.sink(...)`
+//!    observe the typed event stream (epoch starts, evals, sync rounds)
+//!    as the engine runs.
+//! 3. **Compare methods** by swapping the sampler on the same session —
+//!    the runtime and data split are reused; each `run()` is a fresh
+//!    trial. Any policy registered in `sampler::registry` (including
+//!    external crates' own) can be selected with `.sampler_named(...)`.
 
-use evosample::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
-use evosample::coordinator::{saved_time_pct, train};
-use evosample::data;
-use evosample::experiments::make_runtime;
+use evosample::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     // 1. Describe the run: model, data, batching, schedule.
@@ -19,28 +30,27 @@ fn main() -> anyhow::Result<()> {
         label_noise: 0.05,
         hard_frac: 0.2,
     };
-    let mut cfg = RunConfig::new("quickstart", "mlp_cifar10", dataset);
-    cfg.epochs = 10;
-    cfg.meta_batch = 128; // B: drawn uniformly each step
-    cfg.mini_batch = 32; //  b: selected for BP (b/B = 25%)
-    cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
-    cfg.test_n = 512;
+    let mut session = SessionBuilder::new("mlp_cifar10", dataset)
+        .named("quickstart")
+        .epochs(10)
+        .batch_sizes(128, 32) // B drawn uniformly, b/B = 25% kept for BP
+        .lr(LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 })
+        .test_n(512)
+        .seed(42)
+        .sink(Box::new(ProgressSink::new()))
+        .build()?;
 
-    // 2. Data + runtime (XLA artifacts or native fallback).
-    let split = data::build(&cfg.dataset, cfg.test_n, 42);
-    let mut rt = make_runtime(&cfg)?;
+    // 2. Baseline: no data selection.
+    session.set_sampler(SamplerConfig::Uniform);
+    let base = session.run()?;
 
-    // 3. Baseline: no data selection.
-    cfg.sampler = SamplerConfig::Uniform;
-    let base = train(&cfg, rt.as_mut(), &split)?;
+    // 3. Evolved Sampling (paper defaults β1=0.2, β2=0.9, 5% annealing).
+    session.set_sampler(SamplerConfig::es_default());
+    let es = session.run()?;
 
-    // 4. Evolved Sampling (paper defaults β1=0.2, β2=0.9, 5% annealing).
-    cfg.sampler = SamplerConfig::es_default();
-    let es = train(&cfg, rt.as_mut(), &split)?;
-
-    // 5. ESWP: + set-level pruning (r=0.2).
-    cfg.sampler = SamplerConfig::eswp_default();
-    let eswp = train(&cfg, rt.as_mut(), &split)?;
+    // 4. ESWP: + set-level pruning (r=0.2).
+    session.set_sampler(SamplerConfig::eswp_default());
+    let eswp = session.run()?;
 
     println!("\n{:<10} {:>7} {:>12} {:>12} {:>10}", "method", "acc%", "bp samples", "fp samples", "wall s");
     for r in [&base, &es, &eswp] {

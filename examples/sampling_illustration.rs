@@ -1,11 +1,13 @@
 //! Fig. 1 / Fig. 8 illustration: how the ES weight signal (Eq. 3.1) tracks
 //! a noisy decaying loss while damping oscillations, vs raw loss weights
-//! (Eq. 2.3). Prints an ASCII plot + the transfer-function story.
+//! (Eq. 2.3). Prints an ASCII plot + the transfer-function story. No
+//! training involved — this drives the prelude's `analysis` helpers
+//! directly.
 //!
 //!     cargo run --release --example sampling_illustration
 
+use evosample::prelude::*;
 use evosample::sampler::analysis::{fig1_traces, total_variation, transfer_magnitude};
-use evosample::util::Pcg64;
 
 fn ascii_plot(name: &str, xs: &[f32], rows: usize) {
     let max = xs.iter().cloned().fold(f32::MIN, f32::max);

@@ -1,0 +1,169 @@
+//! The typed event stream: everything the engine announces while a
+//! [`Session`](super::Session) runs.
+//!
+//! Events are the public promotion of the engine's internal stage
+//! observer: consumers (CLI progress printing, JSONL metrics, tests,
+//! embedding applications) implement [`EventSink`] and subscribe through
+//! `SessionBuilder::sink`. Emission is purely additive — sinks never touch
+//! the RNG schedule or arithmetic, so an instrumented run is bit-for-bit
+//! the un-instrumented run.
+//!
+//! Ordering contract (per run; DESIGN.md §6):
+//!
+//! ```text
+//! RunStart
+//!   ( EpochStart
+//!       ( ScoringFp? SelectionMade )*      sequential modes only
+//!       SyncRound?                         workers > 1
+//!       EvalDone?                          at eval points
+//!     EpochEnd )*
+//! RunEnd
+//! ```
+//!
+//! The threaded engine emits the epoch-level events only (worker threads
+//! own their step loops; their per-step telemetry stays in the merged
+//! phase ledger).
+
+use std::time::Duration;
+
+/// One engine announcement. Fields are plain data so sinks can serialize
+/// or aggregate without touching engine internals.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// A training run is starting.
+    RunStart { name: String, sampler: String, epochs: usize },
+    /// Epoch `epoch` begins; set-level selection kept `kept` of `dataset_n`.
+    EpochStart { epoch: usize, kept: usize, dataset_n: usize },
+    /// A scoring forward pass over `samples` meta-batch rows (§3.3's
+    /// "extra FP") finished in `elapsed`.
+    ScoringFp { epoch: usize, step: u64, samples: usize, elapsed: Duration },
+    /// The sampler chose `selected` of `meta` meta-batch rows for BP.
+    SelectionMade { epoch: usize, step: u64, meta: usize, selected: usize },
+    /// A data-parallel synchronization round completed (§D.5: parameter
+    /// averaging + sampler-table merge across `workers` workers).
+    SyncRound { epoch: usize, workers: usize },
+    /// Held-out evaluation at the end of `epoch`.
+    EvalDone { epoch: usize, loss: f64, accuracy: f64, bp_samples: u64 },
+    /// Epoch `epoch` finished with this mean training loss.
+    EpochEnd { epoch: usize, mean_train_loss: f64 },
+    /// The run finished (`steps` optimizer steps; final eval accuracy).
+    RunEnd { steps: u64, accuracy: f64 },
+}
+
+/// A consumer of the event stream. Sinks are owned by the [`EventBus`]
+/// and invoked synchronously, in subscription order, on the engine
+/// thread.
+pub trait EventSink: Send {
+    fn on_event(&mut self, event: &Event);
+}
+
+/// Closures are sinks: `.on_event(|ev| ...)` in the builder.
+impl<F: FnMut(&Event) + Send> EventSink for F {
+    fn on_event(&mut self, event: &Event) {
+        self(event)
+    }
+}
+
+/// Fan-out of one engine's events to every subscribed sink.
+#[derive(Default)]
+pub struct EventBus {
+    sinks: Vec<Box<dyn EventSink>>,
+}
+
+impl EventBus {
+    pub fn new() -> EventBus {
+        EventBus::default()
+    }
+
+    pub fn add(&mut self, sink: Box<dyn EventSink>) {
+        self.sinks.push(sink);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sinks.is_empty()
+    }
+
+    pub fn emit(&mut self, event: &Event) {
+        for s in &mut self.sinks {
+            s.on_event(event);
+        }
+    }
+}
+
+/// Emit into an optional bus slot — the engine's no-subscriber fast path.
+pub(crate) fn emit_into(slot: &mut Option<&mut EventBus>, event: Event) {
+    if let Some(bus) = slot.as_deref_mut() {
+        bus.emit(&event);
+    }
+}
+
+/// Stdout progress printer: one line per run start, eval point, and run
+/// end. The default `--progress` style consumer for the CLI and examples.
+#[derive(Default)]
+pub struct ProgressSink;
+
+impl ProgressSink {
+    pub fn new() -> ProgressSink {
+        ProgressSink
+    }
+}
+
+impl EventSink for ProgressSink {
+    fn on_event(&mut self, event: &Event) {
+        match event {
+            Event::RunStart { name, sampler, epochs } => {
+                println!("[{name}] sampler {sampler}, {epochs} epochs");
+            }
+            Event::EpochStart { epoch, kept, dataset_n } if kept < dataset_n => {
+                println!("  epoch {epoch}: pruned to {kept}/{dataset_n} samples");
+            }
+            Event::EvalDone { epoch, loss, accuracy, bp_samples } => {
+                println!(
+                    "  epoch {epoch}: eval loss {loss:.4}  acc {:.2}%  (bp samples {bp_samples})",
+                    100.0 * accuracy
+                );
+            }
+            Event::RunEnd { steps, accuracy } => {
+                println!("  done: {steps} steps, final acc {:.2}%", 100.0 * accuracy);
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn bus_fans_out_in_subscription_order() {
+        let log: Arc<Mutex<Vec<(usize, String)>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut bus = EventBus::new();
+        for id in 0..2usize {
+            let log = log.clone();
+            bus.add(Box::new(move |ev: &Event| {
+                log.lock().unwrap().push((id, format!("{ev:?}")));
+            }));
+        }
+        bus.emit(&Event::RunEnd { steps: 3, accuracy: 0.5 });
+        let log = log.lock().unwrap();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0].0, 0);
+        assert_eq!(log[1].0, 1);
+        assert!(log[0].1.contains("RunEnd"));
+    }
+
+    #[test]
+    fn emit_into_skips_empty_slot() {
+        let mut none: Option<&mut EventBus> = None;
+        emit_into(&mut none, Event::RunEnd { steps: 0, accuracy: 0.0 });
+        let mut bus = EventBus::new();
+        let seen = Arc::new(Mutex::new(0usize));
+        let s2 = seen.clone();
+        bus.add(Box::new(move |_: &Event| *s2.lock().unwrap() += 1));
+        let mut some = Some(&mut bus);
+        emit_into(&mut some, Event::RunEnd { steps: 0, accuracy: 0.0 });
+        assert_eq!(*seen.lock().unwrap(), 1);
+    }
+}

@@ -1,0 +1,389 @@
+//! The embeddable front door: build a [`Session`] fluently, run it, get a
+//! typed [`RunResult`].
+//!
+//! ```ignore
+//! use evosample::prelude::*;
+//!
+//! let report = SessionBuilder::new(
+//!         "mlp_cifar10",
+//!         DatasetConfig::SynthCifar { n: 2048, classes: 10, label_noise: 0.05, hard_frac: 0.2 },
+//!     )
+//!     .epochs(10)
+//!     .batch_sizes(128, 32)
+//!     .sampler(SamplerConfig::es_default())
+//!     .sink(Box::new(ProgressSink::new()))
+//!     .build()?
+//!     .run()?;
+//! println!("acc {:.2}%", report.accuracy_pct());
+//! ```
+//!
+//! Ownership (DESIGN.md §6): the builder assembles a `RunConfig`, a data
+//! split, a model runtime, and an [`EventBus`] of sinks; the `Session`
+//! owns all four (the runtime optionally borrowed from the caller for
+//! artifact reuse across sessions) and lends them to a fresh
+//! `coordinator::engine::Engine` per `run()`. Sampler state is rebuilt
+//! from config each run — through the open [`sampler::registry`], so
+//! externally-registered policies work everywhere built-ins do — keeping
+//! every run an independent trial.
+
+pub mod events;
+pub mod prelude;
+
+pub use events::{Event, EventBus, EventSink, ProgressSink};
+
+use crate::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::TrainResult;
+use crate::data::{self, SplitDataset};
+use crate::runtime::{make_runtime, ModelRuntime};
+use crate::sampler::{self, registry};
+
+/// What one `Session::run` produces — the same typed report the
+/// historical `coordinator::train` returned (accuracy, curves, cost
+/// accounting, phase timers).
+pub type RunResult = TrainResult;
+
+/// The model runtime a session drives: built by the session, handed over
+/// (`runtime`), or borrowed from the embedding application
+/// (`runtime_mut`) so expensive artifact loads amortize across sessions.
+enum RtSlot<'rt> {
+    Owned(Box<dyn ModelRuntime>),
+    Borrowed(&'rt mut (dyn ModelRuntime + 'rt)),
+}
+
+impl<'rt> RtSlot<'rt> {
+    fn get(&mut self) -> &mut (dyn ModelRuntime + 'rt) {
+        match self {
+            RtSlot::Owned(b) => b.as_mut(),
+            RtSlot::Borrowed(r) => &mut **r,
+        }
+    }
+}
+
+/// Fluent constructor for a [`Session`]: dataset → runtime → sampler →
+/// engine mode → event sinks. Every knob defaults to the `RunConfig`
+/// defaults; `build()` validates the assembled config.
+pub struct SessionBuilder<'rt> {
+    cfg: RunConfig,
+    /// A registry-named sampler choice, resolved at `build()`.
+    pending_sampler: Option<(String, registry::ParamBag)>,
+    rt: Option<RtSlot<'rt>>,
+    split: Option<SplitDataset>,
+    bus: EventBus,
+}
+
+impl<'rt> SessionBuilder<'rt> {
+    /// Start from a model name and dataset description.
+    pub fn new(model: &str, dataset: DatasetConfig) -> SessionBuilder<'rt> {
+        SessionBuilder::from_config(RunConfig::new("session", model, dataset))
+    }
+
+    /// Start from a fully-specified config (TOML, presets).
+    pub fn from_config(cfg: RunConfig) -> SessionBuilder<'rt> {
+        SessionBuilder {
+            cfg,
+            pending_sampler: None,
+            rt: None,
+            split: None,
+            bus: EventBus::new(),
+        }
+    }
+
+    /// Run name (lands in `RunResult::name` and metrics records).
+    pub fn named(mut self, name: &str) -> Self {
+        self.cfg.name = name.to_string();
+        self
+    }
+
+    /// Selection policy by typed config.
+    pub fn sampler(mut self, s: SamplerConfig) -> Self {
+        self.pending_sampler = None;
+        self.cfg.sampler = s;
+        self
+    }
+
+    /// Selection policy by registry name — the route for externally
+    /// registered policies. Unknown names/params error at `build()`.
+    pub fn sampler_named(mut self, name: &str, params: &[(&str, f64)]) -> Self {
+        self.pending_sampler = Some((name.to_string(), registry::bag(params)));
+        self
+    }
+
+    pub fn epochs(mut self, epochs: usize) -> Self {
+        self.cfg.epochs = epochs;
+        self
+    }
+
+    /// Meta-batch B (drawn uniformly each step) and mini-batch b (kept
+    /// for BP). `b == B` disables batch-level selection.
+    pub fn batch_sizes(mut self, meta: usize, mini: usize) -> Self {
+        self.cfg.meta_batch = meta;
+        self.cfg.mini_batch = mini;
+        self
+    }
+
+    /// Gradient-accumulation micro-batch (0 = off).
+    pub fn micro_batch(mut self, micro: usize) -> Self {
+        self.cfg.micro_batch = micro;
+        self
+    }
+
+    pub fn lr(mut self, schedule: LrSchedule) -> Self {
+        self.cfg.lr = schedule;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Evaluate every `k` epochs (0 = only at the end).
+    pub fn eval_every(mut self, k: usize) -> Self {
+        self.cfg.eval_every = k;
+        self
+    }
+
+    pub fn test_n(mut self, n: usize) -> Self {
+        self.cfg.test_n = n;
+        self
+    }
+
+    /// Engine mode: sequential data-parallel simulation with `n` workers.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self.cfg.threaded_workers = false;
+        self.cfg.sync_every = 0;
+        self
+    }
+
+    /// Engine mode: `n` real threaded worker replicas, parameters
+    /// averaged every `sync_every` local steps (0 = epoch boundaries
+    /// only). Requires a runtime with `spawn_replica`.
+    pub fn threaded(mut self, n: usize, sync_every: usize) -> Self {
+        self.cfg.workers = n;
+        self.cfg.threaded_workers = true;
+        self.cfg.sync_every = sync_every;
+        self
+    }
+
+    /// Arbitrary config access for knobs without a dedicated method.
+    pub fn configure(mut self, f: impl FnOnce(&mut RunConfig)) -> Self {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// Use this runtime instead of auto-detecting (XLA artifacts if
+    /// present, else the native fallback).
+    pub fn runtime(mut self, rt: Box<dyn ModelRuntime>) -> Self {
+        self.rt = Some(RtSlot::Owned(rt));
+        self
+    }
+
+    /// Borrow the caller's runtime (artifact reuse across sessions).
+    pub fn runtime_mut(mut self, rt: &'rt mut (dyn ModelRuntime + 'rt)) -> Self {
+        self.rt = Some(RtSlot::Borrowed(rt));
+        self
+    }
+
+    /// Use this data split instead of generating one from the dataset
+    /// config (seed `cfg.seed ^ 0xda7a_5eed`).
+    pub fn split(mut self, split: SplitDataset) -> Self {
+        self.split = Some(split);
+        self
+    }
+
+    /// Subscribe an event sink (repeatable; invoked in subscription order).
+    pub fn sink(mut self, sink: Box<dyn EventSink>) -> Self {
+        self.bus.add(sink);
+        self
+    }
+
+    /// Subscribe a closure sink.
+    pub fn on_event(self, f: impl FnMut(&Event) + Send + 'static) -> Self {
+        self.sink(Box::new(f))
+    }
+
+    /// Validate and assemble the session.
+    pub fn build(self) -> anyhow::Result<Session<'rt>> {
+        let mut cfg = self.cfg;
+        if let Some((name, bag)) = &self.pending_sampler {
+            cfg.sampler = registry::parse(name, bag).map_err(|e| anyhow::anyhow!("sampler: {e}"))?;
+        }
+        cfg.validate().map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        let split = match self.split {
+            Some(s) => s,
+            None => data::build(&cfg.dataset, cfg.test_n, cfg.seed ^ 0xda7a_5eed),
+        };
+        anyhow::ensure!(
+            split.train.n == cfg.dataset.n(),
+            "provided split has {} train samples but the config describes {}",
+            split.train.n,
+            cfg.dataset.n()
+        );
+        let rt = match self.rt {
+            Some(slot) => slot,
+            None => RtSlot::Owned(make_runtime(&cfg)?),
+        };
+        Ok(Session { cfg, rt, split, bus: self.bus })
+    }
+}
+
+/// A configured, runnable training session. Each `run()` is an
+/// independent trial: fresh sampler state from config, runtime
+/// re-initialized from the seed.
+pub struct Session<'rt> {
+    cfg: RunConfig,
+    rt: RtSlot<'rt>,
+    split: SplitDataset,
+    bus: EventBus,
+}
+
+impl<'rt> Session<'rt> {
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    pub fn data(&self) -> &SplitDataset {
+        &self.split
+    }
+
+    /// Swap the selection policy for subsequent runs (method-comparison
+    /// loops over one shared runtime + split).
+    pub fn set_sampler(&mut self, s: SamplerConfig) {
+        self.cfg.sampler = s;
+    }
+
+    /// Rename subsequent runs' reports.
+    pub fn set_name(&mut self, name: &str) {
+        self.cfg.name = name.to_string();
+    }
+
+    /// Subscribe another event sink.
+    pub fn add_sink(&mut self, sink: Box<dyn EventSink>) {
+        self.bus.add(sink);
+    }
+
+    /// Execute one full training run and return its typed report.
+    pub fn run(&mut self) -> anyhow::Result<RunResult> {
+        self.cfg.validate().map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        let sampler = sampler::build(&self.cfg.sampler, self.split.train.n, self.cfg.epochs)?;
+        Engine::new(&self.cfg, self.rt.get(), &self.split, sampler)
+            .with_event_bus(&mut self.bus)
+            .run()
+    }
+
+    /// Run `trials` independent seeds (seed, seed+1000, ...) on this
+    /// session's split and runtime; restores the base seed afterwards.
+    pub fn run_trials(&mut self, trials: usize) -> anyhow::Result<Vec<RunResult>> {
+        let base = self.cfg.seed;
+        let mut out = Vec::with_capacity(trials);
+        for t in 0..trials {
+            self.cfg.seed = base + 1000 * t as u64;
+            let r = self.run();
+            self.cfg.seed = base;
+            out.push(r?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeRuntime;
+    use std::sync::{Arc, Mutex};
+
+    fn tiny_dataset() -> DatasetConfig {
+        DatasetConfig::SynthCifar { n: 128, classes: 4, label_noise: 0.0, hard_frac: 0.2 }
+    }
+
+    fn tiny_builder<'rt>() -> SessionBuilder<'rt> {
+        SessionBuilder::new("native", tiny_dataset())
+            .epochs(2)
+            .batch_sizes(32, 8)
+            .test_n(64)
+            .runtime(Box::new(NativeRuntime::new(3072, 8, 4)))
+    }
+
+    #[test]
+    fn builder_runs_and_reports() {
+        let r = tiny_builder()
+            .named("unit")
+            .sampler(SamplerConfig::es_default())
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.name, "unit");
+        assert_eq!(r.sampler, "es");
+        assert_eq!(r.epochs, 2);
+        assert!(r.final_eval.accuracy.is_finite());
+    }
+
+    #[test]
+    fn builder_rejects_invalid_config() {
+        let err = tiny_builder().batch_sizes(16, 32).build().unwrap_err().to_string();
+        assert!(err.contains("mini_batch"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_unknown_named_sampler() {
+        let err = tiny_builder().sampler_named("nope", &[]).build().unwrap_err().to_string();
+        assert!(err.contains("unknown sampler"), "{err}");
+    }
+
+    #[test]
+    fn events_flow_to_sinks() {
+        let seen: Arc<Mutex<Vec<Event>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = seen.clone();
+        let r = tiny_builder()
+            // 4 epochs so the 5% annealing window leaves active epochs
+            // and the scoring-FP stage (and its event) actually runs.
+            .epochs(4)
+            .sampler(SamplerConfig::es_default())
+            .eval_every(1)
+            .on_event(move |ev: &Event| sink.lock().unwrap().push(ev.clone()))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let seen = seen.lock().unwrap();
+        assert!(matches!(seen.first(), Some(Event::RunStart { .. })));
+        assert!(matches!(seen.last(), Some(Event::RunEnd { .. })));
+        let epoch_starts =
+            seen.iter().filter(|e| matches!(e, Event::EpochStart { .. })).count();
+        assert_eq!(epoch_starts, 4);
+        let evals = seen.iter().filter(|e| matches!(e, Event::EvalDone { .. })).count();
+        assert_eq!(evals, 4, "eval_every=1 over 4 epochs");
+        // Batch-level ES in active epochs emits per-step selection events.
+        assert!(seen.iter().any(|e| matches!(e, Event::SelectionMade { .. })));
+        assert!(seen.iter().any(|e| matches!(e, Event::ScoringFp { .. })));
+        // The report matches the event stream's final eval.
+        if let Some(Event::RunEnd { accuracy, .. }) = seen.last() {
+            assert_eq!(*accuracy, r.final_eval.accuracy);
+        }
+    }
+
+    #[test]
+    fn run_trials_varies_seed_and_restores() {
+        let mut session = tiny_builder().build().unwrap();
+        let base_seed = session.config().seed;
+        let rs = session.run_trials(2).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].seed, base_seed);
+        assert_eq!(rs[1].seed, base_seed + 1000);
+        assert_eq!(session.config().seed, base_seed);
+    }
+
+    #[test]
+    fn split_mismatch_is_rejected() {
+        let other = data::build(
+            &DatasetConfig::SynthCifar { n: 64, classes: 4, label_noise: 0.0, hard_frac: 0.2 },
+            16,
+            0,
+        );
+        let err = tiny_builder().split(other).build().unwrap_err().to_string();
+        assert!(err.contains("64"), "{err}");
+    }
+}

@@ -1,0 +1,18 @@
+//! One-stop imports for embedding applications, examples, and tests:
+//! `use evosample::prelude::*;` brings in the session API, the event
+//! stream, config types, the sampler registry, and the result/metrics
+//! helpers.
+
+pub use super::events::{Event, EventBus, EventSink, ProgressSink};
+pub use super::{RunResult, Session, SessionBuilder};
+
+pub use crate::config::presets::{all_samplers, Scale};
+pub use crate::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
+pub use crate::coordinator::{
+    predicted_saved_time_pct, saved_time_pct, CostSummary, EvalStats, TrainResult,
+};
+pub use crate::data::{self, SplitDataset};
+pub use crate::metrics::{EventLog, Recorder};
+pub use crate::runtime::{make_runtime, ModelRuntime};
+pub use crate::sampler::{analysis, registry, Sampler, SamplerKind, Selection};
+pub use crate::util::Pcg64;

@@ -29,6 +29,9 @@ pub enum SamplerConfig {
     Ucb { prune_ratio: f64, decay: f32, c: f32 },
     /// Purely random set-level pruning (ablation Tab. 7).
     RandomPrune { prune_ratio: f64 },
+    /// An externally-registered policy (`sampler::registry::register`),
+    /// addressed by registry name with resolved numeric params.
+    Custom { name: String, params: Vec<(String, f64)> },
 }
 
 impl SamplerConfig {
@@ -54,7 +57,7 @@ impl SamplerConfig {
         SamplerConfig::Ucb { prune_ratio: 0.3, decay: 0.8, c: 1.0 }
     }
 
-    pub fn name(&self) -> &'static str {
+    pub fn name(&self) -> &str {
         match self {
             SamplerConfig::Uniform => "baseline",
             SamplerConfig::Loss => "loss",
@@ -65,30 +68,86 @@ impl SamplerConfig {
             SamplerConfig::Kakurenbo { .. } => "ka",
             SamplerConfig::Ucb { .. } => "ucb",
             SamplerConfig::RandomPrune { .. } => "random_prune",
+            SamplerConfig::Custom { name, .. } => name,
         }
+    }
+
+    /// Registry spec: (canonical name, explicit param bag). Construction
+    /// and taxonomy queries route through `sampler::registry` with this.
+    pub fn to_spec(&self) -> (String, crate::sampler::registry::ParamBag) {
+        use crate::sampler::registry::bag;
+        let params = match self {
+            SamplerConfig::Uniform
+            | SamplerConfig::Loss
+            | SamplerConfig::Ordered => Default::default(),
+            SamplerConfig::Es { beta1, beta2, anneal_frac } => bag(&[
+                ("beta1", *beta1 as f64),
+                ("beta2", *beta2 as f64),
+                ("anneal_frac", *anneal_frac),
+            ]),
+            SamplerConfig::Eswp { beta1, beta2, anneal_frac, prune_ratio } => bag(&[
+                ("beta1", *beta1 as f64),
+                ("beta2", *beta2 as f64),
+                ("anneal_frac", *anneal_frac),
+                ("prune_ratio", *prune_ratio),
+            ]),
+            SamplerConfig::InfoBatch { prune_ratio, anneal_frac } => {
+                bag(&[("prune_ratio", *prune_ratio), ("anneal_frac", *anneal_frac)])
+            }
+            SamplerConfig::Kakurenbo { prune_ratio, conf_threshold } => bag(&[
+                ("prune_ratio", *prune_ratio),
+                ("conf_threshold", *conf_threshold as f64),
+            ]),
+            SamplerConfig::Ucb { prune_ratio, decay, c } => bag(&[
+                ("prune_ratio", *prune_ratio),
+                ("decay", *decay as f64),
+                ("c", *c as f64),
+            ]),
+            SamplerConfig::RandomPrune { prune_ratio } => {
+                bag(&[("prune_ratio", *prune_ratio)])
+            }
+            SamplerConfig::Custom { params, .. } => {
+                params.iter().map(|(k, v)| (k.clone(), *v)).collect()
+            }
+        };
+        (self.name().to_string(), params)
     }
 
     /// Batch-level methods need per-step scoring FPs over the meta-batch.
     pub fn is_batch_level(&self) -> bool {
-        matches!(
-            self,
-            SamplerConfig::Loss
-                | SamplerConfig::Ordered
-                | SamplerConfig::Es { .. }
-                | SamplerConfig::Eswp { .. }
-        )
+        use crate::sampler::SamplerKind;
+        match self {
+            SamplerConfig::Custom { name, .. } => matches!(
+                crate::sampler::registry::kind_of(name),
+                Some(SamplerKind::BatchLevel) | Some(SamplerKind::Both)
+            ),
+            _ => matches!(
+                self,
+                SamplerConfig::Loss
+                    | SamplerConfig::Ordered
+                    | SamplerConfig::Es { .. }
+                    | SamplerConfig::Eswp { .. }
+            ),
+        }
     }
 
     /// Set-level methods prune the dataset at epoch boundaries.
     pub fn is_set_level(&self) -> bool {
-        matches!(
-            self,
-            SamplerConfig::Eswp { .. }
-                | SamplerConfig::InfoBatch { .. }
-                | SamplerConfig::Kakurenbo { .. }
-                | SamplerConfig::Ucb { .. }
-                | SamplerConfig::RandomPrune { .. }
-        )
+        use crate::sampler::SamplerKind;
+        match self {
+            SamplerConfig::Custom { name, .. } => matches!(
+                crate::sampler::registry::kind_of(name),
+                Some(SamplerKind::SetLevel) | Some(SamplerKind::Both)
+            ),
+            _ => matches!(
+                self,
+                SamplerConfig::Eswp { .. }
+                    | SamplerConfig::InfoBatch { .. }
+                    | SamplerConfig::Kakurenbo { .. }
+                    | SamplerConfig::Ucb { .. }
+                    | SamplerConfig::RandomPrune { .. }
+            ),
+        }
     }
 }
 
@@ -255,6 +314,13 @@ impl RunConfig {
         if self.sync_every > 0 && !self.threaded_workers {
             return Err("sync_every requires threaded_workers".into());
         }
+        if let SamplerConfig::Custom { name, params } = &self.sampler {
+            // Delegate to the registry: the name must be registered and
+            // every param declared by its entry.
+            let bag: crate::sampler::registry::ParamBag =
+                params.iter().map(|(k, v)| (k.clone(), *v)).collect();
+            crate::sampler::registry::parse(name, &bag)?;
+        }
         let ratios: &[f64] = match &self.sampler {
             SamplerConfig::Eswp { prune_ratio, anneal_frac, .. } => &[*prune_ratio, *anneal_frac],
             SamplerConfig::InfoBatch { prune_ratio, anneal_frac } => &[*prune_ratio, *anneal_frac],
@@ -309,39 +375,26 @@ impl RunConfig {
             },
             other => return Err(format!("unknown dataset.kind {other:?}")),
         };
-        let sampler = match doc.str_or("sampler.kind", "baseline").as_str() {
-            "baseline" | "uniform" => SamplerConfig::Uniform,
-            "loss" => SamplerConfig::Loss,
-            "order" | "ordered" => SamplerConfig::Ordered,
-            "es" => SamplerConfig::Es {
-                beta1: doc.f64_or("sampler.beta1", 0.2) as f32,
-                beta2: doc.f64_or("sampler.beta2", 0.9) as f32,
-                anneal_frac: doc.f64_or("sampler.anneal_frac", 0.05),
-            },
-            "eswp" => SamplerConfig::Eswp {
-                beta1: doc.f64_or("sampler.beta1", 0.2) as f32,
-                beta2: doc.f64_or("sampler.beta2", 0.8) as f32,
-                anneal_frac: doc.f64_or("sampler.anneal_frac", 0.05),
-                prune_ratio: doc.f64_or("sampler.prune_ratio", 0.2),
-            },
-            "infobatch" => SamplerConfig::InfoBatch {
-                prune_ratio: doc.f64_or("sampler.prune_ratio", 0.5),
-                anneal_frac: doc.f64_or("sampler.anneal_frac", 0.125),
-            },
-            "ka" | "kakurenbo" => SamplerConfig::Kakurenbo {
-                prune_ratio: doc.f64_or("sampler.prune_ratio", 0.3),
-                conf_threshold: doc.f64_or("sampler.conf_threshold", 0.7) as f32,
-            },
-            "ucb" => SamplerConfig::Ucb {
-                prune_ratio: doc.f64_or("sampler.prune_ratio", 0.3),
-                decay: doc.f64_or("sampler.decay", 0.8) as f32,
-                c: doc.f64_or("sampler.c", 1.0) as f32,
-            },
-            "random_prune" => SamplerConfig::RandomPrune {
-                prune_ratio: doc.f64_or("sampler.prune_ratio", 0.2),
-            },
-            other => return Err(format!("unknown sampler.kind {other:?}")),
-        };
+        // Sampler parsing delegates to the open registry: `sampler.kind`
+        // names any registered entry (built-in or external), and every
+        // other `[sampler]` key lands in its param bag — so unknown
+        // methods and typo'd params both fail loudly with the declared
+        // alternatives.
+        let sampler_kind = doc.str_or("sampler.kind", "baseline");
+        let mut sampler_bag = crate::sampler::registry::ParamBag::new();
+        for key in doc.keys_under("sampler.") {
+            if key == "kind" {
+                continue;
+            }
+            let full = format!("sampler.{key}");
+            let v = doc
+                .get(&full)
+                .and_then(super::toml::Value::as_f64)
+                .ok_or_else(|| format!("{full} must be a number"))?;
+            sampler_bag.insert(key.to_string(), v);
+        }
+        let sampler = crate::sampler::registry::parse(&sampler_kind, &sampler_bag)
+            .map_err(|e| format!("sampler: {e}"))?;
         let lr = match doc.str_or("lr.schedule", "const").as_str() {
             "const" => LrSchedule::Const { lr: doc.f64_or("lr.lr", 1e-3) },
             "onecycle" => LrSchedule::OneCycle {
@@ -501,6 +554,29 @@ n = 1024
     fn from_doc_requires_model() {
         let doc = Doc::parse("[run]\nepochs = 3\n").unwrap();
         assert!(RunConfig::from_doc(&doc).unwrap_err().contains("run.model"));
+    }
+
+    #[test]
+    fn from_doc_unknown_sampler_lists_available() {
+        let src = "[run]\nmodel = \"mlp_cifar10\"\n[dataset]\nkind = \"synth_cifar\"\nn = 1024\n[sampler]\nkind = \"bogus\"\n";
+        let err = RunConfig::from_doc(&Doc::parse(src).unwrap()).unwrap_err();
+        assert!(err.contains("unknown sampler"), "{err}");
+        assert!(err.contains("eswp") && err.contains("baseline"), "{err}");
+    }
+
+    #[test]
+    fn from_doc_rejects_typod_sampler_param() {
+        let src = "[run]\nmodel = \"mlp_cifar10\"\n[dataset]\nkind = \"synth_cifar\"\nn = 1024\n[sampler]\nkind = \"es\"\nbeta3 = 0.1\n";
+        let err = RunConfig::from_doc(&Doc::parse(src).unwrap()).unwrap_err();
+        assert!(err.contains("beta3"), "{err}");
+    }
+
+    #[test]
+    fn custom_sampler_validates_through_registry() {
+        let mut c = base();
+        c.sampler = SamplerConfig::Custom { name: "never_registered".into(), params: vec![] };
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("unknown sampler"), "{err}");
     }
 
     #[test]

@@ -24,6 +24,7 @@ mod threaded;
 
 pub use pipeline::{ObservationRoute, Stage, StageObserver, StepCtx, StepPipeline, StepStats};
 
+use crate::api::events::{emit_into, Event, EventBus};
 use crate::config::RunConfig;
 use crate::data::loader::{EpochLoader, Prefetcher};
 use crate::data::SplitDataset;
@@ -42,6 +43,7 @@ pub struct Engine<'a> {
     data: &'a SplitDataset,
     sampler: Box<dyn Sampler>,
     observer: Option<Box<dyn StageObserver>>,
+    events: Option<&'a mut EventBus>,
 }
 
 impl<'a> Engine<'a> {
@@ -51,7 +53,7 @@ impl<'a> Engine<'a> {
         data: &'a SplitDataset,
         sampler: Box<dyn Sampler>,
     ) -> Engine<'a> {
-        Engine { cfg, rt, data, sampler, observer: None }
+        Engine { cfg, rt, data, sampler, observer: None, events: None }
     }
 
     /// Install a per-stage accounting hook (single-worker and simulation
@@ -59,6 +61,14 @@ impl<'a> Engine<'a> {
     /// still lands in the merged phase ledger).
     pub fn with_observer(mut self, observer: Box<dyn StageObserver>) -> Engine<'a> {
         self.observer = Some(observer);
+        self
+    }
+
+    /// Attach the typed event stream: every sink on `bus` observes this
+    /// run per the DESIGN.md §6 ordering contract. Purely additive — the
+    /// RNG schedule and arithmetic are untouched.
+    pub fn with_event_bus(mut self, bus: &'a mut EventBus) -> Engine<'a> {
+        self.events = Some(bus);
         self
     }
 
@@ -74,7 +84,13 @@ impl<'a> Engine<'a> {
     /// Execute the full run.
     pub fn run(&mut self) -> anyhow::Result<TrainResult> {
         if self.cfg.threaded_workers && self.cfg.workers > 1 {
-            threaded::run(self.cfg, self.rt, self.data, self.sampler.as_mut())
+            threaded::run(
+                self.cfg,
+                self.rt,
+                self.data,
+                self.sampler.as_mut(),
+                self.events.as_deref_mut(),
+            )
         } else {
             self.run_sequential()
         }
@@ -103,11 +119,24 @@ impl<'a> Engine<'a> {
 
         let workers = cfg.workers.max(1);
 
+        emit_into(
+            &mut self.events,
+            Event::RunStart {
+                name: cfg.name.clone(),
+                sampler: self.sampler.name().to_string(),
+                epochs: cfg.epochs,
+            },
+        );
+
         for epoch in 0..cfg.epochs {
             // ---- set-level selection -----------------------------------
             let kept =
                 timers.time(phase::PRUNE, || self.sampler.on_epoch_start(epoch, &mut rng));
             anyhow::ensure!(!kept.is_empty(), "sampler kept nothing at epoch {epoch}");
+            emit_into(
+                &mut self.events,
+                Event::EpochStart { epoch, kept: kept.len(), dataset_n: n },
+            );
 
             let mut epoch_loss_sum = 0.0f64;
             let mut epoch_loss_cnt = 0u64;
@@ -136,6 +165,7 @@ impl<'a> Engine<'a> {
                         &mut timers,
                         self.observer.as_deref_mut(),
                         &mut route,
+                        self.events.as_deref_mut(),
                     )?;
                     epoch_loss_sum += step_mean;
                     epoch_loss_cnt += 1;
@@ -181,6 +211,7 @@ impl<'a> Engine<'a> {
                             &mut timers,
                             self.observer.as_deref_mut(),
                             &mut route,
+                            self.events.as_deref_mut(),
                         )?;
                         epoch_loss_sum += step_mean;
                         epoch_loss_cnt += 1;
@@ -199,13 +230,15 @@ impl<'a> Engine<'a> {
                         }
                     });
                 }
+                emit_into(&mut self.events, Event::SyncRound { epoch, workers });
             }
 
-            loss_curve.push(if epoch_loss_cnt > 0 {
+            let epoch_mean = if epoch_loss_cnt > 0 {
                 epoch_loss_sum / epoch_loss_cnt as f64
             } else {
                 f64::NAN
-            });
+            };
+            loss_curve.push(epoch_mean);
 
             // ---- eval --------------------------------------------------
             let at_eval_point = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
@@ -213,8 +246,29 @@ impl<'a> Engine<'a> {
                 let stats = timers.time(phase::EVAL, || evaluate(self.rt, self.data))?;
                 eval_curve.push((epoch, stats.loss, stats.accuracy));
                 bp_at_eval.push(pipeline.stats.bp_samples);
+                emit_into(
+                    &mut self.events,
+                    Event::EvalDone {
+                        epoch,
+                        loss: stats.loss,
+                        accuracy: stats.accuracy,
+                        bp_samples: pipeline.stats.bp_samples,
+                    },
+                );
             }
+            emit_into(
+                &mut self.events,
+                Event::EpochEnd { epoch, mean_train_loss: epoch_mean },
+            );
         }
+
+        emit_into(
+            &mut self.events,
+            Event::RunEnd {
+                steps: pipeline.stats.steps,
+                accuracy: eval_curve.last().map(|&(_, _, a)| a).unwrap_or(f64::NAN),
+            },
+        );
 
         Ok(assemble_result(
             cfg,
@@ -308,7 +362,7 @@ mod tests {
         let cfg = small_cfg(SamplerConfig::es_default());
         let split = data::build(&cfg.dataset, cfg.test_n, 1);
         let mut rt = NativeRuntime::new(split.train.x_len(), 16, 4);
-        let s = sampler::build(&cfg.sampler, split.train.n, cfg.epochs);
+        let s = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
         let seen = Arc::new(Mutex::new(Vec::new()));
         let mut engine = Engine::new(&cfg, &mut rt, &split, s)
             .with_observer(Box::new(Recorder(seen.clone())));
@@ -326,7 +380,7 @@ mod tests {
         let cfg = small_cfg(SamplerConfig::es_default());
         let split = data::build(&cfg.dataset, cfg.test_n, 2);
         let mut rt = NativeRuntime::new(split.train.x_len(), 16, 4);
-        let s = sampler::build(&cfg.sampler, split.train.n, cfg.epochs);
+        let s = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
         let mut engine = Engine::new(&cfg, &mut rt, &split, s);
         engine.run().unwrap();
         let es = engine

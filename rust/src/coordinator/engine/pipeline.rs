@@ -13,6 +13,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::api::events::{emit_into, Event, EventBus};
 use crate::config::RunConfig;
 use crate::data::TensorDataset;
 use crate::runtime::{BatchBuf, BatchX, ModelRuntime};
@@ -150,9 +151,11 @@ impl StepPipeline {
         timers: &mut PhaseTimers,
         mut observer: Option<&mut dyn StageObserver>,
         route: &mut ObservationRoute<'_>,
+        mut events: Option<&mut EventBus>,
     ) -> anyhow::Result<f64> {
         let cfg = ctx.cfg;
         let train_ds = ctx.train_ds;
+        let step_no = self.stats.steps;
 
         // ---- stage 1: data-gather (meta-batch) -------------------------
         staged(timers, &mut observer, Stage::DataGather, || {
@@ -162,10 +165,20 @@ impl StepPipeline {
         // ---- stage 2: scoring FP (batch-level methods, active epochs) --
         let selecting = cfg.mini_batch < cfg.meta_batch;
         if selecting && sampler.needs_meta_losses(ctx.epoch) {
+            let t0 = Instant::now();
             let losses = staged(timers, &mut observer, Stage::ScoringFp, || {
                 rt.loss_fwd(self.meta_buf.x(train_ds), &self.meta_buf.y, meta.len())
             })?;
             self.stats.fp_samples += meta.len() as u64;
+            emit_into(
+                &mut events,
+                Event::ScoringFp {
+                    epoch: ctx.epoch,
+                    step: step_no,
+                    samples: meta.len(),
+                    elapsed: t0.elapsed(),
+                },
+            );
             match route {
                 ObservationRoute::Immediate | ObservationRoute::Replica => {
                     staged(timers, &mut observer, Stage::Observe, || {
@@ -188,6 +201,15 @@ impl StepPipeline {
             sampler.select(meta, cfg.mini_batch, ctx.epoch, rng)
         });
         debug_assert!(!sel.indices.is_empty());
+        emit_into(
+            &mut events,
+            Event::SelectionMade {
+                epoch: ctx.epoch,
+                step: step_no,
+                meta: meta.len(),
+                selected: sel.indices.len(),
+            },
+        );
 
         // ---- stage 4: BP (assemble + micro-batched train steps) --------
         // Reuse the meta buffer when the selection is the identity — the

@@ -34,6 +34,7 @@
 
 use std::sync::{Barrier, Mutex};
 
+use crate::api::events::{emit_into, Event, EventBus};
 use crate::config::RunConfig;
 use crate::data::loader::EpochLoader;
 use crate::data::SplitDataset;
@@ -93,6 +94,7 @@ pub(super) fn run(
     rt: &mut dyn ModelRuntime,
     data: &SplitDataset,
     canonical: &mut dyn Sampler,
+    mut events: Option<&mut EventBus>,
 ) -> anyhow::Result<TrainResult> {
     let workers = cfg.workers;
     rt.init(cfg.seed as i32)?;
@@ -108,8 +110,9 @@ pub(super) fn run(
     // Worker sampler replicas are rebuilt from the config; refuse a
     // mismatched custom sampler rather than silently selecting with the
     // wrong method (the canonical only drives epoch-start pruning).
-    let mut worker_samplers: Vec<Box<dyn Sampler>> =
-        (0..workers).map(|_| sampler::build(&cfg.sampler, n, cfg.epochs)).collect();
+    let mut worker_samplers: Vec<Box<dyn Sampler>> = (0..workers)
+        .map(|_| sampler::build(&cfg.sampler, n, cfg.epochs))
+        .collect::<anyhow::Result<Vec<_>>>()?;
     anyhow::ensure!(
         worker_samplers[0].name() == canonical.name(),
         "threaded_workers rebuilds worker samplers from cfg.sampler ({:?}), which does \
@@ -131,6 +134,17 @@ pub(super) fn run(
     let mut eval_curve = Vec::new();
     let mut bp_at_eval = Vec::new();
 
+    // Event stream: the threaded engine announces the epoch-level subset
+    // only (per-step events stay worker-local; DESIGN.md §6).
+    emit_into(
+        &mut events,
+        Event::RunStart {
+            name: cfg.name.clone(),
+            sampler: canonical.name().to_string(),
+            epochs: cfg.epochs,
+        },
+    );
+
     for epoch in 0..cfg.epochs {
         // ---- set-level selection, replayed on every replica ------------
         // Identical tables + an identical (cloned) RNG stream reproduce
@@ -144,6 +158,7 @@ pub(super) fn run(
             kept
         });
         anyhow::ensure!(!kept.is_empty(), "sampler kept nothing at epoch {epoch}");
+        emit_into(&mut events, Event::EpochStart { epoch, kept: kept.len(), dataset_n: n });
 
         // ---- disjoint round-robin shards over effective workers --------
         // Clamping to kept.len() keeps every shard non-empty AND disjoint
@@ -254,12 +269,14 @@ pub(super) fn run(
             rt.set_params(&avg)?;
             Ok(())
         })?;
+        emit_into(&mut events, Event::SyncRound { epoch, workers: eff });
 
-        loss_curve.push(if epoch_loss_cnt > 0 {
+        let epoch_mean = if epoch_loss_cnt > 0 {
             epoch_loss_sum / epoch_loss_cnt as f64
         } else {
             f64::NAN
-        });
+        };
+        loss_curve.push(epoch_mean);
 
         // ---- eval ------------------------------------------------------
         let at_eval_point = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
@@ -267,8 +284,26 @@ pub(super) fn run(
             let s = timers.time(phase::EVAL, || evaluate(rt, data))?;
             eval_curve.push((epoch, s.loss, s.accuracy));
             bp_at_eval.push(stats.bp_samples);
+            emit_into(
+                &mut events,
+                Event::EvalDone {
+                    epoch,
+                    loss: s.loss,
+                    accuracy: s.accuracy,
+                    bp_samples: stats.bp_samples,
+                },
+            );
         }
+        emit_into(&mut events, Event::EpochEnd { epoch, mean_train_loss: epoch_mean });
     }
+
+    emit_into(
+        &mut events,
+        Event::RunEnd {
+            steps: stats.steps,
+            accuracy: eval_curve.last().map(|&(_, _, a)| a).unwrap_or(f64::NAN),
+        },
+    );
 
     Ok(assemble_result(
         cfg,
@@ -349,6 +384,7 @@ fn run_worker(
                             &mut timers,
                             None,
                             &mut route,
+                            None,
                         )?;
                         loss_sum += step_mean;
                         loss_cnt += 1;

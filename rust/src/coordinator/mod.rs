@@ -9,4 +9,6 @@ pub mod trainer;
 
 pub use accounting::{predicted_saved_time_pct, saved_time_pct, CostSummary};
 pub use engine::{Engine, Stage, StageObserver, StepPipeline};
-pub use trainer::{evaluate, run_trials, train, train_with_sampler, EvalStats, TrainResult, TrialSummary};
+#[allow(deprecated)]
+pub use trainer::{run_trials, train};
+pub use trainer::{evaluate, train_with_sampler, EvalStats, TrainResult, TrialSummary};

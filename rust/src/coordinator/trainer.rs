@@ -72,13 +72,20 @@ impl TrainResult {
 }
 
 /// Train with a sampler built from the config (fresh state).
+///
+/// Deprecated shim over the public session API: results are bit-for-bit
+/// identical to `SessionBuilder::from_config(cfg).split(...).build()?.run()?`
+/// (pinned by `tests/api_session.rs`), but new code should construct a
+/// [`crate::api::Session`] — it owns the data/runtime wiring and carries
+/// the typed event stream.
+#[deprecated(note = "use api::SessionBuilder (evosample::prelude) instead")]
 pub fn train(
     cfg: &RunConfig,
     rt: &mut dyn ModelRuntime,
     data: &SplitDataset,
 ) -> anyhow::Result<TrainResult> {
     cfg.validate().map_err(|e| anyhow::anyhow!("config: {e}"))?;
-    let sampler = sampler::build(&cfg.sampler, data.train.n, cfg.epochs);
+    let sampler = sampler::build(&cfg.sampler, data.train.n, cfg.epochs)?;
     train_with_sampler(cfg, rt, data, sampler)
 }
 
@@ -166,6 +173,7 @@ impl TrialSummary {
 }
 
 /// Train `trials` seeds of the same config on a fresh runtime state.
+#[deprecated(note = "use api::Session::run_trials (evosample::prelude) instead")]
 pub fn run_trials(
     cfg: &RunConfig,
     rt: &mut dyn ModelRuntime,
@@ -176,6 +184,7 @@ pub fn run_trials(
     for t in 0..trials {
         let mut c = cfg.clone();
         c.seed = cfg.seed + 1000 * t as u64;
+        #[allow(deprecated)]
         results.push(train(&c, rt, data)?);
     }
     Ok(TrialSummary { results })

@@ -19,13 +19,14 @@ pub mod table4;
 pub mod table5;
 pub mod theory;
 
+use crate::api::SessionBuilder;
 use crate::config::RunConfig;
-use crate::coordinator::{train, TrainResult};
-use crate::data;
-use crate::runtime::manifest::Manifest;
-use crate::runtime::native::NativeRuntime;
-use crate::runtime::xla_rt::XlaRuntime;
+use crate::coordinator::TrainResult;
 use crate::runtime::ModelRuntime;
+
+// Historical home of the runtime chooser; it now lives beside the
+// runtimes themselves.
+pub use crate::runtime::make_runtime;
 
 /// Number of independent trials per config (paper: 3-4; smoke: 1).
 pub fn trials(scale: crate::config::presets::Scale) -> usize {
@@ -35,44 +36,15 @@ pub fn trials(scale: crate::config::presets::Scale) -> usize {
     }
 }
 
-/// Build the runtime for a config: the XLA artifact path when available,
-/// otherwise a native fallback for float-feature models (tests/dev boxes
-/// without `make artifacts`).
-pub fn make_runtime(cfg: &RunConfig) -> anyhow::Result<Box<dyn ModelRuntime>> {
-    let dir = Manifest::default_dir();
-    if dir.join("manifest.json").exists() {
-        let manifest = Manifest::load(&dir)?;
-        if manifest.models.contains_key(&cfg.model) {
-            return Ok(Box::new(XlaRuntime::load(&manifest, &cfg.model)?));
-        }
-    }
-    // Native fallback (float features only).
-    match &cfg.dataset {
-        crate::config::DatasetConfig::SynthCifar { classes, .. } => {
-            Ok(Box::new(NativeRuntime::new(3072, 64, *classes)))
-        }
-        crate::config::DatasetConfig::MaeImages { .. } => anyhow::bail!(
-            "model {} needs artifacts (run `make artifacts`)",
-            cfg.model
-        ),
-        _ => anyhow::bail!("model {} needs artifacts (run `make artifacts`)", cfg.model),
-    }
-}
-
-/// Train `trials` seeds of one config on a (cached) runtime.
+/// Train `trials` seeds of one config on a (cached) runtime, through the
+/// public session API (the split is generated once from the base seed;
+/// trial seeds offset by 1000 as always).
 pub fn run_config(
     cfg: &RunConfig,
     rt: &mut dyn ModelRuntime,
     n_trials: usize,
 ) -> anyhow::Result<Vec<TrainResult>> {
-    let split = data::build(&cfg.dataset, cfg.test_n, cfg.seed ^ 0xda7a_5eed);
-    let mut out = Vec::with_capacity(n_trials);
-    for t in 0..n_trials {
-        let mut c = cfg.clone();
-        c.seed = cfg.seed + 1000 * t as u64;
-        out.push(train(&c, rt, &split)?);
-    }
-    Ok(out)
+    SessionBuilder::from_config(cfg.clone()).runtime_mut(rt).build()?.run_trials(n_trials)
 }
 
 /// Mean accuracy% across trials.

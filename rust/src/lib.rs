@@ -16,6 +16,12 @@
 //! Python is never on the training path: the rust binary loads
 //! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and runs
 //! everything natively.
+//!
+//! Embedding applications enter through [`prelude`]: a fluent
+//! [`SessionBuilder`] producing a runnable [`Session`], an open sampler
+//! registry ([`sampler::registry`]) external crates extend with their own
+//! selection policies, and a typed event stream ([`Event`]/[`EventSink`])
+//! announcing engine progress.
 
 pub mod util;
 pub mod config;
@@ -24,7 +30,10 @@ pub mod sampler;
 pub mod runtime;
 pub mod coordinator;
 pub mod metrics;
+pub mod api;
 pub mod experiments;
 pub mod cli;
 
+pub use api::prelude;
+pub use api::{Event, EventBus, EventSink, RunResult, Session, SessionBuilder};
 pub use sampler::{Sampler, SamplerKind};

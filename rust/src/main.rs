@@ -1,22 +1,27 @@
-//! `evosample` CLI — train with any sampler, inspect artifacts, run the
-//! paper experiments.
+//! `evosample` CLI — train with any sampler, inspect artifacts and
+//! registered samplers, run the paper experiments.
 //!
 //! Subcommands:
-//!   train        --config <run.toml> [--trials N] [--workers W]
-//!                [--threaded-workers] [--sync-every K]
+//!   train          --config <run.toml> [--trials N] [--workers W]
+//!                  [--threaded-workers] [--sync-every K]
 //!   list-models                       (artifact inventory)
-//!   experiment   --id <table2|table3|table4|table5|fig4|fig5|fig6|fig7|
-//!                      fig1|fig9|fig10|tab6|tab7|tab8|theory> [--full]
+//!   list-samplers                     (registry inventory: name/kind/params)
+//!   experiment     --id <table2|table3|table4|table5|fig4|fig5|fig6|fig7|
+//!                       fig1|fig9|fig10|tab6|tab7|tab8|theory> [--full]
 //!   illustrate                        (fig1 weight-signal traces)
 //!   help
+//!
+//! Unknown subcommands are an error (exit 1); `help` is the only usage
+//! path.
 
 use evosample::cli::Args;
 use evosample::config;
 use evosample::config::presets::Scale;
-use evosample::coordinator::train;
 use evosample::experiments;
-use evosample::metrics::Recorder;
+use evosample::metrics::{EventLog, Recorder};
+use evosample::prelude::{ProgressSink, SessionBuilder};
 use evosample::runtime::manifest::Manifest;
+use evosample::sampler::registry;
 
 const USAGE: &str = "\
 evosample — Data-Efficient Training by Evolved Sampling (ES/ESWP)
@@ -25,6 +30,7 @@ USAGE:
   evosample train --config <run.toml> [--trials N] [--workers W]
                   [--threaded-workers] [--sync-every K]
   evosample list-models
+  evosample list-samplers
   evosample experiment --id <table2|table3|table4|table5|fig1|fig4|fig5|
                              fig6|fig7|fig9|fig10|tab6|tab7|tab8|theory>
                        [--full]
@@ -72,13 +78,20 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                     }
                 );
             }
+            // One runtime serves every trial; each trial is an
+            // independent session (own split from its trial seed) with
+            // progress + event-log sinks on the typed event stream.
             let mut rt = experiments::make_runtime(&cfg)?;
             let rec = Recorder::new("cli_train")?;
             for t in 0..trials {
                 let mut c = cfg.clone();
                 c.seed = cfg.seed + 1000 * t as u64;
-                let split = evosample::data::build(&c.dataset, c.test_n, c.seed ^ 0xda7a_5eed);
-                let r = train(&c, rt.as_mut(), &split)?;
+                let mut session = SessionBuilder::from_config(c)
+                    .runtime_mut(rt.as_mut())
+                    .sink(Box::new(ProgressSink::new()))
+                    .sink(Box::new(EventLog::new("cli_train_events")?))
+                    .build()?;
+                let r = session.run()?;
                 rec.record_result(&r)?;
                 println!(
                     "trial {t}: acc {:.2}%  eval loss {:.4}  wall {:.2}s  bp_samples {}  ({})",
@@ -101,6 +114,24 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                     e.classes,
                     e.flops_per_sample_fwd as f64 / 1e9,
                     e.train_step.keys().collect::<Vec<_>>()
+                );
+            }
+            Ok(())
+        }
+        "list-samplers" => {
+            println!("{:<14} {:<10} {:<18} params", "name", "kind", "aliases");
+            for e in registry::entries() {
+                let params: Vec<String> = e
+                    .params()
+                    .iter()
+                    .map(|p| format!("{}={} ({})", p.name, p.default, p.doc))
+                    .collect();
+                println!(
+                    "{:<14} {:<10} {:<18} {}",
+                    e.name(),
+                    e.kind(),
+                    e.aliases().join(","),
+                    if params.is_empty() { "-".to_string() } else { params.join("; ") },
                 );
             }
             Ok(())
@@ -130,9 +161,10 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             }
         }
         "illustrate" => experiments::fig1::run(400),
-        _ => {
+        "help" => {
             println!("{USAGE}");
             Ok(())
         }
+        other => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
     }
 }

@@ -1,11 +1,15 @@
 //! Result recording: JSONL writers under `results/` + summary helpers.
 //!
 //! Every bench/example writes one JSON object per training run so paper
-//! tables can be regenerated or re-aggregated without re-running.
+//! tables can be regenerated or re-aggregated without re-running. The
+//! [`EventLog`] sink additionally streams the engine's typed events
+//! (`api::Event`) to JSONL as a run progresses — the metrics layer's
+//! consumer of the public event stream.
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
+use crate::api::events::{Event, EventSink};
 use crate::coordinator::TrainResult;
 use crate::util::json::{num, obj, s, Json};
 
@@ -78,6 +82,102 @@ impl Recorder {
     }
 }
 
+/// Serialize one engine event to a flat, tagged JSON record.
+pub fn event_to_json(ev: &Event) -> Json {
+    match ev {
+        Event::RunStart { name, sampler, epochs } => obj(vec![
+            ("event", s("run_start")),
+            ("name", s(name.clone())),
+            ("sampler", s(sampler.clone())),
+            ("epochs", num(*epochs as f64)),
+        ]),
+        Event::EpochStart { epoch, kept, dataset_n } => obj(vec![
+            ("event", s("epoch_start")),
+            ("epoch", num(*epoch as f64)),
+            ("kept", num(*kept as f64)),
+            ("dataset_n", num(*dataset_n as f64)),
+        ]),
+        Event::ScoringFp { epoch, step, samples, elapsed } => obj(vec![
+            ("event", s("scoring_fp")),
+            ("epoch", num(*epoch as f64)),
+            ("step", num(*step as f64)),
+            ("samples", num(*samples as f64)),
+            ("elapsed_s", num(elapsed.as_secs_f64())),
+        ]),
+        Event::SelectionMade { epoch, step, meta, selected } => obj(vec![
+            ("event", s("selection_made")),
+            ("epoch", num(*epoch as f64)),
+            ("step", num(*step as f64)),
+            ("meta", num(*meta as f64)),
+            ("selected", num(*selected as f64)),
+        ]),
+        Event::SyncRound { epoch, workers } => obj(vec![
+            ("event", s("sync_round")),
+            ("epoch", num(*epoch as f64)),
+            ("workers", num(*workers as f64)),
+        ]),
+        Event::EvalDone { epoch, loss, accuracy, bp_samples } => obj(vec![
+            ("event", s("eval_done")),
+            ("epoch", num(*epoch as f64)),
+            ("eval_loss", num(*loss)),
+            ("accuracy", num(*accuracy)),
+            ("bp_samples", num(*bp_samples as f64)),
+        ]),
+        Event::EpochEnd { epoch, mean_train_loss } => obj(vec![
+            ("event", s("epoch_end")),
+            ("epoch", num(*epoch as f64)),
+            ("mean_train_loss", num(*mean_train_loss)),
+        ]),
+        Event::RunEnd { steps, accuracy } => obj(vec![
+            ("event", s("run_end")),
+            ("steps", num(*steps as f64)),
+            ("accuracy", num(*accuracy)),
+        ]),
+    }
+}
+
+/// JSONL event sink: streams engine events through a [`Recorder`].
+/// Per-step events (`ScoringFp`, `SelectionMade`) are skipped unless
+/// `with_steps(true)` — epoch-level telemetry is usually what dashboards
+/// want, and step events scale with the step count.
+pub struct EventLog {
+    rec: Recorder,
+    steps: bool,
+}
+
+impl EventLog {
+    /// Logs under `results/<name>.jsonl`.
+    pub fn new(name: &str) -> std::io::Result<EventLog> {
+        Ok(EventLog { rec: Recorder::new(name)?, steps: false })
+    }
+
+    pub fn in_dir(dir: &Path, name: &str) -> std::io::Result<EventLog> {
+        Ok(EventLog { rec: Recorder::in_dir(dir, name)?, steps: false })
+    }
+
+    /// Also record per-step events.
+    pub fn with_steps(mut self, steps: bool) -> EventLog {
+        self.steps = steps;
+        self
+    }
+
+    pub fn path(&self) -> &Path {
+        self.rec.path()
+    }
+}
+
+impl EventSink for EventLog {
+    fn on_event(&mut self, ev: &Event) {
+        if !self.steps
+            && matches!(ev, Event::ScoringFp { .. } | Event::SelectionMade { .. })
+        {
+            return;
+        }
+        // Metrics are best-effort: a full disk must not kill training.
+        let _ = self.rec.record(&event_to_json(ev));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,6 +209,22 @@ mod tests {
         assert_eq!(back.get("sampler").unwrap().as_str(), Some("es"));
         assert_eq!(back.get("accuracy_pct").unwrap().as_f64(), Some(90.0));
         assert_eq!(back.get("loss_curve").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn event_log_streams_epoch_events_skips_step_events() {
+        let dir = std::env::temp_dir().join("evosample_test_evlog");
+        let mut log = EventLog::in_dir(&dir, "events_unit").unwrap();
+        log.on_event(&Event::RunStart { name: "t".into(), sampler: "es".into(), epochs: 2 });
+        log.on_event(&Event::SelectionMade { epoch: 0, step: 0, meta: 32, selected: 8 });
+        log.on_event(&Event::EvalDone { epoch: 1, loss: 0.5, accuracy: 0.8, bp_samples: 10 });
+        let text = std::fs::read_to_string(log.path()).unwrap();
+        assert!(text.contains("run_start") && text.contains("eval_done"), "{text}");
+        assert!(!text.contains("selection_made"), "{text}");
+        let back = Json::parse(text.lines().last().unwrap()).unwrap();
+        assert_eq!(back.get("event").unwrap().as_str(), Some("eval_done"));
+        assert_eq!(back.get("accuracy").unwrap().as_f64(), Some(0.8));
+        let _ = std::fs::remove_file(log.path());
     }
 
     #[test]

@@ -139,6 +139,27 @@ impl Default for BatchBuf {
     }
 }
 
+/// Build the runtime a config asks for: the XLA artifact path when
+/// available, otherwise a native fallback for float-feature models
+/// (tests/dev boxes without `make artifacts`). The default runtime
+/// chooser behind `api::SessionBuilder`.
+pub fn make_runtime(cfg: &crate::config::RunConfig) -> anyhow::Result<Box<dyn ModelRuntime>> {
+    let dir = manifest::Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let m = manifest::Manifest::load(&dir)?;
+        if m.models.contains_key(&cfg.model) {
+            return Ok(Box::new(xla_rt::XlaRuntime::load(&m, &cfg.model)?));
+        }
+    }
+    // Native fallback (float features only).
+    match &cfg.dataset {
+        crate::config::DatasetConfig::SynthCifar { classes, .. } => {
+            Ok(Box::new(native::NativeRuntime::new(3072, 64, *classes)))
+        }
+        _ => anyhow::bail!("model {} needs artifacts (run `make artifacts`)", cfg.model),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

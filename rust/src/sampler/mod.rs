@@ -23,6 +23,7 @@ pub mod infobatch;
 pub mod kakurenbo;
 pub mod loss_based;
 pub mod ordered;
+pub mod registry;
 pub mod ucb;
 pub mod uniform;
 pub mod weights;
@@ -146,44 +147,39 @@ pub trait Sampler: Send {
 }
 
 /// Instantiate a sampler from config for a dataset of `n` samples trained
-/// for `epochs` epochs.
-pub fn build(cfg: &SamplerConfig, n: usize, epochs: usize) -> Box<dyn Sampler> {
-    match cfg {
-        SamplerConfig::Uniform => Box::new(uniform::Uniform::new(n)),
-        SamplerConfig::Loss => Box::new(loss_based::LossSampler::new(n)),
-        SamplerConfig::Ordered => Box::new(ordered::OrderedSgd::new(n)),
-        SamplerConfig::Es { beta1, beta2, anneal_frac } => Box::new(evolved::Evolved::new(
-            n,
-            epochs,
-            *beta1,
-            *beta2,
-            *anneal_frac,
-            0.0,
-        )),
-        SamplerConfig::Eswp { beta1, beta2, anneal_frac, prune_ratio } => Box::new(
-            evolved::Evolved::new(n, epochs, *beta1, *beta2, *anneal_frac, *prune_ratio),
-        ),
-        SamplerConfig::InfoBatch { prune_ratio, anneal_frac } => {
-            Box::new(infobatch::InfoBatch::new(n, epochs, *prune_ratio, *anneal_frac))
-        }
-        SamplerConfig::Kakurenbo { prune_ratio, conf_threshold } => {
-            Box::new(kakurenbo::Kakurenbo::new(n, *prune_ratio, *conf_threshold))
-        }
-        SamplerConfig::Ucb { prune_ratio, decay, c } => {
-            Box::new(ucb::Ucb::new(n, *prune_ratio, *decay, *c))
-        }
-        SamplerConfig::RandomPrune { prune_ratio } => {
-            Box::new(uniform::RandomPrune::new(n, *prune_ratio))
-        }
-    }
+/// for `epochs` epochs. Construction routes through the open
+/// [`registry`], so externally-registered policies
+/// ([`SamplerConfig::Custom`]) build exactly like the built-ins.
+pub fn build(cfg: &SamplerConfig, n: usize, epochs: usize) -> anyhow::Result<Box<dyn Sampler>> {
+    let (name, bag) = cfg.to_spec();
+    registry::build_named(&name, &bag, n, epochs).map_err(|e| anyhow::anyhow!("sampler: {e}"))
 }
 
+/// Taxonomy of a sampling method (paper Tab. 1): where in the loop it
+/// intervenes. Carried as registry metadata (`SamplerEntry::kind`) and
+/// surfaced by `evosample list-samplers`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SamplerKind {
+    /// No selection (standard batched sampling).
     Baseline,
+    /// Per-step mini-batch selection from the meta-batch.
     BatchLevel,
+    /// Epoch-boundary dataset pruning.
     SetLevel,
+    /// Both batch-level selection and set-level pruning (ESWP).
     Both,
+}
+
+impl std::fmt::Display for SamplerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // `pad` (not `write_str`) so `{:<10}`-style table columns align.
+        f.pad(match self {
+            SamplerKind::Baseline => "baseline",
+            SamplerKind::BatchLevel => "batch",
+            SamplerKind::SetLevel => "set",
+            SamplerKind::Both => "batch+set",
+        })
+    }
 }
 
 #[cfg(test)]
@@ -205,7 +201,7 @@ mod tests {
             SC::RandomPrune { prune_ratio: 0.2 },
         ];
         for cfg in cfgs {
-            let s = build(&cfg, 100, 10);
+            let s = build(&cfg, 100, 10).unwrap();
             assert_eq!(s.n(), 100);
             assert_eq!(s.name(), cfg.name());
         }
@@ -213,7 +209,7 @@ mod tests {
 
     #[test]
     fn default_epoch_start_keeps_everything() {
-        let mut s = build(&SC::Uniform, 50, 10);
+        let mut s = build(&SC::Uniform, 50, 10).unwrap();
         let kept = s.on_epoch_start(0, &mut Pcg64::new(0));
         assert_eq!(kept, (0..50).collect::<Vec<u32>>());
     }
@@ -242,7 +238,7 @@ mod tests {
 
     #[test]
     fn default_shard_api_is_inert() {
-        let mut s = build(&SC::Uniform, 10, 4);
+        let mut s = build(&SC::Uniform, 10, 4).unwrap();
         s.begin_shard(&[0, 1, 2]);
         s.observe_train(&[0], &[1.0], 0);
         assert!(s.export_observations().is_empty());

@@ -1,0 +1,526 @@
+//! Open sampler registry: name → factory over a generic parameter bag.
+//!
+//! The paper positions ES(WP) as a plug-and-play framework; this registry
+//! is the plug socket. Every built-in method is an entry, and external
+//! crates add policies with [`register`] — no edits to this crate:
+//!
+//! ```ignore
+//! use evosample::prelude::*;
+//! use evosample::sampler::registry::{self, SamplerEntry};
+//!
+//! registry::register(
+//!     SamplerEntry::new("my_policy", SamplerKind::BatchLevel, |p, n, epochs| {
+//!         Ok(Box::new(MyPolicy::new(n, epochs, p.get("tau") as f32)))
+//!     })
+//!     .param("tau", 0.5, "selection temperature"),
+//! )?;
+//! let report = SessionBuilder::new("mlp_cifar10", dataset)
+//!     .sampler_named("my_policy", &[("tau", 0.7)])
+//!     .build()?
+//!     .run()?;
+//! ```
+//!
+//! Registered policies are first-class everywhere a built-in is: TOML
+//! configs (`sampler.kind = "my_policy"` parses to
+//! [`SamplerConfig::Custom`]), the CLI (`evosample list-samplers`), and
+//! the threaded engine (worker replicas are rebuilt through the registry,
+//! so the §D.5 shard-merge hooks of a custom [`Sampler`] participate in
+//! sync rounds like any built-in).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::config::SamplerConfig;
+
+use super::{
+    evolved, infobatch, kakurenbo, loss_based, ordered, ucb, uniform, Sampler, SamplerKind,
+};
+
+/// Free-form numeric parameters for a sampler factory. Every sampler
+/// hyper-parameter in this crate is numeric (ratios, betas, thresholds),
+/// so a flat f64 bag covers the whole policy space while staying open.
+pub type ParamBag = BTreeMap<String, f64>;
+
+/// Build a [`ParamBag`] from literal pairs.
+pub fn bag(pairs: &[(&str, f64)]) -> ParamBag {
+    pairs.iter().map(|&(k, v)| (k.to_string(), v)).collect()
+}
+
+/// One declared parameter of a registry entry (defaults + self-docs for
+/// `list-samplers`).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub default: f64,
+    pub doc: String,
+}
+
+/// Parameter view handed to factories: bag values with declared defaults.
+pub struct Params<'a> {
+    bag: &'a ParamBag,
+    specs: &'a [ParamSpec],
+}
+
+impl<'a> Params<'a> {
+    /// Value of `name`, falling back to the declared default. Panics on a
+    /// parameter the entry never declared — declare it with
+    /// [`SamplerEntry::param`].
+    pub fn get(&self, name: &str) -> f64 {
+        if let Some(v) = self.bag.get(name) {
+            return *v;
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .map(|s| s.default)
+            .unwrap_or_else(|| panic!("sampler factory read undeclared param {name:?}"))
+    }
+
+    pub fn get_f32(&self, name: &str) -> f32 {
+        self.get(name) as f32
+    }
+}
+
+type Factory =
+    Arc<dyn Fn(&Params<'_>, usize, usize) -> Result<Box<dyn Sampler>, String> + Send + Sync>;
+type ParseFn = fn(&Params<'_>) -> SamplerConfig;
+
+/// One registered sampling policy: canonical name, taxonomy kind
+/// (paper Tab. 1), declared parameters, and the factory.
+#[derive(Clone)]
+pub struct SamplerEntry {
+    name: String,
+    aliases: Vec<String>,
+    kind: SamplerKind,
+    params: Vec<ParamSpec>,
+    factory: Factory,
+    /// Built-ins parse to their typed [`SamplerConfig`] variant; external
+    /// entries (None) parse to [`SamplerConfig::Custom`].
+    parse: Option<ParseFn>,
+}
+
+impl SamplerEntry {
+    /// A new entry. `factory` receives (params, dataset n, total epochs).
+    pub fn new<F>(name: &str, kind: SamplerKind, factory: F) -> SamplerEntry
+    where
+        F: Fn(&Params<'_>, usize, usize) -> Result<Box<dyn Sampler>, String>
+            + Send
+            + Sync
+            + 'static,
+    {
+        SamplerEntry {
+            name: name.to_string(),
+            aliases: Vec::new(),
+            kind,
+            params: Vec::new(),
+            factory: Arc::new(factory),
+            parse: None,
+        }
+    }
+
+    /// Declare a parameter with its default (repeatable, fluent).
+    pub fn param(mut self, name: &str, default: f64, doc: &str) -> SamplerEntry {
+        self.params.push(ParamSpec {
+            name: name.to_string(),
+            default,
+            doc: doc.to_string(),
+        });
+        self
+    }
+
+    /// Declare an alternate lookup name (repeatable, fluent).
+    pub fn alias(mut self, name: &str) -> SamplerEntry {
+        self.aliases.push(name.to_string());
+        self
+    }
+
+    fn with_parse(mut self, f: ParseFn) -> SamplerEntry {
+        self.parse = Some(f);
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn aliases(&self) -> &[String] {
+        &self.aliases
+    }
+
+    pub fn kind(&self) -> SamplerKind {
+        self.kind
+    }
+
+    pub fn params(&self) -> &[ParamSpec] {
+        &self.params
+    }
+
+    /// Reject bag keys this entry never declared (typo tripwire shared by
+    /// TOML parsing and direct construction).
+    fn check_bag(&self, bag: &ParamBag) -> Result<(), String> {
+        for key in bag.keys() {
+            if !self.params.iter().any(|s| &s.name == key) {
+                let known: Vec<&str> = self.params.iter().map(|s| s.name.as_str()).collect();
+                return Err(format!(
+                    "unknown param {key:?} for sampler {:?} (declared: [{}])",
+                    self.name,
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Instantiate this entry's sampler for a dataset of `n` samples
+    /// trained for `epochs` epochs.
+    pub fn build(
+        &self,
+        bag: &ParamBag,
+        n: usize,
+        epochs: usize,
+    ) -> Result<Box<dyn Sampler>, String> {
+        self.check_bag(bag)?;
+        (self.factory)(&Params { bag, specs: &self.params }, n, epochs)
+    }
+
+    /// Parse a bag into a [`SamplerConfig`]: typed variants for built-ins,
+    /// [`SamplerConfig::Custom`] for external registrations. The Custom
+    /// params are stored fully resolved (defaults filled in) so equal
+    /// configs compare equal regardless of which defaults were spelled.
+    pub fn parse(&self, bag: &ParamBag) -> Result<SamplerConfig, String> {
+        self.check_bag(bag)?;
+        let params = Params { bag, specs: &self.params };
+        if let Some(f) = self.parse {
+            return Ok(f(&params));
+        }
+        let resolved: Vec<(String, f64)> = self
+            .params
+            .iter()
+            .map(|s| (s.name.clone(), params.get(&s.name)))
+            .collect();
+        Ok(SamplerConfig::Custom { name: self.name.clone(), params: resolved })
+    }
+}
+
+struct Registry {
+    entries: BTreeMap<String, SamplerEntry>,
+    /// alias → canonical name.
+    aliases: BTreeMap<String, String>,
+}
+
+impl Registry {
+    fn insert(&mut self, entry: SamplerEntry) -> Result<(), String> {
+        let mut names = vec![entry.name.clone()];
+        names.extend(entry.aliases.iter().cloned());
+        for n in &names {
+            if self.entries.contains_key(n) || self.aliases.contains_key(n) {
+                return Err(format!("sampler {n:?} is already registered"));
+            }
+        }
+        for a in &entry.aliases {
+            self.aliases.insert(a.clone(), entry.name.clone());
+        }
+        self.entries.insert(entry.name.clone(), entry);
+        Ok(())
+    }
+
+    fn resolve(&self, name: &str) -> Option<&SamplerEntry> {
+        if let Some(e) = self.entries.get(name) {
+            return Some(e);
+        }
+        self.aliases.get(name).and_then(|c| self.entries.get(c))
+    }
+}
+
+fn global() -> &'static RwLock<Registry> {
+    static REG: OnceLock<RwLock<Registry>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut r = Registry { entries: BTreeMap::new(), aliases: BTreeMap::new() };
+        for e in builtin_entries() {
+            r.insert(e).expect("built-in sampler names must be unique");
+        }
+        RwLock::new(r)
+    })
+}
+
+/// Register an external sampling policy. Fails on a name or alias that is
+/// already taken (built-in or previously registered).
+pub fn register(entry: SamplerEntry) -> Result<(), String> {
+    global().write().unwrap().insert(entry)
+}
+
+/// Look up an entry by canonical name or alias.
+pub fn lookup(name: &str) -> Option<SamplerEntry> {
+    global().read().unwrap().resolve(name).cloned()
+}
+
+/// Every registered entry, sorted by canonical name.
+pub fn entries() -> Vec<SamplerEntry> {
+    global().read().unwrap().entries.values().cloned().collect()
+}
+
+/// Canonical names of every registered entry, sorted.
+pub fn names() -> Vec<String> {
+    global().read().unwrap().entries.keys().cloned().collect()
+}
+
+fn unknown(name: &str) -> String {
+    format!("unknown sampler {name:?}; available: [{}]", names().join(", "))
+}
+
+/// Instantiate a sampler by registry name.
+pub fn build_named(
+    name: &str,
+    bag: &ParamBag,
+    n: usize,
+    epochs: usize,
+) -> Result<Box<dyn Sampler>, String> {
+    lookup(name).ok_or_else(|| unknown(name))?.build(bag, n, epochs)
+}
+
+/// Parse (name, params) into a [`SamplerConfig`] — the single entry point
+/// TOML/CLI sampler parsing delegates to.
+pub fn parse(name: &str, bag: &ParamBag) -> Result<SamplerConfig, String> {
+    lookup(name).ok_or_else(|| unknown(name))?.parse(bag)
+}
+
+/// Taxonomy kind of a registered sampler, if known.
+pub fn kind_of(name: &str) -> Option<SamplerKind> {
+    lookup(name).map(|e| e.kind())
+}
+
+fn ratio(p: &Params<'_>, name: &str) -> Result<f64, String> {
+    let v = p.get(name);
+    if !(0.0..1.0).contains(&v) {
+        return Err(format!("{name} = {v} out of [0, 1)"));
+    }
+    Ok(v)
+}
+
+fn beta(p: &Params<'_>, name: &str) -> Result<f32, String> {
+    let v = p.get_f32(name);
+    if !(0.0..=1.0).contains(&v) {
+        return Err(format!("{name} = {v} out of [0, 1]"));
+    }
+    Ok(v)
+}
+
+/// The eight Tab. 1 methods plus the random-prune ablation, as registry
+/// entries. Canonical names match the historical `SamplerConfig::name()`
+/// strings so configs, result records, and presets stay stable.
+fn builtin_entries() -> Vec<SamplerEntry> {
+    vec![
+        SamplerEntry::new("baseline", SamplerKind::Baseline, |_, n, _| {
+            Ok(Box::new(uniform::Uniform::new(n)))
+        })
+        .alias("uniform")
+        .with_parse(|_| SamplerConfig::Uniform),
+        SamplerEntry::new("loss", SamplerKind::BatchLevel, |_, n, _| {
+            Ok(Box::new(loss_based::LossSampler::new(n)))
+        })
+        .with_parse(|_| SamplerConfig::Loss),
+        SamplerEntry::new("order", SamplerKind::BatchLevel, |_, n, _| {
+            Ok(Box::new(ordered::OrderedSgd::new(n)))
+        })
+        .alias("ordered")
+        .with_parse(|_| SamplerConfig::Ordered),
+        SamplerEntry::new("es", SamplerKind::BatchLevel, |p, n, epochs| {
+            Ok(Box::new(evolved::Evolved::new(
+                n,
+                epochs,
+                beta(p, "beta1")?,
+                beta(p, "beta2")?,
+                ratio(p, "anneal_frac")?,
+                0.0,
+            )))
+        })
+        .param("beta1", 0.2, "loss EMA decay (Eq. 3.1)")
+        .param("beta2", 0.9, "score EMA decay (Eq. 3.1)")
+        .param("anneal_frac", 0.05, "warm-up fraction of epochs")
+        .with_parse(|p| SamplerConfig::Es {
+            beta1: p.get_f32("beta1"),
+            beta2: p.get_f32("beta2"),
+            anneal_frac: p.get("anneal_frac"),
+        }),
+        SamplerEntry::new("eswp", SamplerKind::Both, |p, n, epochs| {
+            Ok(Box::new(evolved::Evolved::new(
+                n,
+                epochs,
+                beta(p, "beta1")?,
+                beta(p, "beta2")?,
+                ratio(p, "anneal_frac")?,
+                ratio(p, "prune_ratio")?,
+            )))
+        })
+        .param("beta1", 0.2, "loss EMA decay (Eq. 3.1)")
+        .param("beta2", 0.8, "score EMA decay (Eq. 3.1)")
+        .param("anneal_frac", 0.05, "warm-up fraction of epochs")
+        .param("prune_ratio", 0.2, "set-level prune ratio r")
+        .with_parse(|p| SamplerConfig::Eswp {
+            beta1: p.get_f32("beta1"),
+            beta2: p.get_f32("beta2"),
+            anneal_frac: p.get("anneal_frac"),
+            prune_ratio: p.get("prune_ratio"),
+        }),
+        SamplerEntry::new("infobatch", SamplerKind::SetLevel, |p, n, epochs| {
+            Ok(Box::new(infobatch::InfoBatch::new(
+                n,
+                epochs,
+                ratio(p, "prune_ratio")?,
+                ratio(p, "anneal_frac")?,
+            )))
+        })
+        .param("prune_ratio", 0.5, "below-mean prune probability")
+        .param("anneal_frac", 0.125, "final full-data fraction (1-δ)")
+        .with_parse(|p| SamplerConfig::InfoBatch {
+            prune_ratio: p.get("prune_ratio"),
+            anneal_frac: p.get("anneal_frac"),
+        }),
+        SamplerEntry::new("ka", SamplerKind::SetLevel, |p, n, _| {
+            Ok(Box::new(kakurenbo::Kakurenbo::new(
+                n,
+                ratio(p, "prune_ratio")?,
+                p.get_f32("conf_threshold"),
+            )))
+        })
+        .alias("kakurenbo")
+        .param("prune_ratio", 0.3, "max hidden fraction")
+        .param("conf_threshold", 0.7, "move-back confidence τ")
+        .with_parse(|p| SamplerConfig::Kakurenbo {
+            prune_ratio: p.get("prune_ratio"),
+            conf_threshold: p.get_f32("conf_threshold"),
+        }),
+        SamplerEntry::new("ucb", SamplerKind::SetLevel, |p, n, _| {
+            Ok(Box::new(ucb::Ucb::new(
+                n,
+                ratio(p, "prune_ratio")?,
+                p.get_f32("decay"),
+                p.get_f32("c"),
+            )))
+        })
+        .param("prune_ratio", 0.3, "pruned fraction per epoch")
+        .param("decay", 0.8, "reward EMA decay")
+        .param("c", 1.0, "exploration coefficient")
+        .with_parse(|p| SamplerConfig::Ucb {
+            prune_ratio: p.get("prune_ratio"),
+            decay: p.get_f32("decay"),
+            c: p.get_f32("c"),
+        }),
+        SamplerEntry::new("random_prune", SamplerKind::SetLevel, |p, n, _| {
+            Ok(Box::new(uniform::RandomPrune::new(n, ratio(p, "prune_ratio")?)))
+        })
+        .param("prune_ratio", 0.2, "random pruned fraction")
+        .with_parse(|p| SamplerConfig::RandomPrune { prune_ratio: p.get("prune_ratio") }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_cover_every_method() {
+        for name in ["baseline", "loss", "order", "es", "eswp", "infobatch", "ka", "ucb", "random_prune"]
+        {
+            let s = build_named(name, &ParamBag::new(), 64, 10)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(s.n(), 64, "{name}");
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical() {
+        assert_eq!(lookup("uniform").unwrap().name(), "baseline");
+        assert_eq!(lookup("ordered").unwrap().name(), "order");
+        assert_eq!(lookup("kakurenbo").unwrap().name(), "ka");
+    }
+
+    #[test]
+    fn unknown_name_lists_available() {
+        let err = build_named("nope", &ParamBag::new(), 10, 2).unwrap_err();
+        assert!(err.contains("unknown sampler"), "{err}");
+        assert!(err.contains("baseline") && err.contains("eswp"), "{err}");
+    }
+
+    #[test]
+    fn unknown_param_rejected() {
+        let err = build_named("es", &bag(&[("beta3", 0.5)]), 10, 2).unwrap_err();
+        assert!(err.contains("beta3") && err.contains("beta1"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_param_rejected() {
+        assert!(build_named("es", &bag(&[("beta1", 1.5)]), 10, 2).is_err());
+        assert!(build_named("eswp", &bag(&[("prune_ratio", 1.0)]), 10, 2).is_err());
+    }
+
+    #[test]
+    fn parse_builds_typed_configs_with_defaults() {
+        assert_eq!(parse("baseline", &ParamBag::new()).unwrap(), SamplerConfig::Uniform);
+        assert_eq!(parse("es", &ParamBag::new()).unwrap(), SamplerConfig::es_default());
+        assert_eq!(parse("eswp", &ParamBag::new()).unwrap(), SamplerConfig::eswp_default());
+        assert_eq!(
+            parse("infobatch", &ParamBag::new()).unwrap(),
+            SamplerConfig::infobatch_default()
+        );
+        assert_eq!(
+            parse("eswp", &bag(&[("prune_ratio", 0.3)])).unwrap(),
+            SamplerConfig::Eswp { beta1: 0.2, beta2: 0.8, anneal_frac: 0.05, prune_ratio: 0.3 }
+        );
+    }
+
+    #[test]
+    fn kinds_match_table1_taxonomy() {
+        assert_eq!(kind_of("baseline"), Some(SamplerKind::Baseline));
+        assert_eq!(kind_of("es"), Some(SamplerKind::BatchLevel));
+        assert_eq!(kind_of("eswp"), Some(SamplerKind::Both));
+        assert_eq!(kind_of("infobatch"), Some(SamplerKind::SetLevel));
+        assert_eq!(kind_of("nope"), None);
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mk = || {
+            SamplerEntry::new("registry_test_dup", SamplerKind::Baseline, |_, n, _| {
+                Ok(Box::new(uniform::Uniform::new(n)))
+            })
+        };
+        register(mk()).unwrap();
+        let err = register(mk()).unwrap_err();
+        assert!(err.contains("already registered"), "{err}");
+        // Colliding with a built-in name or alias is rejected too.
+        assert!(register(SamplerEntry::new("uniform", SamplerKind::Baseline, |_, n, _| {
+            Ok(Box::new(uniform::Uniform::new(n)))
+        }))
+        .is_err());
+    }
+
+    #[test]
+    fn external_entry_parses_to_custom_with_resolved_defaults() {
+        register(
+            SamplerEntry::new("registry_test_custom", SamplerKind::BatchLevel, |p, n, _| {
+                let _ = p.get("tau");
+                Ok(Box::new(uniform::Uniform::new(n)))
+            })
+            .param("tau", 0.5, "temperature"),
+        )
+        .unwrap();
+        let cfg = parse("registry_test_custom", &bag(&[("tau", 0.9)])).unwrap();
+        assert_eq!(
+            cfg,
+            SamplerConfig::Custom {
+                name: "registry_test_custom".into(),
+                params: vec![("tau".into(), 0.9)],
+            }
+        );
+        // Defaults are resolved into the Custom params.
+        let cfg = parse("registry_test_custom", &ParamBag::new()).unwrap();
+        assert_eq!(
+            cfg,
+            SamplerConfig::Custom {
+                name: "registry_test_custom".into(),
+                params: vec![("tau".into(), 0.5)],
+            }
+        );
+    }
+}

@@ -1,0 +1,240 @@
+//! Public session API integration tests: the deprecated `train()` shim is
+//! pinned bit-for-bit against `Session::run()`, and an out-of-crate
+//! sampler registered through `sampler::registry` trains end-to-end —
+//! including on the threaded engine with a custom `EventSink` watching.
+
+// This file pins the deprecated `coordinator::train` shim on purpose.
+#![allow(deprecated)]
+
+use std::sync::{Arc, Mutex};
+
+use evosample::prelude::*;
+use evosample::config::Doc;
+use evosample::runtime::native::NativeRuntime;
+use evosample::sampler::registry::SamplerEntry;
+
+fn small_cfg(sampler: SamplerConfig) -> RunConfig {
+    let mut cfg = RunConfig::new(
+        "api_session",
+        "native",
+        DatasetConfig::SynthCifar { n: 256, classes: 4, label_noise: 0.05, hard_frac: 0.2 },
+    );
+    cfg.epochs = 4;
+    cfg.meta_batch = 32;
+    cfg.mini_batch = 8;
+    cfg.lr = LrSchedule::Const { lr: 0.02 };
+    cfg.test_n = 64;
+    cfg.eval_every = 1;
+    cfg.seed = 5;
+    cfg.sampler = sampler;
+    cfg
+}
+
+fn native_rt(split: &SplitDataset) -> NativeRuntime {
+    NativeRuntime::new(split.train.x_len(), 16, 4)
+}
+
+// ---- the deprecated shim is bit-for-bit the session API ----------------
+
+#[test]
+fn train_shim_equals_session_run_bit_for_bit() {
+    for sampler in [SamplerConfig::Uniform, SamplerConfig::es_default(), SamplerConfig::eswp_default()]
+    {
+        let cfg = small_cfg(sampler);
+        // The exact split the builder would generate on its own.
+        let split = data::build(&cfg.dataset, cfg.test_n, cfg.seed ^ 0xda7a_5eed);
+
+        let mut rt = native_rt(&split);
+        let shim = evosample::coordinator::train(&cfg, &mut rt, &split).unwrap();
+
+        let run = SessionBuilder::from_config(cfg.clone())
+            .runtime(Box::new(native_rt(&split)))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+
+        // Bit-for-bit: every number the report carries, and the same
+        // phase ledger shape (wall-clock durations themselves are not
+        // comparable across runs).
+        assert_eq!(shim.loss_curve, run.loss_curve, "{}", cfg.sampler.name());
+        assert_eq!(shim.eval_curve, run.eval_curve, "{}", cfg.sampler.name());
+        assert_eq!(shim.final_eval.accuracy, run.final_eval.accuracy);
+        assert_eq!(shim.final_eval.loss, run.final_eval.loss);
+        assert_eq!(shim.steps, run.steps);
+        assert_eq!(shim.cost.fp_samples, run.cost.fp_samples);
+        assert_eq!(shim.cost.bp_samples, run.cost.bp_samples);
+        assert_eq!(shim.cost.bp_passes, run.cost.bp_passes);
+        assert_eq!(shim.class_bp_counts, run.class_bp_counts);
+        assert_eq!(shim.bp_at_eval, run.bp_at_eval);
+        assert_eq!(shim.sampler, run.sampler);
+        let phases = |r: &RunResult| -> Vec<String> {
+            r.timers.phases().map(|(k, _)| k.to_string()).collect()
+        };
+        assert_eq!(phases(&shim), phases(&run), "{}", cfg.sampler.name());
+    }
+}
+
+// ---- an out-of-crate sampler, registered not forked --------------------
+
+/// A minimal external policy: keep a deterministic evenly-strided subset
+/// of every meta-batch. No scoring FP, no state — the point is that the
+/// *registration machinery* carries it everywhere built-ins go.
+struct StridedSelect {
+    n: usize,
+    stride_bias: usize,
+}
+
+impl Sampler for StridedSelect {
+    fn name(&self) -> &'static str {
+        "strided"
+    }
+
+    fn select(
+        &mut self,
+        meta: &[u32],
+        mini: usize,
+        _epoch: usize,
+        _rng: &mut Pcg64,
+    ) -> Selection {
+        let take = mini.min(meta.len()).max(1);
+        let mut idx = Vec::with_capacity(take);
+        for k in 0..take {
+            idx.push(meta[(k * meta.len() / take + self.stride_bias) % meta.len()]);
+        }
+        Selection::unweighted(idx)
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[test]
+fn external_sampler_trains_threaded_with_events_observed() {
+    evosample::sampler::registry::register(
+        SamplerEntry::new("strided", SamplerKind::BatchLevel, |p, n, _| {
+            Ok(Box::new(StridedSelect { n, stride_bias: p.get("stride_bias") as usize }))
+        })
+        .param("stride_bias", 0.0, "rotation applied to the strided picks"),
+    )
+    .unwrap();
+
+    let seen: Arc<Mutex<Vec<Event>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = seen.clone();
+    let r = SessionBuilder::new(
+        "native",
+        DatasetConfig::SynthCifar { n: 128, classes: 4, label_noise: 0.0, hard_frac: 0.2 },
+    )
+    .named("external_threaded")
+    .epochs(3)
+    .batch_sizes(32, 8)
+    .test_n(64)
+    .seed(9)
+    .sampler_named("strided", &[("stride_bias", 1.0)])
+    .threaded(2, 2)
+    .runtime(Box::new(NativeRuntime::new(3072, 8, 4)))
+    .on_event(move |ev: &Event| sink.lock().unwrap().push(ev.clone()))
+    .build()
+    .unwrap()
+    .run()
+    .unwrap();
+
+    // The run completed under the external policy on real threads.
+    assert_eq!(r.sampler, "strided");
+    assert_eq!(r.epochs, 3);
+    assert!(r.steps > 0);
+    assert!(r.final_eval.accuracy.is_finite());
+
+    // The custom sink observed the typed stream per the ordering contract.
+    let seen = seen.lock().unwrap();
+    assert!(matches!(seen.first(), Some(Event::RunStart { .. })));
+    assert!(matches!(seen.last(), Some(Event::RunEnd { .. })));
+    let count = |f: fn(&Event) -> bool| seen.iter().filter(|e| f(*e)).count();
+    assert_eq!(count(|e| matches!(e, Event::EpochStart { .. })), 3);
+    assert_eq!(count(|e| matches!(e, Event::EpochEnd { .. })), 3);
+    // One §D.5 sync round per epoch boundary, with both workers in.
+    assert_eq!(count(|e| matches!(e, Event::SyncRound { workers: 2, .. })), 3);
+    assert_eq!(count(|e| matches!(e, Event::EvalDone { .. })), 1);
+    if let Some(Event::RunEnd { accuracy, .. }) = seen.last() {
+        assert_eq!(*accuracy, r.final_eval.accuracy);
+    }
+}
+
+#[test]
+fn external_sampler_round_trips_through_toml_and_builder() {
+    let taus: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+    let record = taus.clone();
+    evosample::sampler::registry::register(
+        SamplerEntry::new("ext_toml", SamplerKind::BatchLevel, move |p, n, _| {
+            record.lock().unwrap().push(p.get("tau"));
+            Ok(Box::new(StridedSelect { n, stride_bias: 0 }))
+        })
+        .param("tau", 0.5, "recorded by the factory"),
+    )
+    .unwrap();
+
+    // TOML `sampler.kind` resolves the external entry and carries params.
+    let src = "
+[run]
+model = \"native\"
+epochs = 2
+meta_batch = 32
+mini_batch = 8
+test_n = 64
+
+[dataset]
+kind = \"synth_cifar\"
+n = 128
+classes = 4
+
+[sampler]
+kind = \"ext_toml\"
+tau = 0.25
+";
+    let cfg = RunConfig::from_doc(&Doc::parse(src).unwrap()).unwrap();
+    assert_eq!(
+        cfg.sampler,
+        SamplerConfig::Custom { name: "ext_toml".into(), params: vec![("tau".into(), 0.25)] }
+    );
+    assert!(cfg.sampler.is_batch_level() && !cfg.sampler.is_set_level());
+
+    let split = data::build(&cfg.dataset, cfg.test_n, cfg.seed ^ 0xda7a_5eed);
+    let r = SessionBuilder::from_config(cfg)
+        .runtime(Box::new(native_rt(&split)))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(r.sampler, "strided", "report carries the Sampler::name()");
+    assert_eq!(taus.lock().unwrap().as_slice(), &[0.25], "factory saw the TOML param");
+}
+
+#[test]
+fn builder_surfaces_registry_errors() {
+    // Unknown names list what IS available.
+    let err = SessionBuilder::new(
+        "native",
+        DatasetConfig::SynthCifar { n: 128, classes: 4, label_noise: 0.0, hard_frac: 0.2 },
+    )
+    .sampler_named("not_a_policy", &[])
+    .build()
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("unknown sampler"), "{err}");
+    assert!(err.contains("baseline") && err.contains("eswp"), "{err}");
+
+    // Duplicate registration is rejected, first registration wins.
+    let entry = || {
+        SamplerEntry::new("ext_dup", SamplerKind::Baseline, |_, n, _| {
+            Ok(Box::new(StridedSelect { n, stride_bias: 0 }))
+        })
+    };
+    evosample::sampler::registry::register(entry()).unwrap();
+    let err = evosample::sampler::registry::register(entry()).unwrap_err();
+    assert!(err.contains("already registered"), "{err}");
+}

@@ -8,6 +8,9 @@
 //! engine ever drifts from it on `workers == 1` or the sequential
 //! simulation, these tests fail with the exact curves in hand.
 
+// These tests intentionally pin the deprecated `coordinator::train` shim.
+#![allow(deprecated)]
+
 use evosample::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
 use evosample::coordinator::{evaluate, train, CostSummary, TrainResult};
 use evosample::data::loader::EpochLoader;
@@ -253,7 +256,7 @@ fn engine_single_worker_matches_pre_refactor_loop_exactly() {
         let (cfg, split) = setup(sampler_cfg.clone(), 512, 7);
         let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
         let engine_run = train(&cfg, &mut rt, &split).unwrap();
-        let reference_sampler = sampler::build(&cfg.sampler, split.train.n, cfg.epochs);
+        let reference_sampler = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
         let reference = reference_train(&cfg, &mut rt, &split, reference_sampler).unwrap();
         assert_identical(&engine_run, &reference);
     }
@@ -265,7 +268,7 @@ fn engine_simulation_matches_pre_refactor_loop_exactly() {
     cfg.workers = 4;
     let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
     let engine_run = train(&cfg, &mut rt, &split).unwrap();
-    let reference_sampler = sampler::build(&cfg.sampler, split.train.n, cfg.epochs);
+    let reference_sampler = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
     let reference = reference_train(&cfg, &mut rt, &split, reference_sampler).unwrap();
     assert_identical(&engine_run, &reference);
 }
@@ -278,7 +281,7 @@ fn grad_accum_path_matches_pre_refactor_loop_exactly() {
     cfg.micro_batch = 4;
     let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
     let engine_run = train(&cfg, &mut rt, &split).unwrap();
-    let reference_sampler = sampler::build(&cfg.sampler, split.train.n, cfg.epochs);
+    let reference_sampler = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
     let reference = reference_train(&cfg, &mut rt, &split, reference_sampler).unwrap();
     assert_identical(&engine_run, &reference);
 }

@@ -4,6 +4,10 @@
 //! hurting accuracy, ESWP prunes, samplers find hard samples, gradient
 //! accumulation counts BP passes correctly, and runs are deterministic.
 
+// Exercises the deprecated `coordinator::train` shim on purpose: its
+// behavior must stay pinned for as long as it exists.
+#![allow(deprecated)]
+
 use evosample::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
 use evosample::coordinator::{predicted_saved_time_pct, train};
 use evosample::data;

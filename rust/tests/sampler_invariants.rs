@@ -25,7 +25,7 @@ fn all_methods() -> Vec<SamplerConfig> {
 
 /// Drive one sampler through a random epoch schedule, checking contracts.
 fn drive(cfg: &SamplerConfig, n: usize, epochs: usize, rng_seed: u64) -> Result<(), String> {
-    let mut sampler = build(cfg, n, epochs);
+    let mut sampler = build(cfg, n, epochs).unwrap();
     let mut rng = Pcg64::new(rng_seed);
     for epoch in 0..epochs {
         let kept = sampler.on_epoch_start(epoch, &mut rng);
@@ -92,7 +92,7 @@ fn all_samplers_uphold_contracts_under_random_schedules() {
 fn samplers_are_deterministic_given_rng_seed() {
     for cfg in all_methods() {
         let run = |seed: u64| -> Vec<u32> {
-            let mut s = build(&cfg, 64, 6);
+            let mut s = build(&cfg, 64, 6).unwrap();
             let mut rng = Pcg64::new(seed);
             let mut out = Vec::new();
             for epoch in 0..6 {
@@ -114,7 +114,7 @@ fn degenerate_loss_tables_never_break_selection() {
     // NaN/inf/zero losses must degrade gracefully (Remark 1 / weights.rs
     // flooring), never panic or return empty selections.
     for cfg in all_methods() {
-        let mut s = build(&cfg, 32, 4);
+        let mut s = build(&cfg, 32, 4).unwrap();
         let mut rng = Pcg64::new(3);
         let meta: Vec<u32> = (0..16).collect();
         let horror = vec![
@@ -150,7 +150,7 @@ fn batch_level_methods_skew_selection_toward_high_loss() {
     // Loss, Order and ES must all prefer high-loss samples; set-level
     // methods pass the meta-batch through untouched.
     for cfg in [SamplerConfig::Loss, SamplerConfig::Ordered, SamplerConfig::es_default()] {
-        let mut s = build(&cfg, 32, 4);
+        let mut s = build(&cfg, 32, 4).unwrap();
         let mut rng = Pcg64::new(11);
         let meta: Vec<u32> = (0..16).collect();
         // First half high loss, second half near zero — observed repeatedly.
@@ -180,7 +180,7 @@ fn set_level_methods_reduce_epoch_size_by_configured_ratio() {
     ];
     for (cfg, r) in cases {
         let n = 200;
-        let mut s = build(&cfg, n, 10);
+        let mut s = build(&cfg, n, 10).unwrap();
         let mut rng = Pcg64::new(5);
         // Warm the state so pruning has scores to act on.
         let all: Vec<u32> = (0..n as u32).collect();

@@ -2,6 +2,9 @@
 //! through PJRT and driven by the coordinator. Skipped (cleanly, with a
 //! message) when `artifacts/` has not been built — run `make artifacts`.
 
+// Exercises the deprecated `coordinator::train` shim on purpose.
+#![allow(deprecated)]
+
 use evosample::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
 use evosample::coordinator::train;
 use evosample::runtime::manifest::Manifest;
