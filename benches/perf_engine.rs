@@ -5,6 +5,10 @@
 //! W=4 over the sequential simulation on a 4-core box (the workload is
 //! BP-dominated, so data-parallel replicas scale near-linearly until the
 //! sync rounds bite). `EVOSAMPLE_BENCH_FULL=1` runs the larger shape.
+//!
+//! Emits machine-readable `BENCH_engine.json` (steps/sec per engine
+//! mode, threaded-vs-sim speedup) so the perf trajectory is tracked
+//! across PRs.
 
 use std::time::Instant;
 
@@ -12,6 +16,7 @@ use evosample::coordinator::train_with_sampler;
 use evosample::prelude::*;
 use evosample::runtime::native::NativeRuntime;
 use evosample::util::bench::smoke_mode;
+use evosample::util::json::{num, obj, s};
 
 fn base_cfg(n: usize, epochs: usize) -> RunConfig {
     let mut cfg = RunConfig::new(
@@ -38,7 +43,11 @@ fn base_cfg(n: usize, epochs: usize) -> RunConfig {
 /// `Session` so the big split stays borrowed instead of owned per run —
 /// this bench measures engine throughput, not the session wiring.
 fn throughput(cfg: &RunConfig, split: &SplitDataset, hidden: usize) -> (f64, u64) {
-    let mut rt = NativeRuntime::new(split.train.x_len(), hidden, 10);
+    // One kernel lane everywhere: threaded-engine replicas are pinned to
+    // 1 lane by spawn_replica, so the main runtime must match or the
+    // single/sim anchors would get intra-step parallelism the threaded
+    // mode doesn't, invalidating the engine-scaling comparison.
+    let mut rt = NativeRuntime::new(split.train.x_len(), hidden, 10).with_kernel_threads(1);
     let sampler =
         evosample::sampler::build(&cfg.sampler, split.train.n, cfg.epochs).expect(&cfg.name);
     let t0 = Instant::now();
@@ -86,11 +95,41 @@ fn main() {
     println!(
         "\nthreaded vs sequential sim: {speedup:.2}x step throughput (target > 1.5x at W=4)"
     );
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     if speedup < 1.5 {
         println!(
             "NOTE: below target — expected on boxes with < {workers} free cores \
-             (this host reports {})",
-            std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+             (this host reports {cores})"
         );
     }
+
+    let out = obj(vec![
+        ("bench", s("perf_engine")),
+        ("backend", s("native")),
+        ("mode", s(if smoke_mode() { "smoke" } else { "full" })),
+        ("cores", num(cores as f64)),
+        (
+            "shape",
+            obj(vec![
+                ("n", num(n as f64)),
+                ("epochs", num(epochs as f64)),
+                ("hidden", num(hidden as f64)),
+                ("batch", num(cfg.meta_batch as f64)),
+                ("workers", num(workers as f64)),
+            ]),
+        ),
+        (
+            "steps_per_s",
+            obj(vec![
+                ("single", num(tput_single)),
+                ("sim_w4", num(tput_sim)),
+                ("threaded_w4", num(tput_thr)),
+                ("threaded_w4_sync8", num(tput_thr_sync)),
+            ]),
+        ),
+        ("threaded_vs_sim", num(speedup)),
+    ]);
+    let payload = out.to_string_compact() + "\n";
+    std::fs::write("BENCH_engine.json", payload).expect("write BENCH_engine.json");
+    println!("wrote BENCH_engine.json");
 }

@@ -1,21 +1,150 @@
-//! Runtime perf: XLA step costs per model/batch (FP vs BP), quantifying
-//! the paper's §3.3 claim that BP dominates and ES's scoring FP is cheap.
-//! Backs EXPERIMENTS.md §Perf L2 numbers.
+//! Runtime perf: the native backend's kernel layer vs the pre-kernel
+//! scalar reference (CIFAR-scale MLP dims), plus XLA step costs when
+//! artifacts are present. Quantifies the paper's §3.3 claim that BP
+//! dominates and ES's scoring FP is cheap — with kernels fast enough
+//! that the measured FP/BP ratio reflects algorithmic cost, not cache
+//! misses.
+//!
+//! Emits machine-readable `BENCH_native.json` (ns per FP/BP sample,
+//! samples/sec at 1/2/4 kernel threads, speedups vs scalar) so the perf
+//! trajectory is tracked across PRs. Smoke mode (the default) uses
+//! short measurement budgets; `EVOSAMPLE_BENCH_FULL=1` for longer runs.
 
+use std::collections::BTreeMap;
+
+use evosample::runtime::kernel::reference::ScalarMlp;
 use evosample::runtime::manifest::Manifest;
+use evosample::runtime::native::NativeRuntime;
 use evosample::runtime::xla_rt::XlaRuntime;
 use evosample::runtime::{BatchX, ModelRuntime};
-use evosample::util::bench::Bencher;
+use evosample::util::bench::{smoke_mode, BenchResult, Bencher};
+use evosample::util::json::{num, obj, s, Json};
 use evosample::util::Pcg64;
 
+/// CIFAR-scale MLP dims (what `make_runtime`'s native fallback builds).
+const D: usize = 3072;
+const H: usize = 64;
+const C: usize = 10;
+/// BP mini-batch and scoring meta-batch sizes.
+const TRAIN_N: usize = 64;
+const FWD_N: usize = 256;
+
+fn ns_per_sample(r: &BenchResult, n: usize) -> f64 {
+    r.median.as_nanos() as f64 / n as f64
+}
+
+fn samples_per_s(r: &BenchResult, n: usize) -> f64 {
+    n as f64 / r.median.as_secs_f64().max(1e-12)
+}
+
+fn result_obj(fwd: &BenchResult, train: &BenchResult) -> Json {
+    obj(vec![
+        ("fwd_ns_per_sample", num(ns_per_sample(fwd, FWD_N))),
+        ("fwd_samples_per_s", num(samples_per_s(fwd, FWD_N))),
+        ("train_ns_per_sample", num(ns_per_sample(train, TRAIN_N))),
+        ("train_samples_per_s", num(samples_per_s(train, TRAIN_N))),
+    ])
+}
+
 fn main() {
+    let smoke = smoke_mode();
+    let bench = if smoke { Bencher::quick() } else { Bencher::default() };
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    println!("== native runtime kernels (d={D}, h={H}, c={C}, {cores} cores) ==");
+
+    let mut rng = Pcg64::new(3);
+    let x_train: Vec<f32> = (0..TRAIN_N * D).map(|_| rng.normal()).collect();
+    let y_train: Vec<i32> = (0..TRAIN_N).map(|_| rng.int_in(0, C as i64) as i32).collect();
+    let w_train = vec![1.0f32; TRAIN_N];
+    let x_fwd: Vec<f32> = (0..FWD_N * D).map(|_| rng.normal()).collect();
+    let y_fwd: Vec<i32> = (0..FWD_N).map(|_| rng.int_in(0, C as i64) as i32).collect();
+
+    // Shared deterministic init so every variant times identical math.
+    // lr = 0 keeps parameters fixed across timed iterations (the full
+    // optimizer update still runs, so the cost is representative).
+    let mut seed_rt = NativeRuntime::new(D, H, C);
+    seed_rt.init(0).unwrap();
+    let params0 = seed_rt.get_params().unwrap();
+
+    // ---- scalar reference: the pre-kernel NativeRuntime math -----------
+    let mut scalar = ScalarMlp::new(D, H, C);
+    scalar.set_params(&params0);
+    let scalar_fwd = bench
+        .run(&format!("scalar     loss_fwd   n={FWD_N}"), || scalar.loss_fwd(&x_fwd, &y_fwd, FWD_N));
+    let scalar_train = bench.run(&format!("scalar     train_step n={TRAIN_N}"), || {
+        scalar.train_step(&x_train, &y_train, &w_train, 0.0, TRAIN_N)
+    });
+
+    // ---- blocked kernels at 1 / 2 / 4 threads ---------------------------
+    let mut per_thread: Vec<(usize, BenchResult, BenchResult)> = Vec::new();
+    for &t in &[1usize, 2, 4] {
+        let mut rt = NativeRuntime::new(D, H, C).with_kernel_threads(t);
+        rt.set_params(&params0).unwrap();
+        let rf = bench.run(&format!("kernel t={t} loss_fwd   n={FWD_N}"), || {
+            rt.loss_fwd(BatchX::F32(&x_fwd), &y_fwd, FWD_N).unwrap()
+        });
+        let rt_res = bench.run(&format!("kernel t={t} train_step n={TRAIN_N}"), || {
+            rt.train_step(BatchX::F32(&x_train), &y_train, &w_train, 0.0, TRAIN_N).unwrap()
+        });
+        per_thread.push((t, rf, rt_res));
+    }
+
+    let t1_train = per_thread[0].2.median.as_secs_f64();
+    let t4_train = per_thread[2].2.median.as_secs_f64();
+    let t1_fwd = per_thread[0].1.median.as_secs_f64();
+    let train_vs_scalar = scalar_train.median.as_secs_f64() / t1_train.max(1e-12);
+    let fwd_vs_scalar = scalar_fwd.median.as_secs_f64() / t1_fwd.max(1e-12);
+    let t4_vs_t1 = t1_train / t4_train.max(1e-12);
+    println!(
+        "\ntrain_step: kernel(t=1) {train_vs_scalar:.2}x vs scalar (target >= 4x), \
+         t=4 {t4_vs_t1:.2}x vs t=1 (target >= 2.5x on a 4-core box; this box: {cores})"
+    );
+
+    let mut threads_map: BTreeMap<String, Json> = BTreeMap::new();
+    for (t, rf, rtr) in &per_thread {
+        threads_map.insert(format!("t{t}"), result_obj(rf, rtr));
+    }
+    let out = obj(vec![
+        ("bench", s("perf_runtime")),
+        ("backend", s("native")),
+        ("mode", s(if smoke { "smoke" } else { "full" })),
+        ("cores", num(cores as f64)),
+        (
+            "dims",
+            obj(vec![
+                ("d", num(D as f64)),
+                ("h", num(H as f64)),
+                ("c", num(C as f64)),
+                ("train_batch", num(TRAIN_N as f64)),
+                ("fwd_batch", num(FWD_N as f64)),
+            ]),
+        ),
+        ("scalar", result_obj(&scalar_fwd, &scalar_train)),
+        ("threads", Json::Obj(threads_map)),
+        (
+            "speedup",
+            obj(vec![
+                ("train_t1_vs_scalar", num(train_vs_scalar)),
+                ("fwd_t1_vs_scalar", num(fwd_vs_scalar)),
+                ("train_t4_vs_t1", num(t4_vs_t1)),
+            ]),
+        ),
+    ]);
+    let payload = out.to_string_compact() + "\n";
+    std::fs::write("BENCH_native.json", payload).expect("write BENCH_native.json");
+    println!("wrote BENCH_native.json");
+
+    xla_section(&bench, smoke);
+}
+
+/// XLA step costs per model/batch (FP vs BP) — unchanged from the
+/// historical bench; runs only when artifacts exist.
+fn xla_section(bench: &Bencher, smoke: bool) {
     let Ok(m) = Manifest::load_default() else {
-        println!("artifacts missing: run `make artifacts` first");
+        println!("xla: artifacts missing (run `make artifacts`) — skipping");
         return;
     };
-    let bench = Bencher::default();
     let mut rng = Pcg64::new(3);
-    let smoke = evosample::util::bench::smoke_mode();
     let models: Vec<&str> = if smoke {
         vec!["mlp_cifar10", "cnn_small_c100", "txf_lm"]
     } else {

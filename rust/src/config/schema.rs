@@ -253,6 +253,15 @@ pub struct RunConfig {
     /// Threaded mode: average replica parameters every `sync_every` local
     /// steps (0 = only at epoch boundaries, the §D.5 default).
     pub sync_every: usize,
+    /// Kernel worker threads for the native runtime's blocked kernels
+    /// (0 = auto: the `EVOSAMPLE_KERNEL_THREADS` env var, else
+    /// `available_parallelism`, clamped to the fixed gradient-shard
+    /// count). Thread count never changes numerics (DESIGN.md §7).
+    /// NOTE: applies to the main runtime only — in threaded
+    /// data-parallel mode (`threaded_workers`) each worker replica is
+    /// pinned to 1 kernel lane by `spawn_replica` so W replicas don't
+    /// oversubscribe the box; parallelism there comes from the workers.
+    pub kernel_threads: usize,
 }
 
 impl RunConfig {
@@ -274,6 +283,7 @@ impl RunConfig {
             workers: 1,
             threaded_workers: false,
             sync_every: 0,
+            kernel_threads: 0,
         }
     }
 
@@ -313,6 +323,10 @@ impl RunConfig {
         }
         if self.sync_every > 0 && !self.threaded_workers {
             return Err("sync_every requires threaded_workers".into());
+        }
+        // Catches negative TOML values too (they wrap huge via `as usize`).
+        if self.kernel_threads > 1024 {
+            return Err("kernel_threads out of range (0 = auto)".into());
         }
         if let SamplerConfig::Custom { name, params } = &self.sampler {
             // Delegate to the registry: the name must be registered and
@@ -429,6 +443,7 @@ impl RunConfig {
             workers: doc.i64_or("run.workers", 1) as usize,
             threaded_workers: doc.bool_or("run.threaded_workers", false),
             sync_every: doc.i64_or("run.sync_every", 0) as usize,
+            kernel_threads: doc.i64_or("run.kernel_threads", 0) as usize,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -528,6 +543,11 @@ max_lr = 0.05
         c.validate().unwrap();
         c.threaded_workers = false;
         assert!(c.validate().is_err(), "sync_every without threaded must fail");
+        let mut c = base();
+        c.kernel_threads = 4;
+        c.validate().unwrap();
+        c.kernel_threads = (-2i64) as usize; // wrapped negative TOML value
+        assert!(c.validate().is_err(), "wrapped negative kernel_threads must fail");
     }
 
     #[test]
@@ -538,6 +558,7 @@ model = "mlp_cifar10"
 workers = 4
 threaded_workers = true
 sync_every = 16
+kernel_threads = 2
 
 [dataset]
 kind = "synth_cifar"
@@ -548,6 +569,7 @@ n = 1024
         assert!(cfg.threaded_workers);
         assert_eq!(cfg.sync_every, 16);
         assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.kernel_threads, 2);
     }
 
     #[test]

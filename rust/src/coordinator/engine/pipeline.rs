@@ -97,11 +97,18 @@ pub struct StepCtx<'a> {
     pub lr: f32,
 }
 
-/// Reusable step executor: owns the batch buffers, counters, and per-class
-/// BP tallies so the hot path allocates nothing in steady state.
+/// Reusable step executor: owns the batch buffers, loss scratch,
+/// counters, and per-class BP tallies so the hot path allocates nothing
+/// in steady state (losses flow through the runtime's `*_into` variants
+/// into pipeline-owned buffers; only the deferred sync route — which
+/// buffers by design — clones).
 pub struct StepPipeline {
     meta_buf: BatchBuf,
     mini_buf: BatchBuf,
+    /// Scoring-FP losses of the current step (reused across steps).
+    meta_losses: Vec<f32>,
+    /// BP losses of the current step, accumulated across micro-batches.
+    bp_losses: Vec<f32>,
     pub stats: StepStats,
     pub class_bp_counts: Vec<u64>,
 }
@@ -130,6 +137,8 @@ impl StepPipeline {
         StepPipeline {
             meta_buf: BatchBuf::new(),
             mini_buf: BatchBuf::new(),
+            meta_losses: Vec::new(),
+            bp_losses: Vec::new(),
             stats: StepStats::default(),
             class_bp_counts: vec![0u64; classes.max(1)],
         }
@@ -166,8 +175,14 @@ impl StepPipeline {
         let selecting = cfg.mini_batch < cfg.meta_batch;
         if selecting && sampler.needs_meta_losses(ctx.epoch) {
             let t0 = Instant::now();
-            let losses = staged(timers, &mut observer, Stage::ScoringFp, || {
-                rt.loss_fwd(self.meta_buf.x(train_ds), &self.meta_buf.y, meta.len())
+            self.meta_losses.clear();
+            staged(timers, &mut observer, Stage::ScoringFp, || {
+                rt.loss_fwd_into(
+                    self.meta_buf.x(train_ds),
+                    &self.meta_buf.y,
+                    meta.len(),
+                    &mut self.meta_losses,
+                )
             })?;
             self.stats.fp_samples += meta.len() as u64;
             emit_into(
@@ -182,15 +197,17 @@ impl StepPipeline {
             match route {
                 ObservationRoute::Immediate | ObservationRoute::Replica => {
                     staged(timers, &mut observer, Stage::Observe, || {
-                        sampler.observe_meta(meta, &losses, ctx.epoch)
+                        sampler.observe_meta(meta, &self.meta_losses, ctx.epoch)
                     });
                 }
                 ObservationRoute::Deferred(buf) => {
                     // Feed this worker's local view AND defer a copy to
-                    // the sync round — both are selection overhead.
+                    // the sync round — both are selection overhead. (The
+                    // deferred route buffers by design, so the clone is
+                    // inherent, not hot-path waste.)
                     staged(timers, &mut observer, Stage::Observe, || {
-                        sampler.observe_meta(meta, &losses, ctx.epoch);
-                        buf.push((meta.to_vec(), losses));
+                        sampler.observe_meta(meta, &self.meta_losses, ctx.epoch);
+                        buf.push((meta.to_vec(), self.meta_losses.clone()));
                     });
                 }
             }
@@ -232,30 +249,30 @@ impl StepPipeline {
         } else {
             bsz
         };
-        let mut all_losses = Vec::with_capacity(bsz);
+        self.bp_losses.clear();
         let mut mean_acc = 0.0f64;
         let mut off = 0usize;
         let x_len = train_ds.x_len();
         let y_len = train_ds.y_dim;
         while off < bsz {
             let m = micro.min(bsz - off);
-            let out = staged(timers, &mut observer, Stage::TrainBp, || {
+            let mean = staged(timers, &mut observer, Stage::TrainBp, || {
                 let x = match buf.x(train_ds) {
                     BatchX::F32(v) => BatchX::F32(&v[off * x_len..(off + m) * x_len]),
                     BatchX::I32(v) => BatchX::I32(&v[off * x_len..(off + m) * x_len]),
                 };
-                rt.train_step(
+                rt.train_step_into(
                     x,
                     &y_ref[off * y_len..(off + m) * y_len],
                     &sel.weights[off..off + m],
                     ctx.lr,
                     m,
+                    &mut self.bp_losses,
                 )
             })?;
             self.stats.bp_passes += 1;
             self.stats.bp_samples += m as u64;
-            mean_acc += out.mean_loss as f64 * m as f64;
-            all_losses.extend_from_slice(&out.losses);
+            mean_acc += mean as f64 * m as f64;
             off += m;
         }
         let step_mean = mean_acc / bsz as f64;
@@ -271,12 +288,12 @@ impl StepPipeline {
         match route {
             ObservationRoute::Immediate | ObservationRoute::Replica => {
                 staged(timers, &mut observer, Stage::Observe, || {
-                    sampler.observe_train(&sel.indices, &all_losses, ctx.epoch)
+                    sampler.observe_train(&sel.indices, &self.bp_losses, ctx.epoch)
                 });
             }
             ObservationRoute::Deferred(buf) => {
                 staged(timers, &mut observer, Stage::Observe, || {
-                    buf.push((sel.indices, all_losses))
+                    buf.push((sel.indices, self.bp_losses.clone()))
                 });
             }
         }

@@ -16,7 +16,9 @@
 //!    can keep honoring the barrier schedule.
 //! 4. Mid-epoch (every `sync_every` local steps, if configured) workers
 //!    rendezvous on a barrier and average parameters through
-//!    `get_params`/`set_params`.
+//!    `read_params_into`/`set_params` (worker-owned snapshot buffers are
+//!    moved through the slots and reclaimed, so steady-state sync rounds
+//!    allocate nothing).
 //! 5. At the epoch boundary the main thread all-gathers every replica's
 //!    shard observation log and replays it into the canonical sampler and
 //!    all peer replicas (`merge_observations`), then averages parameters
@@ -66,9 +68,10 @@ struct SyncShared {
     avg: Mutex<Vec<f32>>,
 }
 
-/// Element-wise mean of parameter snapshots (empty iterator => empty vec).
-fn mean_params<'p>(snaps: impl Iterator<Item = &'p Vec<f32>>) -> Vec<f32> {
-    let mut avg: Vec<f32> = Vec::new();
+/// Element-wise mean of parameter snapshots, written into a reusable
+/// buffer (cleared first; empty iterator => empty buffer).
+fn mean_params_into<'p>(avg: &mut Vec<f32>, snaps: impl Iterator<Item = &'p Vec<f32>>) {
+    avg.clear();
     let mut count = 0usize;
     for p in snaps {
         if avg.is_empty() {
@@ -86,7 +89,6 @@ fn mean_params<'p>(snaps: impl Iterator<Item = &'p Vec<f32>>) -> Vec<f32> {
             *a *= inv;
         }
     }
-    avg
 }
 
 pub(super) fn run(
@@ -126,6 +128,12 @@ pub(super) fn run(
     let mut timers = PhaseTimers::new();
     let mut stats = StepStats::default();
     let mut class_bp_counts = vec![0u64; train_ds.classes.max(1)];
+
+    // Reusable §D.5 sync buffers: one parameter snapshot per worker plus
+    // the averaged vector, allocated once for the whole run.
+    let pc = rt.param_count();
+    let mut snap_bufs: Vec<Vec<f32>> = (0..workers).map(|_| vec![0.0f32; pc]).collect();
+    let mut avg_buf: Vec<f32> = Vec::with_capacity(pc);
 
     let total_steps = cfg.epochs * n.div_ceil(cfg.meta_batch);
     let mut base_step = 0usize;
@@ -257,16 +265,17 @@ pub(super) fn run(
                 }
             }
             // Average the ACTIVE replicas' parameters, install everywhere
-            // (idle replicas included) and into the main runtime for eval.
-            let mut snaps: Vec<Vec<f32>> = Vec::with_capacity(eff);
-            for replica in replicas[..eff].iter_mut() {
-                snaps.push(replica.get_params()?);
+            // (idle replicas included) and into the main runtime for
+            // eval. Snapshots land in the run-owned reusable buffers —
+            // no per-round Vec cloning.
+            for (replica, buf) in replicas[..eff].iter_mut().zip(snap_bufs.iter_mut()) {
+                replica.read_params_into(buf)?;
             }
-            let avg = mean_params(snaps.iter());
+            mean_params_into(&mut avg_buf, snap_bufs[..eff].iter());
             for replica in replicas.iter_mut() {
-                replica.set_params(&avg)?;
+                replica.set_params(&avg_buf)?;
             }
-            rt.set_params(&avg)?;
+            rt.set_params(&avg_buf)?;
             Ok(())
         })?;
         emit_into(&mut events, Event::SyncRound { epoch, workers: eff });
@@ -347,6 +356,8 @@ fn run_worker(
     let mut meta = Vec::new();
     let mut local_step = 0usize;
     let mut first_err: Option<anyhow::Error> = None;
+    // Worker-owned parameter snapshot buffer, reused across sync rounds.
+    let mut params_scratch = vec![0.0f32; replica.param_count()];
 
     for sync_round in 0..=n_syncs {
         let target = if sync_round < n_syncs {
@@ -402,7 +413,7 @@ fn run_worker(
             }
         }
         if sync_round < n_syncs {
-            sync_params(shared, w, replica, &mut timers);
+            sync_params(shared, w, replica, &mut timers, &mut params_scratch);
         }
     }
 
@@ -423,19 +434,27 @@ fn run_worker(
 /// One mid-epoch parameter-averaging rendezvous: publish → barrier →
 /// leader averages → barrier → install. Always runs to completion so the
 /// barrier schedule stays aligned across workers.
+///
+/// Allocation-free in steady state: the worker snapshots into its own
+/// `scratch` buffer via `read_params_into`, MOVES the buffer into its
+/// slot for the leader's reduction, and reclaims it afterwards; the
+/// leader averages into the shared reusable `avg` buffer.
 fn sync_params(
     shared: &SyncShared,
     w: usize,
     replica: &mut dyn ModelRuntime,
     timers: &mut PhaseTimers,
+    scratch: &mut Vec<f32>,
 ) {
     let t0 = std::time::Instant::now();
-    let params = replica.get_params().ok();
-    shared.slots.lock().unwrap()[w] = params;
+    let published = replica.read_params_into(scratch).is_ok();
+    shared.slots.lock().unwrap()[w] =
+        if published { Some(std::mem::take(scratch)) } else { None };
     let wait = shared.barrier.wait();
     if wait.is_leader() {
         let slots = shared.slots.lock().unwrap();
-        *shared.avg.lock().unwrap() = mean_params(slots.iter().flatten());
+        let mut avg = shared.avg.lock().unwrap();
+        mean_params_into(&mut avg, slots.iter().flatten());
     }
     shared.barrier.wait();
     {
@@ -443,6 +462,12 @@ fn sync_params(
         if !avg.is_empty() {
             let _ = replica.set_params(&avg);
         }
+    }
+    // Reclaim the published buffer so the next round allocates nothing.
+    if let Some(buf) = shared.slots.lock().unwrap()[w].take() {
+        *scratch = buf;
+    } else if scratch.len() != replica.param_count() {
+        scratch.resize(replica.param_count(), 0.0);
     }
     timers.add(phase::SYNC, t0.elapsed());
 }

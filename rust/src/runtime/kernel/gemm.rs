@@ -1,0 +1,233 @@
+//! Unit-stride micro-kernels for the one-hidden-layer MLP.
+//!
+//! Everything here operates on the packed layout (see [`super::pack`]):
+//! `W1` transposed to `[hidden][in_dim]`, `W2` canonical
+//! `[hidden][classes]`. With those orientations *every* inner loop below
+//! is unit-stride on both operands, which is what lets LLVM vectorize
+//! them:
+//!
+//! * forward hidden:  `h[j] = relu(b1[j] + dot(x, W1ᵀ[j]))` — a length-d
+//!   dot with both slices contiguous;
+//! * forward logits:  `logits += h[k] · W2[k]` — an axpy over `classes`,
+//!   skipping relu-dead `h[k] == 0` rows;
+//! * backward:        `dh[k] = dot(dl, W2[k])`, `gW2[k] += h[k]·dl`,
+//!   `gW1ᵀ[k] += dh[k]·x` — dots and axpys, all contiguous, with the
+//!   relu gate skipping dead hidden units entirely;
+//! * fused softmax-CE: one max/exp sweep produces the per-sample loss
+//!   *and* the scaled `dlogits` row, instead of the historical
+//!   recompute-in-backward pattern.
+//!
+//! Per-row op sequences are fixed, so the same row always produces the
+//! same bits no matter which pool lane computes it. [`dot`] uses eight
+//! independent accumulator lanes folded in a fixed tree — that breaks
+//! the FP dependency chain for SIMD without making the result depend on
+//! anything but the input slices.
+
+/// Unit-stride dot product with 8 accumulator lanes (fixed reduction
+/// order — deterministic for a given input, friendly to SLP
+/// vectorization).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; 8];
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (ca, cb) in (&mut ac).zip(&mut bc) {
+        for ((acc, &x), &y) in lanes.iter_mut().zip(ca).zip(cb) {
+            *acc += x * y;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * y;
+    }
+    (((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+        + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7])))
+        + tail
+}
+
+/// `y[i] += alpha * x[i]` (unit-stride, no reduction — auto-vectorizes).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Hidden-layer forward for consecutive samples: `x` is `rows·d`,
+/// `h_out` is `rows·h`; `w1t` is the packed `[h][d]` transposed weight,
+/// `b1` the bias.
+pub fn hidden_fwd(x: &[f32], w1t: &[f32], b1: &[f32], d: usize, h: usize, h_out: &mut [f32]) {
+    debug_assert_eq!(x.len() % d.max(1), 0);
+    debug_assert_eq!(w1t.len(), d * h);
+    for (xi, hrow) in x.chunks_exact(d).zip(h_out.chunks_exact_mut(h)) {
+        for (j, hj) in hrow.iter_mut().enumerate() {
+            let acc = b1[j] + dot(xi, &w1t[j * d..(j + 1) * d]);
+            *hj = acc.max(0.0); // relu
+        }
+    }
+}
+
+/// Output-layer forward for consecutive samples: `hrows` is `rows·h`,
+/// `out` is `rows·c`; `w2` is the packed `[h][c]` weight, `b2` the bias.
+/// Relu-dead hidden units (`h[k] == 0`) contribute nothing and are
+/// skipped.
+pub fn logits_fwd(hrows: &[f32], w2: &[f32], b2: &[f32], h: usize, c: usize, out: &mut [f32]) {
+    debug_assert_eq!(w2.len(), h * c);
+    for (hi, li) in hrows.chunks_exact(h).zip(out.chunks_exact_mut(c)) {
+        li.copy_from_slice(b2);
+        for (k, &hk) in hi.iter().enumerate() {
+            if hk != 0.0 {
+                axpy(hk, &w2[k * c..(k + 1) * c], li);
+            }
+        }
+    }
+}
+
+/// Per-sample CE loss from one logits row (max-subtracted log-sum-exp).
+#[inline]
+pub fn ce_loss_row(li: &[f32], y: usize) -> f32 {
+    let mut m = f32::NEG_INFINITY;
+    for &v in li {
+        m = m.max(v);
+    }
+    let mut z = 0.0f32;
+    for &v in li {
+        z += (v - m).exp();
+    }
+    z.ln() + m - li[y]
+}
+
+/// Fused softmax-CE: one max/exp sweep fills `dl` with the scaled
+/// gradient `scale · (softmax(li) - onehot(y))` and returns the
+/// (unscaled) CE loss. The loss bits are identical to [`ce_loss_row`]
+/// (same max fold, same summation order).
+#[inline]
+pub fn ce_loss_grad_row(li: &[f32], y: usize, scale: f32, dl: &mut [f32]) -> f32 {
+    debug_assert_eq!(li.len(), dl.len());
+    let mut m = f32::NEG_INFINITY;
+    for &v in li {
+        m = m.max(v);
+    }
+    let mut z = 0.0f32;
+    for (dj, &v) in dl.iter_mut().zip(li) {
+        let e = (v - m).exp();
+        z += e;
+        *dj = e;
+    }
+    let loss = z.ln() + m - li[y];
+    let inv = scale / z;
+    for dj in dl.iter_mut() {
+        *dj *= inv;
+    }
+    dl[y] -= scale;
+    loss
+}
+
+/// Accumulate one sample's gradient contribution into a shard buffer.
+///
+/// Inputs: `xi` (`d`), `hi` (`h`, post-relu), `dl` (`c`, the scaled
+/// `dlogits` row from [`ce_loss_grad_row`]), and the packed `w2`.
+/// Outputs accumulate into the shard's packed gradient segments; `dh`
+/// is caller-provided `h`-length scratch (fully overwritten).
+#[allow(clippy::too_many_arguments)]
+pub fn backward_row(
+    xi: &[f32],
+    hi: &[f32],
+    dl: &[f32],
+    w2: &[f32],
+    d: usize,
+    c: usize,
+    gw1t: &mut [f32],
+    gb1: &mut [f32],
+    gw2: &mut [f32],
+    gb2: &mut [f32],
+    dh: &mut [f32],
+) {
+    axpy(1.0, dl, gb2);
+    for (k, &hk) in hi.iter().enumerate() {
+        if hk > 0.0 {
+            // Relu active: the unit propagates gradient both ways.
+            dh[k] = dot(dl, &w2[k * c..(k + 1) * c]);
+            axpy(hk, dl, &mut gw2[k * c..(k + 1) * c]);
+        } else {
+            dh[k] = 0.0;
+        }
+    }
+    for (k, &g) in dh.iter().enumerate() {
+        if g != 0.0 {
+            gb1[k] += g;
+            axpy(g, xi, &mut gw1t[k * d..(k + 1) * d]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive_on_ragged_lengths() {
+        for len in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 100] {
+            let a: Vec<f32> = (0..len).map(|i| (i as f32).sin()).collect();
+            let b: Vec<f32> = (0..len).map(|i| (i as f32 * 0.3).cos()).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let fast = dot(&a, &b);
+            assert!((naive - fast).abs() <= 1e-4 * (1.0 + naive.abs()), "len={len}");
+        }
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 20.0, 30.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, [10.5, 21.0, 31.5]);
+    }
+
+    #[test]
+    fn ce_loss_grad_matches_loss_and_sums_to_zero_at_unit_scale() {
+        let li = [0.2f32, -1.0, 3.0, 0.5];
+        let y = 2usize;
+        let mut dl = [0.0f32; 4];
+        let loss = ce_loss_grad_row(&li, y, 1.0, &mut dl);
+        assert_eq!(loss, ce_loss_row(&li, y), "fused loss must be bit-identical");
+        // softmax - onehot sums to zero.
+        let s: f32 = dl.iter().sum();
+        assert!(s.abs() < 1e-6, "grad sum {s}");
+        assert!(dl[y] < 0.0, "true-class grad must be negative");
+    }
+
+    #[test]
+    fn ce_loss_is_shift_invariant() {
+        let li = [1.0f32, 2.0, 3.0];
+        let shifted = [101.0f32, 102.0, 103.0];
+        let a = ce_loss_row(&li, 1);
+        let b = ce_loss_row(&shifted, 1);
+        assert!((a - b).abs() < 1e-5);
+    }
+
+    #[test]
+    fn hidden_fwd_applies_relu_and_bias() {
+        // d=2, h=2: W1T rows [1,0] and [-1,0]; b1 = [0.5, -10].
+        let w1t = [1.0f32, 0.0, -1.0, 0.0];
+        let b1 = [0.5f32, -10.0];
+        let x = [2.0f32, 7.0];
+        let mut h = [0.0f32; 2];
+        hidden_fwd(&x, &w1t, &b1, 2, 2, &mut h);
+        assert_eq!(h, [2.5, 0.0]);
+    }
+
+    #[test]
+    fn logits_fwd_skips_dead_units() {
+        // h=2, c=2: W2 rows [1,2] (live) and [100,100] (dead input).
+        let w2 = [1.0f32, 2.0, 100.0, 100.0];
+        let b2 = [0.1f32, 0.2];
+        let hrow = [3.0f32, 0.0];
+        let mut out = [0.0f32; 2];
+        logits_fwd(&hrow, &w2, &b2, 2, 2, &mut out);
+        assert!((out[0] - 3.1).abs() < 1e-6);
+        assert!((out[1] - 6.2).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,116 @@
+//! Blocked, multi-threaded CPU kernel layer behind [`super::native`].
+//!
+//! The naive `NativeRuntime` walked `W1` with stride `hidden` in its
+//! inner loops, so the FP/BP cost ratios the perf benches report were
+//! dominated by cache misses rather than the algorithmic costs the
+//! paper's §3.3 accounting models. This module makes the hot path fast
+//! while keeping results **bit-identical across kernel thread counts**:
+//!
+//! * [`pack`] — the packed parameter layout. `W1` is stored transposed
+//!   (`[hidden][in_dim]`) so both the forward dot products and the
+//!   backward outer-product accumulation run unit-stride; `b1`, `W2`
+//!   (`[hidden][classes]`) and `b2` keep their canonical orientation,
+//!   which is already unit-stride for every kernel that touches them.
+//!   Packing happens on `set_params`/`init`, unpacking on `get_params` —
+//!   the canonical flat layout remains the only interchange format
+//!   (checkpoints, §D.5 parameter averaging, the XLA cross-check).
+//! * [`gemm`] — cache-blocked micro-kernels: multi-accumulator
+//!   unit-stride dots, axpy updates, relu-gated backward rows, and the
+//!   fused softmax-CE pass that produces per-sample loss and `dlogits`
+//!   from a single max/exp sweep.
+//! * [`pool`] — a persistent `std::thread` worker pool, spawned once per
+//!   runtime and reused for every step. Work is distributed by batch-row
+//!   ranges (forward) and by fixed gradient shards (backward).
+//! * [`reference`] — the pre-kernel scalar implementation, kept verbatim
+//!   as an executable specification for the equivalence test-suite and
+//!   as the baseline the perf benches measure speedups against.
+//!
+//! # Determinism contract
+//!
+//! Per-sample forward work is embarrassingly parallel: each row's result
+//! is computed by a fixed single-row op sequence, so any row partition
+//! yields identical bits. Gradients are accumulated into
+//! [`GRAD_SHARDS`] *fixed* row shards — the shard boundaries depend only
+//! on the batch size, never on the thread count — and reduced into the
+//! final gradient in ascending shard order on one thread. A 1-thread run
+//! therefore produces exactly the same bits as an 8-thread run (tested
+//! in `tests/kernel_equivalence.rs`).
+
+pub mod gemm;
+pub mod pack;
+pub mod pool;
+pub mod reference;
+
+/// Fixed number of gradient shards. This is the determinism anchor (the
+/// reduction tree never changes shape with the thread count) and the
+/// useful upper bound on backward parallelism, so auto-detected thread
+/// counts are clamped to it.
+pub const GRAD_SHARDS: usize = 8;
+
+/// Resolve the default kernel worker count: the
+/// `EVOSAMPLE_KERNEL_THREADS` env var when set to a positive integer,
+/// otherwise `available_parallelism`, both clamped to [`GRAD_SHARDS`].
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("EVOSAMPLE_KERNEL_THREADS") {
+        if let Ok(t) = v.trim().parse::<usize>() {
+            if t >= 1 {
+                return t.min(GRAD_SHARDS);
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1)
+        .min(GRAD_SHARDS)
+}
+
+/// Contiguous even split of `n` items into `parts`: returns the
+/// half-open range assigned to `part`. Ranges are disjoint, cover
+/// `0..n`, and extra parts (when `parts > n`) come out empty.
+pub fn split_range(n: usize, parts: usize, part: usize) -> (usize, usize) {
+    debug_assert!(part < parts.max(1));
+    let parts = parts.max(1);
+    let base = n / parts;
+    let rem = n % parts;
+    let start = part * base + part.min(rem);
+    let len = base + usize::from(part < rem);
+    (start, start + len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_range_covers_and_is_disjoint() {
+        for n in [0usize, 1, 3, 7, 8, 9, 64, 65] {
+            for parts in 1..=9usize {
+                let mut covered = 0usize;
+                let mut next = 0usize;
+                for p in 0..parts {
+                    let (a, b) = split_range(n, parts, p);
+                    assert_eq!(a, next, "n={n} parts={parts} p={p}");
+                    assert!(b >= a);
+                    next = b;
+                    covered += b - a;
+                }
+                assert_eq!(next, n);
+                assert_eq!(covered, n);
+            }
+        }
+    }
+
+    #[test]
+    fn split_range_is_balanced() {
+        let sizes: Vec<usize> =
+            (0..4).map(|p| { let (a, b) = split_range(10, 4, p); b - a }).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn default_threads_is_positive_and_clamped() {
+        let t = default_threads();
+        assert!(t >= 1);
+        assert!(t <= GRAD_SHARDS);
+    }
+}

@@ -1,0 +1,220 @@
+//! Packed parameter layout for the kernel layer.
+//!
+//! Canonical (interchange) layout — what `get_params`/`set_params`,
+//! checkpoints, §D.5 parameter averaging, and the scalar reference all
+//! speak — is the historical flat vector:
+//!
+//! ```text
+//! [ W1 (d·h, row-major [d][h]) | b1 (h) | W2 (h·c, row-major [h][c]) | b2 (c) ]
+//! ```
+//!
+//! Packed (kernel) layout transposes `W1` so the forward dots and the
+//! backward outer products are unit-stride, and keeps everything else
+//! in canonical orientation (already unit-stride for the kernels):
+//!
+//! ```text
+//! [ W1ᵀ (h·d, row-major [h][d]) | b1 (h) | W2 (h·c) | b2 (c) ]
+//! ```
+//!
+//! Packing is a pure permutation — `pack_from` followed by
+//! `unpack_into` is the identity, bit for bit — so moving between the
+//! two layouts never perturbs training state. The contract: pack on
+//! `init`/`set_params` (cold), unpack on `get_params`/`read_params_into`
+//! (cold), and run every hot-path kernel on the packed form. Optimizer
+//! state (`velocity`) and gradients live in packed space too, so the
+//! SGD update is a straight elementwise sweep.
+
+/// Model dimensions plus offset arithmetic for both layouts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Layout {
+    /// Input features per sample.
+    pub d: usize,
+    /// Hidden units.
+    pub h: usize,
+    /// Classes.
+    pub c: usize,
+}
+
+impl Layout {
+    pub fn new(d: usize, h: usize, c: usize) -> Layout {
+        Layout { d, h, c }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.d * self.h + self.h + self.h * self.c + self.c
+    }
+
+    // Canonical offsets.
+    pub fn w1_off(&self) -> usize {
+        0
+    }
+    pub fn b1_off(&self) -> usize {
+        self.d * self.h
+    }
+    pub fn w2_off(&self) -> usize {
+        self.b1_off() + self.h
+    }
+    pub fn b2_off(&self) -> usize {
+        self.w2_off() + self.h * self.c
+    }
+
+    // Packed offsets ([W1ᵀ | b1 | W2 | b2]).
+    pub fn pb1_off(&self) -> usize {
+        self.h * self.d
+    }
+    pub fn pw2_off(&self) -> usize {
+        self.pb1_off() + self.h
+    }
+    pub fn pb2_off(&self) -> usize {
+        self.pw2_off() + self.h * self.c
+    }
+}
+
+/// Split a flat packed buffer into its four mutable segments
+/// `(w1t, b1, w2, b2)`.
+pub fn split_packed_mut(
+    buf: &mut [f32],
+    l: Layout,
+) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
+    debug_assert_eq!(buf.len(), l.param_count());
+    let (w1t, rest) = buf.split_at_mut(l.pb1_off());
+    let (b1, rest) = rest.split_at_mut(l.h);
+    let (w2, b2) = rest.split_at_mut(l.h * l.c);
+    (w1t, b1, w2, b2)
+}
+
+/// A parameter-space buffer held in PACKED order.
+#[derive(Clone, Debug)]
+pub struct PackedBuf {
+    l: Layout,
+    buf: Vec<f32>,
+}
+
+impl PackedBuf {
+    pub fn zeros(l: Layout) -> PackedBuf {
+        PackedBuf { l, buf: vec![0.0; l.param_count()] }
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.l
+    }
+
+    pub fn flat(&self) -> &[f32] {
+        &self.buf
+    }
+
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.buf.fill(v);
+    }
+
+    /// `W1ᵀ` segment, row-major `[h][d]`.
+    pub fn w1t(&self) -> &[f32] {
+        &self.buf[..self.l.pb1_off()]
+    }
+
+    pub fn b1(&self) -> &[f32] {
+        &self.buf[self.l.pb1_off()..self.l.pw2_off()]
+    }
+
+    /// `W2` segment, row-major `[h][c]`.
+    pub fn w2(&self) -> &[f32] {
+        &self.buf[self.l.pw2_off()..self.l.pb2_off()]
+    }
+
+    pub fn b2(&self) -> &[f32] {
+        &self.buf[self.l.pb2_off()..]
+    }
+
+    /// Install a canonical flat parameter vector (transposing `W1`).
+    pub fn pack_from(&mut self, flat: &[f32]) {
+        let l = self.l;
+        debug_assert_eq!(flat.len(), l.param_count());
+        // W1 canonical [d][h] -> packed [h][d].
+        for q in 0..l.d {
+            let src = &flat[q * l.h..(q + 1) * l.h];
+            for (j, &v) in src.iter().enumerate() {
+                self.buf[j * l.d + q] = v;
+            }
+        }
+        self.buf[l.pb1_off()..l.pw2_off()].copy_from_slice(&flat[l.b1_off()..l.w2_off()]);
+        self.buf[l.pw2_off()..l.pb2_off()].copy_from_slice(&flat[l.w2_off()..l.b2_off()]);
+        self.buf[l.pb2_off()..].copy_from_slice(&flat[l.b2_off()..]);
+    }
+
+    /// Export to a canonical flat parameter vector (transposing `W1`).
+    pub fn unpack_into(&self, flat: &mut [f32]) {
+        let l = self.l;
+        debug_assert_eq!(flat.len(), l.param_count());
+        for j in 0..l.h {
+            let src = &self.buf[j * l.d..(j + 1) * l.d];
+            for (q, &v) in src.iter().enumerate() {
+                flat[q * l.h + j] = v;
+            }
+        }
+        flat[l.b1_off()..l.w2_off()].copy_from_slice(&self.buf[l.pb1_off()..l.pw2_off()]);
+        flat[l.w2_off()..l.b2_off()].copy_from_slice(&self.buf[l.pw2_off()..l.pb2_off()]);
+        flat[l.b2_off()..].copy_from_slice(&self.buf[l.pb2_off()..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_offsets_are_consistent() {
+        let l = Layout::new(5, 3, 2);
+        assert_eq!(l.param_count(), 5 * 3 + 3 + 3 * 2 + 2);
+        assert_eq!(l.b1_off(), 15);
+        assert_eq!(l.w2_off(), 18);
+        assert_eq!(l.b2_off(), 24);
+        assert_eq!(l.pb1_off(), 15);
+        assert_eq!(l.pw2_off(), 18);
+        assert_eq!(l.pb2_off(), 24);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrips_bit_for_bit() {
+        let l = Layout::new(7, 4, 3);
+        let flat: Vec<f32> = (0..l.param_count()).map(|i| (i as f32).sin()).collect();
+        let mut packed = PackedBuf::zeros(l);
+        packed.pack_from(&flat);
+        let mut back = vec![0.0f32; l.param_count()];
+        packed.unpack_into(&mut back);
+        assert_eq!(flat, back);
+    }
+
+    #[test]
+    fn pack_transposes_w1() {
+        // d=2, h=3: canonical W1[q][j] = 10*q + j.
+        let l = Layout::new(2, 3, 1);
+        let mut flat = vec![0.0f32; l.param_count()];
+        for q in 0..2 {
+            for j in 0..3 {
+                flat[q * 3 + j] = (10 * q + j) as f32;
+            }
+        }
+        let mut packed = PackedBuf::zeros(l);
+        packed.pack_from(&flat);
+        // Packed row j must hold W1[:, j] = [j, 10 + j].
+        for j in 0..3 {
+            assert_eq!(packed.w1t()[j * 2], j as f32);
+            assert_eq!(packed.w1t()[j * 2 + 1], (10 + j) as f32);
+        }
+    }
+
+    #[test]
+    fn split_packed_mut_segments_have_expected_lengths() {
+        let l = Layout::new(3, 4, 2);
+        let mut buf = vec![0.0f32; l.param_count()];
+        let (w1t, b1, w2, b2) = split_packed_mut(&mut buf, l);
+        assert_eq!(w1t.len(), 12);
+        assert_eq!(b1.len(), 4);
+        assert_eq!(w2.len(), 8);
+        assert_eq!(b2.len(), 2);
+    }
+}

@@ -1,0 +1,318 @@
+//! Persistent worker pool for the kernel layer.
+//!
+//! A [`KernelPool`] spawns its workers **once** (per runtime) and parks
+//! them on a condvar between dispatches, so the per-step dispatch cost
+//! is a couple of mutex/condvar round-trips instead of thread spawns.
+//! [`KernelPool::run`] executes one *job* — a `Fn(lane)` closure — on
+//! every lane concurrently: lane 0 runs on the calling thread, lanes
+//! `1..threads` on the pooled workers, and the call only returns once
+//! every lane has finished. That blocking property is what makes the
+//! lifetime-erased job pointer sound: the closure (and everything it
+//! borrows) outlives every dereference.
+//!
+//! Shutdown: dropping the pool flips a flag under the lock, wakes every
+//! worker, and joins them.
+//!
+//! The pool itself imposes no work-partitioning policy; callers slice
+//! their buffers into disjoint regions per lane (see [`SharedRows`] /
+//! [`SharedSlots`]) and must keep kernel closures panic-light — a panic
+//! on any lane is caught, the barrier still completes, and the dispatch
+//! re-panics on the calling thread.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Lifetime-erased pointer to the current job closure.
+#[derive(Clone, Copy)]
+struct Job(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is only dereferenced between a `run` dispatch and
+// its completion barrier; `run` borrows the closure for that whole span.
+unsafe impl Send for Job {}
+
+struct State {
+    job: Option<Job>,
+    /// Bumped once per dispatch; workers use it to run each job once.
+    generation: u64,
+    /// Workers that have finished the current job.
+    done: usize,
+    /// Set when any lane's job panicked (reported by `run`).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// A fixed-size pool of kernel worker threads (see module docs).
+pub struct KernelPool {
+    threads: usize,
+    shared: Arc<Shared>,
+    /// Serializes `run` dispatches: overlapping jobs would cross their
+    /// completion counts (and dangle the erased job pointer).
+    dispatch: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl KernelPool {
+    /// Spawn a pool with `threads` total lanes (min 1). `threads == 1`
+    /// spawns no workers at all — `run` degenerates to a direct call.
+    pub fn new(threads: usize) -> KernelPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                generation: 0,
+                done: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for lane in 1..threads {
+            let shared = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || worker_loop(&shared, lane)));
+        }
+        KernelPool { threads, shared, dispatch: Mutex::new(()), handles }
+    }
+
+    /// Total lanes, including the caller's.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(lane)` for every lane in `0..threads()`; returns after all
+    /// lanes complete. Lanes must write only to disjoint data.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.threads == 1 {
+            f(0);
+            return;
+        }
+        // Poison-tolerant: a propagated job panic unwinds through `run`
+        // with this guard held, but the `()` it protects has no state to
+        // corrupt — keep the pool usable afterwards.
+        let _serialized = self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+        let job = Job(erase(f));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job);
+            st.generation = st.generation.wrapping_add(1);
+            st.done = 0;
+            self.shared.work_cv.notify_all();
+        }
+        // Lane 0 runs on this thread. Catch a panic so we still hold the
+        // completion barrier (workers may be mid-job borrowing `f`).
+        let main_res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0)));
+        let worker_panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.done < self.threads - 1 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            std::mem::take(&mut st.panicked)
+        };
+        if let Err(p) = main_res {
+            std::panic::resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("kernel pool worker panicked");
+        }
+    }
+}
+
+/// Erase the borrow lifetime of a job closure.
+///
+/// SAFETY (for callers): the returned pointer must not be dereferenced
+/// after the borrow of `f` ends. `KernelPool::run` guarantees this by
+/// blocking until every lane has finished the job.
+fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> *const (dyn Fn(usize) + Sync + 'static) {
+    let ptr = f as *const (dyn Fn(usize) + Sync + 'a);
+    unsafe {
+        std::mem::transmute::<
+            *const (dyn Fn(usize) + Sync + 'a),
+            *const (dyn Fn(usize) + Sync + 'static),
+        >(ptr)
+    }
+}
+
+fn worker_loop(shared: &Shared, lane: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != seen {
+                    if let Some(job) = st.job {
+                        seen = st.generation;
+                        break job;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: the dispatching `run` blocks until `done` reaches
+        // threads-1, so the closure outlives this call (see `erase`).
+        let f = unsafe { &*job.0 };
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(lane)));
+        let mut st = shared.state.lock().unwrap();
+        st.done += 1;
+        if res.is_err() {
+            st.panicked = true;
+        }
+        shared.done_cv.notify_one();
+    }
+}
+
+impl Drop for KernelPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Shared mutable view over a flat `f32` buffer for disjoint-range
+/// writes from pool lanes.
+#[derive(Clone, Copy)]
+pub struct SharedRows {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: lanes only touch disjoint ranges (the `range` contract).
+unsafe impl Send for SharedRows {}
+unsafe impl Sync for SharedRows {}
+
+impl SharedRows {
+    pub fn new(buf: &mut [f32]) -> SharedRows {
+        SharedRows { ptr: buf.as_mut_ptr(), len: buf.len() }
+    }
+
+    /// Mutable subslice `[a, b)`.
+    ///
+    /// # Safety
+    /// Concurrent callers must use pairwise-disjoint ranges, and the
+    /// buffer passed to `new` must outlive every use.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range(&self, a: usize, b: usize) -> &mut [f32] {
+        debug_assert!(a <= b && b <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(a), b - a)
+    }
+}
+
+/// Shared mutable view over a slice of `T` for one-lane-per-element
+/// access from pool lanes.
+pub struct SharedSlots<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+impl<T> Clone for SharedSlots<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SharedSlots<T> {}
+
+// SAFETY: lanes only touch distinct elements (the `get_mut` contract).
+unsafe impl<T: Send> Send for SharedSlots<T> {}
+unsafe impl<T: Send> Sync for SharedSlots<T> {}
+
+impl<T> SharedSlots<T> {
+    pub fn new(buf: &mut [T]) -> SharedSlots<T> {
+        SharedSlots { ptr: buf.as_mut_ptr(), len: buf.len() }
+    }
+
+    /// Mutable reference to element `i`.
+    ///
+    /// # Safety
+    /// Each element index must be touched by at most one lane during a
+    /// dispatch, and the slice passed to `new` must outlive every use.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn single_lane_pool_runs_inline() {
+        let pool = KernelPool::new(1);
+        let hits = AtomicUsize::new(0);
+        pool.run(&|lane| {
+            assert_eq!(lane, 0);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn every_lane_runs_exactly_once_per_dispatch() {
+        let pool = KernelPool::new(4);
+        for _ in 0..50 {
+            let mut marks = vec![0u32; 4];
+            let slots = SharedSlots::new(&mut marks);
+            pool.run(&|lane| {
+                // SAFETY: each lane writes only its own slot.
+                unsafe { *slots.get_mut(lane) += 1 };
+            });
+            assert_eq!(marks, vec![1, 1, 1, 1]);
+        }
+    }
+
+    #[test]
+    fn disjoint_row_writes_land() {
+        let pool = KernelPool::new(3);
+        let n = 31usize;
+        let mut buf = vec![0.0f32; n];
+        let rows = SharedRows::new(&mut buf);
+        pool.run(&|lane| {
+            let (a, b) = crate::runtime::kernel::split_range(n, 3, lane);
+            // SAFETY: split_range produces disjoint ranges.
+            let dst = unsafe { rows.range(a, b) };
+            for (k, v) in dst.iter_mut().enumerate() {
+                *v = (a + k) as f32;
+            }
+        });
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, i as f32);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let pool = KernelPool::new(2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|lane| {
+                if lane == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        // The pool must still be usable afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+}

@@ -1,0 +1,211 @@
+//! Scalar reference implementation: the pre-kernel `NativeRuntime`
+//! forward/backward, kept **verbatim** (same loops, same strided walks,
+//! same accumulation order) as an executable specification.
+//!
+//! Two consumers:
+//! * `tests/kernel_equivalence.rs` asserts the blocked/threaded kernels
+//!   match this implementation within 1e-5 on random shapes;
+//! * `benches/perf_runtime.rs` times it as the baseline the kernel
+//!   speedups in `BENCH_native.json` are measured against.
+//!
+//! Operates on the CANONICAL flat layout
+//! `[W1 (d·h) | b1 (h) | W2 (h·c) | b2 (c)]` — deliberately including
+//! the historical stride-`h` walk over `W1` that the kernel layer
+//! exists to eliminate. Do not "fix" the access patterns here; the
+//! whole point is to preserve the original arithmetic.
+
+/// The pre-kernel scalar MLP: one hidden layer, relu, softmax CE,
+/// SGD-momentum with weight decay.
+pub struct ScalarMlp {
+    pub d: usize,
+    pub h: usize,
+    pub c: usize,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub params: Vec<f32>,
+    pub velocity: Vec<f32>,
+    pub grads: Vec<f32>,
+    h_buf: Vec<f32>,
+    logits_buf: Vec<f32>,
+}
+
+impl ScalarMlp {
+    pub fn new(d: usize, h: usize, c: usize) -> ScalarMlp {
+        let pc = d * h + h + h * c + c;
+        ScalarMlp {
+            d,
+            h,
+            c,
+            momentum: 0.9,
+            weight_decay: 0.0,
+            params: vec![0.0; pc],
+            velocity: vec![0.0; pc],
+            grads: vec![0.0; pc],
+            h_buf: Vec::new(),
+            logits_buf: Vec::new(),
+        }
+    }
+
+    /// Canonical flat offsets (w1, b1, w2, b2).
+    fn layout(&self) -> (usize, usize, usize, usize) {
+        let w1 = 0;
+        let b1 = self.d * self.h;
+        let w2 = b1 + self.h;
+        let b2 = w2 + self.h * self.c;
+        (w1, b1, w2, b2)
+    }
+
+    pub fn set_params(&mut self, p: &[f32]) {
+        assert_eq!(p.len(), self.params.len(), "param count mismatch");
+        self.params.copy_from_slice(p);
+    }
+
+    /// Forward one batch; fills h_buf `[n·h]` and logits_buf `[n·c]`.
+    /// (Verbatim pre-kernel loops, stride-h walk over W1 included.)
+    pub fn forward(&mut self, x: &[f32], n: usize) {
+        let (w1, b1, w2, b2) = self.layout();
+        let (d, h, c) = (self.d, self.h, self.c);
+        self.h_buf.resize(n * h, 0.0);
+        self.logits_buf.resize(n * c, 0.0);
+        for i in 0..n {
+            let xi = &x[i * d..(i + 1) * d];
+            for j in 0..h {
+                // W1 stored row-major [d][h]: column j dotted with x.
+                let mut acc = self.params[b1 + j];
+                for (k, &xk) in xi.iter().enumerate() {
+                    acc += self.params[w1 + k * h + j] * xk;
+                }
+                self.h_buf[i * h + j] = acc.max(0.0); // relu
+            }
+            for j in 0..c {
+                let mut acc = self.params[b2 + j];
+                for k in 0..h {
+                    acc += self.params[w2 + k * c + j] * self.h_buf[i * h + k];
+                }
+                self.logits_buf[i * c + j] = acc;
+            }
+        }
+    }
+
+    /// Per-sample CE losses from logits_buf.
+    pub fn ce_losses(&self, y: &[i32], n: usize) -> Vec<f32> {
+        let c = self.c;
+        (0..n)
+            .map(|i| {
+                let li = &self.logits_buf[i * c..(i + 1) * c];
+                let m = li.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let lse = li.iter().map(|&v| (v - m).exp()).sum::<f32>().ln() + m;
+                lse - li[y[i] as usize]
+            })
+            .collect()
+    }
+
+    pub fn loss_fwd(&mut self, x: &[f32], y: &[i32], n: usize) -> Vec<f32> {
+        self.forward(x, n);
+        self.ce_losses(y, n)
+    }
+
+    /// One weighted SGD-momentum step; returns (per-sample losses,
+    /// weighted mean loss). Verbatim pre-kernel backward: recomputed
+    /// softmax, scalar outer products, strided grad walks.
+    pub fn train_step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        weights: &[f32],
+        lr: f32,
+        n: usize,
+    ) -> (Vec<f32>, f32) {
+        self.forward(x, n);
+        let losses = self.ce_losses(y, n);
+        let wsum: f32 = weights.iter().sum::<f32>().max(1e-12);
+        let mean_loss = losses.iter().zip(weights).map(|(&l, &w)| l * w).sum::<f32>() / wsum;
+
+        // Backward: dlogits = w_i/Σw * (softmax - onehot).
+        let (w1o, b1o, w2o, b2o) = self.layout();
+        let (d, h, c) = (self.d, self.h, self.c);
+        self.grads.iter_mut().for_each(|g| *g = 0.0);
+        let mut dh = vec![0.0f32; h];
+        for i in 0..n {
+            let scale = weights[i] / wsum;
+            if scale == 0.0 {
+                continue;
+            }
+            let li = &self.logits_buf[i * c..(i + 1) * c];
+            let m = li.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = li.iter().map(|&v| (v - m).exp()).sum();
+            let hi = &self.h_buf[i * h..(i + 1) * h];
+            let xi = &x[i * d..(i + 1) * d];
+            dh.iter_mut().for_each(|v| *v = 0.0);
+            for j in 0..c {
+                let p = (li[j] - m).exp() / z;
+                let dl = scale * (p - if y[i] as usize == j { 1.0 } else { 0.0 });
+                self.grads[b2o + j] += dl;
+                for k in 0..h {
+                    self.grads[w2o + k * c + j] += dl * hi[k];
+                    dh[k] += dl * self.params[w2o + k * c + j];
+                }
+            }
+            for k in 0..h {
+                if hi[k] <= 0.0 {
+                    continue; // relu gate
+                }
+                self.grads[b1o + k] += dh[k];
+                let g = dh[k];
+                for (q, &xq) in xi.iter().enumerate() {
+                    self.grads[w1o + q * h + k] += g * xq;
+                }
+            }
+        }
+        // SGD momentum + weight decay.
+        for i in 0..self.params.len() {
+            let g = self.grads[i] + self.weight_decay * self.params[i];
+            self.velocity[i] = self.momentum * self.velocity[i] + g;
+            self.params[i] -= lr * self.velocity[i];
+        }
+        (losses, mean_loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_learns_a_separable_toy() {
+        let (d, h, c, n) = (4usize, 8usize, 2usize, 8usize);
+        let mut mlp = ScalarMlp::new(d, h, c);
+        // Tiny deterministic init.
+        for (i, p) in mlp.params.iter_mut().enumerate() {
+            *p = ((i * 2654435761) % 97) as f32 / 970.0 - 0.05;
+        }
+        let mut x = vec![0.0f32; n * d];
+        let mut y = vec![0i32; n];
+        for i in 0..n {
+            y[i] = (i % 2) as i32;
+            x[i * d + (i % 2)] = 2.0;
+        }
+        let w = vec![1.0f32; n];
+        let (first, _) = mlp.train_step(&x, &y, &w, 0.1, n);
+        let mut last = f32::INFINITY;
+        for _ in 0..60 {
+            let (_, m) = mlp.train_step(&x, &y, &w, 0.1, n);
+            last = m;
+        }
+        let first_mean: f32 = first.iter().sum::<f32>() / n as f32;
+        assert!(last < first_mean, "{last} !< {first_mean}");
+    }
+
+    #[test]
+    fn zero_lr_step_leaves_params_unchanged() {
+        let mut mlp = ScalarMlp::new(3, 4, 2);
+        for (i, p) in mlp.params.iter_mut().enumerate() {
+            *p = (i as f32 * 0.01).sin();
+        }
+        let before = mlp.params.clone();
+        let x = vec![0.5f32; 2 * 3];
+        let y = vec![0i32, 1];
+        mlp.train_step(&x, &y, &[1.0, 1.0], 0.0, 2);
+        assert_eq!(mlp.params, before);
+    }
+}

@@ -14,6 +14,7 @@
 //! The runtime owns the model/optimizer state; the coordinator only sees
 //! batches in, per-sample losses out.
 
+pub mod kernel;
 pub mod manifest;
 pub mod native;
 pub mod xla_rt;
@@ -61,6 +62,21 @@ pub trait ModelRuntime {
     /// Forward-only per-sample losses (the sampler scoring pass).
     fn loss_fwd(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> anyhow::Result<Vec<f32>>;
 
+    /// Write-into variant of `loss_fwd`: APPENDS `n` losses to `out`
+    /// (callers clear). Backends override to avoid the per-call `Vec`;
+    /// the engine's step hot path uses this with reusable scratch.
+    fn loss_fwd_into(
+        &mut self,
+        x: BatchX<'_>,
+        y: &[i32],
+        n: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let losses = self.loss_fwd(x, y, n)?;
+        out.extend_from_slice(&losses);
+        Ok(())
+    }
+
     /// One optimizer step on a weighted batch; increments the step count.
     fn train_step(
         &mut self,
@@ -70,6 +86,25 @@ pub trait ModelRuntime {
         lr: f32,
         n: usize,
     ) -> anyhow::Result<StepOutput>;
+
+    /// Write-into variant of `train_step`: APPENDS the `n` per-sample
+    /// losses to `losses` (so micro-batched gradient accumulation can
+    /// share one buffer) and returns the weighted mean loss. Backends
+    /// override to keep the step hot path allocation-free.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_into(
+        &mut self,
+        x: BatchX<'_>,
+        y: &[i32],
+        weights: &[f32],
+        lr: f32,
+        n: usize,
+        losses: &mut Vec<f32>,
+    ) -> anyhow::Result<f32> {
+        let out = self.train_step(x, y, weights, lr, n)?;
+        losses.extend_from_slice(&out.losses);
+        Ok(out.mean_loss)
+    }
 
     /// Eval pass: per-sample (losses, correct∈[0,1]).
     fn eval(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> anyhow::Result<(Vec<f32>, Vec<f32>)>;
@@ -86,6 +121,17 @@ pub trait ModelRuntime {
     /// Snapshot / install flat parameters (checkpointing, distributed sync).
     fn get_params(&mut self) -> anyhow::Result<Vec<f32>>;
     fn set_params(&mut self, params: &[f32]) -> anyhow::Result<()>;
+
+    /// Write the canonical flat parameters into a caller-owned buffer of
+    /// exactly `param_count()` elements — the allocation-free sibling of
+    /// `get_params`, used by the threaded engine's §D.5 parameter
+    /// averaging so sync rounds stop cloning a fresh `Vec` per replica.
+    fn read_params_into(&mut self, out: &mut [f32]) -> anyhow::Result<()> {
+        let p = self.get_params()?;
+        anyhow::ensure!(out.len() == p.len(), "param count mismatch");
+        out.copy_from_slice(&p);
+        Ok(())
+    }
 
     /// Analytic forward FLOPs per sample (for the accounting cost model).
     fn flops_per_sample_fwd(&self) -> u64;
@@ -153,9 +199,10 @@ pub fn make_runtime(cfg: &crate::config::RunConfig) -> anyhow::Result<Box<dyn Mo
     }
     // Native fallback (float features only).
     match &cfg.dataset {
-        crate::config::DatasetConfig::SynthCifar { classes, .. } => {
-            Ok(Box::new(native::NativeRuntime::new(3072, 64, *classes)))
-        }
+        crate::config::DatasetConfig::SynthCifar { classes, .. } => Ok(Box::new(
+            native::NativeRuntime::new(3072, 64, *classes)
+                .with_kernel_threads(cfg.kernel_threads),
+        )),
         _ => anyhow::bail!("model {} needs artifacts (run `make artifacts`)", cfg.model),
     }
 }

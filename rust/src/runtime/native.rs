@@ -1,105 +1,153 @@
 //! NativeRuntime: a pure-rust one-hidden-layer MLP classifier with
-//! hand-written forward/backward and SGD-momentum.
+//! blocked, multi-threaded forward/backward kernels and SGD-momentum.
 //!
-//! Purpose (DESIGN.md §3): (a) lets the entire coordinator stack be tested
-//! and benchmarked without AOT artifacts, (b) provides an independent
-//! second implementation of weighted-batch training to cross-check the XLA
-//! path, and (c) isolates L3 overhead in the perf benches (selection cost
-//! vs BP cost with a known-cost backend).
+//! Purpose (DESIGN.md §3): (a) lets the entire coordinator stack be
+//! tested and benchmarked without AOT artifacts, (b) provides an
+//! independent second implementation of weighted-batch training to
+//! cross-check the XLA path, and (c) isolates L3 overhead in the perf
+//! benches (selection cost vs BP cost with a known-cost backend).
 //!
 //! Model: x[in_dim] → relu(W1 x + b1)[hidden] → W2 h + b2 → softmax CE.
 //! Per-sample losses, weighted gradient (Σ w_i ∇ℓ_i / Σ w_i) — the same
 //! objective the L2 train_step lowers.
+//!
+//! Compute runs on the [`super::kernel`] layer (DESIGN.md §7):
+//! parameters live in the packed layout (`W1` transposed so every inner
+//! loop is unit-stride), a persistent [`KernelPool`] spreads forward
+//! work by batch-row ranges and backward work by the fixed gradient
+//! shards, and the softmax-CE pass is fused (one max/exp sweep yields
+//! both per-sample loss and `dlogits`). Results are bit-identical
+//! across kernel thread counts: forward rows are independent, and
+//! gradients always reduce over the same [`GRAD_SHARDS`] row shards in
+//! ascending order. `loss_fwd` takes a forward-only scoring fast path
+//! that streams per-row activations through lane scratch instead of
+//! retaining them.
+//!
+//! The step hot path (`train_step_into`/`loss_fwd_into`) is
+//! allocation-free in steady state: every buffer is runtime-owned
+//! scratch that is reused across steps.
 
+use super::kernel::pack::{split_packed_mut, Layout, PackedBuf};
+use super::kernel::pool::{KernelPool, SharedRows, SharedSlots};
+use super::kernel::{default_threads, gemm, split_range, GRAD_SHARDS};
 use super::{BatchX, ModelRuntime, StepOutput};
 use crate::util::Pcg64;
 
-#[derive(Clone)]
+/// Below this many inner-loop mults a step runs single-lane — pool
+/// dispatch overhead would dominate. Lane count never changes numerics,
+/// so the cutover is purely a performance knob.
+const PAR_MIN_FLOPS: usize = 1 << 16;
+
+/// The single lane-cutover policy shared by every kernel call site:
+/// 1 lane below the dispatch-overhead threshold, all pool lanes above.
+fn lanes_for(work: usize, pool: &KernelPool) -> usize {
+    if work < PAR_MIN_FLOPS || pool.threads() == 1 {
+        1
+    } else {
+        pool.threads()
+    }
+}
+
+/// Per-batch kernel work estimate (inner-loop mults) for `n` rows.
+fn batch_work(n: usize, l: Layout) -> usize {
+    n * (l.d + l.c) * l.h
+}
+
+/// One fixed gradient shard: a packed-layout gradient accumulator plus
+/// its `dh` backprop scratch.
+struct GradShard {
+    grads: Vec<f32>,
+    dh: Vec<f32>,
+}
+
+/// Per-lane scratch for the forward-only scoring fast path.
+struct RowScratch {
+    hidden: Vec<f32>,
+    logits: Vec<f32>,
+}
+
 pub struct NativeRuntime {
-    in_dim: usize,
-    hidden: usize,
-    classes: usize,
+    layout: Layout,
     momentum: f32,
     weight_decay: f32,
-    /// [W1 (in*h) | b1 (h) | W2 (h*c) | b2 (c)]
-    params: Vec<f32>,
-    velocity: Vec<f32>,
-    grads: Vec<f32>,
-    /// Supported batch sizes are unconstrained for the native path, but we
-    /// report the configured ones so the trainer's validation still runs.
+    /// Parameters, optimizer state, and reduced gradients — all in the
+    /// packed kernel layout (canonical only at the get/set boundary).
+    params: PackedBuf,
+    velocity: PackedBuf,
+    grads: PackedBuf,
+    /// Supported batch sizes are unconstrained for the native path, but
+    /// we report the configured ones so trainer validation still runs.
     fwd_size: usize,
     eval_size: usize,
-    // scratch
+    /// Configured kernel lanes (0 = auto). Resolved lazily.
+    threads_cfg: usize,
+    pool: Option<KernelPool>,
+    // Runtime-owned step scratch (reused, never reallocated in steady
+    // state).
     h_buf: Vec<f32>,
     logits_buf: Vec<f32>,
+    dlogits_buf: Vec<f32>,
+    loss_buf: Vec<f32>,
+    shard_grads: Vec<GradShard>,
+    fwd_scratch: Vec<RowScratch>,
 }
 
 impl NativeRuntime {
     pub fn new(in_dim: usize, hidden: usize, classes: usize) -> Self {
-        let pc = in_dim * hidden + hidden + hidden * classes + classes;
+        let layout = Layout::new(in_dim, hidden, classes);
         NativeRuntime {
-            in_dim,
-            hidden,
-            classes,
+            layout,
             momentum: 0.9,
             weight_decay: 0.0,
-            params: vec![0.0; pc],
-            velocity: vec![0.0; pc],
-            grads: vec![0.0; pc],
+            params: PackedBuf::zeros(layout),
+            velocity: PackedBuf::zeros(layout),
+            grads: PackedBuf::zeros(layout),
             fwd_size: 0,
             eval_size: 0,
+            threads_cfg: 0,
+            pool: None,
             h_buf: Vec::new(),
             logits_buf: Vec::new(),
+            dlogits_buf: Vec::new(),
+            loss_buf: Vec::new(),
+            shard_grads: Vec::new(),
+            fwd_scratch: Vec::new(),
         }
     }
 
-    fn layout(&self) -> (usize, usize, usize, usize) {
-        let w1 = 0;
-        let b1 = self.in_dim * self.hidden;
-        let w2 = b1 + self.hidden;
-        let b2 = w2 + self.hidden * self.classes;
-        (w1, b1, w2, b2)
+    /// Fix the kernel lane count (0 = auto: `EVOSAMPLE_KERNEL_THREADS`
+    /// or `available_parallelism`). Clamped to [`GRAD_SHARDS`] — beyond
+    /// that the fixed-shard reduction has no parallelism left to give.
+    /// Thread count never changes results (DESIGN.md §7).
+    pub fn with_kernel_threads(mut self, threads: usize) -> Self {
+        self.threads_cfg = threads;
+        self.pool = None;
+        self
     }
 
-    /// Forward one batch; fills h_buf [n*hidden] and logits_buf [n*classes].
-    fn forward(&mut self, x: &[f32], n: usize) {
-        let (w1, b1, w2, b2) = self.layout();
-        let (d, h, c) = (self.in_dim, self.hidden, self.classes);
-        self.h_buf.resize(n * h, 0.0);
-        self.logits_buf.resize(n * c, 0.0);
-        for i in 0..n {
-            let xi = &x[i * d..(i + 1) * d];
-            let hi = &mut self.h_buf[i * h..(i + 1) * h];
-            for j in 0..h {
-                // W1 stored row-major [d][h]: column j dotted with x.
-                let mut acc = self.params[b1 + j];
-                for k in 0..d {
-                    acc += self.params[w1 + k * h + j] * xi[k];
-                }
-                hi[j] = acc.max(0.0); // relu
-            }
-            let li = &mut self.logits_buf[i * c..(i + 1) * c];
-            for j in 0..c {
-                let mut acc = self.params[b2 + j];
-                for k in 0..h {
-                    acc += self.params[w2 + k * c + j] * self.h_buf[i * h + k];
-                }
-                li[j] = acc;
-            }
+    /// The resolved kernel lane count this runtime will use.
+    pub fn kernel_threads(&self) -> usize {
+        if self.threads_cfg > 0 {
+            self.threads_cfg.min(GRAD_SHARDS)
+        } else {
+            default_threads()
         }
     }
 
-    /// Per-sample CE losses from logits_buf.
-    fn ce_losses(&self, y: &[i32], n: usize) -> Vec<f32> {
-        let c = self.classes;
-        (0..n)
-            .map(|i| {
-                let li = &self.logits_buf[i * c..(i + 1) * c];
-                let m = li.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-                let lse = li.iter().map(|&v| (v - m).exp()).sum::<f32>().ln() + m;
-                lse - li[y[i] as usize]
-            })
-            .collect()
+    /// Canonical-layout snapshot of the last step's reduced gradient
+    /// (tests, diagnostics).
+    pub fn grads_canonical(&self) -> Vec<f32> {
+        let mut flat = vec![0.0f32; self.layout.param_count()];
+        self.grads.unpack_into(&mut flat);
+        flat
+    }
+
+    /// Spawn the worker pool on first use (so constructing runtimes in
+    /// tests/config code stays free).
+    fn ensure_pool(&mut self) {
+        if self.pool.is_none() {
+            self.pool = Some(KernelPool::new(self.kernel_threads()));
+        }
     }
 
     fn expect_f32<'a>(x: BatchX<'a>) -> anyhow::Result<&'a [f32]> {
@@ -108,20 +156,281 @@ impl NativeRuntime {
             BatchX::I32(_) => anyhow::bail!("NativeRuntime supports float features only"),
         }
     }
+
+    /// Forward-only scoring (the sampler FP): streams each row's hidden
+    /// and logits through lane scratch — no activation retention — and
+    /// appends `n` CE losses to `out`.
+    fn loss_fwd_core(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        n: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let l = self.layout;
+        anyhow::ensure!(x.len() == n * l.d && y.len() == n, "batch shape mismatch");
+        for &yi in y {
+            anyhow::ensure!((yi as usize) < l.c, "label {yi} out of range");
+        }
+        self.ensure_pool();
+        let pool = self.pool.as_ref().expect("kernel pool");
+        let lanes = lanes_for(batch_work(n, l), pool);
+        while self.fwd_scratch.len() < lanes {
+            self.fwd_scratch
+                .push(RowScratch { hidden: vec![0.0; l.h], logits: vec![0.0; l.c] });
+        }
+        let start = out.len();
+        out.resize(start + n, 0.0);
+        if lanes == 1 {
+            let rs = &mut self.fwd_scratch[0];
+            let dst = &mut out[start..];
+            for (i, di) in dst.iter_mut().enumerate() {
+                scoring_row(&self.params, &x[i * l.d..(i + 1) * l.d], y[i] as usize, rs, di);
+            }
+        } else {
+            let out_rows = SharedRows::new(&mut out[start..]);
+            let scratch = SharedSlots::new(&mut self.fwd_scratch[..lanes]);
+            let params = &self.params;
+            pool.run(&|t| {
+                let (r0, r1) = split_range(n, lanes, t);
+                if r0 == r1 {
+                    return;
+                }
+                // SAFETY: one lane per scratch slot / output range.
+                let rs = unsafe { scratch.get_mut(t) };
+                let dst = unsafe { out_rows.range(r0, r1) };
+                for (k, di) in dst.iter_mut().enumerate() {
+                    let i = r0 + k;
+                    scoring_row(params, &x[i * l.d..(i + 1) * l.d], y[i] as usize, rs, di);
+                }
+            });
+        }
+        Ok(())
+    }
+
+    /// One weighted SGD-momentum step. Fills `self.loss_buf` with the
+    /// per-sample losses and returns the weighted mean loss. The whole
+    /// path reuses runtime-owned scratch — zero steady-state
+    /// allocations — and is bit-identical across lane counts (fixed
+    /// shard partition, ascending-order reduction, main-thread CE).
+    fn train_step_core(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        weights: &[f32],
+        lr: f32,
+        n: usize,
+    ) -> anyhow::Result<f32> {
+        let l = self.layout;
+        anyhow::ensure!(n > 0, "empty batch");
+        anyhow::ensure!(x.len() == n * l.d, "x shape");
+        anyhow::ensure!(y.len() == n && weights.len() == n, "y/weights shape");
+        self.ensure_pool();
+        self.h_buf.resize(n * l.h, 0.0);
+        self.logits_buf.resize(n * l.c, 0.0);
+        self.dlogits_buf.resize(n * l.c, 0.0);
+        self.loss_buf.clear();
+        self.loss_buf.resize(n, 0.0);
+        let pool = self.pool.as_ref().expect("kernel pool");
+
+        // ---- forward (row-parallel, retained activations) --------------
+        forward_rows(pool, &self.params, x, n, &mut self.h_buf, &mut self.logits_buf);
+
+        // ---- fused softmax-CE: loss + scaled dlogits in one sweep ------
+        // Main thread, fixed row order: part of the determinism contract.
+        let wsum: f32 = weights.iter().sum::<f32>().max(1e-12);
+        let mut sum_lw = 0.0f32;
+        for i in 0..n {
+            let yi = y[i] as usize;
+            anyhow::ensure!(yi < l.c, "label {yi} out of range");
+            let w = weights[i];
+            let scale = w / wsum;
+            let li = &self.logits_buf[i * l.c..(i + 1) * l.c];
+            let dl = &mut self.dlogits_buf[i * l.c..(i + 1) * l.c];
+            let loss = if scale == 0.0 {
+                // Zero-scale rows contribute a loss but no gradient —
+                // and may carry garbage features, so skip their grad
+                // math entirely (matches the historical behavior). Zero
+                // the reused dlogits row so stale values can never leak.
+                dl.fill(0.0);
+                gemm::ce_loss_row(li, yi)
+            } else {
+                gemm::ce_loss_grad_row(li, yi, scale, dl)
+            };
+            self.loss_buf[i] = loss;
+            sum_lw += loss * w;
+        }
+        let mean_loss = sum_lw / wsum;
+
+        // ---- backward into fixed gradient shards -----------------------
+        // Shard boundaries depend only on n (never on the lane count);
+        // each shard accumulates its rows in ascending order.
+        let shards = GRAD_SHARDS.min(n);
+        let pc = l.param_count();
+        while self.shard_grads.len() < shards {
+            self.shard_grads.push(GradShard { grads: vec![0.0; pc], dh: vec![0.0; l.h] });
+        }
+        let lanes = lanes_for(batch_work(n, l), pool);
+        {
+            let shard_slots = SharedSlots::new(&mut self.shard_grads[..shards]);
+            let h_buf = &self.h_buf;
+            let dlogits = &self.dlogits_buf;
+            let params = &self.params;
+            let task = |t: usize| {
+                let mut s = t;
+                while s < shards {
+                    // SAFETY: shard s is owned by exactly one lane
+                    // (s ≡ t mod lanes).
+                    let sg = unsafe { shard_slots.get_mut(s) };
+                    let GradShard { grads, dh } = sg;
+                    grads.fill(0.0);
+                    let (gw1t, gb1, gw2, gb2) = split_packed_mut(grads, l);
+                    let (r0, r1) = split_range(n, shards, s);
+                    for i in r0..r1 {
+                        // Same predicate as the fused CE loop (scale can
+                        // underflow to 0 for tiny positive weights —
+                        // those rows have no dlogits and must be
+                        // skipped, exactly like the scalar reference).
+                        if weights[i] / wsum == 0.0 {
+                            continue;
+                        }
+                        gemm::backward_row(
+                            &x[i * l.d..(i + 1) * l.d],
+                            &h_buf[i * l.h..(i + 1) * l.h],
+                            &dlogits[i * l.c..(i + 1) * l.c],
+                            params.w2(),
+                            l.d,
+                            l.c,
+                            gw1t,
+                            gb1,
+                            gw2,
+                            gb2,
+                            dh,
+                        );
+                    }
+                    s += lanes;
+                }
+            };
+            if lanes == 1 {
+                task(0);
+            } else {
+                pool.run(&task);
+            }
+        }
+
+        // ---- deterministic reduction: ascending shard order ------------
+        {
+            let gflat = self.grads.flat_mut();
+            gflat.copy_from_slice(&self.shard_grads[0].grads);
+            for sg in &self.shard_grads[1..shards] {
+                for (a, &b) in gflat.iter_mut().zip(&sg.grads) {
+                    *a += b;
+                }
+            }
+        }
+
+        // ---- SGD momentum + weight decay (elementwise in packed space,
+        // a pure permutation of the canonical update) --------------------
+        let momentum = self.momentum;
+        let wd = self.weight_decay;
+        for ((pi, vi), &gi) in self
+            .params
+            .flat_mut()
+            .iter_mut()
+            .zip(self.velocity.flat_mut().iter_mut())
+            .zip(self.grads.flat().iter())
+        {
+            let g = gi + wd * *pi;
+            *vi = momentum * *vi + g;
+            *pi -= lr * *vi;
+        }
+        Ok(mean_loss)
+    }
+}
+
+impl Clone for NativeRuntime {
+    /// Deep copy of the training state (params, velocity, config). The
+    /// worker pool is NOT shared — the clone spawns its own lazily — and
+    /// scratch starts empty.
+    fn clone(&self) -> NativeRuntime {
+        NativeRuntime {
+            layout: self.layout,
+            momentum: self.momentum,
+            weight_decay: self.weight_decay,
+            params: self.params.clone(),
+            velocity: self.velocity.clone(),
+            grads: PackedBuf::zeros(self.layout),
+            fwd_size: self.fwd_size,
+            eval_size: self.eval_size,
+            threads_cfg: self.threads_cfg,
+            pool: None,
+            h_buf: Vec::new(),
+            logits_buf: Vec::new(),
+            dlogits_buf: Vec::new(),
+            loss_buf: Vec::new(),
+            shard_grads: Vec::new(),
+            fwd_scratch: Vec::new(),
+        }
+    }
+}
+
+/// Retained forward over all rows: fills `h_buf` (`n·h`) and
+/// `logits_buf` (`n·c`), parallelized by disjoint row ranges.
+fn forward_rows(
+    pool: &KernelPool,
+    params: &PackedBuf,
+    x: &[f32],
+    n: usize,
+    h_buf: &mut [f32],
+    logits_buf: &mut [f32],
+) {
+    let l = params.layout();
+    let lanes = lanes_for(batch_work(n, l), pool);
+    if lanes == 1 {
+        gemm::hidden_fwd(x, params.w1t(), params.b1(), l.d, l.h, h_buf);
+        gemm::logits_fwd(h_buf, params.w2(), params.b2(), l.h, l.c, logits_buf);
+        return;
+    }
+    let h_rows = SharedRows::new(h_buf);
+    let lg_rows = SharedRows::new(logits_buf);
+    pool.run(&|t| {
+        let (r0, r1) = split_range(n, lanes, t);
+        if r0 == r1 {
+            return;
+        }
+        // SAFETY: lanes write disjoint row ranges.
+        let hr = unsafe { h_rows.range(r0 * l.h, r1 * l.h) };
+        let lg = unsafe { lg_rows.range(r0 * l.c, r1 * l.c) };
+        gemm::hidden_fwd(&x[r0 * l.d..r1 * l.d], params.w1t(), params.b1(), l.d, l.h, hr);
+        gemm::logits_fwd(hr, params.w2(), params.b2(), l.h, l.c, lg);
+    });
+}
+
+/// Forward-only scoring for one row through lane scratch.
+fn scoring_row(params: &PackedBuf, xi: &[f32], yi: usize, rs: &mut RowScratch, out: &mut f32) {
+    let l = params.layout();
+    gemm::hidden_fwd(xi, params.w1t(), params.b1(), l.d, l.h, &mut rs.hidden);
+    gemm::logits_fwd(&rs.hidden, params.w2(), params.b2(), l.h, l.c, &mut rs.logits);
+    *out = gemm::ce_loss_row(&rs.logits, yi);
 }
 
 impl ModelRuntime for NativeRuntime {
     fn param_count(&self) -> usize {
-        self.params.len()
+        self.layout.param_count()
     }
 
     fn init(&mut self, seed: i32) -> anyhow::Result<()> {
+        // Identical RNG consumption to the historical scalar init: the
+        // canonical flat vector is generated first, then packed (a pure
+        // permutation).
+        let l = self.layout;
         let mut rng = Pcg64::new(seed as u64 ^ 0xab5e1);
-        let (_, b1, w2, b2) = self.layout();
-        let std1 = (2.0 / self.in_dim as f32).sqrt();
-        let std2 = (2.0 / self.hidden as f32).sqrt();
-        for i in 0..self.params.len() {
-            self.params[i] = if i < b1 {
+        let (b1, w2, b2) = (l.b1_off(), l.w2_off(), l.b2_off());
+        let std1 = (2.0 / l.d as f32).sqrt();
+        let std2 = (2.0 / l.h as f32).sqrt();
+        let mut flat = vec![0.0f32; l.param_count()];
+        for (i, p) in flat.iter_mut().enumerate() {
+            *p = if i < b1 {
                 std1 * rng.normal()
             } else if i < w2 {
                 0.0
@@ -131,15 +440,27 @@ impl ModelRuntime for NativeRuntime {
                 0.0
             };
         }
-        self.velocity.iter_mut().for_each(|v| *v = 0.0);
+        self.params.pack_from(&flat);
+        self.velocity.fill(0.0);
         Ok(())
     }
 
     fn loss_fwd(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> anyhow::Result<Vec<f32>> {
         let x = Self::expect_f32(x)?;
-        anyhow::ensure!(x.len() == n * self.in_dim && y.len() == n, "batch shape mismatch");
-        self.forward(x, n);
-        Ok(self.ce_losses(y, n))
+        let mut out = Vec::with_capacity(n);
+        self.loss_fwd_core(x, y, n, &mut out)?;
+        Ok(out)
+    }
+
+    fn loss_fwd_into(
+        &mut self,
+        x: BatchX<'_>,
+        y: &[i32],
+        n: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let x = Self::expect_f32(x)?;
+        self.loss_fwd_core(x, y, n, out)
     }
 
     fn train_step(
@@ -151,76 +472,49 @@ impl ModelRuntime for NativeRuntime {
         n: usize,
     ) -> anyhow::Result<StepOutput> {
         let x = Self::expect_f32(x)?;
-        anyhow::ensure!(x.len() == n * self.in_dim, "x shape");
-        anyhow::ensure!(y.len() == n && weights.len() == n, "y/weights shape");
-        self.forward(x, n);
-        let losses = self.ce_losses(y, n);
-        let wsum: f32 = weights.iter().sum::<f32>().max(1e-12);
-        let mean_loss =
-            losses.iter().zip(weights).map(|(&l, &w)| l * w).sum::<f32>() / wsum;
+        let mean_loss = self.train_step_core(x, y, weights, lr, n)?;
+        Ok(StepOutput { losses: self.loss_buf.clone(), mean_loss })
+    }
 
-        // Backward: dlogits = w_i/Σw * (softmax - onehot).
-        let (w1o, b1o, w2o, b2o) = self.layout();
-        let (d, h, c) = (self.in_dim, self.hidden, self.classes);
-        self.grads.iter_mut().for_each(|g| *g = 0.0);
-        let mut dh = vec![0.0f32; h];
-        for i in 0..n {
-            let scale = weights[i] / wsum;
-            if scale == 0.0 {
-                continue;
-            }
-            let li = &self.logits_buf[i * c..(i + 1) * c];
-            let m = li.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-            let z: f32 = li.iter().map(|&v| (v - m).exp()).sum();
-            let hi = &self.h_buf[i * h..(i + 1) * h];
-            let xi = &x[i * d..(i + 1) * d];
-            dh.iter_mut().for_each(|v| *v = 0.0);
-            for j in 0..c {
-                let p = (li[j] - m).exp() / z;
-                let dl = scale * (p - if y[i] as usize == j { 1.0 } else { 0.0 });
-                self.grads[b2o + j] += dl;
-                for k in 0..h {
-                    self.grads[w2o + k * c + j] += dl * hi[k];
-                    dh[k] += dl * self.params[w2o + k * c + j];
-                }
-            }
-            for k in 0..h {
-                if hi[k] <= 0.0 {
-                    continue; // relu gate
-                }
-                self.grads[b1o + k] += dh[k];
-                let g = dh[k];
-                for q in 0..d {
-                    self.grads[w1o + q * h + k] += g * xi[q];
-                }
-            }
-        }
-        // SGD momentum + weight decay.
-        for i in 0..self.params.len() {
-            let g = self.grads[i] + self.weight_decay * self.params[i];
-            self.velocity[i] = self.momentum * self.velocity[i] + g;
-            self.params[i] -= lr * self.velocity[i];
-        }
-        Ok(StepOutput { losses, mean_loss })
+    fn train_step_into(
+        &mut self,
+        x: BatchX<'_>,
+        y: &[i32],
+        weights: &[f32],
+        lr: f32,
+        n: usize,
+        losses: &mut Vec<f32>,
+    ) -> anyhow::Result<f32> {
+        let x = Self::expect_f32(x)?;
+        let mean_loss = self.train_step_core(x, y, weights, lr, n)?;
+        losses.extend_from_slice(&self.loss_buf);
+        Ok(mean_loss)
     }
 
     fn eval(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
         let xs = Self::expect_f32(x)?;
-        self.forward(xs, n);
-        let losses = self.ce_losses(y, n);
-        let c = self.classes;
-        let correct = (0..n)
-            .map(|i| {
-                let li = &self.logits_buf[i * c..(i + 1) * c];
-                let argmax = li
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(j, _)| j)
-                    .unwrap_or(0);
-                (argmax == y[i] as usize) as u8 as f32
-            })
-            .collect();
+        let l = self.layout;
+        anyhow::ensure!(xs.len() == n * l.d && y.len() == n, "batch shape mismatch");
+        self.ensure_pool();
+        self.h_buf.resize(n * l.h, 0.0);
+        self.logits_buf.resize(n * l.c, 0.0);
+        let pool = self.pool.as_ref().expect("kernel pool");
+        forward_rows(pool, &self.params, xs, n, &mut self.h_buf, &mut self.logits_buf);
+        let mut losses = Vec::with_capacity(n);
+        let mut correct = Vec::with_capacity(n);
+        for i in 0..n {
+            let yi = y[i] as usize;
+            anyhow::ensure!(yi < l.c, "label {yi} out of range");
+            let li = &self.logits_buf[i * l.c..(i + 1) * l.c];
+            losses.push(gemm::ce_loss_row(li, yi));
+            let argmax = li
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            correct.push((argmax == yi) as u8 as f32);
+        }
         Ok((losses, correct))
     }
 
@@ -237,23 +531,35 @@ impl ModelRuntime for NativeRuntime {
     }
 
     fn get_params(&mut self) -> anyhow::Result<Vec<f32>> {
-        Ok(self.params.clone())
+        let mut flat = vec![0.0f32; self.layout.param_count()];
+        self.params.unpack_into(&mut flat);
+        Ok(flat)
+    }
+
+    fn read_params_into(&mut self, out: &mut [f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(out.len() == self.layout.param_count(), "param count mismatch");
+        self.params.unpack_into(out);
+        Ok(())
     }
 
     fn set_params(&mut self, params: &[f32]) -> anyhow::Result<()> {
-        anyhow::ensure!(params.len() == self.params.len(), "param count mismatch");
-        self.params.copy_from_slice(params);
+        anyhow::ensure!(params.len() == self.layout.param_count(), "param count mismatch");
+        self.params.pack_from(params);
         Ok(())
     }
 
     fn flops_per_sample_fwd(&self) -> u64 {
-        (2 * self.in_dim * self.hidden + 2 * self.hidden * self.classes) as u64
+        (2 * self.layout.d * self.layout.h + 2 * self.layout.h * self.layout.c) as u64
     }
 
     fn spawn_replica(&self) -> anyhow::Result<Box<dyn ModelRuntime + Send>> {
-        // Pure host state: a replica is a deep copy (params, velocity,
-        // scratch) sharing nothing with the parent.
-        Ok(Box::new(self.clone()))
+        // Pure host state: a replica is a deep copy (params, velocity)
+        // sharing nothing with the parent. Replicas default to a single
+        // kernel lane so W engine replicas don't oversubscribe the box
+        // (W × lanes threads); lane count never changes numerics.
+        let mut replica = self.clone();
+        replica.threads_cfg = 1;
+        Ok(Box::new(replica))
     }
 }
 
@@ -348,11 +654,11 @@ mod tests {
         };
 
         let p0 = rt.get_params().unwrap();
-        // Analytic grads: run one step with lr so small the params barely
-        // move, but read rt.grads directly instead.
+        // Analytic grads: run one step with lr = 0 so the params don't
+        // move, then read the reduced gradient in canonical layout.
         rt.set_params(&p0).unwrap();
         rt.train_step(BatchX::F32(&x), &y, &w, 0.0, 4).unwrap();
-        let analytic = rt.grads.clone();
+        let analytic = rt.grads_canonical();
 
         let eps = 1e-3f32;
         let mut checked = 0;
@@ -389,6 +695,48 @@ mod tests {
         let mut rt = NativeRuntime::new(4, 4, 2);
         rt.init(0).unwrap();
         assert!(rt.loss_fwd(BatchX::I32(&[1, 2]), &[0], 1).is_err());
+    }
+
+    #[test]
+    fn set_get_params_roundtrips_through_packing() {
+        let mut rt = NativeRuntime::new(5, 3, 2);
+        rt.init(9).unwrap();
+        let p = rt.get_params().unwrap();
+        rt.set_params(&p).unwrap();
+        assert_eq!(rt.get_params().unwrap(), p, "pack/unpack must be lossless");
+        let mut buf = vec![0.0f32; p.len()];
+        rt.read_params_into(&mut buf).unwrap();
+        assert_eq!(buf, p);
+        assert!(rt.read_params_into(&mut [0.0f32; 3]).is_err(), "length mismatch must error");
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_bits() {
+        // Big enough (n·(d+c)·h ≥ PAR_MIN_FLOPS) that the multi-lane
+        // runtime actually dispatches to the pool.
+        let (d, h, c, n) = (128usize, 32usize, 4usize, 16usize);
+        let (x, y) = toy_batch(n, d, c, 21);
+        let mut w = vec![1.0f32; n];
+        w[3] = 0.0;
+        w[7] = 2.5;
+        let run = |threads: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let mut rt = NativeRuntime::new(d, h, c).with_kernel_threads(threads);
+            rt.init(13).unwrap();
+            let mut all = Vec::new();
+            for _ in 0..3 {
+                let out = rt.train_step(BatchX::F32(&x), &y, &w, 0.05, n).unwrap();
+                all.extend_from_slice(&out.losses);
+            }
+            let fwd = rt.loss_fwd(BatchX::F32(&x), &y, n).unwrap();
+            (all, fwd, rt.get_params().unwrap())
+        };
+        let (l1, f1, p1) = run(1);
+        for threads in [2usize, 4, 8] {
+            let (lt, ft, pt) = run(threads);
+            assert_eq!(l1, lt, "losses diverged at {threads} threads");
+            assert_eq!(f1, ft, "scoring diverged at {threads} threads");
+            assert_eq!(p1, pt, "params diverged at {threads} threads");
+        }
     }
 
     #[test]

@@ -1,0 +1,211 @@
+//! Kernel-layer regression tests: the blocked/threaded kernels must
+//! match the scalar reference implementation within 1e-5 on random
+//! shapes (including ragged tails and batches smaller than the shard
+//! count), training must be bit-identical across kernel thread counts,
+//! and the new write-into runtime surface must honor its contracts.
+
+// These tests intentionally pin the deprecated `coordinator::train` shim.
+#![allow(deprecated)]
+
+use evosample::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
+use evosample::coordinator::{train, TrainResult};
+use evosample::data;
+use evosample::runtime::kernel::reference::ScalarMlp;
+use evosample::runtime::native::NativeRuntime;
+use evosample::runtime::{BatchX, ModelRuntime};
+use evosample::util::proptest::check;
+
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+fn assert_all_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(close(x, y, tol), "{what}[{i}]: kernel={x} scalar={y}");
+    }
+}
+
+/// Random shapes (ragged dims, n below the shard count, zero weights,
+/// 1-4 kernel threads): kernels must track the scalar reference within
+/// 1e-5 through loss_fwd and several train steps.
+#[test]
+fn kernel_matches_scalar_reference_on_random_shapes() {
+    check("kernel == scalar reference", 25, |g| {
+        let d = g.usize_in(1, 40);
+        let h = g.usize_in(1, 33);
+        let c = g.usize_in(2, 11);
+        let n = g.usize_in(1, 19);
+        let threads = g.usize_in(1, 4);
+
+        let mut rt = NativeRuntime::new(d, h, c).with_kernel_threads(threads);
+        rt.init(7).unwrap();
+        let mut sc = ScalarMlp::new(d, h, c);
+        sc.set_params(&rt.get_params().unwrap());
+
+        let x = g.vec_f32(n * d, -2.0, 2.0);
+        let y: Vec<i32> = (0..n).map(|_| g.usize_in(0, c - 1) as i32).collect();
+        let w: Vec<f32> = (0..n)
+            .map(|_| if g.f32_in(0.0, 1.0) < 0.2 { 0.0 } else { g.f32_in(0.1, 2.0) })
+            .collect();
+
+        let fwd_k = rt.loss_fwd(BatchX::F32(&x), &y, n).unwrap();
+        let fwd_s = sc.loss_fwd(&x, &y, n);
+        for (i, (&a, &b)) in fwd_k.iter().zip(&fwd_s).enumerate() {
+            if !close(a, b, 1e-5) {
+                return Err(format!(
+                    "loss_fwd[{i}] diverged: kernel={a} scalar={b} \
+                     (d={d} h={h} c={c} n={n} t={threads})"
+                ));
+            }
+        }
+
+        for step in 0..3 {
+            let out = rt.train_step(BatchX::F32(&x), &y, &w, 0.05, n).unwrap();
+            let (losses_s, mean_s) = sc.train_step(&x, &y, &w, 0.05, n);
+            for (i, (&a, &b)) in out.losses.iter().zip(&losses_s).enumerate() {
+                if !close(a, b, 1e-5) {
+                    return Err(format!("step {step} losses[{i}]: kernel={a} scalar={b}"));
+                }
+            }
+            if !close(out.mean_loss, mean_s, 1e-5) {
+                return Err(format!(
+                    "step {step} mean loss: kernel={} scalar={mean_s}",
+                    out.mean_loss
+                ));
+            }
+            let pk = rt.get_params().unwrap();
+            for (i, (&a, &b)) in pk.iter().zip(&sc.params).enumerate() {
+                if !close(a, b, 1e-4) {
+                    return Err(format!("step {step} params[{i}]: kernel={a} scalar={b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The CIFAR-scale shape the make_runtime fallback uses — big enough to
+/// exercise the pooled (multi-lane) forward and backward paths.
+#[test]
+fn kernel_matches_scalar_at_cifar_dims() {
+    let (d, h, c, n) = (3072usize, 64usize, 10usize, 6usize);
+    let mut rt = NativeRuntime::new(d, h, c).with_kernel_threads(4);
+    rt.init(1).unwrap();
+    let mut sc = ScalarMlp::new(d, h, c);
+    sc.set_params(&rt.get_params().unwrap());
+
+    let mut rng = evosample::util::Pcg64::new(11);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.int_in(0, c as i64) as i32).collect();
+    let w = vec![1.0f32; n];
+
+    // f32 summation-order error grows with the dot length: at d=3072 the
+    // sequential-vs-tree difference alone reaches ~1e-4, so this shape
+    // uses a proportionally looser tolerance than the small random
+    // shapes (which assert 1e-5).
+    let fwd_k = rt.loss_fwd(BatchX::F32(&x), &y, n).unwrap();
+    let fwd_s = sc.loss_fwd(&x, &y, n);
+    assert_all_close(&fwd_k, &fwd_s, 1e-3, "loss_fwd");
+
+    let out = rt.train_step(BatchX::F32(&x), &y, &w, 0.01, n).unwrap();
+    let (losses_s, _) = sc.train_step(&x, &y, &w, 0.01, n);
+    assert_all_close(&out.losses, &losses_s, 1e-3, "train losses");
+    assert_all_close(&rt.get_params().unwrap(), &sc.params, 1e-3, "params after step");
+}
+
+fn det_run(kernel_threads: usize) -> TrainResult {
+    let ds = DatasetConfig::SynthCifar { n: 256, classes: 4, label_noise: 0.05, hard_frac: 0.2 };
+    let split = data::build(&ds, 64, 42);
+    let mut cfg = RunConfig::new("kernel_det", "native", ds);
+    cfg.epochs = 3;
+    cfg.meta_batch = 32;
+    cfg.mini_batch = 8;
+    cfg.lr = LrSchedule::Const { lr: 0.02 };
+    cfg.test_n = 64;
+    cfg.sampler = SamplerConfig::es_default();
+    let mut rt =
+        NativeRuntime::new(split.train.x_len(), 24, 4).with_kernel_threads(kernel_threads);
+    train(&cfg, &mut rt, &split).unwrap()
+}
+
+/// A full training run (CIFAR-scale feature dim, ES sampler, scoring FP
+/// + weighted BP) must produce bit-identical loss and eval curves at 1,
+/// 2, and 4 kernel threads — the fixed-shard determinism contract,
+/// end to end.
+#[test]
+fn loss_curves_identical_across_kernel_thread_counts() {
+    let r1 = det_run(1);
+    for t in [2usize, 4] {
+        let rt = det_run(t);
+        assert_eq!(r1.loss_curve, rt.loss_curve, "loss curve diverged at {t} threads");
+        assert_eq!(r1.eval_curve, rt.eval_curve, "eval curve diverged at {t} threads");
+        assert_eq!(r1.cost.fp_samples, rt.cost.fp_samples);
+        assert_eq!(r1.cost.bp_samples, rt.cost.bp_samples);
+    }
+}
+
+/// `loss_fwd_into` APPENDS (callers clear) and matches `loss_fwd`
+/// bit for bit; `train_step_into` appends across micro-batches and
+/// returns the same mean as `train_step`.
+#[test]
+fn write_into_variants_match_allocating_api() {
+    let (d, h, c, n) = (16usize, 8usize, 3usize, 12usize);
+    let mut rng = evosample::util::Pcg64::new(5);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.int_in(0, c as i64) as i32).collect();
+    let w = vec![1.0f32; n];
+
+    let mut rt = NativeRuntime::new(d, h, c);
+    rt.init(3).unwrap();
+    let fwd = rt.loss_fwd(BatchX::F32(&x), &y, n).unwrap();
+    let mut buf = vec![99.0f32]; // pre-existing content must survive
+    rt.loss_fwd_into(BatchX::F32(&x), &y, n, &mut buf).unwrap();
+    assert_eq!(buf.len(), n + 1);
+    assert_eq!(buf[0], 99.0);
+    assert_eq!(&buf[1..], fwd.as_slice());
+
+    // Two identical runtimes: one steps through train_step, the other
+    // through train_step_into; losses and means must agree exactly.
+    let mut rt_a = NativeRuntime::new(d, h, c);
+    rt_a.init(9).unwrap();
+    let mut rt_b = NativeRuntime::new(d, h, c);
+    rt_b.init(9).unwrap();
+    let out = rt_a.train_step(BatchX::F32(&x), &y, &w, 0.05, n).unwrap();
+    let mut losses_b = Vec::new();
+    let mean_b =
+        rt_b.train_step_into(BatchX::F32(&x), &y, &w, 0.05, n, &mut losses_b).unwrap();
+    assert_eq!(out.losses, losses_b);
+    assert_eq!(out.mean_loss, mean_b);
+    assert_eq!(rt_a.get_params().unwrap(), rt_b.get_params().unwrap());
+
+    // Micro-batched accumulation: two halves append into one buffer.
+    let mut acc = Vec::new();
+    let half = n / 2;
+    rt_b.train_step_into(BatchX::F32(&x[..half * d]), &y[..half], &w[..half], 0.05, half, &mut acc)
+        .unwrap();
+    rt_b.train_step_into(
+        BatchX::F32(&x[half * d..]),
+        &y[half..],
+        &w[half..],
+        0.05,
+        n - half,
+        &mut acc,
+    )
+    .unwrap();
+    assert_eq!(acc.len(), n, "train_step_into must append, not clear");
+}
+
+/// `read_params_into` mirrors `get_params` without allocating, and
+/// rejects wrong-size buffers.
+#[test]
+fn read_params_into_matches_get_params() {
+    let mut rt = NativeRuntime::new(7, 5, 3);
+    rt.init(2).unwrap();
+    let p = rt.get_params().unwrap();
+    let mut buf = vec![0.0f32; p.len()];
+    rt.read_params_into(&mut buf).unwrap();
+    assert_eq!(buf, p);
+    let mut wrong = vec![0.0f32; p.len() + 1];
+    assert!(rt.read_params_into(&mut wrong).is_err());
+}
