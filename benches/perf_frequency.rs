@@ -1,0 +1,133 @@
+//! Frequency-tuning perf sweep: scoring-FP cost amortized over
+//! k ∈ {1, 2, 4, 8} steps (`run.score_every`) for ES on the CIFAR-dims
+//! MLP — the paper's "flexible frequency tuning" wall-clock lever.
+//!
+//! Emits machine-readable `BENCH_frequency.json` (per-k fp_samples,
+//! fp_passes, measured scoring seconds, accuracy) so the amortization is
+//! tracked across PRs — and exits non-zero unless `fp_samples` strictly
+//! decreases across the whole k sweep, so CI catches the stride silently
+//! regressing to per-step scoring at any cadence.
+
+use std::time::Instant;
+
+use evosample::coordinator::train_with_sampler;
+use evosample::prelude::*;
+use evosample::runtime::native::NativeRuntime;
+use evosample::util::bench::smoke_mode;
+use evosample::util::json::{num, obj, s, Json};
+
+fn main() {
+    let (n, epochs, hidden) = if smoke_mode() { (2048, 4, 48) } else { (8192, 10, 96) };
+    let ks = [1usize, 2, 4, 8];
+
+    // CIFAR-dims MLP: 3072-wide inputs, 10 classes; ES with anneal 0 so
+    // every step is scoring-eligible and the k-fold saving is exact.
+    let mut cfg = RunConfig::new(
+        "perf_frequency",
+        "native",
+        DatasetConfig::SynthCifar { n, classes: 10, label_noise: 0.05, hard_frac: 0.2 },
+    );
+    cfg.epochs = epochs;
+    cfg.meta_batch = 128;
+    cfg.mini_batch = 32;
+    cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
+    cfg.test_n = 256;
+    cfg.sampler = SamplerConfig::Es { beta1: 0.2, beta2: 0.9, anneal_frac: 0.0 };
+    let split = data::build(&cfg.dataset, cfg.test_n, 42);
+
+    println!(
+        "== frequency tuning (n={n}, B={}, b={}, hidden={hidden}, {} epochs) ==",
+        cfg.meta_batch, cfg.mini_batch, epochs
+    );
+    println!(
+        "{:>2} {:>12} {:>10} {:>12} {:>12} {:>8}",
+        "k", "fp_samples", "fp_passes", "scoring_ms", "train_wall_s", "acc%"
+    );
+
+    let mut per_k = Vec::new();
+    for &k in &ks {
+        cfg.score_every = k;
+        let mut rt = NativeRuntime::new(split.train.x_len(), hidden, 10);
+        let sampler =
+            evosample::sampler::build(&cfg.sampler, split.train.n, cfg.epochs).expect(&cfg.name);
+        let t0 = Instant::now();
+        let r = train_with_sampler(&cfg, &mut rt, &split, sampler).expect(&cfg.name);
+        let wall = t0.elapsed().as_secs_f64() - r.cost.eval_s;
+        println!(
+            "{k:>2} {:>12} {:>10} {:>12.2} {:>12.2} {:>8.2}",
+            r.cost.fp_samples,
+            r.cost.fp_passes,
+            r.cost.scoring_s * 1e3,
+            wall,
+            r.accuracy_pct()
+        );
+        per_k.push((k, r));
+    }
+
+    let find = |k: usize| &per_k.iter().find(|(kk, _)| *kk == k).unwrap().1;
+    let k1 = find(1);
+    let k4 = find(4);
+    let scoring_saving = if k1.cost.scoring_s > 0.0 {
+        100.0 * (1.0 - k4.cost.scoring_s / k1.cost.scoring_s)
+    } else {
+        0.0
+    };
+    println!(
+        "\nk=4 vs k=1: fp_samples {} -> {} ({}x), measured scoring time saved {scoring_saving:.1}%",
+        k1.cost.fp_samples,
+        k4.cost.fp_samples,
+        if k4.cost.fp_samples > 0 { k1.cost.fp_samples / k4.cost.fp_samples } else { 0 },
+    );
+
+    let rows: Vec<Json> = per_k
+        .iter()
+        .map(|(k, r)| {
+            obj(vec![
+                ("k", num(*k as f64)),
+                ("fp_samples", num(r.cost.fp_samples as f64)),
+                ("fp_passes", num(r.cost.fp_passes as f64)),
+                ("bp_samples", num(r.cost.bp_samples as f64)),
+                ("scoring_s", num(r.cost.scoring_s)),
+                ("train_wall_s", num(r.cost.train_wall_s())),
+                ("acc_pct", num(r.accuracy_pct())),
+            ])
+        })
+        .collect();
+    let out = obj(vec![
+        ("bench", s("perf_frequency")),
+        ("backend", s("native")),
+        ("mode", s(if smoke_mode() { "smoke" } else { "full" })),
+        (
+            "shape",
+            obj(vec![
+                ("n", num(n as f64)),
+                ("epochs", num(epochs as f64)),
+                ("hidden", num(hidden as f64)),
+                ("meta_batch", num(cfg.meta_batch as f64)),
+                ("mini_batch", num(cfg.mini_batch as f64)),
+            ]),
+        ),
+        ("sweep", Json::Arr(rows)),
+        ("scoring_time_saved_pct_k4", num(scoring_saving)),
+    ]);
+    let payload = out.to_string_compact() + "\n";
+    std::fs::write("BENCH_frequency.json", payload).expect("write BENCH_frequency.json");
+    println!("wrote BENCH_frequency.json");
+
+    // CI guard: the whole point of the knob is the k-fold scoring-FP
+    // saving; if it ever stops materializing, fail the bench loudly.
+    // fp_samples must strictly decrease across the whole k sweep (which
+    // subsumes the headline k=4 < k=1 criterion).
+    for pair in per_k.windows(2) {
+        let (ka, ra) = &pair[0];
+        let (kb, rb) = &pair[1];
+        if rb.cost.fp_samples >= ra.cost.fp_samples {
+            eprintln!(
+                "FAIL: fp_samples not strictly decreasing in k: k={ka} -> {} vs k={kb} -> {} \
+                 — frequency tuning is not amortizing the scoring FP",
+                ra.cost.fp_samples, rb.cost.fp_samples
+            );
+            std::process::exit(1);
+        }
+    }
+}

@@ -38,7 +38,11 @@ pub enum Event {
     /// "extra FP") finished in `elapsed`.
     ScoringFp { epoch: usize, step: u64, samples: usize, elapsed: Duration },
     /// The sampler chose `selected` of `meta` meta-batch rows for BP.
-    SelectionMade { epoch: usize, step: u64, meta: usize, selected: usize },
+    /// `scored` says whether this step ran a scoring forward pass (fresh
+    /// weights) or reused the tables cached at the last scoring step —
+    /// `false` on every `run.score_every` stride step *and* on steps that
+    /// never score (set-level methods, annealing epochs). See DESIGN.md §8.
+    SelectionMade { epoch: usize, step: u64, meta: usize, selected: usize, scored: bool },
     /// A data-parallel synchronization round completed (§D.5: parameter
     /// averaging + sampler-table merge across `workers` workers).
     SyncRound { epoch: usize, workers: usize },

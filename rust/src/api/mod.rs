@@ -128,6 +128,14 @@ impl<'rt> SessionBuilder<'rt> {
         self
     }
 
+    /// Scoring cadence k (frequency tuning, DESIGN.md §8): run the
+    /// scoring FP every k-th eligible step and select from cached weight
+    /// tables in between. 1 (default) = the historical per-step scoring.
+    pub fn score_every(mut self, k: usize) -> Self {
+        self.cfg.score_every = k;
+        self
+    }
+
     pub fn lr(mut self, schedule: LrSchedule) -> Self {
         self.cfg.lr = schedule;
         self
@@ -363,6 +371,37 @@ mod tests {
         if let Some(Event::RunEnd { accuracy, .. }) = seen.last() {
             assert_eq!(*accuracy, r.final_eval.accuracy);
         }
+    }
+
+    #[test]
+    fn score_every_strides_scoring_and_tags_events() {
+        let seen: Arc<Mutex<Vec<Event>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = seen.clone();
+        let r = tiny_builder()
+            .epochs(2)
+            // anneal_frac 0 => every step is scoring-eligible.
+            .sampler(SamplerConfig::Es { beta1: 0.2, beta2: 0.9, anneal_frac: 0.0 })
+            .score_every(2)
+            .on_event(move |ev: &Event| sink.lock().unwrap().push(ev.clone()))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        // 128/32 = 4 steps/epoch × 2 epochs = 8 steps; k=2 => 4 scoring FPs.
+        assert_eq!(r.steps, 8);
+        assert_eq!(r.cost.fp_passes, 4);
+        assert_eq!(r.cost.fp_samples, 4 * 32);
+        let seen = seen.lock().unwrap();
+        let fp_events = seen.iter().filter(|e| matches!(e, Event::ScoringFp { .. })).count();
+        assert_eq!(fp_events, 4);
+        let flags: Vec<bool> = seen
+            .iter()
+            .filter_map(|e| match e {
+                Event::SelectionMade { scored, .. } => Some(*scored),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(flags, vec![true, false, true, false, true, false, true, false]);
     }
 
     #[test]

@@ -390,6 +390,34 @@ pub fn tab8(scale: Scale) -> Vec<(f64, RunConfig)> {
         .collect()
 }
 
+/// Frequency-tuning ablation: ES on the CIFAR-dims MLP with the scoring
+/// FP amortized over k ∈ {1, 2, 4, 8} steps (the paper's "flexible
+/// frequency tuning"; §3.3 cost analysis + DESIGN.md §8). anneal_frac is
+/// 0 so every step is scoring-eligible and the k-fold fp_samples saving
+/// is exact — ⌈steps/k⌉·B.
+pub fn frequency_sweep(scale: Scale) -> Vec<(usize, RunConfig)> {
+    let n = scale.pick(1024, 8192);
+    let epochs = scale.pick(6, 30);
+    [1usize, 2, 4, 8]
+        .into_iter()
+        .map(|k| {
+            let mut cfg = RunConfig::new(
+                &format!("freq/es_k{k}"),
+                "mlp_cifar10",
+                cifar(n, 10),
+            );
+            cfg.epochs = epochs;
+            cfg.meta_batch = 128;
+            cfg.mini_batch = 32;
+            cfg.score_every = k;
+            cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
+            cfg.sampler = SamplerConfig::Es { beta1: 0.2, beta2: 0.9, anneal_frac: 0.0 };
+            cfg.test_n = scale.pick(512, 1024);
+            (k, cfg)
+        })
+        .collect()
+}
+
 /// End-to-end pre-training driver (examples/end_to_end_pretrain.rs):
 /// a real LM trained for a few hundred steps, ES vs Baseline.
 pub fn e2e_pretrain(scale: Scale) -> Vec<RunConfig> {
@@ -461,6 +489,19 @@ mod tests {
             for cfg in e2e_pretrain(scale) {
                 cfg.validate().expect(&cfg.name);
             }
+            for (_, cfg) in frequency_sweep(scale) {
+                cfg.validate().expect(&cfg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn frequency_sweep_covers_k_1_2_4_8() {
+        let ks: Vec<usize> = frequency_sweep(Scale::Smoke).iter().map(|&(k, _)| k).collect();
+        assert_eq!(ks, vec![1, 2, 4, 8]);
+        for (k, cfg) in frequency_sweep(Scale::Smoke) {
+            assert_eq!(cfg.score_every, k);
+            assert!(cfg.mini_batch < cfg.meta_batch, "must select for scoring to matter");
         }
     }
 
@@ -527,5 +568,6 @@ mod tests {
         fig5_bb_sweep(Scale::Smoke).iter().for_each(check);
         fig5_prune_sweep(Scale::Smoke).iter().for_each(check);
         e2e_pretrain(Scale::Smoke).iter().for_each(check);
+        frequency_sweep(Scale::Smoke).iter().for_each(|(_, cfg)| check(cfg));
     }
 }

@@ -236,6 +236,13 @@ pub struct RunConfig {
     pub meta_batch: usize,
     /// Mini-batch size b selected for BP (== meta_batch ⇒ no batch selection).
     pub mini_batch: usize,
+    /// Scoring cadence k (≥ 1): run the scoring forward pass on every k-th
+    /// scoring-eligible step; in between, the sampler selects from its
+    /// *cached* weight tables (`Sampler::select_cached`). The paper's
+    /// "flexible frequency tuning" — the extra FP of §3.3 amortizes to
+    /// ~1/k of its cost. `1` (default) is the historical per-step scoring,
+    /// bit-for-bit. See DESIGN.md §8.
+    pub score_every: usize,
     pub lr: LrSchedule,
     pub seed: u64,
     /// Evaluate on the held-out set every k epochs (0 = only at end).
@@ -275,6 +282,7 @@ impl RunConfig {
             epochs: 10,
             meta_batch: 128,
             mini_batch: 32,
+            score_every: 1,
             lr: LrSchedule::Const { lr: 1e-3 },
             seed: 0,
             eval_every: 0,
@@ -314,6 +322,13 @@ impl RunConfig {
         }
         if self.micro_batch > self.mini_batch {
             return Err("micro_batch must be <= mini_batch".into());
+        }
+        if self.score_every == 0 {
+            return Err("score_every must be >= 1 (1 = score every step)".into());
+        }
+        // Catches negative TOML values too (they wrap huge via `as usize`).
+        if self.score_every > 1 << 20 {
+            return Err("score_every out of range".into());
         }
         if self.workers == 0 {
             return Err("workers must be >= 1".into());
@@ -435,6 +450,7 @@ impl RunConfig {
             epochs: doc.i64_or("run.epochs", 10) as usize,
             meta_batch: doc.i64_or("run.meta_batch", 128) as usize,
             mini_batch: doc.i64_or("run.mini_batch", 32) as usize,
+            score_every: doc.i64_or("run.score_every", 1) as usize,
             lr,
             seed: doc.i64_or("run.seed", 0) as u64,
             eval_every: doc.i64_or("run.eval_every", 0) as usize,
@@ -548,6 +564,27 @@ max_lr = 0.05
         c.validate().unwrap();
         c.kernel_threads = (-2i64) as usize; // wrapped negative TOML value
         assert!(c.validate().is_err(), "wrapped negative kernel_threads must fail");
+    }
+
+    #[test]
+    fn score_every_validates() {
+        let mut c = base();
+        c.score_every = 4;
+        c.validate().unwrap();
+        c.score_every = 0;
+        assert!(c.validate().is_err(), "score_every = 0 must fail");
+        c.score_every = (-3i64) as usize; // wrapped negative TOML value
+        assert!(c.validate().is_err(), "wrapped negative score_every must fail");
+    }
+
+    #[test]
+    fn score_every_parses_from_toml_and_defaults_to_1() {
+        let src = "[run]\nmodel = \"mlp_cifar10\"\nscore_every = 4\n[dataset]\nkind = \"synth_cifar\"\nn = 1024\n";
+        let cfg = RunConfig::from_doc(&Doc::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.score_every, 4);
+        let src = "[run]\nmodel = \"mlp_cifar10\"\n[dataset]\nkind = \"synth_cifar\"\nn = 1024\n";
+        let cfg = RunConfig::from_doc(&Doc::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.score_every, 1, "default cadence is per-step scoring");
     }
 
     #[test]

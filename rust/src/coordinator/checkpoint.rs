@@ -46,23 +46,42 @@ impl Checkpoint {
     }
 
     pub fn load(dir: &Path, name: &str) -> std::io::Result<Checkpoint> {
+        let invalid = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
         let bin = dir.join(format!("{name}.ckpt"));
         let mut f = std::fs::File::open(&bin)?;
+        let file_len = f.metadata()?.len();
         let mut head = [0u8; 16];
         f.read_exact(&mut head)?;
         let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
         let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
-        let count = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
+        let count = u64::from_le_bytes(head[8..16].try_into().unwrap());
         if magic != MAGIC {
-            return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+            return Err(invalid("bad magic".into()));
         }
         if version != VERSION {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!("unsupported version {version}"),
-            ));
+            return Err(invalid(format!("unsupported version {version}")));
         }
-        let mut buf = vec![0u8; count * 4];
+        // The param count is untrusted input: validate it against the
+        // actual payload length BEFORE sizing any allocation, so a
+        // truncated or corrupt header fails with a clean InvalidData
+        // instead of a near-unbounded allocation. Exact match also
+        // rejects trailing garbage.
+        let payload = file_len - head.len() as u64;
+        let claimed = count.checked_mul(4).ok_or_else(|| {
+            invalid(format!(
+                "{}: header claims {count} params, which overflows the payload size",
+                bin.display()
+            ))
+        })?;
+        if claimed != payload {
+            return Err(invalid(format!(
+                "{}: header claims {count} params ({claimed} payload bytes) but the file \
+                 carries {payload} bytes after the header ({})",
+                bin.display(),
+                if claimed > payload { "truncated checkpoint" } else { "trailing garbage" },
+            )));
+        }
+        let mut buf = vec![0u8; claimed as usize];
         f.read_exact(&mut buf)?;
         let params = buf
             .chunks_exact(4)
@@ -87,6 +106,16 @@ mod tests {
     fn dir() -> PathBuf {
         let d = std::env::temp_dir().join(format!("evosample_ckpt_{}", std::process::id()));
         let _ = std::fs::create_dir_all(&d);
+        d
+    }
+
+    /// Per-test directory: tests run on parallel threads, so sharing one
+    /// dir while some tests `remove_dir_all` it would race.
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("evosample_ckpt_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
         d
     }
 
@@ -116,6 +145,72 @@ mod tests {
     #[test]
     fn missing_file_is_io_error() {
         assert!(Checkpoint::load(Path::new("/nonexistent"), "x").is_err());
+    }
+
+    /// A valid header + count field claiming a multi-GB payload over a
+    /// tiny file must fail with InvalidData (validated BEFORE any
+    /// allocation), not attempt a `count * 4` allocation.
+    #[test]
+    fn truncated_file_with_huge_count_is_invalid_data() {
+        let d = fresh_dir("trunc");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(1u64 << 40).to_le_bytes()); // ~4 TiB claimed
+        bytes.extend_from_slice(&[0u8; 8]); // 8 bytes of actual payload
+        std::fs::write(d.join("trunc.ckpt"), &bytes).unwrap();
+        let err = Checkpoint::load(&d, "trunc").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        let msg = err.to_string();
+        assert!(msg.contains("truncated"), "{msg}");
+        assert!(msg.contains("1099511627776"), "message names the claimed count: {msg}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn count_overflow_is_invalid_data() {
+        let d = fresh_dir("ovf");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // count * 4 overflows
+        std::fs::write(d.join("ovf.ckpt"), &bytes).unwrap();
+        let err = Checkpoint::load(&d, "ovf").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("overflow"), "{err}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn trailing_garbage_is_invalid_data() {
+        let d = fresh_dir("tail");
+        let ck = Checkpoint { model: "mlp".into(), step: 1, seed: 2, params: vec![1.0, 2.0] };
+        let path = ck.save(&d, "tail").unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"junk");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&d, "tail").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("trailing garbage"), "{err}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn truncated_params_section_is_invalid_data() {
+        let d = fresh_dir("cut");
+        let ck = Checkpoint {
+            model: "mlp".into(),
+            step: 1,
+            seed: 2,
+            params: (0..64).map(|i| i as f32).collect(),
+        };
+        let path = ck.save(&d, "cut").unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        let err = Checkpoint::load(&d, "cut").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("truncated"), "{err}");
+        let _ = std::fs::remove_dir_all(&d);
     }
 
     #[test]

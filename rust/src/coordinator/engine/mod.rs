@@ -133,6 +133,11 @@ impl<'a> Engine<'a> {
             let kept =
                 timers.time(phase::PRUNE, || self.sampler.on_epoch_start(epoch, &mut rng));
             anyhow::ensure!(!kept.is_empty(), "sampler kept nothing at epoch {epoch}");
+            // Floor the kept set at one meta-batch: smaller sets would make
+            // the loader's wraparound pad emit duplicate indices inside a
+            // single meta-batch (DESIGN.md §8.4). Identity unless a
+            // high-prune config actually under-keeps.
+            let kept = crate::sampler::enforce_min_keep(kept, cfg.meta_batch, n);
             emit_into(
                 &mut self.events,
                 Event::EpochStart { epoch, kept: kept.len(), dataset_n: n },
@@ -154,6 +159,7 @@ impl<'a> Engine<'a> {
                         train_ds,
                         epoch,
                         lr: cfg.lr.lr_at(step_idx, total_steps) as f32,
+                        stream: 0,
                     };
                     let mut route = ObservationRoute::Immediate;
                     let step_mean = pipeline.run_step(
@@ -175,11 +181,18 @@ impl<'a> Engine<'a> {
             } else {
                 // ---- sequential data-parallel simulation ---------------
                 // Shard round-robin; every worker sees a disjoint subset.
-                let mut loaders: Vec<EpochLoader> = (0..workers)
+                // The effective worker count is floored at kept/B so each
+                // shard carries at least one full meta-batch — a shorter
+                // shard would wrap around inside a single meta-batch and
+                // emit duplicate indices (DESIGN.md §8.4). Identity (same
+                // shards, same RNG forks) whenever shards were already
+                // ≥ B, so the bit-for-bit pin against the pre-refactor
+                // loop holds for every non-degenerate config.
+                let eff = workers.min((kept.len() / cfg.meta_batch).max(1));
+                let mut loaders: Vec<EpochLoader> = (0..eff)
                     .map(|w| {
                         let shard: Vec<u32> =
-                            kept.iter().copied().skip(w).step_by(workers).collect();
-                        let shard = if shard.is_empty() { kept.clone() } else { shard };
+                            kept.iter().copied().skip(w).step_by(eff).collect();
                         let mut wrng = rng.fork(0xd15c0 + w as u64);
                         EpochLoader::new(&shard, cfg.meta_batch, &mut wrng)
                     })
@@ -190,7 +203,7 @@ impl<'a> Engine<'a> {
 
                 'rounds: loop {
                     let mut progressed = false;
-                    for loader in loaders.iter_mut() {
+                    for (w, loader) in loaders.iter_mut().enumerate() {
                         if !loader.next_batch_into(&mut meta_scratch) {
                             continue;
                         }
@@ -200,6 +213,13 @@ impl<'a> Engine<'a> {
                             train_ds,
                             epoch,
                             lr: cfg.lr.lr_at(step_idx, total_steps) as f32,
+                            // Per-worker cadence stream: each simulated
+                            // worker re-scores every k-th of its own
+                            // steps rather than whichever worker the
+                            // global stride lands on. (Stream *ownership*
+                            // matches the threaded mode; the tick
+                            // lifetimes still differ — DESIGN.md §8.2.)
+                            stream: w,
                         };
                         let mut route = ObservationRoute::Deferred(&mut sync_buf);
                         let step_mean = pipeline.run_step(
@@ -230,7 +250,7 @@ impl<'a> Engine<'a> {
                         }
                     });
                 }
-                emit_into(&mut self.events, Event::SyncRound { epoch, workers });
+                emit_into(&mut self.events, Event::SyncRound { epoch, workers: eff });
             }
 
             let epoch_mean = if epoch_loss_cnt > 0 {
@@ -307,7 +327,8 @@ pub(super) fn assemble_result(
         stats.bp_samples,
         stats.bp_passes,
         rt.flops_per_sample_fwd(),
-    );
+    )
+    .with_fp_passes(stats.fp_passes);
     TrainResult {
         name: cfg.name.clone(),
         sampler: sampler_name.to_string(),

@@ -10,6 +10,11 @@
 //! shard log). Stage wall-clock flows into the `PhaseTimers` ledger under
 //! the same phase labels the accounting layer has always used, and is
 //! additionally surfaced to an optional [`StageObserver`].
+//!
+//! The scoring-FP stage honors `run.score_every` (frequency tuning,
+//! DESIGN.md §8): only every k-th scoring-eligible step per stream runs
+//! the forward pass; the steps in between select from the sampler's
+//! cached weight tables via [`Sampler::select_cached`].
 
 use std::time::{Duration, Instant};
 
@@ -75,6 +80,8 @@ pub enum ObservationRoute<'a> {
 #[derive(Clone, Debug, Default)]
 pub struct StepStats {
     pub fp_samples: u64,
+    /// Number of scoring-FP invocations (≤ steps; ≈ steps / score_every).
+    pub fp_passes: u64,
     pub bp_samples: u64,
     pub bp_passes: u64,
     pub steps: u64,
@@ -83,6 +90,7 @@ pub struct StepStats {
 impl StepStats {
     pub fn accumulate(&mut self, other: &StepStats) {
         self.fp_samples += other.fp_samples;
+        self.fp_passes += other.fp_passes;
         self.bp_samples += other.bp_samples;
         self.bp_passes += other.bp_passes;
         self.steps += other.steps;
@@ -95,6 +103,14 @@ pub struct StepCtx<'a> {
     pub train_ds: &'a TensorDataset,
     pub epoch: usize,
     pub lr: f32,
+    /// Scoring-cadence stream this step belongs to (DESIGN.md §8): the
+    /// `score_every` stride counts eligible steps *per stream*, so each
+    /// data-parallel worker re-scores its own shard every k-th eligible
+    /// step instead of the stride landing on whichever worker happens to
+    /// align with it. Single-worker mode uses stream 0; the sequential
+    /// simulation passes the worker index; threaded workers own their
+    /// pipeline (stream 0, reset each epoch).
+    pub stream: usize,
 }
 
 /// Reusable step executor: owns the batch buffers, loss scratch,
@@ -109,6 +125,14 @@ pub struct StepPipeline {
     meta_losses: Vec<f32>,
     /// BP losses of the current step, accumulated across micro-batches.
     bp_losses: Vec<f32>,
+    /// Per-stream position within the current run of scoring-*eligible*
+    /// steps; a step runs the scoring FP iff its stream's tick ≡ 0
+    /// (mod score_every), and an ineligible step resets its stream. The
+    /// reset pins the first step of EVERY eligible window (e.g. right
+    /// after an annealing gap) as a scoring step, so stale-weight
+    /// selection never runs on tables older than one stride — even for
+    /// external samplers whose `needs_meta_losses` opens several windows.
+    score_ticks: Vec<u64>,
     pub stats: StepStats,
     pub class_bp_counts: Vec<u64>,
 }
@@ -139,6 +163,7 @@ impl StepPipeline {
             mini_buf: BatchBuf::new(),
             meta_losses: Vec::new(),
             bp_losses: Vec::new(),
+            score_ticks: Vec::new(),
             stats: StepStats::default(),
             class_bp_counts: vec![0u64; classes.max(1)],
         }
@@ -172,8 +197,30 @@ impl StepPipeline {
         });
 
         // ---- stage 2: scoring FP (batch-level methods, active epochs) --
+        // Frequency tuning (DESIGN.md §8): of the scoring-eligible steps
+        // on this stream, only every `score_every`-th runs the FP; the
+        // rest select from the sampler's cached tables below. k = 1 makes
+        // `scoring == eligible` and the tick bookkeeping inert, so the
+        // historical per-step path is reproduced bit-for-bit.
         let selecting = cfg.mini_batch < cfg.meta_batch;
-        if selecting && sampler.needs_meta_losses(ctx.epoch) {
+        let eligible = selecting && sampler.needs_meta_losses(ctx.epoch);
+        let scoring = {
+            if ctx.stream >= self.score_ticks.len() {
+                self.score_ticks.resize(ctx.stream + 1, 0);
+            }
+            let tick = &mut self.score_ticks[ctx.stream];
+            if eligible {
+                let fire = *tick % cfg.score_every.max(1) as u64 == 0;
+                *tick += 1;
+                fire
+            } else {
+                // Reset so the first step of the next eligible window
+                // scores (see the score_ticks field docs).
+                *tick = 0;
+                false
+            }
+        };
+        if scoring {
             let t0 = Instant::now();
             self.meta_losses.clear();
             staged(timers, &mut observer, Stage::ScoringFp, || {
@@ -185,6 +232,7 @@ impl StepPipeline {
                 )
             })?;
             self.stats.fp_samples += meta.len() as u64;
+            self.stats.fp_passes += 1;
             emit_into(
                 &mut events,
                 Event::ScoringFp {
@@ -214,8 +262,15 @@ impl StepPipeline {
         }
 
         // ---- stage 3: select -------------------------------------------
+        // Non-scoring eligible steps take the cached path: selection from
+        // the weight tables as of the last scoring step (stale by < k
+        // steps), no fresh losses consumed.
         let sel = staged(timers, &mut observer, Stage::Select, || {
-            sampler.select(meta, cfg.mini_batch, ctx.epoch, rng)
+            if eligible && !scoring {
+                sampler.select_cached(meta, cfg.mini_batch, ctx.epoch, rng)
+            } else {
+                sampler.select(meta, cfg.mini_batch, ctx.epoch, rng)
+            }
         });
         debug_assert!(!sel.indices.is_empty());
         emit_into(
@@ -225,6 +280,7 @@ impl StepPipeline {
                 step: step_no,
                 meta: meta.len(),
                 selected: sel.indices.len(),
+                scored: scoring,
             },
         );
 
@@ -318,10 +374,13 @@ mod tests {
 
     #[test]
     fn stats_accumulate() {
-        let mut a = StepStats { fp_samples: 1, bp_samples: 2, bp_passes: 3, steps: 4 };
-        let b = StepStats { fp_samples: 10, bp_samples: 20, bp_passes: 30, steps: 40 };
+        let mut a =
+            StepStats { fp_samples: 1, fp_passes: 5, bp_samples: 2, bp_passes: 3, steps: 4 };
+        let b =
+            StepStats { fp_samples: 10, fp_passes: 50, bp_samples: 20, bp_passes: 30, steps: 40 };
         a.accumulate(&b);
         assert_eq!(a.fp_samples, 11);
+        assert_eq!(a.fp_passes, 55);
         assert_eq!(a.bp_samples, 22);
         assert_eq!(a.bp_passes, 33);
         assert_eq!(a.steps, 44);

@@ -7,8 +7,10 @@
 //!    in sync by the merge rounds) plus an identical RNG stream give every
 //!    replica the same epoch-start decisions — ESWP's pruned set,
 //!    InfoBatch's rescale table, Kakurenbo's move-back snapshot.
-//! 2. The kept set is sharded round-robin across `min(W, kept)` effective
-//!    workers, so shards are always disjoint and non-empty.
+//! 2. The kept set is sharded round-robin across `min(W, max(1, kept/B))`
+//!    effective workers, so shards are always disjoint, non-empty, and at
+//!    least one meta-batch long (DESIGN.md §8.4 — a shorter shard would
+//!    wrap around inside a single meta-batch and emit duplicate indices).
 //! 3. Each effective worker owns a runtime replica (`spawn_replica`) and a
 //!    sampler replica, and steps its shard through the shared
 //!    [`StepPipeline`] with worker-local RNG, timers, and counters. A
@@ -166,13 +168,20 @@ pub(super) fn run(
             kept
         });
         anyhow::ensure!(!kept.is_empty(), "sampler kept nothing at epoch {epoch}");
+        // Floor the kept set at one meta-batch (DESIGN.md §8.4): only the
+        // canonical's kept set is sharded, so clamping here covers every
+        // worker; replica sampler state stays consistent because the clamp
+        // touches no tables and no RNG.
+        let kept = sampler::enforce_min_keep(kept, cfg.meta_batch, n);
         emit_into(&mut events, Event::EpochStart { epoch, kept: kept.len(), dataset_n: n });
 
         // ---- disjoint round-robin shards over effective workers --------
-        // Clamping to kept.len() keeps every shard non-empty AND disjoint
-        // (the §D.5 merge relies on disjointness); surplus replicas sit
+        // Clamping keeps every shard non-empty, disjoint (the §D.5 merge
+        // relies on disjointness), AND at least one meta-batch long — a
+        // shorter shard would wrap around inside a single meta-batch and
+        // emit duplicate indices (DESIGN.md §8.4). Surplus replicas sit
         // the epoch out and are re-synced at the boundary.
-        let eff = workers.min(kept.len()).max(1);
+        let eff = workers.min((kept.len() / cfg.meta_batch).max(1));
         let shards: Vec<Vec<u32>> = (0..eff)
             .map(|w| kept.iter().copied().skip(w).step_by(eff).collect())
             .collect();
@@ -384,6 +393,13 @@ fn run_worker(
                             train_ds,
                             epoch,
                             lr: cfg.lr.lr_at(step_idx, total_steps) as f32,
+                            // Every worker owns its pipeline (fresh per
+                            // epoch), so stream 0 gives each replica its
+                            // own cadence: all workers score their 1st,
+                            // (k+1)th, ... eligible local step — the
+                            // shared `cfg.score_every` is the §D.5
+                            // cadence agreement (DESIGN.md §8.3).
+                            stream: 0,
                         };
                         let mut route = ObservationRoute::Replica;
                         let step_mean = pipeline.run_step(

@@ -155,18 +155,7 @@ impl TrialSummary {
         // Sum counts across trials (flops ratios are scale-invariant).
         let mut total = CostSummary::default();
         for r in &self.results {
-            total.fp_samples += r.cost.fp_samples;
-            total.bp_samples += r.cost.bp_samples;
-            total.bp_passes += r.cost.bp_passes;
-            total.fp_flops += r.cost.fp_flops;
-            total.bp_flops += r.cost.bp_flops;
-            total.scoring_s += r.cost.scoring_s;
-            total.train_s += r.cost.train_s;
-            total.select_s += r.cost.select_s;
-            total.data_s += r.cost.data_s;
-            total.prune_s += r.cost.prune_s;
-            total.sync_s += r.cost.sync_s;
-            total.eval_s += r.cost.eval_s;
+            total.accumulate(&r.cost);
         }
         total
     }

@@ -1,0 +1,54 @@
+//! Frequency-tuning ablation: the paper's "flexible frequency tuning"
+//! lever — re-score the meta-batch only every k-th step so the extra
+//! scoring FP of §3.3 amortizes to ~1/k of its cost, selection running on
+//! cached (≤ k−1 steps stale) weight tables in between (DESIGN.md §8).
+//!
+//! Expected shape: fp_samples and scoring_s drop ~k-fold while accuracy
+//! stays close to k=1 for small k — the amortized selection overhead is
+//! what lets "lossless" hold end-to-end (InfoBatch makes the same
+//! argument for set-level overhead).
+
+use crate::config::presets::{frequency_sweep, Scale};
+use crate::metrics::Recorder;
+use crate::util::bench::table_header;
+
+use super::{make_runtime, mean_acc, run_config, total_cost, trials};
+
+pub fn run(scale: Scale) -> anyhow::Result<()> {
+    let rows = frequency_sweep(scale);
+    let rec = Recorder::new("frequency_ablation")?;
+    let n_trials = trials(scale);
+    table_header(
+        "Frequency tuning — score every k steps (ES, CIFAR-dims MLP)",
+        &["k", "acc%", "fp_samples", "fp_passes", "scoring_s", "time saved"],
+    );
+    let mut rt = make_runtime(&rows[0].1)?;
+    let mut base: Option<crate::coordinator::CostSummary> = None;
+    for (k, cfg) in &rows {
+        let rs = run_config(cfg, rt.as_mut(), n_trials)?;
+        for r in &rs {
+            rec.record_result(r)?;
+        }
+        let acc = mean_acc(&rs);
+        let cost = total_cost(&rs);
+        match &base {
+            None => {
+                println!(
+                    "{k:>2} | {acc:5.1} | {:>10} | {:>9} | {:8.3} | —",
+                    cost.fp_samples, cost.fp_passes, cost.scoring_s
+                );
+                base = Some(cost);
+            }
+            Some(bcost) => {
+                println!(
+                    "{k:>2} | {acc:5.1} | {:>10} | {:>9} | {:8.3} | {}",
+                    cost.fp_samples,
+                    cost.fp_passes,
+                    cost.scoring_s,
+                    super::fmt_saved(bcost, &cost)
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -13,6 +13,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig9;
+pub mod frequency;
 pub mod table2;
 pub mod table3;
 pub mod table4;
@@ -61,19 +62,7 @@ pub fn mean_loss(rs: &[TrainResult]) -> f64 {
 pub fn total_cost(rs: &[TrainResult]) -> crate::coordinator::CostSummary {
     let mut total = crate::coordinator::CostSummary::default();
     for r in rs {
-        let c = &r.cost;
-        total.fp_samples += c.fp_samples;
-        total.bp_samples += c.bp_samples;
-        total.bp_passes += c.bp_passes;
-        total.fp_flops += c.fp_flops;
-        total.bp_flops += c.bp_flops;
-        total.scoring_s += c.scoring_s;
-        total.train_s += c.train_s;
-        total.select_s += c.select_s;
-        total.data_s += c.data_s;
-        total.prune_s += c.prune_s;
-        total.sync_s += c.sync_s;
-        total.eval_s += c.eval_s;
+        total.accumulate(&r.cost);
     }
     total
 }

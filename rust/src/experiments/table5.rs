@@ -40,15 +40,7 @@ pub fn run(scale: Scale) -> anyhow::Result<()> {
                 rec.record_result(r)?;
             }
             accs[mi][ti] = mean_acc(&rs);
-            let c = total_cost(&rs);
-            let t = &mut costs[mi];
-            t.fp_flops += c.fp_flops;
-            t.bp_flops += c.bp_flops;
-            t.scoring_s += c.scoring_s;
-            t.train_s += c.train_s;
-            t.select_s += c.select_s;
-            t.data_s += c.data_s;
-            t.prune_s += c.prune_s;
+            costs[mi].accumulate(&total_cost(&rs));
         }
     }
 

@@ -3,11 +3,11 @@
 //!
 //! Subcommands:
 //!   train          --config <run.toml> [--trials N] [--workers W]
-//!                  [--threaded-workers] [--sync-every K]
+//!                  [--threaded-workers] [--sync-every K] [--score-every K]
 //!   list-models                       (artifact inventory)
 //!   list-samplers                     (registry inventory: name/kind/params)
 //!   experiment     --id <table2|table3|table4|table5|fig4|fig5|fig6|fig7|
-//!                       fig1|fig9|fig10|tab6|tab7|tab8|theory> [--full]
+//!                       fig1|fig9|fig10|tab6|tab7|tab8|freq|theory> [--full]
 //!   illustrate                        (fig1 weight-signal traces)
 //!   help
 //!
@@ -28,11 +28,14 @@ evosample — Data-Efficient Training by Evolved Sampling (ES/ESWP)
 
 USAGE:
   evosample train --config <run.toml> [--trials N] [--workers W]
-                  [--threaded-workers] [--sync-every K]
+                  [--threaded-workers] [--sync-every K] [--score-every K]
+                  (--score-every K re-scores the meta-batch every K-th
+                   step and selects from cached weights in between)
   evosample list-models
   evosample list-samplers
   evosample experiment --id <table2|table3|table4|table5|fig1|fig4|fig5|
-                             fig6|fig7|fig9|fig10|tab6|tab7|tab8|theory>
+                             fig6|fig7|fig9|fig10|tab6|tab7|tab8|freq|
+                             theory>
                        [--full]
   evosample illustrate
   evosample help
@@ -66,7 +69,16 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             if let Some(k) = args.usize_flag("sync-every").map_err(|e| anyhow::anyhow!("{e}"))? {
                 cfg.sync_every = k;
             }
+            if let Some(k) = args.usize_flag("score-every").map_err(|e| anyhow::anyhow!("{e}"))? {
+                cfg.score_every = k;
+            }
             cfg.validate().map_err(|e| anyhow::anyhow!("config: {e}"))?;
+            if cfg.score_every > 1 {
+                println!(
+                    "scoring: every {} steps (stale-weight selection in between)",
+                    cfg.score_every
+                );
+            }
             if cfg.threaded_workers {
                 println!(
                     "engine: {} threaded workers (param sync every {})",
@@ -119,7 +131,10 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         "list-samplers" => {
-            println!("{:<14} {:<10} {:<18} params", "name", "kind", "aliases");
+            println!(
+                "{:<14} {:<10} {:<8} {:<18} params",
+                "name", "kind", "scoring", "aliases"
+            );
             for e in registry::entries() {
                 let params: Vec<String> = e
                     .params()
@@ -127,9 +142,12 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                     .map(|p| format!("{}={} ({})", p.name, p.default, p.doc))
                     .collect();
                 println!(
-                    "{:<14} {:<10} {:<18} {}",
+                    "{:<14} {:<10} {:<8} {:<18} {}",
                     e.name(),
                     e.kind(),
+                    // "strided" = the per-step scoring FP honors
+                    // run.score_every; "-" = the method never scores.
+                    if e.frequency_tunable() { "strided" } else { "-" },
                     e.aliases().join(","),
                     if params.is_empty() { "-".to_string() } else { params.join("; ") },
                 );
@@ -156,6 +174,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 "tab6" => experiments::ablations::run_tab6(scale),
                 "tab7" => experiments::ablations::run_tab7(scale),
                 "tab8" => experiments::ablations::run_tab8(scale),
+                "freq" => experiments::frequency::run(scale),
                 "theory" => experiments::theory::run_all(),
                 other => anyhow::bail!("unknown experiment {other:?}\n{USAGE}"),
             }

@@ -29,6 +29,7 @@ pub fn result_to_json(r: &TrainResult) -> Json {
         ("select_s", num(r.cost.select_s)),
         ("sync_s", num(r.cost.sync_s)),
         ("fp_samples", num(r.cost.fp_samples as f64)),
+        ("fp_passes", num(r.cost.fp_passes as f64)),
         ("bp_samples", num(r.cost.bp_samples as f64)),
         ("bp_passes", num(r.cost.bp_passes as f64)),
         ("total_flops", num(r.cost.total_flops() as f64)),
@@ -104,12 +105,13 @@ pub fn event_to_json(ev: &Event) -> Json {
             ("samples", num(*samples as f64)),
             ("elapsed_s", num(elapsed.as_secs_f64())),
         ]),
-        Event::SelectionMade { epoch, step, meta, selected } => obj(vec![
+        Event::SelectionMade { epoch, step, meta, selected, scored } => obj(vec![
             ("event", s("selection_made")),
             ("epoch", num(*epoch as f64)),
             ("step", num(*step as f64)),
             ("meta", num(*meta as f64)),
             ("selected", num(*selected as f64)),
+            ("scored", Json::Bool(*scored)),
         ]),
         Event::SyncRound { epoch, workers } => obj(vec![
             ("event", s("sync_round")),
@@ -216,7 +218,13 @@ mod tests {
         let dir = std::env::temp_dir().join("evosample_test_evlog");
         let mut log = EventLog::in_dir(&dir, "events_unit").unwrap();
         log.on_event(&Event::RunStart { name: "t".into(), sampler: "es".into(), epochs: 2 });
-        log.on_event(&Event::SelectionMade { epoch: 0, step: 0, meta: 32, selected: 8 });
+        log.on_event(&Event::SelectionMade {
+            epoch: 0,
+            step: 0,
+            meta: 32,
+            selected: 8,
+            scored: true,
+        });
         log.on_event(&Event::EvalDone { epoch: 1, loss: 0.5, accuracy: 0.8, bp_samples: 10 });
         let text = std::fs::read_to_string(log.path()).unwrap();
         assert!(text.contains("run_start") && text.contains("eval_done"), "{text}");

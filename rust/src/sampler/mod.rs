@@ -108,6 +108,24 @@ pub trait Sampler: Send {
         Selection::unweighted(meta.to_vec())
     }
 
+    /// Batch-level selection on a *non-scoring* step (`run.score_every`
+    /// stride, DESIGN.md §8): no fresh meta losses were observed this
+    /// step, so the selection must come from whatever weight state the
+    /// sampler cached at the last scoring step. The default delegates to
+    /// [`Sampler::select`], which is correct for every table-driven
+    /// method (ES/ESWP/loss/order select from their stored tables and
+    /// never read step-local losses); override only if `select` assumes
+    /// an `observe_meta` immediately preceded it.
+    fn select_cached(
+        &mut self,
+        meta: &[u32],
+        mini: usize,
+        epoch: usize,
+        rng: &mut Pcg64,
+    ) -> Selection {
+        self.select(meta, mini, epoch, rng)
+    }
+
     /// Dataset size this sampler was built for.
     fn n(&self) -> usize;
 
@@ -144,6 +162,35 @@ pub trait Sampler: Send {
 
     /// Concrete-type access for table inspection (tests, analysis).
     fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// Floor a pruned kept set at `min_keep` indices (the engine passes the
+/// meta-batch size): [`crate::data::loader::EpochLoader`] pads ragged
+/// tails by wrapping around the shuffled order, so a kept set smaller
+/// than one meta-batch would emit *duplicate indices inside a single
+/// meta-batch* — violating the without-replacement contract of
+/// [`weights::sample_without_replacement`] downstream. When the clamp
+/// triggers, pruned indices are added back in ascending dataset order
+/// (deterministic, so threaded replicas replaying the same epoch agree);
+/// `kept.len() >= min_keep` inputs pass through untouched.
+pub fn enforce_min_keep(kept: Vec<u32>, min_keep: usize, n: usize) -> Vec<u32> {
+    if kept.len() >= min_keep.min(n) {
+        return kept;
+    }
+    let mut in_kept = vec![false; n];
+    for &i in &kept {
+        in_kept[i as usize] = true;
+    }
+    let mut out = kept;
+    for i in 0..n as u32 {
+        if out.len() >= min_keep {
+            break;
+        }
+        if !in_kept[i as usize] {
+            out.push(i);
+        }
+    }
+    out
 }
 
 /// Instantiate a sampler from config for a dataset of `n` samples trained
@@ -234,6 +281,70 @@ mod tests {
         assert!(log.export().is_empty(), "export drains");
         log.record(&[4], &[9.0]);
         assert_eq!(log.export().len(), 1, "still buffering after export");
+    }
+
+    #[test]
+    fn select_cached_defaults_to_select() {
+        // The default cached path must make identical draws to `select`
+        // under identical RNG state — the k=1 bit-for-bit guarantee rests
+        // on both paths being the same computation for the built-ins.
+        let mut a = build(&SC::es_default(), 32, 10).unwrap();
+        let mut b = build(&SC::es_default(), 32, 10).unwrap();
+        let idx: Vec<u32> = (0..32).collect();
+        let losses: Vec<f32> = (0..32).map(|i| i as f32 * 0.1).collect();
+        a.observe_meta(&idx, &losses, 1);
+        b.observe_meta(&idx, &losses, 1);
+        let rng = Pcg64::new(42);
+        let sa = a.select(&idx, 8, 1, &mut rng.clone());
+        let sb = b.select_cached(&idx, 8, 1, &mut rng.clone());
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn enforce_min_keep_floors_small_kept_sets() {
+        // Identity when already large enough.
+        let kept = vec![3u32, 7, 9];
+        assert_eq!(enforce_min_keep(kept.clone(), 3, 16), kept);
+        assert_eq!(enforce_min_keep(kept.clone(), 2, 16), kept);
+        // Tops up with pruned indices in ascending order.
+        let out = enforce_min_keep(vec![5u32, 9], 5, 16);
+        assert_eq!(out, vec![5, 9, 0, 1, 2]);
+        // Capped at n (never invents indices).
+        let out = enforce_min_keep(vec![0u32], 10, 3);
+        assert_eq!(out, vec![0, 1, 2]);
+        // Output is always duplicate-free.
+        let mut sorted = out;
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3);
+    }
+
+    #[test]
+    fn enforce_min_keep_property() {
+        use crate::util::proptest::check;
+        check("min_keep superset+unique", 80, |g| {
+            let n = g.usize_in(1, 200);
+            let keep = g.usize_in(1, n);
+            let min_keep = g.usize_in(0, n + 8);
+            let kept = g.rng().choose_k(n, keep);
+            let out = enforce_min_keep(kept.clone(), min_keep, n);
+            crate::prop_assert!(
+                out.len() >= min_keep.min(n).max(kept.len().min(n)),
+                "len {} < floor", out.len()
+            );
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            let before = sorted.len();
+            sorted.dedup();
+            crate::prop_assert!(sorted.len() == before, "duplicates in clamped kept");
+            for &i in &kept {
+                crate::prop_assert!(out.contains(&i), "dropped kept index {i}");
+            }
+            for &i in &out {
+                crate::prop_assert!((i as usize) < n, "oob {i}");
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -151,6 +151,15 @@ impl SamplerEntry {
         self.kind
     }
 
+    /// Whether this policy runs a per-step scoring FP that
+    /// `run.score_every` can stride (frequency tuning, DESIGN.md §8):
+    /// batch-level methods score meta-batches, so their scoring cost
+    /// amortizes ~1/k; set-level/baseline methods never score and the
+    /// knob is a no-op for them.
+    pub fn frequency_tunable(&self) -> bool {
+        matches!(self.kind, SamplerKind::BatchLevel | SamplerKind::Both)
+    }
+
     pub fn params(&self) -> &[ParamSpec] {
         &self.params
     }
@@ -476,6 +485,18 @@ mod tests {
         assert_eq!(kind_of("eswp"), Some(SamplerKind::Both));
         assert_eq!(kind_of("infobatch"), Some(SamplerKind::SetLevel));
         assert_eq!(kind_of("nope"), None);
+    }
+
+    #[test]
+    fn frequency_tunable_tracks_scoring_methods() {
+        // Exactly the methods that pay the per-step scoring FP can have
+        // it strided by run.score_every.
+        for name in ["loss", "order", "es", "eswp"] {
+            assert!(lookup(name).unwrap().frequency_tunable(), "{name}");
+        }
+        for name in ["baseline", "infobatch", "ka", "ucb", "random_prune"] {
+            assert!(!lookup(name).unwrap().frequency_tunable(), "{name}");
+        }
     }
 
     #[test]

@@ -510,6 +510,267 @@ fn replayed_epoch_start_reproduces_infobatch_rescale_on_replicas() {
     );
 }
 
+// ---- frequency tuning (run.score_every, DESIGN.md §8) -------------------
+
+/// With score_every = 1 (the default) every engine mode must reproduce
+/// the pre-change behavior bit-for-bit: the sequential modes against the
+/// verbatim pre-refactor reference loop (which has no cadence logic at
+/// all), the threaded mode against a run of the untouched default config
+/// (same RNG schedule, same arithmetic).
+#[test]
+fn score_every_1_is_bit_for_bit_pre_change_in_all_modes() {
+    // Single worker vs the pre-refactor reference.
+    for sampler_cfg in [SamplerConfig::es_default(), SamplerConfig::eswp_default()] {
+        let (mut cfg, split) = setup(sampler_cfg.clone(), 512, 7);
+        cfg.score_every = 1;
+        let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+        let engine_run = train(&cfg, &mut rt, &split).unwrap();
+        let reference_sampler = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
+        let reference = reference_train(&cfg, &mut rt, &split, reference_sampler).unwrap();
+        assert_identical(&engine_run, &reference);
+    }
+    // Sequential simulation vs the reference.
+    let (mut cfg, split) = setup(SamplerConfig::es_default(), 512, 11);
+    cfg.workers = 4;
+    cfg.score_every = 1;
+    let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+    let engine_run = train(&cfg, &mut rt, &split).unwrap();
+    let reference_sampler = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
+    let reference = reference_train(&cfg, &mut rt, &split, reference_sampler).unwrap();
+    assert_identical(&engine_run, &reference);
+    // Threaded: explicit k=1 vs the default config (guards both the
+    // default value and any k==1 gating asymmetry on the replica path).
+    let (mut cfg_default, split) = setup(SamplerConfig::eswp_default(), 512, 13);
+    cfg_default.workers = 4;
+    cfg_default.threaded_workers = true;
+    let mut cfg_k1 = cfg_default.clone();
+    cfg_k1.score_every = 1;
+    let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+    let a = train(&cfg_default, &mut rt, &split).unwrap();
+    let b = train(&cfg_k1, &mut rt, &split).unwrap();
+    assert_identical(&a, &b);
+}
+
+/// Set-level and baseline methods never run the scoring FP, so the
+/// cadence knob must be a strict no-op for them — any k, any mode.
+#[test]
+fn score_every_is_noop_for_non_scoring_methods() {
+    for sampler_cfg in [SamplerConfig::Uniform, SamplerConfig::infobatch_default()] {
+        for threaded in [false, true] {
+            let (mut cfg, split) = setup(sampler_cfg.clone(), 512, 29);
+            if threaded {
+                cfg.workers = 4;
+                cfg.threaded_workers = true;
+            }
+            let mut cfg_k4 = cfg.clone();
+            cfg_k4.score_every = 4;
+            let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+            let a = train(&cfg, &mut rt, &split).unwrap();
+            let b = train(&cfg_k4, &mut rt, &split).unwrap();
+            assert_identical(&a, &b);
+            assert_eq!(a.cost.fp_samples, 0);
+            assert_eq!(b.cost.fp_passes, 0);
+        }
+    }
+}
+
+/// Strided runs are seed-deterministic in every mode, and the stale
+/// steps actually skip the scoring FP (fp accounting shrinks ~k-fold).
+#[test]
+fn score_every_4_is_deterministic_and_amortizes_fp() {
+    for threaded in [false, true] {
+        // n=1024 so threaded shards carry 4 meta-batches per epoch — the
+        // per-epoch worker cadence then amortizes the full 4x (a shard
+        // with fewer than k eligible steps caps the saving at its length).
+        let (mut cfg, split) = setup(SamplerConfig::es_default(), 1024, 31);
+        cfg.score_every = 4;
+        if threaded {
+            cfg.workers = 4;
+            cfg.threaded_workers = true;
+        }
+        let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+        let a = train(&cfg, &mut rt, &split).unwrap();
+        let b = train(&cfg, &mut rt, &split).unwrap();
+        assert_eq!(a.loss_curve, b.loss_curve, "threaded={threaded}");
+        assert_eq!(a.cost.fp_samples, b.cost.fp_samples, "threaded={threaded}");
+        assert_eq!(a.cost.fp_passes, b.cost.fp_passes, "threaded={threaded}");
+
+        let mut cfg_k1 = cfg.clone();
+        cfg_k1.score_every = 1;
+        let k1 = train(&cfg_k1, &mut rt, &split).unwrap();
+        assert!(
+            a.cost.fp_samples * 3 < k1.cost.fp_samples,
+            "threaded={threaded}: fp_samples {} at k=4 vs {} at k=1",
+            a.cost.fp_samples,
+            k1.cost.fp_samples
+        );
+        assert_eq!(a.cost.bp_samples, k1.cost.bp_samples, "BP volume is cadence-independent");
+    }
+}
+
+/// The fp_samples accounting contract: with every step scoring-eligible
+/// (ES, anneal_frac = 0) and a single worker, fp_samples must equal
+/// ⌈steps / k⌉ · meta_batch exactly — the scoring FP fires on eligible
+/// steps 0, k, 2k, ... of the run and nowhere else.
+#[test]
+fn fp_samples_scale_as_ceil_steps_over_k_times_meta_batch() {
+    evosample::util::proptest::check("fp_samples == ceil(steps/k)*B", 8, |g| {
+        let k = g.usize_in(1, 8);
+        let epochs = g.usize_in(1, 3);
+        let n = 32 * g.usize_in(1, 4);
+        let meta_batch = [16usize, 32][g.usize_in(0, 1)];
+        let ds = DatasetConfig::SynthCifar {
+            n,
+            classes: 4,
+            label_noise: 0.0,
+            hard_frac: 0.2,
+        };
+        let split = data::build(&ds, 32, 99);
+        let mut cfg = RunConfig::new("freq_prop", "native", ds);
+        cfg.epochs = epochs;
+        cfg.meta_batch = meta_batch;
+        cfg.mini_batch = meta_batch / 2;
+        cfg.score_every = k;
+        cfg.lr = LrSchedule::Const { lr: 0.02 };
+        cfg.test_n = 32;
+        cfg.sampler = SamplerConfig::Es { beta1: 0.2, beta2: 0.9, anneal_frac: 0.0 };
+        let mut rt = NativeRuntime::new(split.train.x_len(), 8, 4);
+        let r = train(&cfg, &mut rt, &split).unwrap();
+        let steps = r.steps as usize;
+        let expected_passes = steps.div_ceil(k);
+        evosample::prop_assert!(
+            r.cost.fp_passes as usize == expected_passes,
+            "fp_passes {} != ceil({steps}/{k}) = {expected_passes}",
+            r.cost.fp_passes
+        );
+        evosample::prop_assert!(
+            r.cost.fp_samples as usize == expected_passes * meta_batch,
+            "fp_samples {} != {expected_passes} * {meta_batch}",
+            r.cost.fp_samples
+        );
+        Ok(())
+    });
+}
+
+// ---- pruned-set batching floor (min-keep clamp) -------------------------
+
+/// Documents the hazard the clamp guards against: a kept set smaller
+/// than one meta-batch makes the loader's wraparound pad emit duplicate
+/// indices INSIDE a single meta-batch.
+#[test]
+fn loader_duplicates_in_batch_when_kept_below_meta_batch() {
+    let kept: Vec<u32> = (0..13).collect();
+    let mut loader = EpochLoader::new(&kept, 64, &mut Pcg64::new(1));
+    let batch = loader.next_batch().unwrap();
+    assert_eq!(batch.len(), 64);
+    let mut sorted = batch.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert!(sorted.len() < batch.len(), "wraparound must duplicate here");
+}
+
+/// Regression: a high-prune ESWP config whose kept set would drop below
+/// one meta-batch is clamped back up, so no meta-batch ever carries a
+/// duplicate index (the without-replacement contract of
+/// `weights::sample_without_replacement` holds end-to-end).
+#[test]
+fn high_prune_configs_never_duplicate_indices_within_a_meta_batch() {
+    use evosample::prelude::{Event, SessionBuilder};
+    use std::sync::{Arc, Mutex};
+    let ds = DatasetConfig::SynthCifar { n: 128, classes: 4, label_noise: 0.0, hard_frac: 0.2 };
+    let split = data::build(&ds, 64, 3);
+    let mut cfg = RunConfig::new("min_keep", "native", ds);
+    cfg.epochs = 4;
+    cfg.meta_batch = 64;
+    cfg.mini_batch = 16;
+    cfg.lr = LrSchedule::Const { lr: 0.02 };
+    cfg.test_n = 64;
+    // r=0.9 over n=128 keeps ceil(12.8)=13 < B=64 without the clamp.
+    cfg.sampler = SamplerConfig::Eswp {
+        beta1: 0.2,
+        beta2: 0.8,
+        anneal_frac: 0.0,
+        prune_ratio: 0.9,
+    };
+    let kepts: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = kepts.clone();
+    let mut rt = NativeRuntime::new(split.train.x_len(), 16, 4);
+    let r = SessionBuilder::from_config(cfg.clone())
+        .split(split)
+        .runtime_mut(&mut rt)
+        .on_event(move |ev: &Event| {
+            if let Event::EpochStart { kept, .. } = ev {
+                sink.lock().unwrap().push(*kept);
+            }
+        })
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(r.steps > 0);
+    let kepts = kepts.lock().unwrap();
+    assert_eq!(kepts.len(), cfg.epochs);
+    for (epoch, &kept) in kepts.iter().enumerate() {
+        assert!(
+            kept >= cfg.meta_batch,
+            "epoch {epoch}: kept {kept} < meta_batch {} — clamp failed",
+            cfg.meta_batch
+        );
+    }
+    // The clamp floors at B, it does not disable pruning: with r=0.9 the
+    // kept set must still be far below the full dataset.
+    assert!(kepts.iter().any(|&k| k < 128), "pruning still active");
+}
+
+/// The sequential simulation shards the kept set too; its effective
+/// worker count is floored at kept/B for the same reason. (Identity —
+/// same shards, same RNG forks — for every config whose shards were
+/// already >= one meta-batch, so the bit-for-bit reference pin holds.)
+#[test]
+fn simulation_shards_stay_at_least_one_meta_batch() {
+    let ds = DatasetConfig::SynthCifar { n: 192, classes: 4, label_noise: 0.0, hard_frac: 0.2 };
+    let split = data::build(&ds, 64, 5);
+    let mut cfg = RunConfig::new("sim_shard_floor", "native", ds);
+    cfg.epochs = 2;
+    cfg.meta_batch = 64;
+    cfg.mini_batch = 64;
+    cfg.lr = LrSchedule::Const { lr: 0.02 };
+    cfg.test_n = 64;
+    cfg.workers = 4; // 192/64 = 3 full shards => only 3 effective workers
+    cfg.sampler = SamplerConfig::Uniform;
+    let mut rt = NativeRuntime::new(split.train.x_len(), 16, 4);
+    let r = train(&cfg, &mut rt, &split).unwrap();
+    // 3 effective workers × 1 batch of 64 × 2 epochs — no wraparound pad,
+    // so no duplicate indices inside any meta-batch (the old behavior
+    // split 4 shards of 48, each padded up to 64 with duplicates).
+    assert_eq!(r.cost.bp_samples, (2 * 192) as u64);
+    assert_eq!(r.steps, 6);
+}
+
+/// Threaded mode shards the kept set; shards shorter than one meta-batch
+/// would reintroduce the duplicate-index hazard per worker, so the
+/// effective worker count is clamped to kept/B.
+#[test]
+fn threaded_shards_stay_at_least_one_meta_batch() {
+    let ds = DatasetConfig::SynthCifar { n: 192, classes: 4, label_noise: 0.0, hard_frac: 0.2 };
+    let split = data::build(&ds, 64, 5);
+    let mut cfg = RunConfig::new("shard_floor", "native", ds);
+    cfg.epochs = 2;
+    cfg.meta_batch = 64;
+    cfg.mini_batch = 64;
+    cfg.lr = LrSchedule::Const { lr: 0.02 };
+    cfg.test_n = 64;
+    cfg.workers = 4; // 192/64 = 3 full shards => only 3 effective workers
+    cfg.threaded_workers = true;
+    cfg.sampler = SamplerConfig::Uniform;
+    let mut rt = NativeRuntime::new(split.train.x_len(), 16, 4);
+    let a = train(&cfg, &mut rt, &split).unwrap();
+    let b = train(&cfg, &mut rt, &split).unwrap();
+    assert_eq!(a.loss_curve, b.loss_curve);
+    // 3 effective workers × 1 batch of 64 × 2 epochs, no wraparound pad.
+    assert_eq!(a.cost.bp_samples, (2 * 192) as u64);
+}
+
 #[test]
 fn spawn_replica_default_is_graceful_unsupported() {
     struct NoReplicas;
