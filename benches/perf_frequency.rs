@@ -1,6 +1,9 @@
 //! Frequency-tuning perf sweep: scoring-FP cost amortized over
 //! k ∈ {1, 2, 4, 8} steps (`run.score_every`) for ES on the CIFAR-dims
-//! MLP — the paper's "flexible frequency tuning" wall-clock lever.
+//! MLP — the paper's "flexible frequency tuning" wall-clock lever — plus
+//! the `score_every × scoring_precision` cross-sweep (DESIGN.md §9):
+//! bf16 ranked scoring at k ∈ {1, 4}, showing the cadence stride and the
+//! precision ladder compose on the measured scoring wall-clock.
 //!
 //! Emits machine-readable `BENCH_frequency.json` (per-k fp_samples,
 //! fp_passes, measured scoring seconds, accuracy) so the amortization is
@@ -64,6 +67,31 @@ fn main() {
         per_k.push((k, r));
     }
 
+    // ---- precision × cadence cross-sweep (DESIGN.md §9) -----------------
+    // bf16 ranked scoring at k ∈ {1, 4}: the precision ladder divides the
+    // per-pass scoring cost while the cadence stride divides the number
+    // of passes, so the two savings compose multiplicatively on the
+    // measured scoring wall-clock.
+    println!("\n{:>2} {:>6} {:>12} {:>12} {:>8}", "k", "prec", "fp_samples", "scoring_ms", "acc%");
+    let mut per_kp = Vec::new();
+    for &k in &[1usize, 4] {
+        cfg.score_every = k;
+        cfg.scoring_precision = ScoringPrecision::Bf16;
+        let mut rt = NativeRuntime::new(split.train.x_len(), hidden, 10);
+        let sampler =
+            evosample::sampler::build(&cfg.sampler, split.train.n, cfg.epochs).expect(&cfg.name);
+        let r = train_with_sampler(&cfg, &mut rt, &split, sampler).expect(&cfg.name);
+        println!(
+            "{k:>2} {:>6} {:>12} {:>12.2} {:>8.2}",
+            "bf16",
+            r.cost.fp_samples,
+            r.cost.scoring_s * 1e3,
+            r.accuracy_pct()
+        );
+        per_kp.push((k, r));
+    }
+    cfg.scoring_precision = ScoringPrecision::Exact;
+
     let find = |k: usize| &per_k.iter().find(|(kk, _)| *kk == k).unwrap().1;
     let k1 = find(1);
     let k4 = find(4);
@@ -77,6 +105,16 @@ fn main() {
         k1.cost.fp_samples,
         k4.cost.fp_samples,
         if k4.cost.fp_samples > 0 { k1.cost.fp_samples / k4.cost.fp_samples } else { 0 },
+    );
+    let bf16_k4 = &per_kp.iter().find(|(kk, _)| *kk == 4).unwrap().1;
+    let composed_saving = if k1.cost.scoring_s > 0.0 {
+        100.0 * (1.0 - bf16_k4.cost.scoring_s / k1.cost.scoring_s)
+    } else {
+        0.0
+    };
+    println!(
+        "bf16 @ k=4 vs exact @ k=1: measured scoring time saved {composed_saving:.1}% \
+         (cadence x precision, composed)"
     );
 
     let rows: Vec<Json> = per_k
@@ -108,7 +146,28 @@ fn main() {
             ]),
         ),
         ("sweep", Json::Arr(rows)),
+        (
+            "precision_sweep",
+            Json::Arr(
+                per_k
+                    .iter()
+                    .filter(|(k, _)| *k == 1 || *k == 4)
+                    .map(|(k, r)| (*k, "exact", r))
+                    .chain(per_kp.iter().map(|(k, r)| (*k, "bf16", r)))
+                    .map(|(k, prec, r)| {
+                        obj(vec![
+                            ("k", num(k as f64)),
+                            ("precision", s(prec)),
+                            ("fp_samples", num(r.cost.fp_samples as f64)),
+                            ("scoring_s", num(r.cost.scoring_s)),
+                            ("acc_pct", num(r.accuracy_pct())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         ("scoring_time_saved_pct_k4", num(scoring_saving)),
+        ("scoring_time_saved_pct_bf16_k4_vs_exact_k1", num(composed_saving)),
     ]);
     let payload = out.to_string_compact() + "\n";
     std::fs::write("BENCH_frequency.json", payload).expect("write BENCH_frequency.json");

@@ -75,7 +75,7 @@ fn main() {
         scalar.train_step(&x_train, &y_train, &w_train, 0.0, TRAIN_N)
     });
 
-    // ---- blocked kernels at 1 / 2 / 4 threads ---------------------------
+    // ---- kernel layer (default dispatch) at 1 / 2 / 4 threads -----------
     let mut per_thread: Vec<(usize, BenchResult, BenchResult)> = Vec::new();
     for &t in &[1usize, 2, 4] {
         let mut rt = NativeRuntime::new(D, H, C).with_kernel_threads(t);
@@ -134,7 +134,121 @@ fn main() {
     std::fs::write("BENCH_native.json", payload).expect("write BENCH_native.json");
     println!("wrote BENCH_native.json");
 
+    scoring_section(&bench, smoke, cores, &params0, &x_fwd, &y_fwd);
     xla_section(&bench, smoke);
+}
+
+/// Dispatch × precision sweep over the scoring forward (DESIGN.md §9):
+/// blocked-scalar vs SIMD `loss_fwd`, and exact vs bf16 ranked scoring,
+/// at 1 and 4 kernel threads on the CIFAR-scale shape. Emits
+/// `BENCH_scoring.json` and enforces the two claims the fast path
+/// exists for — SIMD beats blocked-scalar and bf16 beats exact — so the
+/// CI smoke run fails on a regression instead of silently keeping a
+/// slower default.
+fn scoring_section(
+    bench: &Bencher,
+    smoke: bool,
+    cores: usize,
+    params0: &[f32],
+    x_fwd: &[f32],
+    y_fwd: &[i32],
+) {
+    use evosample::runtime::kernel::KernelDispatch;
+    println!("\n== scoring path: dispatch x precision (d={D}, h={H}, c={C}, n={FWD_N}) ==");
+
+    let mut rows: BTreeMap<String, Json> = BTreeMap::new();
+    let mut medians: BTreeMap<String, f64> = BTreeMap::new();
+    for &t in &[1usize, 4] {
+        for dispatch in [KernelDispatch::Scalar, KernelDispatch::Simd] {
+            let mut rt =
+                NativeRuntime::new(D, H, C).with_kernel_threads(t).with_dispatch(dispatch);
+            rt.set_params(params0).unwrap();
+            let r = bench.run(
+                &format!("{:<7} t={t} loss_fwd    n={FWD_N}", dispatch.as_str()),
+                || rt.loss_fwd(BatchX::F32(x_fwd), y_fwd, FWD_N).unwrap(),
+            );
+            let tag = format!("{}_t{t}", dispatch.as_str());
+            medians.insert(tag.clone(), r.median.as_secs_f64());
+            rows.insert(
+                tag,
+                obj(vec![
+                    ("fwd_ns_per_sample", num(ns_per_sample(&r, FWD_N))),
+                    ("fwd_samples_per_s", num(samples_per_s(&r, FWD_N))),
+                ]),
+            );
+        }
+        // bf16 ranked scoring (always the simd kernels; the bf16 shadow
+        // is refreshed once outside the timed loop, as in training).
+        let mut rt = NativeRuntime::new(D, H, C).with_kernel_threads(t);
+        rt.set_params(params0).unwrap();
+        let mut out: Vec<f32> = Vec::with_capacity(FWD_N);
+        let r = bench.run(&format!("bf16    t={t} loss_ranked n={FWD_N}"), || {
+            out.clear();
+            rt.loss_fwd_ranked(BatchX::F32(x_fwd), y_fwd, FWD_N, &mut out).unwrap()
+        });
+        let tag = format!("bf16_t{t}");
+        medians.insert(tag.clone(), r.median.as_secs_f64());
+        rows.insert(
+            tag,
+            obj(vec![
+                ("fwd_ns_per_sample", num(ns_per_sample(&r, FWD_N))),
+                ("fwd_samples_per_s", num(samples_per_s(&r, FWD_N))),
+            ]),
+        );
+    }
+
+    let simd_vs_blocked = medians["scalar_t1"] / medians["simd_t1"].max(1e-12);
+    let bf16_vs_exact = medians["simd_t1"] / medians["bf16_t1"].max(1e-12);
+    println!(
+        "\nscoring fwd: simd {simd_vs_blocked:.2}x vs blocked-scalar, \
+         bf16 {bf16_vs_exact:.2}x vs exact-simd (t=1; both must be > 1x)"
+    );
+
+    let out = obj(vec![
+        ("bench", s("perf_scoring")),
+        ("backend", s("native")),
+        ("mode", s(if smoke { "smoke" } else { "full" })),
+        ("cores", num(cores as f64)),
+        (
+            "dims",
+            obj(vec![
+                ("d", num(D as f64)),
+                ("h", num(H as f64)),
+                ("c", num(C as f64)),
+                ("fwd_batch", num(FWD_N as f64)),
+            ]),
+        ),
+        ("rows", Json::Obj(rows)),
+        (
+            "speedup",
+            obj(vec![
+                ("fwd_simd_t1_vs_blocked_t1", num(simd_vs_blocked)),
+                ("fwd_bf16_t1_vs_exact_simd_t1", num(bf16_vs_exact)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_scoring.json", out.to_string_compact() + "\n")
+        .expect("write BENCH_scoring.json");
+    println!("wrote BENCH_scoring.json");
+
+    if simd_vs_blocked <= 1.0 {
+        eprintln!(
+            "FAIL: simd loss_fwd ({:.3} ms) is not faster than blocked-scalar \
+             ({:.3} ms) at t=1 — the default dispatch would be a slowdown",
+            medians["simd_t1"] * 1e3,
+            medians["scalar_t1"] * 1e3,
+        );
+        std::process::exit(1);
+    }
+    if bf16_vs_exact <= 1.0 {
+        eprintln!(
+            "FAIL: bf16 ranked scoring ({:.3} ms) is not faster than the exact \
+             simd forward ({:.3} ms) at t=1 — the precision ladder buys nothing",
+            medians["bf16_t1"] * 1e3,
+            medians["simd_t1"] * 1e3,
+        );
+        std::process::exit(1);
+    }
 }
 
 /// XLA step costs per model/batch (FP vs BP) — unchanged from the

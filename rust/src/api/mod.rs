@@ -136,6 +136,15 @@ impl<'rt> SessionBuilder<'rt> {
         self
     }
 
+    /// Scoring-FP precision (DESIGN.md §9): `Exact` (default,
+    /// bit-for-bit) or `Bf16` (rank from a bf16 weight shadow; stacks
+    /// multiplicatively with `score_every`). The BP batch and eval are
+    /// never affected.
+    pub fn scoring_precision(mut self, p: crate::config::ScoringPrecision) -> Self {
+        self.cfg.scoring_precision = p;
+        self
+    }
+
     pub fn lr(mut self, schedule: LrSchedule) -> Self {
         self.cfg.lr = schedule;
         self

@@ -7,7 +7,7 @@ pub use super::events::{Event, EventBus, EventSink, ProgressSink};
 pub use super::{RunResult, Session, SessionBuilder};
 
 pub use crate::config::presets::{all_samplers, Scale};
-pub use crate::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
+pub use crate::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig, ScoringPrecision};
 pub use crate::coordinator::{
     predicted_saved_time_pct, saved_time_pct, CostSummary, EvalStats, TrainResult,
 };

@@ -223,6 +223,42 @@ impl DatasetConfig {
     }
 }
 
+/// Numeric precision of the sampler's scoring forward pass (the
+/// ScoringFp stage). Selection only needs a *ranking*, so the scoring
+/// FP can run on reduced-precision weights without touching what the
+/// optimizer sees — the BP batch and eval always run exact (DESIGN.md
+/// §9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ScoringPrecision {
+    /// Exact f32 scoring (`loss_fwd_into`) — bit-for-bit the historical
+    /// behavior. The default.
+    #[default]
+    Exact,
+    /// bf16-weight scoring (`loss_fwd_ranked`): runtimes that support it
+    /// score from a bf16 shadow of the weights; others transparently
+    /// fall back to exact.
+    Bf16,
+}
+
+impl ScoringPrecision {
+    pub fn parse(s: &str) -> Result<ScoringPrecision, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "exact" | "f32" | "fp32" => Ok(ScoringPrecision::Exact),
+            "bf16" => Ok(ScoringPrecision::Bf16),
+            other => Err(format!(
+                "unknown scoring_precision {other:?} (expected \"exact\" or \"bf16\")"
+            )),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ScoringPrecision::Exact => "exact",
+            ScoringPrecision::Bf16 => "bf16",
+        }
+    }
+}
+
 /// One fully-specified training run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -243,6 +279,11 @@ pub struct RunConfig {
     /// ~1/k of its cost. `1` (default) is the historical per-step scoring,
     /// bit-for-bit. See DESIGN.md §8.
     pub score_every: usize,
+    /// Precision of the scoring FP: `Exact` (default, bit-for-bit) or
+    /// `Bf16` (rank from a bf16 weight shadow — stacks multiplicatively
+    /// with `score_every`). Never affects the BP batch or eval. See
+    /// DESIGN.md §9.
+    pub scoring_precision: ScoringPrecision,
     pub lr: LrSchedule,
     pub seed: u64,
     /// Evaluate on the held-out set every k epochs (0 = only at end).
@@ -283,6 +324,7 @@ impl RunConfig {
             meta_batch: 128,
             mini_batch: 32,
             score_every: 1,
+            scoring_precision: ScoringPrecision::Exact,
             lr: LrSchedule::Const { lr: 1e-3 },
             seed: 0,
             eval_every: 0,
@@ -451,6 +493,9 @@ impl RunConfig {
             meta_batch: doc.i64_or("run.meta_batch", 128) as usize,
             mini_batch: doc.i64_or("run.mini_batch", 32) as usize,
             score_every: doc.i64_or("run.score_every", 1) as usize,
+            scoring_precision: ScoringPrecision::parse(
+                &doc.str_or("run.scoring_precision", "exact"),
+            )?,
             lr,
             seed: doc.i64_or("run.seed", 0) as u64,
             eval_every: doc.i64_or("run.eval_every", 0) as usize,
@@ -585,6 +630,30 @@ max_lr = 0.05
         let src = "[run]\nmodel = \"mlp_cifar10\"\n[dataset]\nkind = \"synth_cifar\"\nn = 1024\n";
         let cfg = RunConfig::from_doc(&Doc::parse(src).unwrap()).unwrap();
         assert_eq!(cfg.score_every, 1, "default cadence is per-step scoring");
+    }
+
+    #[test]
+    fn scoring_precision_parses_from_toml_and_defaults_to_exact() {
+        let src = "[run]\nmodel = \"mlp_cifar10\"\nscoring_precision = \"bf16\"\n[dataset]\nkind = \"synth_cifar\"\nn = 1024\n";
+        let cfg = RunConfig::from_doc(&Doc::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.scoring_precision, ScoringPrecision::Bf16);
+        let src = "[run]\nmodel = \"mlp_cifar10\"\n[dataset]\nkind = \"synth_cifar\"\nn = 1024\n";
+        let cfg = RunConfig::from_doc(&Doc::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.scoring_precision, ScoringPrecision::Exact, "default is exact");
+        let src = "[run]\nmodel = \"mlp_cifar10\"\nscoring_precision = \"fp8\"\n[dataset]\nkind = \"synth_cifar\"\nn = 1024\n";
+        let err = RunConfig::from_doc(&Doc::parse(src).unwrap()).unwrap_err();
+        assert!(err.contains("scoring_precision"), "{err}");
+    }
+
+    #[test]
+    fn scoring_precision_parse_accepts_aliases() {
+        assert_eq!(ScoringPrecision::parse("exact"), Ok(ScoringPrecision::Exact));
+        assert_eq!(ScoringPrecision::parse("f32"), Ok(ScoringPrecision::Exact));
+        assert_eq!(ScoringPrecision::parse(" BF16 "), Ok(ScoringPrecision::Bf16));
+        assert!(ScoringPrecision::parse("int8").is_err());
+        for p in [ScoringPrecision::Exact, ScoringPrecision::Bf16] {
+            assert_eq!(ScoringPrecision::parse(p.as_str()), Ok(p));
+        }
     }
 
     #[test]

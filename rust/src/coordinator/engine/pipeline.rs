@@ -14,12 +14,15 @@
 //! The scoring-FP stage honors `run.score_every` (frequency tuning,
 //! DESIGN.md §8): only every k-th scoring-eligible step per stream runs
 //! the forward pass; the steps in between select from the sampler's
-//! cached weight tables via [`Sampler::select_cached`].
+//! cached weight tables via [`Sampler::select_cached`]. It also honors
+//! `run.scoring_precision` (DESIGN.md §9): `bf16` routes the FP through
+//! [`ModelRuntime::loss_fwd_ranked`] — a ranking-grade reduced-precision
+//! forward — while the BP batch and eval always stay exact.
 
 use std::time::{Duration, Instant};
 
 use crate::api::events::{emit_into, Event, EventBus};
-use crate::config::RunConfig;
+use crate::config::{RunConfig, ScoringPrecision};
 use crate::data::TensorDataset;
 use crate::runtime::{BatchBuf, BatchX, ModelRuntime};
 use crate::sampler::Sampler;
@@ -223,13 +226,25 @@ impl StepPipeline {
         if scoring {
             let t0 = Instant::now();
             self.meta_losses.clear();
+            // The scoring FP only needs a ranking, so it may run on the
+            // runtime's reduced-precision path (DESIGN.md §9). The BP
+            // batch (train_step) and eval always stay exact.
             staged(timers, &mut observer, Stage::ScoringFp, || {
-                rt.loss_fwd_into(
-                    self.meta_buf.x(train_ds),
-                    &self.meta_buf.y,
-                    meta.len(),
-                    &mut self.meta_losses,
-                )
+                if cfg.scoring_precision == ScoringPrecision::Bf16 {
+                    rt.loss_fwd_ranked(
+                        self.meta_buf.x(train_ds),
+                        &self.meta_buf.y,
+                        meta.len(),
+                        &mut self.meta_losses,
+                    )
+                } else {
+                    rt.loss_fwd_into(
+                        self.meta_buf.x(train_ds),
+                        &self.meta_buf.y,
+                        meta.len(),
+                        &mut self.meta_losses,
+                    )
+                }
             })?;
             self.stats.fp_samples += meta.len() as u64;
             self.stats.fp_passes += 1;

@@ -4,6 +4,7 @@
 //! Subcommands:
 //!   train          --config <run.toml> [--trials N] [--workers W]
 //!                  [--threaded-workers] [--sync-every K] [--score-every K]
+//!                  [--scoring-precision exact|bf16]
 //!   list-models                       (artifact inventory)
 //!   list-samplers                     (registry inventory: name/kind/params)
 //!   experiment     --id <table2|table3|table4|table5|fig4|fig5|fig6|fig7|
@@ -29,8 +30,11 @@ evosample — Data-Efficient Training by Evolved Sampling (ES/ESWP)
 USAGE:
   evosample train --config <run.toml> [--trials N] [--workers W]
                   [--threaded-workers] [--sync-every K] [--score-every K]
+                  [--scoring-precision exact|bf16]
                   (--score-every K re-scores the meta-batch every K-th
-                   step and selects from cached weights in between)
+                   step and selects from cached weights in between;
+                   --scoring-precision bf16 ranks the meta-batch from a
+                   bf16 weight shadow — BP and eval stay exact)
   evosample list-models
   evosample list-samplers
   evosample experiment --id <table2|table3|table4|table5|fig1|fig4|fig5|
@@ -72,12 +76,19 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             if let Some(k) = args.usize_flag("score-every").map_err(|e| anyhow::anyhow!("{e}"))? {
                 cfg.score_every = k;
             }
+            if let Some(p) = args.flag("scoring-precision") {
+                cfg.scoring_precision =
+                    config::ScoringPrecision::parse(p).map_err(|e| anyhow::anyhow!("{e}"))?;
+            }
             cfg.validate().map_err(|e| anyhow::anyhow!("config: {e}"))?;
             if cfg.score_every > 1 {
                 println!(
                     "scoring: every {} steps (stale-weight selection in between)",
                     cfg.score_every
                 );
+            }
+            if cfg.scoring_precision != config::ScoringPrecision::Exact {
+                println!("scoring: {} forward pass (BP and eval stay exact)", cfg.scoring_precision.as_str());
             }
             if cfg.threaded_workers {
                 println!(

@@ -18,6 +18,11 @@
 //!   unit-stride dots, axpy updates, relu-gated backward rows, and the
 //!   fused softmax-CE pass that produces per-sample loss and `dlogits`
 //!   from a single max/exp sweep.
+//! * [`simd`] — the explicit SIMD fast path: portable `[f32; 8]` lane
+//!   blocks, multi-accumulator dots, and a register-blocked hidden
+//!   forward, plus the bf16 dequantize-on-load scoring kernels. Which
+//!   exact path a runtime uses is chosen once via [`KernelDispatch`]
+//!   (default: simd; `EVOSAMPLE_KERNEL_DISPATCH` overrides).
 //! * [`pool`] — a persistent `std::thread` worker pool, spawned once per
 //!   runtime and reused for every step. Work is distributed by batch-row
 //!   ranges (forward) and by fixed gradient shards (backward).
@@ -40,6 +45,7 @@ pub mod gemm;
 pub mod pack;
 pub mod pool;
 pub mod reference;
+pub mod simd;
 
 /// Fixed number of gradient shards. This is the determinism anchor (the
 /// reduction tree never changes shape with the thread count) and the
@@ -47,14 +53,161 @@ pub mod reference;
 /// counts are clamped to it.
 pub const GRAD_SHARDS: usize = 8;
 
+/// Selects which exact kernel implementation a runtime's hot paths run
+/// on. Both variants are deterministic (bit-stable across thread
+/// counts); they differ from each other only in reduction shape, so a
+/// runtime applies ONE variant to every kernel call site — mixing them
+/// inside a run would break the self-consistency contracts
+/// (`loss_fwd` vs retained-forward losses, fused-CE vs scoring CE).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelDispatch {
+    /// The blocked-scalar kernels in [`gemm`] — SLP-vectorizable but
+    /// with a single accumulator chain per dot.
+    Scalar,
+    /// The explicit `[f32; 8]`-block kernels in [`simd`] — multi-chain
+    /// dots and register-blocked hidden forward.
+    Simd,
+}
+
+impl KernelDispatch {
+    pub fn parse(s: &str) -> Option<KernelDispatch> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" | "blocked" => Some(KernelDispatch::Scalar),
+            "simd" => Some(KernelDispatch::Simd),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelDispatch::Scalar => "scalar",
+            KernelDispatch::Simd => "simd",
+        }
+    }
+
+    #[inline]
+    pub fn hidden_fwd(
+        &self,
+        x: &[f32],
+        w1t: &[f32],
+        b1: &[f32],
+        d: usize,
+        h: usize,
+        h_out: &mut [f32],
+    ) {
+        match self {
+            KernelDispatch::Scalar => gemm::hidden_fwd(x, w1t, b1, d, h, h_out),
+            KernelDispatch::Simd => simd::hidden_fwd(x, w1t, b1, d, h, h_out),
+        }
+    }
+
+    #[inline]
+    pub fn logits_fwd(
+        &self,
+        hrows: &[f32],
+        w2: &[f32],
+        b2: &[f32],
+        h: usize,
+        c: usize,
+        out: &mut [f32],
+    ) {
+        match self {
+            KernelDispatch::Scalar => gemm::logits_fwd(hrows, w2, b2, h, c, out),
+            KernelDispatch::Simd => simd::logits_fwd(hrows, w2, b2, h, c, out),
+        }
+    }
+
+    #[inline]
+    pub fn ce_loss_row(&self, li: &[f32], y: usize) -> f32 {
+        match self {
+            KernelDispatch::Scalar => gemm::ce_loss_row(li, y),
+            KernelDispatch::Simd => simd::ce_loss_row(li, y),
+        }
+    }
+
+    #[inline]
+    pub fn ce_loss_grad_row(&self, li: &[f32], y: usize, scale: f32, dl: &mut [f32]) -> f32 {
+        match self {
+            KernelDispatch::Scalar => gemm::ce_loss_grad_row(li, y, scale, dl),
+            KernelDispatch::Simd => simd::ce_loss_grad_row(li, y, scale, dl),
+        }
+    }
+
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_row(
+        &self,
+        xi: &[f32],
+        hi: &[f32],
+        dl: &[f32],
+        w2: &[f32],
+        d: usize,
+        c: usize,
+        gw1t: &mut [f32],
+        gb1: &mut [f32],
+        gw2: &mut [f32],
+        gb2: &mut [f32],
+        dh: &mut [f32],
+    ) {
+        match self {
+            KernelDispatch::Scalar => {
+                gemm::backward_row(xi, hi, dl, w2, d, c, gw1t, gb1, gw2, gb2, dh)
+            }
+            KernelDispatch::Simd => {
+                simd::backward_row(xi, hi, dl, w2, d, c, gw1t, gb1, gw2, gb2, dh)
+            }
+        }
+    }
+}
+
+/// Resolve the default kernel dispatch: the `EVOSAMPLE_KERNEL_DISPATCH`
+/// env var when set to `simd` or `scalar`/`blocked`, otherwise
+/// [`KernelDispatch::Simd`]. Unrecognized values warn once and fall
+/// back to the default.
+pub fn default_dispatch() -> KernelDispatch {
+    match std::env::var("EVOSAMPLE_KERNEL_DISPATCH") {
+        Ok(v) => KernelDispatch::parse(&v).unwrap_or_else(|| {
+            static WARN: std::sync::Once = std::sync::Once::new();
+            WARN.call_once(|| {
+                eprintln!(
+                    "warning: EVOSAMPLE_KERNEL_DISPATCH={v:?} is not \"simd\" or \
+                     \"scalar\"; using the simd kernels"
+                );
+            });
+            KernelDispatch::Simd
+        }),
+        Err(_) => KernelDispatch::Simd,
+    }
+}
+
+/// Parse an `EVOSAMPLE_KERNEL_THREADS` value: a positive integer,
+/// clamped to [`GRAD_SHARDS`]. `None` means the value is malformed (not
+/// an integer, or zero — zero only means "auto" in `run.kernel_threads`,
+/// never in the env var).
+fn parse_env_threads(v: &str) -> Option<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(t) if t >= 1 => Some(t.min(GRAD_SHARDS)),
+        _ => None,
+    }
+}
+
 /// Resolve the default kernel worker count: the
 /// `EVOSAMPLE_KERNEL_THREADS` env var when set to a positive integer,
 /// otherwise `available_parallelism`, both clamped to [`GRAD_SHARDS`].
+/// A malformed env value warns once (instead of being silently
+/// swallowed) and falls back to `available_parallelism`.
 pub fn default_threads() -> usize {
     if let Ok(v) = std::env::var("EVOSAMPLE_KERNEL_THREADS") {
-        if let Ok(t) = v.trim().parse::<usize>() {
-            if t >= 1 {
-                return t.min(GRAD_SHARDS);
+        match parse_env_threads(&v) {
+            Some(t) => return t,
+            None => {
+                static WARN: std::sync::Once = std::sync::Once::new();
+                WARN.call_once(|| {
+                    eprintln!(
+                        "warning: EVOSAMPLE_KERNEL_THREADS={v:?} is not a positive \
+                         integer; falling back to available_parallelism"
+                    );
+                });
             }
         }
     }
@@ -112,5 +265,30 @@ mod tests {
         let t = default_threads();
         assert!(t >= 1);
         assert!(t <= GRAD_SHARDS);
+    }
+
+    #[test]
+    fn env_thread_values_parse_or_flag_malformed() {
+        assert_eq!(parse_env_threads("4"), Some(4));
+        assert_eq!(parse_env_threads(" 3 "), Some(3));
+        assert_eq!(parse_env_threads("12"), Some(GRAD_SHARDS), "clamped to shard count");
+        // Malformed (and zero — not a valid lane count) must be flagged
+        // so default_threads can warn instead of silently ignoring.
+        assert_eq!(parse_env_threads("0"), None);
+        assert_eq!(parse_env_threads("abc"), None);
+        assert_eq!(parse_env_threads("-2"), None);
+        assert_eq!(parse_env_threads("1.5"), None);
+        assert_eq!(parse_env_threads(""), None);
+    }
+
+    #[test]
+    fn dispatch_parses_and_round_trips() {
+        assert_eq!(KernelDispatch::parse("simd"), Some(KernelDispatch::Simd));
+        assert_eq!(KernelDispatch::parse("Scalar"), Some(KernelDispatch::Scalar));
+        assert_eq!(KernelDispatch::parse("blocked"), Some(KernelDispatch::Scalar));
+        assert_eq!(KernelDispatch::parse("avx512"), None);
+        for d in [KernelDispatch::Scalar, KernelDispatch::Simd] {
+            assert_eq!(KernelDispatch::parse(d.as_str()), Some(d));
+        }
     }
 }

@@ -161,6 +161,75 @@ impl PackedBuf {
     }
 }
 
+/// f32 → bf16 with round-to-nearest-even (the standard truncate-plus-
+/// carry trick on the raw bits). NaN payloads are preserved quiet.
+#[inline(always)]
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// bf16 → f32: exact (bf16 is the top half of the f32 bit pattern).
+#[inline(always)]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// A bf16 shadow of a [`PackedBuf`] — same packed segment layout, u16
+/// storage — for the reduced-precision forward-only scoring path.
+///
+/// Refresh contract (DESIGN.md §9): the shadow is a *derived* copy, only
+/// ever written by quantizing the exact packed parameters. The runtime
+/// marks it stale whenever the exact parameters change (`init`,
+/// `set_params`, after each train step) and re-quantizes lazily at the
+/// next `loss_fwd_ranked` call, so runs that never score in bf16 never
+/// pay for the mirror.
+#[derive(Clone, Debug)]
+pub struct PackedBf16 {
+    l: Layout,
+    buf: Vec<u16>,
+}
+
+impl PackedBf16 {
+    pub fn zeros(l: Layout) -> PackedBf16 {
+        PackedBf16 { l, buf: vec![0; l.param_count()] }
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.l
+    }
+
+    /// Re-quantize every segment from the exact packed parameters.
+    pub fn refresh_from(&mut self, packed: &PackedBuf) {
+        debug_assert_eq!(self.l, packed.layout());
+        for (o, &v) in self.buf.iter_mut().zip(packed.flat()) {
+            *o = f32_to_bf16(v);
+        }
+    }
+
+    /// `W1ᵀ` segment, row-major `[h][d]`.
+    pub fn w1t(&self) -> &[u16] {
+        &self.buf[..self.l.pb1_off()]
+    }
+
+    pub fn b1(&self) -> &[u16] {
+        &self.buf[self.l.pb1_off()..self.l.pw2_off()]
+    }
+
+    /// `W2` segment, row-major `[h][c]`.
+    pub fn w2(&self) -> &[u16] {
+        &self.buf[self.l.pw2_off()..self.l.pb2_off()]
+    }
+
+    pub fn b2(&self) -> &[u16] {
+        &self.buf[self.l.pb2_off()..]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +273,49 @@ mod tests {
         for j in 0..3 {
             assert_eq!(packed.w1t()[j * 2], j as f32);
             assert_eq!(packed.w1t()[j * 2 + 1], (10 + j) as f32);
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_is_exact_for_bf16_representable_values() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1.5, -3.25, 1e-38, 3.0e38] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2^-9 sits exactly between bf16(1.0) and the next bf16
+        // value; nearest-even resolves to 1.0 (even mantissa).
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(bf16_to_f32(f32_to_bf16(halfway)), 1.0);
+        // Just above halfway rounds up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(bf16_to_f32(f32_to_bf16(above)), f32::from_bits(0x3F81_0000));
+        // Relative error is bounded by 2^-8 for normal values.
+        for i in 1..200u32 {
+            let v = (i as f32 * 0.37).exp() * if i % 2 == 0 { 1.0 } else { -1.0 };
+            let back = bf16_to_f32(f32_to_bf16(v));
+            assert!(((back - v) / v).abs() <= 1.0 / 256.0, "v={v} back={back}");
+        }
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+    }
+
+    #[test]
+    fn packed_bf16_mirrors_segment_offsets() {
+        let l = Layout::new(7, 4, 3);
+        let flat: Vec<f32> = (0..l.param_count()).map(|i| (i as f32).cos()).collect();
+        let mut packed = PackedBuf::zeros(l);
+        packed.pack_from(&flat);
+        let mut shadow = PackedBf16::zeros(l);
+        shadow.refresh_from(&packed);
+        assert_eq!(shadow.w1t().len(), packed.w1t().len());
+        assert_eq!(shadow.b1().len(), packed.b1().len());
+        assert_eq!(shadow.w2().len(), packed.w2().len());
+        assert_eq!(shadow.b2().len(), packed.b2().len());
+        for (&q, &v) in shadow.w2().iter().zip(packed.w2()) {
+            assert_eq!(q, f32_to_bf16(v));
         }
     }
 

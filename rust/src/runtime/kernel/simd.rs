@@ -1,0 +1,571 @@
+//! Explicit SIMD fast path for the kernel layer.
+//!
+//! [`super::gemm`] is written so LLVM's SLP pass *can* vectorize it, but
+//! each dot product there carries a single 8-lane accumulator — one
+//! vector dependency chain, so the forward is FMA-latency-bound rather
+//! than load-bound. This module makes the vector shape explicit with a
+//! portable [`F32x8`] lane struct over `[f32; 8]` blocks (the layout
+//! LLVM reliably lowers to one YMM/2×XMM register) and restructures the
+//! hot loops around it:
+//!
+//! * [`dot`] — four independent `F32x8` accumulators (32 scalar lanes)
+//!   folded in a fixed tree, breaking the dependency chain 4× further
+//!   than `gemm::dot`;
+//! * [`hidden_fwd`] — register-blocks **four hidden units per pass** so
+//!   each loaded `x` chunk feeds four FMA chains (4× fewer x loads, 4
+//!   independent chains in flight);
+//! * [`logits_fwd`] / [`axpy`] — elementwise, bit-identical to the
+//!   scalar-blocked versions (no reductions to reorder);
+//! * [`ce_loss_row`] / [`ce_loss_grad_row`] — vectorized max sweep
+//!   (max is order-insensitive), exp/summation kept in scalar row order,
+//!   so the results are bit-identical to `gemm`'s fused CE;
+//! * [`backward_row`] — relu-gated rows through the simd dot/axpy.
+//!
+//! Reduction-carrying kernels (`dot`, `hidden_fwd`, `backward_row`'s
+//! `dh`) use a different — but still *fixed* — summation shape than
+//! `gemm`, so they are deterministic for a given input and thread count
+//! never changes bits, but they are only tolerance-equal (not
+//! bit-equal) to the scalar-blocked path. Selection between the two
+//! lives in [`super::KernelDispatch`]; a runtime never mixes them.
+//!
+//! The bf16 variants ([`dot4_bf16`], [`hidden_fwd_bf16`],
+//! [`logits_fwd_bf16`]) read weights from the [`super::pack::PackedBf16`]
+//! shadow, dequantizing 8-blocks on the fly (a u16→u32 widen + shift —
+//! two cheap integer ops per vector). Halving the weight-stream
+//! bandwidth is what makes the reduced-precision scoring forward faster
+//! than the exact one at CIFAR dims, where `W1` spills L1 by ~25×.
+
+use super::pack::bf16_to_f32;
+
+/// Portable 8-lane f32 block. Plain `[f32; 8]` arithmetic written
+/// elementwise — the exact shape LLVM's loop/SLP vectorizers lower to a
+/// single vector register on AVX2/NEON targets without `std::arch`.
+#[derive(Clone, Copy, Debug)]
+pub struct F32x8(pub [f32; 8]);
+
+impl F32x8 {
+    pub const ZERO: F32x8 = F32x8([0.0; 8]);
+
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; 8])
+    }
+
+    /// Load 8 consecutive floats from the head of `s`.
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> F32x8 {
+        let mut out = [0.0f32; 8];
+        out.copy_from_slice(&s[..8]);
+        F32x8(out)
+    }
+
+    /// Dequantizing load: 8 consecutive bf16 (u16) values.
+    #[inline(always)]
+    pub fn load_bf16(s: &[u16]) -> F32x8 {
+        let mut out = [0.0f32; 8];
+        for (o, &b) in out.iter_mut().zip(&s[..8]) {
+            *o = bf16_to_f32(b);
+        }
+        F32x8(out)
+    }
+
+    #[inline(always)]
+    pub fn store(self, d: &mut [f32]) {
+        d[..8].copy_from_slice(&self.0);
+    }
+
+    /// Elementwise `self + a·b` (mul-then-add; rustc does not contract
+    /// to FMA by default, keeping numerics aligned with the scalar path).
+    #[inline(always)]
+    pub fn fma(self, a: F32x8, b: F32x8) -> F32x8 {
+        let mut out = self.0;
+        for ((o, &x), &y) in out.iter_mut().zip(&a.0).zip(&b.0) {
+            *o += x * y;
+        }
+        F32x8(out)
+    }
+
+    #[inline(always)]
+    pub fn max(self, other: F32x8) -> F32x8 {
+        let mut out = self.0;
+        for (o, &v) in out.iter_mut().zip(&other.0) {
+            *o = o.max(v);
+        }
+        F32x8(out)
+    }
+
+    /// Horizontal sum with the same fixed fold tree as `gemm::dot`:
+    /// `((l0+l4)+(l1+l5)) + ((l2+l6)+(l3+l7))`.
+    #[inline(always)]
+    pub fn hsum(self) -> f32 {
+        let v = self.0;
+        ((v[0] + v[4]) + (v[1] + v[5])) + ((v[2] + v[6]) + (v[3] + v[7]))
+    }
+
+    /// Horizontal max (order-insensitive for NaN-free input).
+    #[inline(always)]
+    pub fn hmax(self) -> f32 {
+        let v = self.0;
+        ((v[0].max(v[4])).max(v[1].max(v[5]))).max((v[2].max(v[6])).max(v[3].max(v[7])))
+    }
+}
+
+/// Unit-stride dot with four `F32x8` accumulators (32 scalar lanes) and
+/// a fixed reduction tree: deterministic for a given input, 4× the
+/// independent FMA chains of `gemm::dot`.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let n32 = n & !31;
+    let (mut s0, mut s1, mut s2, mut s3) = (F32x8::ZERO, F32x8::ZERO, F32x8::ZERO, F32x8::ZERO);
+    let mut i = 0;
+    while i < n32 {
+        s0 = s0.fma(F32x8::load(&a[i..]), F32x8::load(&b[i..]));
+        s1 = s1.fma(F32x8::load(&a[i + 8..]), F32x8::load(&b[i + 8..]));
+        s2 = s2.fma(F32x8::load(&a[i + 16..]), F32x8::load(&b[i + 16..]));
+        s3 = s3.fma(F32x8::load(&a[i + 24..]), F32x8::load(&b[i + 24..]));
+        i += 32;
+    }
+    let n8 = n & !7;
+    while i < n8 {
+        s0 = s0.fma(F32x8::load(&a[i..]), F32x8::load(&b[i..]));
+        i += 8;
+    }
+    let mut tail = 0.0f32;
+    while i < n {
+        tail += a[i] * b[i];
+        i += 1;
+    }
+    ((s0.hsum() + s2.hsum()) + (s1.hsum() + s3.hsum())) + tail
+}
+
+/// `y[i] += alpha * x[i]`. Elementwise — bit-identical to `gemm::axpy`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let n8 = n & !7;
+    let va = F32x8::splat(alpha);
+    let mut i = 0;
+    while i < n8 {
+        let acc = F32x8::load(&y[i..]).fma(va, F32x8::load(&x[i..]));
+        acc.store(&mut y[i..]);
+        i += 8;
+    }
+    while i < n {
+        y[i] += alpha * x[i];
+        i += 1;
+    }
+}
+
+/// Four dots of `x` against four consecutive `d`-length rows of `w`
+/// (`w[0..d]`, `w[d..2d]`, …): each loaded `x` chunk feeds four
+/// independent accumulator chains.
+#[inline]
+fn dot4(x: &[f32], w: &[f32], d: usize) -> [f32; 4] {
+    debug_assert!(w.len() >= 4 * d);
+    let (r0, rest) = w.split_at(d);
+    let (r1, rest) = rest.split_at(d);
+    let (r2, rest) = rest.split_at(d);
+    let r3 = &rest[..d];
+    let d8 = d & !7;
+    let (mut a0, mut a1, mut a2, mut a3) = (F32x8::ZERO, F32x8::ZERO, F32x8::ZERO, F32x8::ZERO);
+    let mut i = 0;
+    while i < d8 {
+        let vx = F32x8::load(&x[i..]);
+        a0 = a0.fma(vx, F32x8::load(&r0[i..]));
+        a1 = a1.fma(vx, F32x8::load(&r1[i..]));
+        a2 = a2.fma(vx, F32x8::load(&r2[i..]));
+        a3 = a3.fma(vx, F32x8::load(&r3[i..]));
+        i += 8;
+    }
+    let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    while i < d {
+        let xv = x[i];
+        t0 += xv * r0[i];
+        t1 += xv * r1[i];
+        t2 += xv * r2[i];
+        t3 += xv * r3[i];
+        i += 1;
+    }
+    [a0.hsum() + t0, a1.hsum() + t1, a2.hsum() + t2, a3.hsum() + t3]
+}
+
+/// bf16-weight variant of [`dot4`]: same blocking, rows dequantized
+/// 8-wide on the fly.
+#[inline]
+fn dot4_bf16(x: &[f32], w: &[u16], d: usize) -> [f32; 4] {
+    debug_assert!(w.len() >= 4 * d);
+    let (r0, rest) = w.split_at(d);
+    let (r1, rest) = rest.split_at(d);
+    let (r2, rest) = rest.split_at(d);
+    let r3 = &rest[..d];
+    let d8 = d & !7;
+    let (mut a0, mut a1, mut a2, mut a3) = (F32x8::ZERO, F32x8::ZERO, F32x8::ZERO, F32x8::ZERO);
+    let mut i = 0;
+    while i < d8 {
+        let vx = F32x8::load(&x[i..]);
+        a0 = a0.fma(vx, F32x8::load_bf16(&r0[i..]));
+        a1 = a1.fma(vx, F32x8::load_bf16(&r1[i..]));
+        a2 = a2.fma(vx, F32x8::load_bf16(&r2[i..]));
+        a3 = a3.fma(vx, F32x8::load_bf16(&r3[i..]));
+        i += 8;
+    }
+    let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    while i < d {
+        let xv = x[i];
+        t0 += xv * bf16_to_f32(r0[i]);
+        t1 += xv * bf16_to_f32(r1[i]);
+        t2 += xv * bf16_to_f32(r2[i]);
+        t3 += xv * bf16_to_f32(r3[i]);
+        i += 1;
+    }
+    [a0.hsum() + t0, a1.hsum() + t1, a2.hsum() + t2, a3.hsum() + t3]
+}
+
+/// bf16-weight dot for remainder hidden units (single row).
+#[inline]
+fn dot_bf16(x: &[f32], w: &[u16]) -> f32 {
+    debug_assert_eq!(x.len(), w.len());
+    let n = x.len();
+    let n8 = n & !7;
+    let (mut s0, mut s1) = (F32x8::ZERO, F32x8::ZERO);
+    let mut i = 0;
+    let n16 = n & !15;
+    while i < n16 {
+        s0 = s0.fma(F32x8::load(&x[i..]), F32x8::load_bf16(&w[i..]));
+        s1 = s1.fma(F32x8::load(&x[i + 8..]), F32x8::load_bf16(&w[i + 8..]));
+        i += 16;
+    }
+    while i < n8 {
+        s0 = s0.fma(F32x8::load(&x[i..]), F32x8::load_bf16(&w[i..]));
+        i += 8;
+    }
+    let mut tail = 0.0f32;
+    while i < n {
+        tail += x[i] * bf16_to_f32(w[i]);
+        i += 1;
+    }
+    (s0.hsum() + s1.hsum()) + tail
+}
+
+/// Hidden-layer forward, register-blocked four hidden units per pass:
+/// same relu/bias semantics as `gemm::hidden_fwd`, tolerance-equal
+/// numerics (the dot reduction shape differs).
+pub fn hidden_fwd(x: &[f32], w1t: &[f32], b1: &[f32], d: usize, h: usize, h_out: &mut [f32]) {
+    debug_assert_eq!(x.len() % d.max(1), 0);
+    debug_assert_eq!(w1t.len(), d * h);
+    let h4 = h & !3;
+    for (xi, hrow) in x.chunks_exact(d).zip(h_out.chunks_exact_mut(h)) {
+        let mut j = 0;
+        while j < h4 {
+            let acc = dot4(xi, &w1t[j * d..(j + 4) * d], d);
+            hrow[j] = (b1[j] + acc[0]).max(0.0);
+            hrow[j + 1] = (b1[j + 1] + acc[1]).max(0.0);
+            hrow[j + 2] = (b1[j + 2] + acc[2]).max(0.0);
+            hrow[j + 3] = (b1[j + 3] + acc[3]).max(0.0);
+            j += 4;
+        }
+        while j < h {
+            hrow[j] = (b1[j] + dot(xi, &w1t[j * d..(j + 1) * d])).max(0.0);
+            j += 1;
+        }
+    }
+}
+
+/// Output-layer forward: identical structure to `gemm::logits_fwd`
+/// (dead-unit skip included) with the vector axpy. Elementwise — the
+/// results are bit-identical to the scalar-blocked path.
+pub fn logits_fwd(hrows: &[f32], w2: &[f32], b2: &[f32], h: usize, c: usize, out: &mut [f32]) {
+    debug_assert_eq!(w2.len(), h * c);
+    for (hi, li) in hrows.chunks_exact(h).zip(out.chunks_exact_mut(c)) {
+        li.copy_from_slice(b2);
+        for (k, &hk) in hi.iter().enumerate() {
+            if hk != 0.0 {
+                axpy(hk, &w2[k * c..(k + 1) * c], li);
+            }
+        }
+    }
+}
+
+/// bf16-weight hidden forward for the reduced-precision scoring path:
+/// [`hidden_fwd`]'s blocking with dequantize-on-load weight rows and a
+/// bf16 bias.
+pub fn hidden_fwd_bf16(x: &[f32], w1t: &[u16], b1: &[u16], d: usize, h: usize, h_out: &mut [f32]) {
+    debug_assert_eq!(x.len() % d.max(1), 0);
+    debug_assert_eq!(w1t.len(), d * h);
+    let h4 = h & !3;
+    for (xi, hrow) in x.chunks_exact(d).zip(h_out.chunks_exact_mut(h)) {
+        let mut j = 0;
+        while j < h4 {
+            let acc = dot4_bf16(xi, &w1t[j * d..(j + 4) * d], d);
+            hrow[j] = (bf16_to_f32(b1[j]) + acc[0]).max(0.0);
+            hrow[j + 1] = (bf16_to_f32(b1[j + 1]) + acc[1]).max(0.0);
+            hrow[j + 2] = (bf16_to_f32(b1[j + 2]) + acc[2]).max(0.0);
+            hrow[j + 3] = (bf16_to_f32(b1[j + 3]) + acc[3]).max(0.0);
+            j += 4;
+        }
+        while j < h {
+            hrow[j] = (bf16_to_f32(b1[j]) + dot_bf16(xi, &w1t[j * d..(j + 1) * d])).max(0.0);
+            j += 1;
+        }
+    }
+}
+
+/// bf16-weight output forward: logits accumulate in f32, weight rows
+/// dequantized per active hidden unit.
+pub fn logits_fwd_bf16(hrows: &[f32], w2: &[u16], b2: &[u16], h: usize, c: usize, out: &mut [f32]) {
+    debug_assert_eq!(w2.len(), h * c);
+    for (hi, li) in hrows.chunks_exact(h).zip(out.chunks_exact_mut(c)) {
+        for (o, &b) in li.iter_mut().zip(b2) {
+            *o = bf16_to_f32(b);
+        }
+        for (k, &hk) in hi.iter().enumerate() {
+            if hk != 0.0 {
+                for (o, &w) in li.iter_mut().zip(&w2[k * c..(k + 1) * c]) {
+                    *o += hk * bf16_to_f32(w);
+                }
+            }
+        }
+    }
+}
+
+/// Row max with a vectorized sweep. Max is order-insensitive for
+/// NaN-free logits, so this matches `gemm`'s sequential fold bit for
+/// bit.
+#[inline]
+fn row_max(li: &[f32]) -> f32 {
+    let n = li.len();
+    if n < 8 {
+        let mut m = f32::NEG_INFINITY;
+        for &v in li {
+            m = m.max(v);
+        }
+        return m;
+    }
+    let n8 = n & !7;
+    let mut vm = F32x8::load(li);
+    let mut i = 8;
+    while i < n8 {
+        vm = vm.max(F32x8::load(&li[i..]));
+        i += 8;
+    }
+    let mut m = vm.hmax();
+    while i < n {
+        m = m.max(li[i]);
+        i += 1;
+    }
+    m
+}
+
+/// Per-sample CE loss. Bit-identical to `gemm::ce_loss_row`: same max
+/// (order-insensitive), same scalar exp/summation order.
+#[inline]
+pub fn ce_loss_row(li: &[f32], y: usize) -> f32 {
+    let m = row_max(li);
+    let mut z = 0.0f32;
+    for &v in li {
+        z += (v - m).exp();
+    }
+    z.ln() + m - li[y]
+}
+
+/// Fused softmax-CE, mirroring `gemm::ce_loss_grad_row` (loss bits
+/// identical to [`ce_loss_row`]); only the max sweep is vectorized.
+#[inline]
+pub fn ce_loss_grad_row(li: &[f32], y: usize, scale: f32, dl: &mut [f32]) -> f32 {
+    debug_assert_eq!(li.len(), dl.len());
+    let m = row_max(li);
+    let mut z = 0.0f32;
+    for (dj, &v) in dl.iter_mut().zip(li) {
+        let e = (v - m).exp();
+        z += e;
+        *dj = e;
+    }
+    let loss = z.ln() + m - li[y];
+    let inv = scale / z;
+    for dj in dl.iter_mut() {
+        *dj *= inv;
+    }
+    dl[y] -= scale;
+    loss
+}
+
+/// Relu-gated backward row through the simd dot/axpy — same structure
+/// and skip predicates as `gemm::backward_row`.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_row(
+    xi: &[f32],
+    hi: &[f32],
+    dl: &[f32],
+    w2: &[f32],
+    d: usize,
+    c: usize,
+    gw1t: &mut [f32],
+    gb1: &mut [f32],
+    gw2: &mut [f32],
+    gb2: &mut [f32],
+    dh: &mut [f32],
+) {
+    axpy(1.0, dl, gb2);
+    for (k, &hk) in hi.iter().enumerate() {
+        if hk > 0.0 {
+            dh[k] = dot(dl, &w2[k * c..(k + 1) * c]);
+            axpy(hk, dl, &mut gw2[k * c..(k + 1) * c]);
+        } else {
+            dh[k] = 0.0;
+        }
+    }
+    for (k, &g) in dh.iter().enumerate() {
+        if g != 0.0 {
+            gb1[k] += g;
+            axpy(g, xi, &mut gw1t[k * d..(k + 1) * d]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::gemm;
+    use super::super::pack::f32_to_bf16;
+    use super::*;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    fn wave(n: usize, k: f32) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * k).sin()).collect()
+    }
+
+    #[test]
+    fn dot_matches_gemm_on_ragged_lengths() {
+        for len in [0usize, 1, 7, 8, 9, 15, 31, 32, 33, 63, 64, 100, 257] {
+            let a = wave(len, 1.0);
+            let b = wave(len, 0.3);
+            assert!(close(dot(&a, &b), gemm::dot(&a, &b), 1e-5), "len={len}");
+        }
+    }
+
+    #[test]
+    fn axpy_is_bit_identical_to_gemm() {
+        for len in [0usize, 3, 8, 17, 40] {
+            let x = wave(len, 0.7);
+            let mut y1 = wave(len, 0.2);
+            let mut y2 = y1.clone();
+            axpy(0.37, &x, &mut y1);
+            gemm::axpy(0.37, &x, &mut y2);
+            assert_eq!(y1, y2, "len={len}");
+        }
+    }
+
+    #[test]
+    fn hidden_fwd_matches_gemm_on_ragged_shapes() {
+        for (d, h, rows) in [(1, 1, 1), (7, 3, 2), (8, 4, 3), (33, 5, 2), (40, 13, 4)] {
+            let x = wave(rows * d, 0.9);
+            let w1t = wave(d * h, 0.11);
+            let b1 = wave(h, 0.5);
+            let mut out_s = vec![0.0f32; rows * h];
+            let mut out_v = vec![0.0f32; rows * h];
+            gemm::hidden_fwd(&x, &w1t, &b1, d, h, &mut out_s);
+            hidden_fwd(&x, &w1t, &b1, d, h, &mut out_v);
+            for (i, (&a, &b)) in out_v.iter().zip(&out_s).enumerate() {
+                assert!(close(a, b, 1e-5), "d={d} h={h} [{i}]: simd={a} gemm={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn logits_fwd_is_bit_identical_to_gemm() {
+        let (h, c, rows) = (9usize, 10usize, 3usize);
+        let mut hrows = wave(rows * h, 0.4);
+        hrows[2] = 0.0; // dead unit must be skipped identically
+        let hrows: Vec<f32> = hrows.iter().map(|v| v.max(0.0)).collect();
+        let w2 = wave(h * c, 0.21);
+        let b2 = wave(c, 0.6);
+        let mut out_s = vec![0.0f32; rows * c];
+        let mut out_v = vec![0.0f32; rows * c];
+        gemm::logits_fwd(&hrows, &w2, &b2, h, c, &mut out_s);
+        logits_fwd(&hrows, &w2, &b2, h, c, &mut out_v);
+        assert_eq!(out_s, out_v);
+    }
+
+    #[test]
+    fn ce_rows_are_bit_identical_to_gemm() {
+        for c in [2usize, 3, 8, 10, 16, 19] {
+            let li = wave(c, 1.3);
+            for y in 0..c {
+                assert_eq!(ce_loss_row(&li, y), gemm::ce_loss_row(&li, y), "c={c} y={y}");
+                let mut dl_s = vec![0.0f32; c];
+                let mut dl_v = vec![0.0f32; c];
+                let ls = gemm::ce_loss_grad_row(&li, y, 0.25, &mut dl_s);
+                let lv = ce_loss_grad_row(&li, y, 0.25, &mut dl_v);
+                assert_eq!(ls, lv, "c={c} y={y}");
+                assert_eq!(dl_s, dl_v, "c={c} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_row_matches_gemm_within_tolerance() {
+        let (d, h, c) = (19usize, 6usize, 5usize);
+        let xi = wave(d, 0.8);
+        let hi: Vec<f32> = wave(h, 1.1).iter().map(|v| v.max(0.0)).collect();
+        let dl = wave(c, 0.9);
+        let w2 = wave(h * c, 0.3);
+        let run = |simd: bool| -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+            let mut gw1t = vec![0.0f32; h * d];
+            let mut gb1 = vec![0.0f32; h];
+            let mut gw2 = vec![0.0f32; h * c];
+            let mut gb2 = vec![0.0f32; c];
+            let mut dh = vec![0.0f32; h];
+            if simd {
+                backward_row(
+                    &xi, &hi, &dl, &w2, d, c, &mut gw1t, &mut gb1, &mut gw2, &mut gb2, &mut dh,
+                );
+            } else {
+                gemm::backward_row(
+                    &xi, &hi, &dl, &w2, d, c, &mut gw1t, &mut gb1, &mut gw2, &mut gb2, &mut dh,
+                );
+            }
+            (gw1t, gb1, gw2, gb2)
+        };
+        let (a1, a2, a3, a4) = run(true);
+        let (b1, b2, b3, b4) = run(false);
+        for (va, vb) in [(&a1, &b1), (&a2, &b2), (&a3, &b3), (&a4, &b4)] {
+            for (&x, &y) in va.iter().zip(vb) {
+                assert!(close(x, y, 1e-5), "simd={x} gemm={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_forward_tracks_exact_within_bf16_resolution() {
+        let (d, h, c, rows) = (37usize, 7usize, 10usize, 3usize);
+        let x = wave(rows * d, 0.6);
+        let w1t = wave(d * h, 0.13);
+        let b1 = wave(h, 0.9);
+        let w2 = wave(h * c, 0.27);
+        let b2 = wave(c, 0.4);
+        let q16 = |v: &[f32]| -> Vec<u16> { v.iter().map(|&f| f32_to_bf16(f)).collect() };
+
+        let mut h_exact = vec![0.0f32; rows * h];
+        let mut h_bf16 = vec![0.0f32; rows * h];
+        hidden_fwd(&x, &w1t, &b1, d, h, &mut h_exact);
+        hidden_fwd_bf16(&x, &q16(&w1t), &q16(&b1), d, h, &mut h_bf16);
+        for (&a, &b) in h_bf16.iter().zip(&h_exact) {
+            // bf16 carries ~8 mantissa bits: relative error ~2^-8 per
+            // weight, growing ~sqrt(d) through the dot.
+            assert!(close(a, b, 3e-2), "hidden bf16={a} exact={b}");
+        }
+
+        let mut l_exact = vec![0.0f32; rows * c];
+        let mut l_bf16 = vec![0.0f32; rows * c];
+        logits_fwd(&h_exact, &w2, &b2, h, c, &mut l_exact);
+        logits_fwd_bf16(&h_exact, &q16(&w2), &q16(&b2), h, c, &mut l_bf16);
+        for (&a, &b) in l_bf16.iter().zip(&l_exact) {
+            assert!(close(a, b, 3e-2), "logits bf16={a} exact={b}");
+        }
+    }
+}

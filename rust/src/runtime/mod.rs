@@ -60,21 +60,41 @@ pub trait ModelRuntime {
     fn init(&mut self, seed: i32) -> anyhow::Result<()>;
 
     /// Forward-only per-sample losses (the sampler scoring pass).
-    fn loss_fwd(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> anyhow::Result<Vec<f32>>;
+    /// Implemented in terms of [`Self::loss_fwd_into`] — the write-into
+    /// form is the required one, so the scoring hot path is
+    /// allocation-free for every runtime, and this convenience wrapper
+    /// just fronts it with a fresh `Vec`.
+    fn loss_fwd(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> anyhow::Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n);
+        self.loss_fwd_into(x, y, n, &mut out)?;
+        Ok(out)
+    }
 
-    /// Write-into variant of `loss_fwd`: APPENDS `n` losses to `out`
-    /// (callers clear). Backends override to avoid the per-call `Vec`;
-    /// the engine's step hot path uses this with reusable scratch.
+    /// Write-into scoring pass: APPENDS `n` losses to `out` (callers
+    /// clear). This is the primitive the engine's step hot path drives
+    /// with reusable scratch; `loss_fwd` is derived from it.
     fn loss_fwd_into(
         &mut self,
         x: BatchX<'_>,
         y: &[i32],
         n: usize,
         out: &mut Vec<f32>,
+    ) -> anyhow::Result<()>;
+
+    /// Reduced-precision *ranking* pass: like `loss_fwd_into`, but the
+    /// losses only need to order samples for selection, so backends may
+    /// serve it from lower-precision weights (NativeRuntime: a bf16
+    /// shadow pack). Used by the engine's ScoringFp stage when
+    /// `run.scoring_precision = "bf16"`; the BP batch and eval always go
+    /// through the exact paths. Default: the exact `loss_fwd_into`.
+    fn loss_fwd_ranked(
+        &mut self,
+        x: BatchX<'_>,
+        y: &[i32],
+        n: usize,
+        out: &mut Vec<f32>,
     ) -> anyhow::Result<()> {
-        let losses = self.loss_fwd(x, y, n)?;
-        out.extend_from_slice(&losses);
-        Ok(())
+        self.loss_fwd_into(x, y, n, out)
     }
 
     /// One optimizer step on a weighted batch; increments the step count.

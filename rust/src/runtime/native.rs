@@ -21,15 +21,21 @@
 //! gradients always reduce over the same [`GRAD_SHARDS`] row shards in
 //! ascending order. `loss_fwd` takes a forward-only scoring fast path
 //! that streams per-row activations through lane scratch instead of
-//! retaining them.
+//! retaining them. Every exact kernel call site routes through one
+//! [`KernelDispatch`] (scalar-blocked or explicit simd, DESIGN.md §9),
+//! and `loss_fwd_ranked` offers a reduced-precision ranking forward
+//! over a lazily refreshed bf16 shadow of the packed weights —
+//! scoring-only, never used for the BP batch or eval.
 //!
 //! The step hot path (`train_step_into`/`loss_fwd_into`) is
 //! allocation-free in steady state: every buffer is runtime-owned
 //! scratch that is reused across steps.
 
-use super::kernel::pack::{split_packed_mut, Layout, PackedBuf};
+use super::kernel::pack::{split_packed_mut, Layout, PackedBf16, PackedBuf};
 use super::kernel::pool::{KernelPool, SharedRows, SharedSlots};
-use super::kernel::{default_threads, gemm, split_range, GRAD_SHARDS};
+use super::kernel::{
+    default_dispatch, default_threads, simd, split_range, KernelDispatch, GRAD_SHARDS,
+};
 use super::{BatchX, ModelRuntime, StepOutput};
 use crate::util::Pcg64;
 
@@ -75,12 +81,20 @@ pub struct NativeRuntime {
     params: PackedBuf,
     velocity: PackedBuf,
     grads: PackedBuf,
+    /// bf16 shadow of `params` for `loss_fwd_ranked`. Allocated on
+    /// first use, re-quantized lazily whenever `shadow_dirty` — runs
+    /// that score exactly never pay for it.
+    shadow_bf16: Option<PackedBf16>,
+    shadow_dirty: bool,
     /// Supported batch sizes are unconstrained for the native path, but
     /// we report the configured ones so trainer validation still runs.
     fwd_size: usize,
     eval_size: usize,
     /// Configured kernel lanes (0 = auto). Resolved lazily.
     threads_cfg: usize,
+    /// Which exact kernel implementation every hot path runs on
+    /// (DESIGN.md §9): one variant per runtime, never mixed.
+    dispatch: KernelDispatch,
     pool: Option<KernelPool>,
     // Runtime-owned step scratch (reused, never reallocated in steady
     // state).
@@ -102,9 +116,12 @@ impl NativeRuntime {
             params: PackedBuf::zeros(layout),
             velocity: PackedBuf::zeros(layout),
             grads: PackedBuf::zeros(layout),
+            shadow_bf16: None,
+            shadow_dirty: true,
             fwd_size: 0,
             eval_size: 0,
             threads_cfg: 0,
+            dispatch: default_dispatch(),
             pool: None,
             h_buf: Vec::new(),
             logits_buf: Vec::new(),
@@ -123,6 +140,21 @@ impl NativeRuntime {
         self.threads_cfg = threads;
         self.pool = None;
         self
+    }
+
+    /// Pin the exact kernel implementation (default: [`default_dispatch`],
+    /// i.e. simd unless `EVOSAMPLE_KERNEL_DISPATCH` says otherwise).
+    /// Like the lane count, dispatch never changes bits across thread
+    /// counts — but the two variants are only tolerance-equal to each
+    /// other, so a run sticks with one.
+    pub fn with_dispatch(mut self, dispatch: KernelDispatch) -> Self {
+        self.dispatch = dispatch;
+        self
+    }
+
+    /// The kernel implementation this runtime's hot paths run on.
+    pub fn kernel_dispatch(&self) -> KernelDispatch {
+        self.dispatch
     }
 
     /// The resolved kernel lane count this runtime will use.
@@ -181,11 +213,19 @@ impl NativeRuntime {
         }
         let start = out.len();
         out.resize(start + n, 0.0);
+        let dispatch = self.dispatch;
         if lanes == 1 {
             let rs = &mut self.fwd_scratch[0];
             let dst = &mut out[start..];
             for (i, di) in dst.iter_mut().enumerate() {
-                scoring_row(&self.params, &x[i * l.d..(i + 1) * l.d], y[i] as usize, rs, di);
+                scoring_row(
+                    dispatch,
+                    &self.params,
+                    &x[i * l.d..(i + 1) * l.d],
+                    y[i] as usize,
+                    rs,
+                    di,
+                );
             }
         } else {
             let out_rows = SharedRows::new(&mut out[start..]);
@@ -201,7 +241,65 @@ impl NativeRuntime {
                 let dst = unsafe { out_rows.range(r0, r1) };
                 for (k, di) in dst.iter_mut().enumerate() {
                     let i = r0 + k;
-                    scoring_row(params, &x[i * l.d..(i + 1) * l.d], y[i] as usize, rs, di);
+                    scoring_row(dispatch, params, &x[i * l.d..(i + 1) * l.d], y[i] as usize, rs, di);
+                }
+            });
+        }
+        Ok(())
+    }
+
+    /// Reduced-precision ranking forward (`loss_fwd_ranked`): the same
+    /// row-streaming structure as `loss_fwd_core`, reading weights from
+    /// the bf16 shadow pack. Deterministic (fixed per-row op sequence,
+    /// row partitioning never changes bits) but NOT tolerance-coupled to
+    /// the exact path — it exists to rank, not to measure.
+    fn loss_fwd_ranked_core(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        n: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let l = self.layout;
+        anyhow::ensure!(x.len() == n * l.d && y.len() == n, "batch shape mismatch");
+        for &yi in y {
+            anyhow::ensure!((yi as usize) < l.c, "label {yi} out of range");
+        }
+        if self.shadow_dirty || self.shadow_bf16.is_none() {
+            let shadow = self.shadow_bf16.get_or_insert_with(|| PackedBf16::zeros(l));
+            shadow.refresh_from(&self.params);
+            self.shadow_dirty = false;
+        }
+        self.ensure_pool();
+        let pool = self.pool.as_ref().expect("kernel pool");
+        let lanes = lanes_for(batch_work(n, l), pool);
+        while self.fwd_scratch.len() < lanes {
+            self.fwd_scratch
+                .push(RowScratch { hidden: vec![0.0; l.h], logits: vec![0.0; l.c] });
+        }
+        let start = out.len();
+        out.resize(start + n, 0.0);
+        let shadow = self.shadow_bf16.as_ref().expect("bf16 shadow");
+        if lanes == 1 {
+            let rs = &mut self.fwd_scratch[0];
+            let dst = &mut out[start..];
+            for (i, di) in dst.iter_mut().enumerate() {
+                scoring_row_bf16(shadow, &x[i * l.d..(i + 1) * l.d], y[i] as usize, rs, di);
+            }
+        } else {
+            let out_rows = SharedRows::new(&mut out[start..]);
+            let scratch = SharedSlots::new(&mut self.fwd_scratch[..lanes]);
+            pool.run(&|t| {
+                let (r0, r1) = split_range(n, lanes, t);
+                if r0 == r1 {
+                    return;
+                }
+                // SAFETY: one lane per scratch slot / output range.
+                let rs = unsafe { scratch.get_mut(t) };
+                let dst = unsafe { out_rows.range(r0, r1) };
+                for (k, di) in dst.iter_mut().enumerate() {
+                    let i = r0 + k;
+                    scoring_row_bf16(shadow, &x[i * l.d..(i + 1) * l.d], y[i] as usize, rs, di);
                 }
             });
         }
@@ -232,9 +330,10 @@ impl NativeRuntime {
         self.loss_buf.clear();
         self.loss_buf.resize(n, 0.0);
         let pool = self.pool.as_ref().expect("kernel pool");
+        let dispatch = self.dispatch;
 
         // ---- forward (row-parallel, retained activations) --------------
-        forward_rows(pool, &self.params, x, n, &mut self.h_buf, &mut self.logits_buf);
+        forward_rows(pool, dispatch, &self.params, x, n, &mut self.h_buf, &mut self.logits_buf);
 
         // ---- fused softmax-CE: loss + scaled dlogits in one sweep ------
         // Main thread, fixed row order: part of the determinism contract.
@@ -253,9 +352,9 @@ impl NativeRuntime {
                 // math entirely (matches the historical behavior). Zero
                 // the reused dlogits row so stale values can never leak.
                 dl.fill(0.0);
-                gemm::ce_loss_row(li, yi)
+                dispatch.ce_loss_row(li, yi)
             } else {
-                gemm::ce_loss_grad_row(li, yi, scale, dl)
+                dispatch.ce_loss_grad_row(li, yi, scale, dl)
             };
             self.loss_buf[i] = loss;
             sum_lw += loss * w;
@@ -294,7 +393,7 @@ impl NativeRuntime {
                         if weights[i] / wsum == 0.0 {
                             continue;
                         }
-                        gemm::backward_row(
+                        dispatch.backward_row(
                             &x[i * l.d..(i + 1) * l.d],
                             &h_buf[i * l.h..(i + 1) * l.h],
                             &dlogits[i * l.c..(i + 1) * l.c],
@@ -344,6 +443,7 @@ impl NativeRuntime {
             *vi = momentum * *vi + g;
             *pi -= lr * *vi;
         }
+        self.shadow_dirty = true;
         Ok(mean_loss)
     }
 }
@@ -360,9 +460,12 @@ impl Clone for NativeRuntime {
             params: self.params.clone(),
             velocity: self.velocity.clone(),
             grads: PackedBuf::zeros(self.layout),
+            shadow_bf16: None,
+            shadow_dirty: true,
             fwd_size: self.fwd_size,
             eval_size: self.eval_size,
             threads_cfg: self.threads_cfg,
+            dispatch: self.dispatch,
             pool: None,
             h_buf: Vec::new(),
             logits_buf: Vec::new(),
@@ -378,6 +481,7 @@ impl Clone for NativeRuntime {
 /// `logits_buf` (`n·c`), parallelized by disjoint row ranges.
 fn forward_rows(
     pool: &KernelPool,
+    dispatch: KernelDispatch,
     params: &PackedBuf,
     x: &[f32],
     n: usize,
@@ -387,8 +491,8 @@ fn forward_rows(
     let l = params.layout();
     let lanes = lanes_for(batch_work(n, l), pool);
     if lanes == 1 {
-        gemm::hidden_fwd(x, params.w1t(), params.b1(), l.d, l.h, h_buf);
-        gemm::logits_fwd(h_buf, params.w2(), params.b2(), l.h, l.c, logits_buf);
+        dispatch.hidden_fwd(x, params.w1t(), params.b1(), l.d, l.h, h_buf);
+        dispatch.logits_fwd(h_buf, params.w2(), params.b2(), l.h, l.c, logits_buf);
         return;
     }
     let h_rows = SharedRows::new(h_buf);
@@ -401,17 +505,35 @@ fn forward_rows(
         // SAFETY: lanes write disjoint row ranges.
         let hr = unsafe { h_rows.range(r0 * l.h, r1 * l.h) };
         let lg = unsafe { lg_rows.range(r0 * l.c, r1 * l.c) };
-        gemm::hidden_fwd(&x[r0 * l.d..r1 * l.d], params.w1t(), params.b1(), l.d, l.h, hr);
-        gemm::logits_fwd(hr, params.w2(), params.b2(), l.h, l.c, lg);
+        dispatch.hidden_fwd(&x[r0 * l.d..r1 * l.d], params.w1t(), params.b1(), l.d, l.h, hr);
+        dispatch.logits_fwd(hr, params.w2(), params.b2(), l.h, l.c, lg);
     });
 }
 
 /// Forward-only scoring for one row through lane scratch.
-fn scoring_row(params: &PackedBuf, xi: &[f32], yi: usize, rs: &mut RowScratch, out: &mut f32) {
+fn scoring_row(
+    dispatch: KernelDispatch,
+    params: &PackedBuf,
+    xi: &[f32],
+    yi: usize,
+    rs: &mut RowScratch,
+    out: &mut f32,
+) {
     let l = params.layout();
-    gemm::hidden_fwd(xi, params.w1t(), params.b1(), l.d, l.h, &mut rs.hidden);
-    gemm::logits_fwd(&rs.hidden, params.w2(), params.b2(), l.h, l.c, &mut rs.logits);
-    *out = gemm::ce_loss_row(&rs.logits, yi);
+    dispatch.hidden_fwd(xi, params.w1t(), params.b1(), l.d, l.h, &mut rs.hidden);
+    dispatch.logits_fwd(&rs.hidden, params.w2(), params.b2(), l.h, l.c, &mut rs.logits);
+    *out = dispatch.ce_loss_row(&rs.logits, yi);
+}
+
+/// bf16 scoring for one row: dequantize-on-load weights, f32
+/// activations, exact CE on the resulting logits. Always uses the simd
+/// kernels — the reduced-precision path has no scalar twin (dispatch
+/// selects among the *exact* implementations only).
+fn scoring_row_bf16(shadow: &PackedBf16, xi: &[f32], yi: usize, rs: &mut RowScratch, out: &mut f32) {
+    let l = shadow.layout();
+    simd::hidden_fwd_bf16(xi, shadow.w1t(), shadow.b1(), l.d, l.h, &mut rs.hidden);
+    simd::logits_fwd_bf16(&rs.hidden, shadow.w2(), shadow.b2(), l.h, l.c, &mut rs.logits);
+    *out = simd::ce_loss_row(&rs.logits, yi);
 }
 
 impl ModelRuntime for NativeRuntime {
@@ -442,14 +564,8 @@ impl ModelRuntime for NativeRuntime {
         }
         self.params.pack_from(&flat);
         self.velocity.fill(0.0);
+        self.shadow_dirty = true;
         Ok(())
-    }
-
-    fn loss_fwd(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> anyhow::Result<Vec<f32>> {
-        let x = Self::expect_f32(x)?;
-        let mut out = Vec::with_capacity(n);
-        self.loss_fwd_core(x, y, n, &mut out)?;
-        Ok(out)
     }
 
     fn loss_fwd_into(
@@ -461,6 +577,17 @@ impl ModelRuntime for NativeRuntime {
     ) -> anyhow::Result<()> {
         let x = Self::expect_f32(x)?;
         self.loss_fwd_core(x, y, n, out)
+    }
+
+    fn loss_fwd_ranked(
+        &mut self,
+        x: BatchX<'_>,
+        y: &[i32],
+        n: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let x = Self::expect_f32(x)?;
+        self.loss_fwd_ranked_core(x, y, n, out)
     }
 
     fn train_step(
@@ -499,14 +626,14 @@ impl ModelRuntime for NativeRuntime {
         self.h_buf.resize(n * l.h, 0.0);
         self.logits_buf.resize(n * l.c, 0.0);
         let pool = self.pool.as_ref().expect("kernel pool");
-        forward_rows(pool, &self.params, xs, n, &mut self.h_buf, &mut self.logits_buf);
+        forward_rows(pool, self.dispatch, &self.params, xs, n, &mut self.h_buf, &mut self.logits_buf);
         let mut losses = Vec::with_capacity(n);
         let mut correct = Vec::with_capacity(n);
         for i in 0..n {
             let yi = y[i] as usize;
             anyhow::ensure!(yi < l.c, "label {yi} out of range");
             let li = &self.logits_buf[i * l.c..(i + 1) * l.c];
-            losses.push(gemm::ce_loss_row(li, yi));
+            losses.push(self.dispatch.ce_loss_row(li, yi));
             let argmax = li
                 .iter()
                 .enumerate()
@@ -545,6 +672,7 @@ impl ModelRuntime for NativeRuntime {
     fn set_params(&mut self, params: &[f32]) -> anyhow::Result<()> {
         anyhow::ensure!(params.len() == self.layout.param_count(), "param count mismatch");
         self.params.pack_from(params);
+        self.shadow_dirty = true;
         Ok(())
     }
 
@@ -737,6 +865,99 @@ mod tests {
             assert_eq!(f1, ft, "scoring diverged at {threads} threads");
             assert_eq!(p1, pt, "params diverged at {threads} threads");
         }
+    }
+
+    #[test]
+    fn scalar_and_simd_dispatch_agree_within_tolerance() {
+        let (d, h, c, n) = (67usize, 13usize, 5usize, 9usize);
+        let (x, y) = toy_batch(n, d, c, 31);
+        let w = vec![1.0f32; n];
+        let run = |dispatch: KernelDispatch| -> (Vec<f32>, Vec<f32>) {
+            let mut rt = NativeRuntime::new(d, h, c).with_dispatch(dispatch);
+            rt.init(17).unwrap();
+            let fwd = rt.loss_fwd(BatchX::F32(&x), &y, n).unwrap();
+            for _ in 0..3 {
+                rt.train_step(BatchX::F32(&x), &y, &w, 0.05, n).unwrap();
+            }
+            (fwd, rt.get_params().unwrap())
+        };
+        let (f_sc, p_sc) = run(KernelDispatch::Scalar);
+        let (f_sd, p_sd) = run(KernelDispatch::Simd);
+        for (a, b) in f_sc.iter().zip(&f_sd) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + a.abs()), "fwd: scalar={a} simd={b}");
+        }
+        for (a, b) in p_sc.iter().zip(&p_sd) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs()), "params: scalar={a} simd={b}");
+        }
+    }
+
+    #[test]
+    fn ranked_losses_track_exact_and_follow_param_updates() {
+        let (d, h, c, n) = (48usize, 12usize, 4usize, 16usize);
+        let mut rt = NativeRuntime::new(d, h, c);
+        rt.init(23).unwrap();
+        let (x, y) = toy_batch(n, d, c, 8);
+
+        let exact = rt.loss_fwd(BatchX::F32(&x), &y, n).unwrap();
+        let mut ranked = Vec::new();
+        rt.loss_fwd_ranked(BatchX::F32(&x), &y, n, &mut ranked).unwrap();
+        assert_eq!(ranked.len(), n);
+        for (i, (&a, &b)) in ranked.iter().zip(&exact).enumerate() {
+            assert!((a - b).abs() <= 5e-2 * (1.0 + b.abs()), "[{i}] bf16={a} exact={b}");
+        }
+
+        // Same params → identical bf16 bits (the path is deterministic).
+        let mut again = Vec::new();
+        rt.loss_fwd_ranked(BatchX::F32(&x), &y, n, &mut again).unwrap();
+        assert_eq!(ranked, again);
+
+        // A train step must invalidate the shadow: the next ranked pass
+        // sees the NEW parameters, tracking the new exact losses.
+        let ones = vec![1.0f32; n];
+        rt.train_step(BatchX::F32(&x), &y, &ones, 0.2, n).unwrap();
+        let exact2 = rt.loss_fwd(BatchX::F32(&x), &y, n).unwrap();
+        let mut ranked2 = Vec::new();
+        rt.loss_fwd_ranked(BatchX::F32(&x), &y, n, &mut ranked2).unwrap();
+        assert_ne!(ranked, ranked2, "shadow must refresh after a step");
+        for (&a, &b) in ranked2.iter().zip(&exact2) {
+            assert!((a - b).abs() <= 5e-2 * (1.0 + b.abs()), "post-step bf16={a} exact={b}");
+        }
+
+        // set_params invalidates it too.
+        let p = rt.get_params().unwrap();
+        let perturbed: Vec<f32> = p.iter().map(|v| v * 1.5 + 0.01).collect();
+        rt.set_params(&perturbed).unwrap();
+        let exact3 = rt.loss_fwd(BatchX::F32(&x), &y, n).unwrap();
+        let mut ranked3 = Vec::new();
+        rt.loss_fwd_ranked(BatchX::F32(&x), &y, n, &mut ranked3).unwrap();
+        for (&a, &b) in ranked3.iter().zip(&exact3) {
+            assert!((a - b).abs() <= 5e-2 * (1.0 + b.abs()), "post-set bf16={a} exact={b}");
+        }
+    }
+
+    #[test]
+    fn ranked_path_is_bit_stable_across_thread_counts() {
+        let (d, h, c, n) = (128usize, 32usize, 4usize, 16usize);
+        let (x, y) = toy_batch(n, d, c, 19);
+        let run = |threads: usize| -> Vec<f32> {
+            let mut rt = NativeRuntime::new(d, h, c).with_kernel_threads(threads);
+            rt.init(29).unwrap();
+            let mut out = Vec::new();
+            rt.loss_fwd_ranked(BatchX::F32(&x), &y, n, &mut out).unwrap();
+            out
+        };
+        let r1 = run(1);
+        for t in [2usize, 4, 8] {
+            assert_eq!(r1, run(t), "ranked losses diverged at {t} threads");
+        }
+    }
+
+    #[test]
+    fn clone_and_replica_preserve_dispatch() {
+        let rt = NativeRuntime::new(8, 8, 4).with_dispatch(KernelDispatch::Scalar);
+        assert_eq!(rt.clone().kernel_dispatch(), KernelDispatch::Scalar);
+        let rt = NativeRuntime::new(8, 8, 4).with_dispatch(KernelDispatch::Simd);
+        assert_eq!(rt.clone().kernel_dispatch(), KernelDispatch::Simd);
     }
 
     #[test]

@@ -180,7 +180,13 @@ impl ModelRuntime for XlaRuntime {
         Ok(())
     }
 
-    fn loss_fwd(&mut self, x: BatchX<'_>, y: &[i32], n: usize) -> Result<Vec<f32>> {
+    fn loss_fwd_into(
+        &mut self,
+        x: BatchX<'_>,
+        y: &[i32],
+        n: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let exe = self
             .fwd_exes
             .get(&n)
@@ -188,8 +194,12 @@ impl ModelRuntime for XlaRuntime {
         let xl = self.x_literal(x, n)?;
         let yl = self.y_literal(y, n)?;
         let args: [&xla::Literal; 3] = [&self.params, &xl, &yl];
-        let out = run_tuple(exe, &args)?;
-        out[0].to_vec::<f32>().map_err(|e| anyhow!("losses: {e:?}"))
+        let res = run_tuple(exe, &args)?;
+        // The device→host literal readback allocates regardless; append
+        // it so callers keep the shared-buffer contract.
+        let losses = res[0].to_vec::<f32>().map_err(|e| anyhow!("losses: {e:?}"))?;
+        out.extend_from_slice(&losses);
+        Ok(())
     }
 
     fn train_step(

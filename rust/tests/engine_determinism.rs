@@ -652,6 +652,26 @@ fn fp_samples_scale_as_ceil_steps_over_k_times_meta_batch() {
     });
 }
 
+// ---- scoring precision (run.scoring_precision, DESIGN.md §9) ------------
+
+/// With `scoring_precision = "exact"` (the default, pinned explicitly
+/// here) the engine must stay bit-for-bit on the pre-change reference
+/// loop: the bf16 ranked path is never entered, and the scoring FP goes
+/// through the same exact kernels the reference calls via `loss_fwd`.
+#[test]
+fn exact_scoring_precision_is_bit_for_bit_on_the_reference_loop() {
+    use evosample::config::ScoringPrecision;
+    for sampler_cfg in [SamplerConfig::es_default(), SamplerConfig::eswp_default()] {
+        let (mut cfg, split) = setup(sampler_cfg.clone(), 512, 7);
+        cfg.scoring_precision = ScoringPrecision::Exact;
+        let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+        let engine_run = train(&cfg, &mut rt, &split).unwrap();
+        let reference_sampler = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
+        let reference = reference_train(&cfg, &mut rt, &split, reference_sampler).unwrap();
+        assert_identical(&engine_run, &reference);
+    }
+}
+
 // ---- pruned-set batching floor (min-keep clamp) -------------------------
 
 /// Documents the hazard the clamp guards against: a kept set smaller
@@ -781,8 +801,15 @@ fn spawn_replica_default_is_graceful_unsupported() {
         fn init(&mut self, _seed: i32) -> anyhow::Result<()> {
             Ok(())
         }
-        fn loss_fwd(&mut self, _x: BatchX<'_>, _y: &[i32], n: usize) -> anyhow::Result<Vec<f32>> {
-            Ok(vec![0.0; n])
+        fn loss_fwd_into(
+            &mut self,
+            _x: BatchX<'_>,
+            _y: &[i32],
+            n: usize,
+            out: &mut Vec<f32>,
+        ) -> anyhow::Result<()> {
+            out.resize(out.len() + n, 0.0);
+            Ok(())
         }
         fn train_step(
             &mut self,

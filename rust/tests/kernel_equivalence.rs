@@ -1,8 +1,9 @@
-//! Kernel-layer regression tests: the blocked/threaded kernels must
-//! match the scalar reference implementation within 1e-5 on random
-//! shapes (including ragged tails and batches smaller than the shard
-//! count), training must be bit-identical across kernel thread counts,
-//! and the new write-into runtime surface must honor its contracts.
+//! Kernel-layer regression tests: the blocked/threaded kernels — under
+//! both the blocked-scalar and the SIMD dispatch — must match the scalar
+//! reference implementation within 1e-5 on random shapes (including
+//! ragged tails and batches smaller than the shard count), training must
+//! be bit-identical across kernel thread counts within a dispatch, and
+//! the new write-into runtime surface must honor its contracts.
 
 // These tests intentionally pin the deprecated `coordinator::train` shim.
 #![allow(deprecated)]
@@ -11,6 +12,7 @@ use evosample::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
 use evosample::coordinator::{train, TrainResult};
 use evosample::data;
 use evosample::runtime::kernel::reference::ScalarMlp;
+use evosample::runtime::kernel::KernelDispatch;
 use evosample::runtime::native::NativeRuntime;
 use evosample::runtime::{BatchX, ModelRuntime};
 use evosample::util::proptest::check;
@@ -27,8 +29,8 @@ fn assert_all_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
 }
 
 /// Random shapes (ragged dims, n below the shard count, zero weights,
-/// 1-4 kernel threads): kernels must track the scalar reference within
-/// 1e-5 through loss_fwd and several train steps.
+/// 1-4 kernel threads, both dispatches): kernels must track the scalar
+/// reference within 1e-5 through loss_fwd and several train steps.
 #[test]
 fn kernel_matches_scalar_reference_on_random_shapes() {
     check("kernel == scalar reference", 25, |g| {
@@ -37,8 +39,10 @@ fn kernel_matches_scalar_reference_on_random_shapes() {
         let c = g.usize_in(2, 11);
         let n = g.usize_in(1, 19);
         let threads = g.usize_in(1, 4);
+        let dispatch = [KernelDispatch::Scalar, KernelDispatch::Simd][g.usize_in(0, 1)];
 
-        let mut rt = NativeRuntime::new(d, h, c).with_kernel_threads(threads);
+        let mut rt =
+            NativeRuntime::new(d, h, c).with_kernel_threads(threads).with_dispatch(dispatch);
         rt.init(7).unwrap();
         let mut sc = ScalarMlp::new(d, h, c);
         sc.set_params(&rt.get_params().unwrap());
@@ -55,7 +59,8 @@ fn kernel_matches_scalar_reference_on_random_shapes() {
             if !close(a, b, 1e-5) {
                 return Err(format!(
                     "loss_fwd[{i}] diverged: kernel={a} scalar={b} \
-                     (d={d} h={h} c={c} n={n} t={threads})"
+                     (d={d} h={h} c={c} n={n} t={threads} dispatch={})",
+                    dispatch.as_str()
                 ));
             }
         }
@@ -86,35 +91,47 @@ fn kernel_matches_scalar_reference_on_random_shapes() {
 }
 
 /// The CIFAR-scale shape the make_runtime fallback uses — big enough to
-/// exercise the pooled (multi-lane) forward and backward paths.
+/// exercise the pooled (multi-lane) forward and backward paths — under
+/// both dispatches at 1, 2, and 4 kernel threads.
 #[test]
 fn kernel_matches_scalar_at_cifar_dims() {
     let (d, h, c, n) = (3072usize, 64usize, 10usize, 6usize);
-    let mut rt = NativeRuntime::new(d, h, c).with_kernel_threads(4);
-    rt.init(1).unwrap();
-    let mut sc = ScalarMlp::new(d, h, c);
-    sc.set_params(&rt.get_params().unwrap());
+    for dispatch in [KernelDispatch::Scalar, KernelDispatch::Simd] {
+        for threads in [1usize, 2, 4] {
+            let mut rt =
+                NativeRuntime::new(d, h, c).with_kernel_threads(threads).with_dispatch(dispatch);
+            rt.init(1).unwrap();
+            let mut sc = ScalarMlp::new(d, h, c);
+            sc.set_params(&rt.get_params().unwrap());
 
-    let mut rng = evosample::util::Pcg64::new(11);
-    let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
-    let y: Vec<i32> = (0..n).map(|_| rng.int_in(0, c as i64) as i32).collect();
-    let w = vec![1.0f32; n];
+            let mut rng = evosample::util::Pcg64::new(11);
+            let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+            let y: Vec<i32> = (0..n).map(|_| rng.int_in(0, c as i64) as i32).collect();
+            let w = vec![1.0f32; n];
 
-    // f32 summation-order error grows with the dot length: at d=3072 the
-    // sequential-vs-tree difference alone reaches ~1e-4, so this shape
-    // uses a proportionally looser tolerance than the small random
-    // shapes (which assert 1e-5).
-    let fwd_k = rt.loss_fwd(BatchX::F32(&x), &y, n).unwrap();
-    let fwd_s = sc.loss_fwd(&x, &y, n);
-    assert_all_close(&fwd_k, &fwd_s, 1e-3, "loss_fwd");
+            // f32 summation-order error grows with the dot length: at
+            // d=3072 the sequential-vs-tree difference alone reaches
+            // ~1e-4, so this shape uses a proportionally looser tolerance
+            // than the small random shapes (which assert 1e-5).
+            let what = format!("{}/t{threads}", dispatch.as_str());
+            let fwd_k = rt.loss_fwd(BatchX::F32(&x), &y, n).unwrap();
+            let fwd_s = sc.loss_fwd(&x, &y, n);
+            assert_all_close(&fwd_k, &fwd_s, 1e-3, &format!("{what} loss_fwd"));
 
-    let out = rt.train_step(BatchX::F32(&x), &y, &w, 0.01, n).unwrap();
-    let (losses_s, _) = sc.train_step(&x, &y, &w, 0.01, n);
-    assert_all_close(&out.losses, &losses_s, 1e-3, "train losses");
-    assert_all_close(&rt.get_params().unwrap(), &sc.params, 1e-3, "params after step");
+            let out = rt.train_step(BatchX::F32(&x), &y, &w, 0.01, n).unwrap();
+            let (losses_s, _) = sc.train_step(&x, &y, &w, 0.01, n);
+            assert_all_close(&out.losses, &losses_s, 1e-3, &format!("{what} train losses"));
+            assert_all_close(
+                &rt.get_params().unwrap(),
+                &sc.params,
+                1e-3,
+                &format!("{what} params after step"),
+            );
+        }
+    }
 }
 
-fn det_run(kernel_threads: usize) -> TrainResult {
+fn det_run(kernel_threads: usize, dispatch: KernelDispatch) -> TrainResult {
     let ds = DatasetConfig::SynthCifar { n: 256, classes: 4, label_noise: 0.05, hard_frac: 0.2 };
     let split = data::build(&ds, 64, 42);
     let mut cfg = RunConfig::new("kernel_det", "native", ds);
@@ -124,24 +141,30 @@ fn det_run(kernel_threads: usize) -> TrainResult {
     cfg.lr = LrSchedule::Const { lr: 0.02 };
     cfg.test_n = 64;
     cfg.sampler = SamplerConfig::es_default();
-    let mut rt =
-        NativeRuntime::new(split.train.x_len(), 24, 4).with_kernel_threads(kernel_threads);
+    let mut rt = NativeRuntime::new(split.train.x_len(), 24, 4)
+        .with_kernel_threads(kernel_threads)
+        .with_dispatch(dispatch);
     train(&cfg, &mut rt, &split).unwrap()
 }
 
 /// A full training run (CIFAR-scale feature dim, ES sampler, scoring FP
 /// + weighted BP) must produce bit-identical loss and eval curves at 1,
-/// 2, and 4 kernel threads — the fixed-shard determinism contract,
-/// end to end.
+/// 2, and 4 kernel threads — the fixed-shard determinism contract, end
+/// to end, under both the blocked-scalar and the SIMD dispatch. (The two
+/// dispatches are NOT bit-identical to each other — they sum dots in
+/// different orders — which is why the contract is scoped per dispatch.)
 #[test]
 fn loss_curves_identical_across_kernel_thread_counts() {
-    let r1 = det_run(1);
-    for t in [2usize, 4] {
-        let rt = det_run(t);
-        assert_eq!(r1.loss_curve, rt.loss_curve, "loss curve diverged at {t} threads");
-        assert_eq!(r1.eval_curve, rt.eval_curve, "eval curve diverged at {t} threads");
-        assert_eq!(r1.cost.fp_samples, rt.cost.fp_samples);
-        assert_eq!(r1.cost.bp_samples, rt.cost.bp_samples);
+    for dispatch in [KernelDispatch::Scalar, KernelDispatch::Simd] {
+        let r1 = det_run(1, dispatch);
+        for t in [2usize, 4] {
+            let rt = det_run(t, dispatch);
+            let tag = dispatch.as_str();
+            assert_eq!(r1.loss_curve, rt.loss_curve, "[{tag}] loss curve diverged at {t} threads");
+            assert_eq!(r1.eval_curve, rt.eval_curve, "[{tag}] eval curve diverged at {t} threads");
+            assert_eq!(r1.cost.fp_samples, rt.cost.fp_samples);
+            assert_eq!(r1.cost.bp_samples, rt.cost.bp_samples);
+        }
     }
 }
 

@@ -1,0 +1,199 @@
+//! Reduced-precision scoring tests (DESIGN.md §9): the bf16 ranked
+//! forward (`loss_fwd_ranked`) must be a faithful *ranking* surrogate
+//! for the exact scoring FP — selection built on it agrees with the
+//! exact selection on ≥99% of indices across random ragged shapes —
+//! while staying run-to-run deterministic, and a full bf16 session must
+//! train, learn, and keep the exact FP/BP accounting (precision changes
+//! loss *values*, never the schedule).
+
+use evosample::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig, ScoringPrecision};
+use evosample::prelude::SessionBuilder;
+use evosample::runtime::native::NativeRuntime;
+use evosample::runtime::{BatchX, ModelRuntime};
+use evosample::util::Pcg64;
+
+/// Rank descending by loss, tie-break ascending by index (the
+/// deterministic order a ranked sampler consumes), keep the top q.
+fn top_q(losses: &[f32], q: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..losses.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        losses[b as usize]
+            .partial_cmp(&losses[a as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx.truncate(q);
+    idx.sort_unstable();
+    idx
+}
+
+fn overlap(a: &[u32], b: &[u32]) -> usize {
+    // Both sorted ascending.
+    let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                k += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    k
+}
+
+/// The selection-agreement property: over random ragged shapes with a
+/// wide difficulty spread (per-sample input scales span 16x, as pruned
+/// real batches do), top-quartile selection from bf16 losses matches
+/// top-quartile selection from exact losses on at least 99% of indices
+/// in aggregate. Disagreements are only ever boundary swaps between
+/// near-tied samples, so each shape also has a hard per-shape floor.
+#[test]
+fn bf16_selection_agrees_with_exact_on_99_percent_of_indices() {
+    let mut selected_total = 0usize;
+    let mut agreed_total = 0usize;
+    for seed in 0..24u64 {
+        let mut rng = Pcg64::new(1000 + seed);
+        let d = 32 + rng.int_in(0, 269) as usize;
+        let h = 8 + rng.int_in(0, 41) as usize;
+        let c = 2 + rng.int_in(0, 9) as usize;
+        let n = 96 + rng.int_in(0, 161) as usize;
+        let q = n / 4;
+
+        let mut rt = NativeRuntime::new(d, h, c);
+        rt.init(seed as i32).unwrap();
+
+        let mut x = vec![0.0f32; n * d];
+        for row in x.chunks_mut(d) {
+            // Per-sample scale in [2^-2, 2^2]: spreads the loss
+            // distribution the way mixed-difficulty data does.
+            let scale = (2.0f32).powf(rng.f32() * 4.0 - 2.0);
+            for v in row.iter_mut() {
+                *v = rng.normal() * scale;
+            }
+        }
+        let y: Vec<i32> = (0..n).map(|_| rng.int_in(0, c as i64) as i32).collect();
+
+        let exact = rt.loss_fwd(BatchX::F32(&x), &y, n).unwrap();
+        let mut ranked = Vec::new();
+        rt.loss_fwd_ranked(BatchX::F32(&x), &y, n, &mut ranked).unwrap();
+        assert_eq!(ranked.len(), n);
+
+        let sel_exact = top_q(&exact, q);
+        let sel_bf16 = top_q(&ranked, q);
+        let k = overlap(&sel_exact, &sel_bf16);
+        assert!(
+            k * 100 >= q * 90,
+            "seed {seed} (d={d} h={h} c={c} n={n}): only {k}/{q} agree — \
+             bf16 ranking is broken, not merely boundary-noisy"
+        );
+        selected_total += q;
+        agreed_total += k;
+    }
+    assert!(
+        agreed_total * 100 >= selected_total * 99,
+        "aggregate agreement {agreed_total}/{selected_total} below 99%"
+    );
+}
+
+/// Ranked losses are a pure function of (params, batch): two runtimes
+/// with the same init and data produce bit-identical bf16 scores, and
+/// the induced selection is identical — run-to-run determinism survives
+/// the precision reduction.
+#[test]
+fn bf16_ranking_is_run_to_run_deterministic() {
+    let (d, h, c, n) = (257usize, 24usize, 6usize, 128usize);
+    let mut rng = Pcg64::new(9);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.int_in(0, c as i64) as i32).collect();
+
+    let run = |threads: usize| {
+        let mut rt = NativeRuntime::new(d, h, c).with_kernel_threads(threads);
+        rt.init(4).unwrap();
+        let mut out = Vec::new();
+        rt.loss_fwd_ranked(BatchX::F32(&x), &y, n, &mut out).unwrap();
+        out
+    };
+    let a = run(1);
+    let b = run(1);
+    assert_eq!(a, b, "fresh identical runtimes must score identically");
+    for t in [2usize, 4] {
+        assert_eq!(a, run(t), "bf16 scores diverged at {t} kernel threads");
+    }
+    assert_eq!(top_q(&a, n / 4), top_q(&b, n / 4));
+}
+
+fn session_cfg(precision: ScoringPrecision) -> RunConfig {
+    let ds = DatasetConfig::SynthCifar { n: 256, classes: 4, label_noise: 0.05, hard_frac: 0.2 };
+    let mut cfg = RunConfig::new("scoring_precision", "native", ds);
+    cfg.epochs = 5;
+    cfg.meta_batch = 64;
+    cfg.mini_batch = 16;
+    cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
+    cfg.test_n = 128;
+    cfg.seed = 21;
+    cfg.sampler = SamplerConfig::es_default();
+    cfg.scoring_precision = precision;
+    cfg
+}
+
+fn session_run(precision: ScoringPrecision) -> evosample::coordinator::TrainResult {
+    let cfg = session_cfg(precision);
+    let mut rt = NativeRuntime::new(3072, 24, 4);
+    SessionBuilder::from_config(cfg)
+        .runtime_mut(&mut rt)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+/// End to end: a bf16-scored ES session completes, learns past 4-class
+/// chance, is seed-deterministic, and its FP/BP *accounting* is
+/// identical to the exact session's — the precision knob changes what
+/// the scoring FP computes, never how often it runs or what gets
+/// backpropagated.
+#[test]
+fn bf16_session_trains_deterministically_with_exact_accounting() {
+    let exact = session_run(ScoringPrecision::Exact);
+    let a = session_run(ScoringPrecision::Bf16);
+    let b = session_run(ScoringPrecision::Bf16);
+
+    assert_eq!(a.loss_curve, b.loss_curve, "bf16 runs must be seed-deterministic");
+    assert_eq!(a.eval_curve, b.eval_curve);
+
+    assert!(a.steps > 0);
+    assert!(
+        a.final_eval.accuracy > 0.3,
+        "bf16-scored acc {} should beat 4-class chance",
+        a.final_eval.accuracy
+    );
+    assert!(a.loss_curve.first().unwrap() > a.loss_curve.last().unwrap());
+
+    assert_eq!(a.steps, exact.steps);
+    assert_eq!(a.cost.fp_samples, exact.cost.fp_samples);
+    assert_eq!(a.cost.fp_passes, exact.cost.fp_passes);
+    assert_eq!(a.cost.bp_passes, exact.cost.bp_passes);
+}
+
+/// The builder knob reaches the engine: `scoring_precision(Bf16)` on the
+/// fluent API produces the same run as the TOML/config field.
+#[test]
+fn builder_knob_matches_config_field() {
+    let via_field = session_run(ScoringPrecision::Bf16);
+
+    let cfg = session_cfg(ScoringPrecision::Exact);
+    let mut rt = NativeRuntime::new(3072, 24, 4);
+    let via_builder = SessionBuilder::from_config(cfg)
+        .scoring_precision(ScoringPrecision::Bf16)
+        .runtime_mut(&mut rt)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+
+    assert_eq!(via_field.loss_curve, via_builder.loss_curve);
+    assert_eq!(via_field.eval_curve, via_builder.eval_curve);
+}
