@@ -1,0 +1,103 @@
+//! Serve-protocol walkthrough (DESIGN.md §10): boot the multi-tenant
+//! selection service in-process, then speak the JSONL-over-TCP protocol
+//! to it exactly as an external client would — submit two jobs, follow
+//! one job's event stream, poll status, and shut the server down.
+//!
+//!     cargo run --release --example serve_client
+//!
+//! Against a separately launched server (`evosample serve --port P`),
+//! the same lines work over `evosample submit --addr 127.0.0.1:P ...`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use evosample::config::ServeConfig;
+use evosample::serve::Server;
+use evosample::util::json::{obj, s, Json};
+
+const JOB_TOML: &str = "\
+[run]
+model = \"native\"
+epochs = 4
+meta_batch = 32
+mini_batch = 8
+test_n = 64
+eval_every = 1
+
+[dataset]
+kind = \"synth_cifar\"
+n = 256
+classes = 4
+
+[sampler]
+kind = \"es\"
+";
+
+/// One request line, one response line, on a fresh connection.
+fn request(addr: SocketAddr, req: &Json) -> anyhow::Result<Json> {
+    let mut conn = TcpStream::connect(addr)?;
+    conn.write_all(req.to_string_compact().as_bytes())?;
+    conn.write_all(b"\n")?;
+    let mut line = String::new();
+    BufReader::new(conn).read_line(&mut line)?;
+    Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+}
+
+fn main() -> anyhow::Result<()> {
+    // A throwaway state dir; a long-lived deployment would point this at
+    // durable storage so killed servers resume their in-flight jobs.
+    let state_dir = std::env::temp_dir().join(format!("serve_client_{}", std::process::id()));
+    let server = Server::start(ServeConfig {
+        port: 0, // ephemeral — the handle reports the bound address
+        max_concurrent: 2,
+        max_queue: 8,
+        kernel_budget: 2,
+        state_dir: state_dir.to_string_lossy().into_owned(),
+        checkpoint_every: 1,
+    })?;
+    let addr = server.addr();
+
+    // ---- submit: config TOML rides the wire verbatim -------------------
+    for (id, sampler) in [("demo_es", "es"), ("demo_base", "baseline")] {
+        let resp = request(
+            addr,
+            &obj(vec![
+                ("cmd", s("submit")),
+                ("config", s(JOB_TOML)),
+                ("sampler", s(sampler)), // registry-name override
+                ("job_id", s(id)),
+            ]),
+        )?;
+        println!("submit {id}: {}", resp.to_string_compact());
+    }
+
+    // ---- events: backlog replay, then live until the job finishes ------
+    let mut conn = TcpStream::connect(addr)?;
+    let req = obj(vec![("cmd", s("events")), ("job", s("demo_es"))]);
+    conn.write_all(req.to_string_compact().as_bytes())?;
+    conn.write_all(b"\n")?;
+    for line in BufReader::new(conn).lines() {
+        let line = line?;
+        let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
+        match j.get("event").and_then(Json::as_str) {
+            Some("result") => {
+                let pct = j.get("accuracy_pct").and_then(Json::as_f64).unwrap_or(f64::NAN);
+                println!("demo_es result: accuracy {pct:.2}%");
+            }
+            Some(ev) => println!("demo_es event: {ev}"),
+            // The final non-event line closes the stream.
+            None => break,
+        }
+    }
+
+    // ---- status: queue/latency/cost accounting per job -----------------
+    let status = request(addr, &obj(vec![("cmd", s("status"))]))?;
+    println!("status: {}", status.to_string_compact());
+
+    // ---- shutdown: drain finishes queued jobs, then exits --------------
+    let resp = request(addr, &obj(vec![("cmd", s("shutdown"))]))?;
+    println!("shutdown: {}", resp.to_string_compact());
+    server.wait();
+    let _ = std::fs::remove_dir_all(&state_dir);
+    Ok(())
+}

@@ -103,6 +103,10 @@ pub(crate) fn emit_into(slot: &mut Option<&mut EventBus>, event: Event) {
 
 /// Stdout progress printer: one line per run start, eval point, and run
 /// end. The default `--progress` style consumer for the CLI and examples.
+///
+/// Lines are written with explicit error handling rather than `println!`:
+/// when stdout goes away mid-run (`evosample ... | head`), a broken pipe
+/// silences further progress output instead of panicking the run.
 #[derive(Default)]
 pub struct ProgressSink;
 
@@ -110,25 +114,36 @@ impl ProgressSink {
     pub fn new() -> ProgressSink {
         ProgressSink
     }
+
+    fn line(&self, args: std::fmt::Arguments<'_>) {
+        use std::io::Write;
+        let mut out = std::io::stdout().lock();
+        let _ = out.write_fmt(args).and_then(|()| out.write_all(b"\n"));
+    }
 }
 
 impl EventSink for ProgressSink {
     fn on_event(&mut self, event: &Event) {
         match event {
             Event::RunStart { name, sampler, epochs } => {
-                println!("[{name}] sampler {sampler}, {epochs} epochs");
+                self.line(format_args!("[{name}] sampler {sampler}, {epochs} epochs"));
             }
             Event::EpochStart { epoch, kept, dataset_n } if kept < dataset_n => {
-                println!("  epoch {epoch}: pruned to {kept}/{dataset_n} samples");
+                self.line(format_args!(
+                    "  epoch {epoch}: pruned to {kept}/{dataset_n} samples"
+                ));
             }
             Event::EvalDone { epoch, loss, accuracy, bp_samples } => {
-                println!(
+                self.line(format_args!(
                     "  epoch {epoch}: eval loss {loss:.4}  acc {:.2}%  (bp samples {bp_samples})",
                     100.0 * accuracy
-                );
+                ));
             }
             Event::RunEnd { steps, accuracy } => {
-                println!("  done: {steps} steps, final acc {:.2}%", 100.0 * accuracy);
+                self.line(format_args!(
+                    "  done: {steps} steps, final acc {:.2}%",
+                    100.0 * accuracy
+                ));
             }
             _ => {}
         }

@@ -33,6 +33,7 @@ pub use events::{Event, EventBus, EventSink, ProgressSink};
 
 use crate::config::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig};
 use crate::coordinator::engine::Engine;
+pub use crate::coordinator::engine::{EngineResume, EpochHook, RunSnapshot};
 use crate::coordinator::TrainResult;
 use crate::data::{self, SplitDataset};
 use crate::runtime::{make_runtime, ModelRuntime};
@@ -283,11 +284,31 @@ impl<'rt> Session<'rt> {
 
     /// Execute one full training run and return its typed report.
     pub fn run(&mut self) -> anyhow::Result<RunResult> {
+        self.run_resumable(None, None)
+    }
+
+    /// [`Session::run`] with the engine's checkpoint/resume surface
+    /// exposed: continue from an [`EngineResume`] instead of starting
+    /// fresh, and/or observe every epoch boundary through an
+    /// [`EpochHook`] (the serve scheduler's checkpoint writer and
+    /// cancellation point). Sequential engine modes only — threaded
+    /// workers reject both.
+    pub fn run_resumable(
+        &mut self,
+        resume: Option<EngineResume>,
+        hook: Option<Box<dyn EpochHook>>,
+    ) -> anyhow::Result<RunResult> {
         self.cfg.validate().map_err(|e| anyhow::anyhow!("config: {e}"))?;
         let sampler = sampler::build(&self.cfg.sampler, self.split.train.n, self.cfg.epochs)?;
-        Engine::new(&self.cfg, self.rt.get(), &self.split, sampler)
-            .with_event_bus(&mut self.bus)
-            .run()
+        let mut engine = Engine::new(&self.cfg, self.rt.get(), &self.split, sampler)
+            .with_event_bus(&mut self.bus);
+        if let Some(r) = resume {
+            engine = engine.resume_from(r);
+        }
+        if let Some(h) = hook {
+            engine = engine.with_epoch_hook(h);
+        }
+        engine.run()
     }
 
     /// Run `trials` independent seeds (seed, seed+1000, ...) on this

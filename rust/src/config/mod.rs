@@ -4,7 +4,9 @@ pub mod presets;
 pub mod schema;
 pub mod toml;
 
-pub use schema::{DatasetConfig, LrSchedule, RunConfig, SamplerConfig, ScoringPrecision};
+pub use schema::{
+    DatasetConfig, LrSchedule, RunConfig, SamplerConfig, ScoringPrecision, ServeConfig,
+};
 pub use toml::Doc;
 
 /// Load a RunConfig from a TOML file path.

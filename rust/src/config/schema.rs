@@ -516,6 +516,102 @@ impl RunConfig {
     }
 }
 
+/// The `[serve]` table: knobs for the multi-tenant selection service
+/// (`crate::serve`). Parsed from the same TOML documents as `RunConfig`
+/// but independent of it — a serve config describes the *server*, each
+/// submitted job carries its own run config.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// TCP port on 127.0.0.1 (0 = OS-assigned ephemeral port; the server
+    /// prints the bound address on startup).
+    pub port: u16,
+    /// Jobs allowed to run at once; the rest wait in the queue.
+    pub max_concurrent: usize,
+    /// Queue depth past the running set. A submit that would exceed it is
+    /// shed with an explicit `rejected{reason: "queue_full"}`.
+    pub max_queue: usize,
+    /// Aggregate cap on *spawned* kernel lanes across all running jobs
+    /// (each job's lane 0 is its own worker thread and is never counted).
+    /// 0 = auto: `available_parallelism - 1`, floor 1. Budget exhaustion
+    /// degrades lane counts, never numerics (DESIGN.md §7).
+    pub kernel_budget: usize,
+    /// Directory for job records, checkpoints, and results. Jobs found
+    /// here in a non-terminal state on startup are resumed.
+    pub state_dir: String,
+    /// Checkpoint a running job every k completed epochs (0 = never; a
+    /// killed server then restarts the job from scratch).
+    pub checkpoint_every: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            port: 0,
+            max_concurrent: 2,
+            max_queue: 16,
+            kernel_budget: 0,
+            state_dir: "serve_state".to_string(),
+            checkpoint_every: 1,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Spawned-lane budget with the auto default resolved.
+    pub fn effective_kernel_budget(&self) -> usize {
+        if self.kernel_budget > 0 {
+            self.kernel_budget
+        } else {
+            let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
+            cores.saturating_sub(1).max(1)
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_concurrent == 0 {
+            return Err("serve.max_concurrent must be >= 1".into());
+        }
+        // Catch negative TOML values wrapped huge via `as usize`.
+        if self.max_concurrent > 1024 {
+            return Err("serve.max_concurrent out of range".into());
+        }
+        if self.max_queue > 1 << 20 {
+            return Err("serve.max_queue out of range".into());
+        }
+        if self.kernel_budget > 4096 {
+            return Err("serve.kernel_budget out of range (0 = auto)".into());
+        }
+        if self.checkpoint_every > 1 << 20 {
+            return Err("serve.checkpoint_every out of range (0 = never)".into());
+        }
+        if self.state_dir.is_empty() {
+            return Err("serve.state_dir must not be empty".into());
+        }
+        Ok(())
+    }
+
+    /// Parse the `[serve]` table (every key optional; missing table =
+    /// all defaults).
+    pub fn from_doc(doc: &Doc) -> Result<ServeConfig, String> {
+        let d = ServeConfig::default();
+        let port = doc.i64_or("serve.port", d.port as i64);
+        if !(0..=u16::MAX as i64).contains(&port) {
+            return Err(format!("serve.port {port} out of range"));
+        }
+        let cfg = ServeConfig {
+            port: port as u16,
+            max_concurrent: doc.i64_or("serve.max_concurrent", d.max_concurrent as i64) as usize,
+            max_queue: doc.i64_or("serve.max_queue", d.max_queue as i64) as usize,
+            kernel_budget: doc.i64_or("serve.kernel_budget", d.kernel_budget as i64) as usize,
+            state_dir: doc.str_or("serve.state_dir", &d.state_dir),
+            checkpoint_every: doc.i64_or("serve.checkpoint_every", d.checkpoint_every as i64)
+                as usize,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -720,6 +816,34 @@ n = 1024
         assert!(!SamplerConfig::infobatch_default().is_batch_level());
         assert!(SamplerConfig::ucb_default().is_set_level());
         assert!(SamplerConfig::kakurenbo_default().is_set_level());
+    }
+
+    #[test]
+    fn serve_table_parses_with_defaults_and_validates() {
+        let src = "[serve]\nport = 4717\nmax_concurrent = 3\nkernel_budget = 6\n";
+        let sc = ServeConfig::from_doc(&Doc::parse(src).unwrap()).unwrap();
+        assert_eq!(sc.port, 4717);
+        assert_eq!(sc.max_concurrent, 3);
+        assert_eq!(sc.kernel_budget, 6);
+        assert_eq!(sc.max_queue, 16, "unset keys fall back to defaults");
+        assert_eq!(sc.state_dir, "serve_state");
+        assert_eq!(sc.checkpoint_every, 1);
+
+        // A document without a [serve] table is all defaults.
+        let sc = ServeConfig::from_doc(&Doc::parse("[run]\nepochs = 1\n").unwrap()).unwrap();
+        assert_eq!(sc, ServeConfig::default());
+        assert!(sc.effective_kernel_budget() >= 1);
+
+        let err =
+            ServeConfig::from_doc(&Doc::parse("[serve]\nmax_concurrent = 0\n").unwrap())
+                .unwrap_err();
+        assert!(err.contains("max_concurrent"), "{err}");
+        let err =
+            ServeConfig::from_doc(&Doc::parse("[serve]\nport = 70000\n").unwrap()).unwrap_err();
+        assert!(err.contains("port"), "{err}");
+        let err = ServeConfig::from_doc(&Doc::parse("[serve]\nmax_queue = -1\n").unwrap())
+            .unwrap_err();
+        assert!(err.contains("max_queue"), "{err}");
     }
 
     #[test]

@@ -45,6 +45,34 @@ impl Checkpoint {
         Ok(bin)
     }
 
+    /// [`Checkpoint::save`] with an additional free-form JSON document
+    /// stored under an `"extra"` key in the metadata sidecar. The serve
+    /// layer uses this to persist everything a mid-run resume needs
+    /// beyond the flat params (RNG position, sampler tables, optimizer
+    /// state, accounting counters) without changing the binary format.
+    pub fn save_with_extra(&self, dir: &Path, name: &str, extra: &Json) -> std::io::Result<PathBuf> {
+        let bin = self.save(dir, name)?;
+        let side = dir.join(format!("{name}.json"));
+        let src = std::fs::read_to_string(&side)?;
+        let mut meta = Json::parse(&src)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        if let Json::Obj(map) = &mut meta {
+            map.insert("extra".to_string(), extra.clone());
+        }
+        std::fs::write(&side, meta.to_string_compact())?;
+        Ok(bin)
+    }
+
+    /// Read back the `"extra"` document written by
+    /// [`Checkpoint::save_with_extra`]. `Json::Null` when the sidecar has
+    /// no extra section (a plain [`Checkpoint::save`]).
+    pub fn load_extra(dir: &Path, name: &str) -> std::io::Result<Json> {
+        let src = std::fs::read_to_string(dir.join(format!("{name}.json")))?;
+        let meta = Json::parse(&src)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        Ok(meta.get("extra").cloned().unwrap_or(Json::Null))
+    }
+
     pub fn load(dir: &Path, name: &str) -> std::io::Result<Checkpoint> {
         let invalid = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
         let bin = dir.join(format!("{name}.ckpt"));
@@ -210,6 +238,36 @@ mod tests {
         let err = Checkpoint::load(&d, "cut").unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
         assert!(err.to_string().contains("truncated"), "{err}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn extra_sidecar_roundtrips_and_keeps_core_fields() {
+        let d = fresh_dir("extra");
+        let ck = Checkpoint { model: "mlp".into(), step: 9, seed: 3, params: vec![0.5, 1.25] };
+        let extra = obj(vec![
+            ("epoch", num(4.0)),
+            ("fp_passes", num(1234.0)),
+            ("rng_state", s("0xdeadbeef")),
+        ]);
+        ck.save_with_extra(&d, "ex", &extra).unwrap();
+        // The binary payload and core metadata survive unchanged...
+        let back = Checkpoint::load(&d, "ex").unwrap();
+        assert_eq!(ck, back);
+        // ...and the extra document round-trips exactly.
+        let got = Checkpoint::load_extra(&d, "ex").unwrap();
+        assert_eq!(got.get("epoch").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(got.get("fp_passes").and_then(Json::as_f64), Some(1234.0));
+        assert_eq!(got.get("rng_state").and_then(Json::as_str), Some("0xdeadbeef"));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn plain_save_has_null_extra() {
+        let d = fresh_dir("noextra");
+        let ck = Checkpoint { model: "mlp".into(), step: 1, seed: 2, params: vec![1.0] };
+        ck.save(&d, "plain").unwrap();
+        assert_eq!(Checkpoint::load_extra(&d, "plain").unwrap(), Json::Null);
         let _ = std::fs::remove_dir_all(&d);
     }
 

@@ -30,11 +30,104 @@ use crate::data::loader::{EpochLoader, Prefetcher};
 use crate::data::SplitDataset;
 use crate::runtime::ModelRuntime;
 use crate::sampler::Sampler;
+use crate::util::json::Json;
 use crate::util::timer::{phase, PhaseTimers};
 use crate::util::Pcg64;
 
 use super::accounting::CostSummary;
 use super::trainer::{evaluate, EvalStats, TrainResult};
+
+/// Epoch-boundary view of a run's full mutable state, handed to an
+/// [`EpochHook`] after every completed epoch (post `EpochEnd` emission).
+/// Everything a checkpoint needs to continue the run *exactly* is here:
+/// parameters + optimizer state, the main RNG position, the sampler's
+/// tables, step counters, the scoring-cadence ticks, and the curves.
+pub struct RunSnapshot<'a> {
+    /// The epoch that just completed (0-based).
+    pub epoch: usize,
+    pub step_idx: usize,
+    /// Canonical flat parameters after this epoch.
+    pub params: &'a [f32],
+    /// Optimizer state ([`ModelRuntime::get_opt_state`]; may be empty).
+    pub opt_state: &'a [f32],
+    /// Main-RNG `(state, inc)` — captured here it is exactly the state
+    /// the next epoch's `on_epoch_start` will consume.
+    pub rng_state: (u128, u128),
+    pub sampler: &'a dyn Sampler,
+    pub stats: &'a StepStats,
+    pub score_ticks: &'a [u64],
+    pub loss_curve: &'a [f64],
+    pub eval_curve: &'a [(usize, f64, f64)],
+    pub bp_at_eval: &'a [u64],
+    pub timers: &'a PhaseTimers,
+}
+
+/// Per-epoch callback on the sequential engine paths (single-worker and
+/// the data-parallel simulation). Returning `Err` aborts the run — the
+/// serve scheduler uses that for cooperative cancellation; the error
+/// propagates out of [`Engine::run`].
+pub trait EpochHook: Send {
+    fn on_epoch_end(&mut self, snap: &RunSnapshot<'_>) -> anyhow::Result<()>;
+}
+
+impl<F> EpochHook for F
+where
+    F: FnMut(&RunSnapshot<'_>) -> anyhow::Result<()> + Send,
+{
+    fn on_epoch_end(&mut self, snap: &RunSnapshot<'_>) -> anyhow::Result<()> {
+        self(snap)
+    }
+}
+
+/// Mid-run state captured from a [`RunSnapshot`] (plus the sampler's
+/// [`Sampler::state_json`]), sufficient to continue a sequential run
+/// bit-for-bit from the next epoch. Threaded mode does not support
+/// resume (replica-local RNG/pipeline state is not captured).
+#[derive(Clone, Debug)]
+pub struct EngineResume {
+    /// First epoch the resumed run executes (`snapshot.epoch + 1`).
+    pub next_epoch: usize,
+    pub step_idx: usize,
+    pub params: Vec<f32>,
+    pub opt_state: Vec<f32>,
+    pub rng_state: (u128, u128),
+    /// `None` = the sampler does not support state capture; the caller
+    /// must not have produced such a resume point (build-time check).
+    pub sampler_state: Option<Json>,
+    pub stats: StepStats,
+    pub score_ticks: Vec<u64>,
+    pub loss_curve: Vec<f64>,
+    pub eval_curve: Vec<(usize, f64, f64)>,
+    pub bp_at_eval: Vec<u64>,
+    /// Phase-ledger seconds `(label, secs)` accumulated before the
+    /// checkpoint, re-seeded into the resumed run's timers.
+    pub timer_secs: Vec<(String, f64)>,
+}
+
+impl EngineResume {
+    /// Capture a resume point from an epoch-boundary snapshot; the
+    /// continued run starts at `snap.epoch + 1`.
+    pub fn from_snapshot(snap: &RunSnapshot<'_>) -> EngineResume {
+        EngineResume {
+            next_epoch: snap.epoch + 1,
+            step_idx: snap.step_idx,
+            params: snap.params.to_vec(),
+            opt_state: snap.opt_state.to_vec(),
+            rng_state: snap.rng_state,
+            sampler_state: snap.sampler.state_json(),
+            stats: snap.stats.clone(),
+            score_ticks: snap.score_ticks.to_vec(),
+            loss_curve: snap.loss_curve.to_vec(),
+            eval_curve: snap.eval_curve.to_vec(),
+            bp_at_eval: snap.bp_at_eval.to_vec(),
+            timer_secs: snap
+                .timers
+                .phases()
+                .map(|(label, d)| (label.to_string(), d.as_secs_f64()))
+                .collect(),
+        }
+    }
+}
 
 /// One training run: configuration + runtime + data + sampler.
 pub struct Engine<'a> {
@@ -44,6 +137,8 @@ pub struct Engine<'a> {
     sampler: Box<dyn Sampler>,
     observer: Option<Box<dyn StageObserver>>,
     events: Option<&'a mut EventBus>,
+    hook: Option<Box<dyn EpochHook>>,
+    resume: Option<EngineResume>,
 }
 
 impl<'a> Engine<'a> {
@@ -53,7 +148,7 @@ impl<'a> Engine<'a> {
         data: &'a SplitDataset,
         sampler: Box<dyn Sampler>,
     ) -> Engine<'a> {
-        Engine { cfg, rt, data, sampler, observer: None, events: None }
+        Engine { cfg, rt, data, sampler, observer: None, events: None, hook: None, resume: None }
     }
 
     /// Install a per-stage accounting hook (single-worker and simulation
@@ -72,6 +167,20 @@ impl<'a> Engine<'a> {
         self
     }
 
+    /// Install an epoch-boundary hook (sequential modes only; the
+    /// threaded path has no single serializable state to snapshot).
+    pub fn with_epoch_hook(mut self, hook: Box<dyn EpochHook>) -> Engine<'a> {
+        self.hook = Some(hook);
+        self
+    }
+
+    /// Continue a previous run from an epoch-boundary [`EngineResume`]
+    /// instead of starting fresh. Sequential modes only.
+    pub fn resume_from(mut self, resume: EngineResume) -> Engine<'a> {
+        self.resume = Some(resume);
+        self
+    }
+
     /// Post-run sampler inspection (tests, table analyses).
     pub fn sampler(&self) -> &dyn Sampler {
         self.sampler.as_ref()
@@ -84,6 +193,15 @@ impl<'a> Engine<'a> {
     /// Execute the full run.
     pub fn run(&mut self) -> anyhow::Result<TrainResult> {
         if self.cfg.threaded_workers && self.cfg.workers > 1 {
+            anyhow::ensure!(
+                self.resume.is_none(),
+                "resume is not supported in threaded-worker mode \
+                 (replica-local state is not captured)"
+            );
+            anyhow::ensure!(
+                self.hook.is_none(),
+                "epoch hooks are not supported in threaded-worker mode"
+            );
             threaded::run(
                 self.cfg,
                 self.rt,
@@ -99,7 +217,9 @@ impl<'a> Engine<'a> {
     /// Single-worker path and the sequential data-parallel simulation.
     fn run_sequential(&mut self) -> anyhow::Result<TrainResult> {
         let cfg = self.cfg;
-        let mut rng = Pcg64::new(cfg.seed);
+        // Fresh-start state first; a resume point overrides every piece
+        // below. init always runs so backends reset cleanly before the
+        // restored params/optimizer state land on top.
         self.rt.init(cfg.seed as i32)?;
 
         let mut timers = PhaseTimers::new();
@@ -117,6 +237,39 @@ impl<'a> Engine<'a> {
         let mut eval_curve = Vec::new();
         let mut bp_at_eval = Vec::new();
 
+        let mut rng = Pcg64::new(cfg.seed);
+        let mut start_epoch = 0usize;
+        if let Some(r) = self.resume.take() {
+            anyhow::ensure!(
+                r.next_epoch <= cfg.epochs,
+                "resume epoch {} beyond configured epochs {}",
+                r.next_epoch,
+                cfg.epochs
+            );
+            self.rt.set_params(&r.params)?;
+            self.rt.set_opt_state(&r.opt_state)?;
+            if let Some(state) = &r.sampler_state {
+                self.sampler.restore_state(state)?;
+            } else {
+                anyhow::bail!(
+                    "resume point has no sampler state (sampler {:?} does not \
+                     support capture)",
+                    self.sampler.name()
+                );
+            }
+            rng = Pcg64::from_state(r.rng_state.0, r.rng_state.1);
+            pipeline.stats = r.stats;
+            pipeline.set_score_ticks(r.score_ticks);
+            step_idx = r.step_idx;
+            loss_curve = r.loss_curve;
+            eval_curve = r.eval_curve;
+            bp_at_eval = r.bp_at_eval;
+            for (label, secs) in &r.timer_secs {
+                timers.add(label, std::time::Duration::from_secs_f64(*secs));
+            }
+            start_epoch = r.next_epoch;
+        }
+
         let workers = cfg.workers.max(1);
 
         emit_into(
@@ -128,7 +281,7 @@ impl<'a> Engine<'a> {
             },
         );
 
-        for epoch in 0..cfg.epochs {
+        for epoch in start_epoch..cfg.epochs {
             // ---- set-level selection -----------------------------------
             let kept =
                 timers.time(phase::PRUNE, || self.sampler.on_epoch_start(epoch, &mut rng));
@@ -280,6 +433,27 @@ impl<'a> Engine<'a> {
                 &mut self.events,
                 Event::EpochEnd { epoch, mean_train_loss: epoch_mean },
             );
+            if self.hook.is_some() {
+                // Snapshot cost is only paid when a hook is installed, so
+                // the plain path stays byte-identical in work and bits.
+                let params = self.rt.get_params()?;
+                let opt_state = self.rt.get_opt_state()?;
+                let snap = RunSnapshot {
+                    epoch,
+                    step_idx,
+                    params: &params,
+                    opt_state: &opt_state,
+                    rng_state: rng.state(),
+                    sampler: self.sampler.as_ref(),
+                    stats: &pipeline.stats,
+                    score_ticks: pipeline.score_ticks(),
+                    loss_curve: &loss_curve,
+                    eval_curve: &eval_curve,
+                    bp_at_eval: &bp_at_eval,
+                    timers: &timers,
+                };
+                self.hook.as_mut().unwrap().on_epoch_end(&snap)?;
+            }
         }
 
         emit_into(
@@ -412,5 +586,96 @@ mod tests {
         // Tables moved off the uniform init during training.
         let init = 1.0 / split.train.n as f32;
         assert!(es.weights_table().iter().any(|&w| (w - init).abs() > 1e-6));
+    }
+
+    #[test]
+    fn hook_capture_then_resume_matches_uninterrupted_run() {
+        let cfg = small_cfg(SamplerConfig::es_default());
+        let split = data::build(&cfg.dataset, cfg.test_n, 3);
+
+        // Uninterrupted baseline.
+        let mut rt_a = NativeRuntime::new(split.train.x_len(), 16, 4);
+        let s = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
+        let base = Engine::new(&cfg, &mut rt_a, &split, s).run().unwrap();
+        let base_params = rt_a.get_params().unwrap();
+
+        // Same run with a hook capturing resume points mid-run and at the
+        // final epoch boundary.
+        let captured: Arc<Mutex<Vec<EngineResume>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = captured.clone();
+        let last_epoch = cfg.epochs - 1;
+        let mut rt_b = NativeRuntime::new(split.train.x_len(), 16, 4);
+        let s = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
+        let hooked = Engine::new(&cfg, &mut rt_b, &split, s)
+            .with_epoch_hook(Box::new(move |snap: &RunSnapshot<'_>| {
+                if snap.epoch == 1 || snap.epoch == last_epoch {
+                    sink.lock().unwrap().push(EngineResume::from_snapshot(snap));
+                }
+                Ok(())
+            }))
+            .run()
+            .unwrap();
+        // Snapshotting must not perturb the run itself.
+        assert_eq!(base.loss_curve, hooked.loss_curve);
+        assert_eq!(base_params, rt_b.get_params().unwrap());
+
+        let mut captured = captured.lock().unwrap();
+        assert_eq!(captured.len(), 2);
+        let final_point = captured.pop().unwrap();
+        let mid_point = captured.pop().unwrap();
+        assert_eq!(mid_point.next_epoch, 2);
+
+        // Resuming from epoch 2 must land on the uninterrupted trajectory
+        // exactly: curves, counters, and parameters bit-for-bit.
+        let mut rt_c = NativeRuntime::new(split.train.x_len(), 16, 4);
+        let s = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
+        let resumed =
+            Engine::new(&cfg, &mut rt_c, &split, s).resume_from(mid_point).run().unwrap();
+        assert_eq!(base.loss_curve, resumed.loss_curve);
+        assert_eq!(base.eval_curve, resumed.eval_curve);
+        assert_eq!(base.steps, resumed.steps);
+        assert_eq!(base.cost.fp_passes, resumed.cost.fp_passes);
+        assert_eq!(base.cost.bp_samples, resumed.cost.bp_samples);
+        assert_eq!(base_params, rt_c.get_params().unwrap());
+
+        // A resume point at the final epoch boundary replays nothing and
+        // still reports the completed run's result.
+        assert_eq!(final_point.next_epoch, cfg.epochs);
+        let mut rt_d = NativeRuntime::new(split.train.x_len(), 16, 4);
+        let s = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
+        let replay =
+            Engine::new(&cfg, &mut rt_d, &split, s).resume_from(final_point).run().unwrap();
+        assert_eq!(base.loss_curve, replay.loss_curve);
+        assert_eq!(base.steps, replay.steps);
+        assert_eq!(base_params, rt_d.get_params().unwrap());
+    }
+
+    #[test]
+    fn resume_without_sampler_state_is_rejected() {
+        let cfg = small_cfg(SamplerConfig::es_default());
+        let split = data::build(&cfg.dataset, cfg.test_n, 4);
+        let captured: Arc<Mutex<Option<EngineResume>>> = Arc::new(Mutex::new(None));
+        let sink = captured.clone();
+        let mut rt = NativeRuntime::new(split.train.x_len(), 16, 4);
+        let s = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
+        Engine::new(&cfg, &mut rt, &split, s)
+            .with_epoch_hook(Box::new(move |snap: &RunSnapshot<'_>| {
+                if snap.epoch == 0 {
+                    *sink.lock().unwrap() = Some(EngineResume::from_snapshot(snap));
+                }
+                Ok(())
+            }))
+            .run()
+            .unwrap();
+        let mut point = captured.lock().unwrap().take().unwrap();
+        point.sampler_state = None;
+
+        let mut rt2 = NativeRuntime::new(split.train.x_len(), 16, 4);
+        let s = sampler::build(&cfg.sampler, split.train.n, cfg.epochs).unwrap();
+        let err = Engine::new(&cfg, &mut rt2, &split, s)
+            .resume_from(point)
+            .run()
+            .expect_err("resume without sampler state must fail");
+        assert!(err.to_string().contains("sampler state"), "unexpected error: {err}");
     }
 }

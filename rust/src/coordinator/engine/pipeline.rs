@@ -159,6 +159,18 @@ fn staged<T>(
 }
 
 impl StepPipeline {
+    /// Per-stream scoring-cadence positions — part of a job checkpoint:
+    /// in sequential modes the cadence persists across epochs, so a
+    /// resumed run must continue the tick count, not restart it.
+    pub fn score_ticks(&self) -> &[u64] {
+        &self.score_ticks
+    }
+
+    /// Restore cadence positions captured by [`StepPipeline::score_ticks`].
+    pub fn set_score_ticks(&mut self, ticks: Vec<u64>) {
+        self.score_ticks = ticks;
+    }
+
     /// `classes` sizes the Fig. 9 per-class BP tally (>= 1).
     pub fn new(classes: usize) -> StepPipeline {
         StepPipeline {

@@ -32,6 +32,7 @@ pub mod coordinator;
 pub mod metrics;
 pub mod api;
 pub mod experiments;
+pub mod serve;
 pub mod cli;
 
 pub use api::prelude;

@@ -10,6 +10,12 @@
 //!   experiment     --id <table2|table3|table4|table5|fig4|fig5|fig6|fig7|
 //!                       fig1|fig9|fig10|tab6|tab7|tab8|freq|theory> [--full]
 //!   illustrate                        (fig1 weight-signal traces)
+//!   serve          [--config <serve.toml>] [--port P] [--max-concurrent N]
+//!                  [--max-queue N] [--kernel-budget N]
+//!                  [--checkpoint-every K] [--dir STATE_DIR]
+//!   submit         --addr <host:port> (--config <run.toml> [--sampler S]
+//!                  [--name N] [--job-id ID] [--follow] | --status [--job ID]
+//!                  | --cancel ID | --shutdown drain|abort)
 //!   help
 //!
 //! Unknown subcommands are an error (exit 1); `help` is the only usage
@@ -42,6 +48,16 @@ USAGE:
                              theory>
                        [--full]
   evosample illustrate
+  evosample serve    [--config <serve.toml>] [--port P] [--max-concurrent N]
+                     [--max-queue N] [--kernel-budget N]
+                     [--checkpoint-every K] [--dir STATE_DIR]
+                     (multi-tenant selection service: queued jobs behind a
+                      JSONL-over-TCP protocol on localhost; see DESIGN.md §10)
+  evosample submit   --addr <host:port>
+                     (--config <run.toml> [--sampler S] [--name N]
+                      [--job-id ID] [--follow]
+                      | --status [--job ID] | --cancel ID
+                      | --shutdown drain|abort)
   evosample help
 ";
 
@@ -54,8 +70,8 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> anyhow::Result<()> {
-    let args =
-        Args::parse(argv, &["full", "threaded-workers"]).map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
+    let args = Args::parse(argv, &["full", "threaded-workers", "follow", "status"])
+        .map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
     match args.subcommand.as_str() {
         "train" => {
             let path = args
@@ -191,10 +207,133 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             }
         }
         "illustrate" => experiments::fig1::run(400),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
         "help" => {
             println!("{USAGE}");
             Ok(())
         }
         other => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+/// Boot the multi-tenant selection service (blocks until a client sends
+/// `shutdown`). Flags override the `[serve]` table from `--config`.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let mut sc = match args.flag("config") {
+        Some(path) => {
+            let src = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
+            let doc = config::Doc::parse(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+            config::ServeConfig::from_doc(&doc).map_err(|e| anyhow::anyhow!("{e}"))?
+        }
+        None => config::ServeConfig::default(),
+    };
+    if let Some(p) = args.usize_flag("port").map_err(|e| anyhow::anyhow!("{e}"))? {
+        sc.port = u16::try_from(p).map_err(|_| anyhow::anyhow!("--port out of range"))?;
+    }
+    if let Some(n) = args.usize_flag("max-concurrent").map_err(|e| anyhow::anyhow!("{e}"))? {
+        sc.max_concurrent = n;
+    }
+    if let Some(n) = args.usize_flag("max-queue").map_err(|e| anyhow::anyhow!("{e}"))? {
+        sc.max_queue = n;
+    }
+    if let Some(n) = args.usize_flag("kernel-budget").map_err(|e| anyhow::anyhow!("{e}"))? {
+        sc.kernel_budget = n;
+    }
+    if let Some(k) = args.usize_flag("checkpoint-every").map_err(|e| anyhow::anyhow!("{e}"))? {
+        sc.checkpoint_every = k;
+    }
+    if let Some(dir) = args.flag("dir") {
+        sc.state_dir = dir.to_string();
+    }
+    let handle = evosample::serve::Server::start(sc)?;
+    handle.wait();
+    Ok(())
+}
+
+/// Thin line-protocol client for the serve service.
+fn cmd_submit(args: &Args) -> anyhow::Result<()> {
+    use evosample::util::json::{obj, s, Json};
+    use std::io::{BufRead, BufReader, Write};
+
+    let addr = args
+        .flag("addr")
+        .ok_or_else(|| anyhow::anyhow!("submit needs --addr <host:port>"))?;
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+
+    fn send(stream: &mut std::net::TcpStream, j: &Json) -> anyhow::Result<()> {
+        stream.write_all(j.to_string_compact().as_bytes())?;
+        stream.write_all(b"\n")?;
+        Ok(())
+    }
+    fn read_line(reader: &mut BufReader<std::net::TcpStream>) -> anyhow::Result<String> {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        Ok(line.trim().to_string())
+    }
+
+    if args.has("status") {
+        let mut fields = vec![("cmd", s("status"))];
+        if let Some(id) = args.flag("job") {
+            fields.push(("job", s(id)));
+        }
+        send(&mut stream, &obj(fields))?;
+        println!("{}", read_line(&mut reader)?);
+        return Ok(());
+    }
+    if let Some(id) = args.flag("cancel") {
+        send(&mut stream, &obj(vec![("cmd", s("cancel")), ("job", s(id))]))?;
+        println!("{}", read_line(&mut reader)?);
+        return Ok(());
+    }
+    if let Some(mode) = args.flag("shutdown") {
+        send(&mut stream, &obj(vec![("cmd", s("shutdown")), ("mode", s(mode))]))?;
+        println!("{}", read_line(&mut reader)?);
+        return Ok(());
+    }
+
+    let path = args.flag("config").ok_or_else(|| {
+        anyhow::anyhow!("submit needs --config <run.toml> (or --status/--cancel/--shutdown)")
+    })?;
+    let toml_src =
+        std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
+    let mut fields = vec![("cmd", s("submit")), ("config", s(toml_src))];
+    if let Some(n) = args.flag("name") {
+        fields.push(("name", s(n)));
+    }
+    if let Some(sm) = args.flag("sampler") {
+        fields.push(("sampler", s(sm)));
+    }
+    if let Some(id) = args.flag("job-id") {
+        fields.push(("job_id", s(id)));
+    }
+    send(&mut stream, &obj(fields))?;
+    let resp_line = read_line(&mut reader)?;
+    println!("{resp_line}");
+    if !args.has("follow") {
+        return Ok(());
+    }
+    let resp = Json::parse(&resp_line).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+    anyhow::ensure!(
+        resp.get("ok") == Some(&Json::Bool(true)),
+        "submission not accepted; nothing to follow"
+    );
+    let job = resp
+        .get("job")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("response carries no job id"))?
+        .to_string();
+    send(&mut stream, &obj(vec![("cmd", s("events")), ("job", s(job))]))?;
+    loop {
+        let line = read_line(&mut reader)?;
+        println!("{line}");
+        // The stream ends with one ok/err line after the final event.
+        if Json::parse(&line).is_ok_and(|j| j.get("ok").is_some()) {
+            return Ok(());
+        }
     }
 }

@@ -6,8 +6,9 @@
 //! (`api::Event`) to JSONL as a run progresses — the metrics layer's
 //! consumer of the public event stream.
 
-use std::io::Write;
+use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 use crate::api::events::{Event, EventSink};
 use crate::coordinator::TrainResult;
@@ -52,26 +53,38 @@ pub fn result_to_json(r: &TrainResult) -> Json {
 }
 
 /// Append-only JSONL recorder.
+///
+/// The append handle is opened lazily on the first record and held for
+/// the recorder's lifetime, so a long event stream pays one open instead
+/// of an open/close syscall pair per line. Every record is flushed
+/// through immediately — concurrent readers (tests, `tail -f`) see lines
+/// as they land — and the `BufWriter` flushes once more on drop.
 pub struct Recorder {
     path: PathBuf,
+    file: Mutex<Option<BufWriter<std::fs::File>>>,
 }
 
 impl Recorder {
     /// Records under `results/<name>.jsonl` (dir created on demand).
     pub fn new(name: &str) -> std::io::Result<Recorder> {
-        let dir = Path::new("results");
-        std::fs::create_dir_all(dir)?;
-        Ok(Recorder { path: dir.join(format!("{name}.jsonl")) })
+        Recorder::in_dir(Path::new("results"), name)
     }
 
     pub fn in_dir(dir: &Path, name: &str) -> std::io::Result<Recorder> {
         std::fs::create_dir_all(dir)?;
-        Ok(Recorder { path: dir.join(format!("{name}.jsonl")) })
+        Ok(Recorder { path: dir.join(format!("{name}.jsonl")), file: Mutex::new(None) })
     }
 
     pub fn record(&self, j: &Json) -> std::io::Result<()> {
-        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
-        writeln!(f, "{}", j.to_string_compact())
+        let mut slot = self.file.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_none() {
+            let f =
+                std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
+            *slot = Some(BufWriter::new(f));
+        }
+        let w = slot.as_mut().unwrap();
+        writeln!(w, "{}", j.to_string_compact())?;
+        w.flush()
     }
 
     pub fn record_result(&self, r: &TrainResult) -> std::io::Result<()> {
@@ -233,6 +246,20 @@ mod tests {
         assert_eq!(back.get("event").unwrap().as_str(), Some("eval_done"));
         assert_eq!(back.get("accuracy").unwrap().as_f64(), Some(0.8));
         let _ = std::fs::remove_file(log.path());
+    }
+
+    #[test]
+    fn recorder_flushes_each_line_while_open() {
+        let dir = std::env::temp_dir().join("evosample_test_rec_flush");
+        let rec = Recorder::in_dir(&dir, "flush_unit").unwrap();
+        let _ = std::fs::remove_file(rec.path());
+        // The persistent handle must not buffer lines past the record
+        // call: readers see every line while the recorder stays open.
+        rec.record(&Json::Null).unwrap();
+        assert_eq!(std::fs::read_to_string(rec.path()).unwrap().lines().count(), 1);
+        rec.record(&Json::Null).unwrap();
+        assert_eq!(std::fs::read_to_string(rec.path()).unwrap().lines().count(), 2);
+        let _ = std::fs::remove_file(rec.path());
     }
 
     #[test]

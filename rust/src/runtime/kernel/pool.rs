@@ -22,6 +22,57 @@
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+/// A shared cap on the aggregate number of *spawned* kernel worker
+/// threads across any number of [`KernelPool`]s (one per runtime).
+///
+/// The serve scheduler hands one budget to every concurrent session so a
+/// multi-tenant process never oversubscribes the machine: each pool
+/// acquires tokens for its extra lanes (`threads - 1`; lane 0 is the
+/// caller's thread and is never counted) and may be granted *fewer* than
+/// requested when the budget is tight — safe, because the kernel layer's
+/// deterministic sharded reduction makes results bit-identical at any
+/// lane count (DESIGN.md §7). Tokens are held for the pool's lifetime
+/// and released on drop, so queued jobs regain headroom as running jobs
+/// finish.
+pub struct KernelBudget {
+    total: usize,
+    used: Mutex<usize>,
+}
+
+impl KernelBudget {
+    /// A budget of `total` spawnable worker threads (min 0 — a zero
+    /// budget forces every pool into single-lane inline execution).
+    pub fn new(total: usize) -> Arc<KernelBudget> {
+        Arc::new(KernelBudget { total, used: Mutex::new(0) })
+    }
+
+    /// The configured cap.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Tokens currently held by live pools.
+    pub fn in_use(&self) -> usize {
+        *self.used.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Acquire up to `want` tokens, returning how many were granted
+    /// (possibly 0). Never blocks: callers degrade to fewer lanes.
+    pub fn acquire_up_to(&self, want: usize) -> usize {
+        let mut used = self.used.lock().unwrap_or_else(|e| e.into_inner());
+        let granted = want.min(self.total.saturating_sub(*used));
+        *used += granted;
+        granted
+    }
+
+    /// Return `n` previously acquired tokens.
+    pub fn release(&self, n: usize) {
+        let mut used = self.used.lock().unwrap_or_else(|e| e.into_inner());
+        debug_assert!(*used >= n, "budget release of unacquired tokens");
+        *used = used.saturating_sub(n);
+    }
+}
+
 /// Lifetime-erased pointer to the current job closure.
 #[derive(Clone, Copy)]
 struct Job(*const (dyn Fn(usize) + Sync));
@@ -55,13 +106,29 @@ pub struct KernelPool {
     /// completion counts (and dangle the erased job pointer).
     dispatch: Mutex<()>,
     handles: Vec<JoinHandle<()>>,
+    /// Budget tokens held for the spawned lanes (returned on drop).
+    budget: Option<(Arc<KernelBudget>, usize)>,
 }
 
 impl KernelPool {
     /// Spawn a pool with `threads` total lanes (min 1). `threads == 1`
     /// spawns no workers at all — `run` degenerates to a direct call.
     pub fn new(threads: usize) -> KernelPool {
-        let threads = threads.max(1);
+        Self::build(threads.max(1), None)
+    }
+
+    /// Like [`KernelPool::new`], but the `threads - 1` spawned worker
+    /// lanes are charged against `budget`. When the budget can only
+    /// grant `g < threads - 1` tokens the pool spawns `1 + g` lanes —
+    /// results are unchanged (lane count never changes bits), only
+    /// parallelism degrades.
+    pub fn with_budget(threads: usize, budget: Arc<KernelBudget>) -> KernelPool {
+        let want = threads.max(1) - 1;
+        let granted = budget.acquire_up_to(want);
+        Self::build(1 + granted, Some((budget, granted)))
+    }
+
+    fn build(threads: usize, budget: Option<(Arc<KernelBudget>, usize)>) -> KernelPool {
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 job: None,
@@ -78,7 +145,7 @@ impl KernelPool {
             let shared = Arc::clone(&shared);
             handles.push(std::thread::spawn(move || worker_loop(&shared, lane)));
         }
-        KernelPool { threads, shared, dispatch: Mutex::new(()), handles }
+        KernelPool { threads, shared, dispatch: Mutex::new(()), handles, budget }
     }
 
     /// Total lanes, including the caller's.
@@ -180,6 +247,11 @@ impl Drop for KernelPool {
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
+        }
+        // Release only after the lanes are actually gone, so the budget
+        // never under-counts live threads.
+        if let Some((budget, tokens)) = self.budget.take() {
+            budget.release(tokens);
         }
     }
 }
@@ -295,6 +367,78 @@ mod tests {
         for (i, &v) in buf.iter().enumerate() {
             assert_eq!(v, i as f32);
         }
+    }
+
+    #[test]
+    fn budget_caps_aggregate_spawned_lanes() {
+        let budget = KernelBudget::new(4);
+        // First pool wants 3 extra lanes: all granted.
+        let a = KernelPool::with_budget(4, Arc::clone(&budget));
+        assert_eq!(a.threads(), 4);
+        assert_eq!(budget.in_use(), 3);
+        // Second pool wants 3 but only 1 token remains: degrades to 2 lanes.
+        let b = KernelPool::with_budget(4, Arc::clone(&budget));
+        assert_eq!(b.threads(), 2);
+        assert_eq!(budget.in_use(), 4);
+        // Third pool gets nothing: runs inline on the caller's thread.
+        let c = KernelPool::with_budget(4, Arc::clone(&budget));
+        assert_eq!(c.threads(), 1);
+        let hits = AtomicUsize::new(0);
+        c.run(&|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        // Dropping a pool returns its tokens.
+        drop(a);
+        assert_eq!(budget.in_use(), 1);
+        let d = KernelPool::with_budget(3, Arc::clone(&budget));
+        assert_eq!(d.threads(), 3);
+        drop(b);
+        drop(c);
+        drop(d);
+        assert_eq!(budget.in_use(), 0);
+    }
+
+    #[test]
+    fn zero_budget_forces_inline_pools() {
+        let budget = KernelBudget::new(0);
+        let p = KernelPool::with_budget(8, Arc::clone(&budget));
+        assert_eq!(p.threads(), 1);
+        assert_eq!(budget.in_use(), 0);
+        let mut out = vec![0.0f32; 5];
+        let rows = SharedRows::new(&mut out);
+        p.run(&|lane| {
+            assert_eq!(lane, 0);
+            // SAFETY: single lane, whole range.
+            let dst = unsafe { rows.range(0, 5) };
+            for v in dst.iter_mut() {
+                *v = 2.0;
+            }
+        });
+        assert!(out.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn budgeted_pool_produces_same_results_as_unbudgeted() {
+        let n = 29usize;
+        let run_with = |pool: &KernelPool| -> Vec<f32> {
+            let mut buf = vec![0.0f32; n];
+            let rows = SharedRows::new(&mut buf);
+            let lanes = pool.threads();
+            pool.run(&|lane| {
+                let (a, b) = crate::runtime::kernel::split_range(n, lanes, lane);
+                // SAFETY: split_range produces disjoint ranges.
+                let dst = unsafe { rows.range(a, b) };
+                for (k, v) in dst.iter_mut().enumerate() {
+                    *v = ((a + k) * 3) as f32;
+                }
+            });
+            buf
+        };
+        let budget = KernelBudget::new(1);
+        let budgeted = KernelPool::with_budget(4, budget);
+        let free = KernelPool::new(4);
+        assert_eq!(run_with(&budgeted), run_with(&free));
     }
 
     #[test]

@@ -153,6 +153,22 @@ pub trait ModelRuntime {
         Ok(())
     }
 
+    /// Snapshot the optimizer's evolving state (momentum buffers, …) for
+    /// job checkpointing — without it a resumed run would restart the
+    /// velocity at zero and drift off the uninterrupted trajectory.
+    /// Backends without host-readable optimizer state return empty
+    /// (resume then degrades to params-only restore). Paired with
+    /// [`Self::set_opt_state`].
+    fn get_opt_state(&mut self) -> anyhow::Result<Vec<f32>> {
+        Ok(Vec::new())
+    }
+
+    /// Install optimizer state captured by [`Self::get_opt_state`].
+    fn set_opt_state(&mut self, state: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(state.is_empty(), "this runtime has no optimizer state to restore");
+        Ok(())
+    }
+
     /// Analytic forward FLOPs per sample (for the accounting cost model).
     fn flops_per_sample_fwd(&self) -> u64;
 
@@ -210,6 +226,18 @@ impl Default for BatchBuf {
 /// (tests/dev boxes without `make artifacts`). The default runtime
 /// chooser behind `api::SessionBuilder`.
 pub fn make_runtime(cfg: &crate::config::RunConfig) -> anyhow::Result<Box<dyn ModelRuntime>> {
+    make_runtime_with_budget(cfg, None)
+}
+
+/// [`make_runtime`] with an optional shared [`kernel::pool::KernelBudget`]
+/// capping the aggregate spawned kernel lanes across runtimes (the serve
+/// scheduler's per-process cap). The XLA path manages its own device
+/// threads and ignores the budget; the native path charges its pool
+/// against it.
+pub fn make_runtime_with_budget(
+    cfg: &crate::config::RunConfig,
+    budget: Option<std::sync::Arc<kernel::pool::KernelBudget>>,
+) -> anyhow::Result<Box<dyn ModelRuntime>> {
     let dir = manifest::Manifest::default_dir();
     if dir.join("manifest.json").exists() {
         let m = manifest::Manifest::load(&dir)?;
@@ -219,10 +247,14 @@ pub fn make_runtime(cfg: &crate::config::RunConfig) -> anyhow::Result<Box<dyn Mo
     }
     // Native fallback (float features only).
     match &cfg.dataset {
-        crate::config::DatasetConfig::SynthCifar { classes, .. } => Ok(Box::new(
-            native::NativeRuntime::new(3072, 64, *classes)
-                .with_kernel_threads(cfg.kernel_threads),
-        )),
+        crate::config::DatasetConfig::SynthCifar { classes, .. } => {
+            let mut rt = native::NativeRuntime::new(3072, 64, *classes)
+                .with_kernel_threads(cfg.kernel_threads);
+            if let Some(budget) = budget {
+                rt = rt.with_kernel_budget(budget);
+            }
+            Ok(Box::new(rt))
+        }
         _ => anyhow::bail!("model {} needs artifacts (run `make artifacts`)", cfg.model),
     }
 }

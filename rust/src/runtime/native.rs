@@ -31,8 +31,10 @@
 //! allocation-free in steady state: every buffer is runtime-owned
 //! scratch that is reused across steps.
 
+use std::sync::Arc;
+
 use super::kernel::pack::{split_packed_mut, Layout, PackedBf16, PackedBuf};
-use super::kernel::pool::{KernelPool, SharedRows, SharedSlots};
+use super::kernel::pool::{KernelBudget, KernelPool, SharedRows, SharedSlots};
 use super::kernel::{
     default_dispatch, default_threads, simd, split_range, KernelDispatch, GRAD_SHARDS,
 };
@@ -95,6 +97,9 @@ pub struct NativeRuntime {
     /// Which exact kernel implementation every hot path runs on
     /// (DESIGN.md §9): one variant per runtime, never mixed.
     dispatch: KernelDispatch,
+    /// Shared cap on spawned kernel lanes across runtimes (serve mode);
+    /// `None` = unconstrained, the historical behavior.
+    budget: Option<Arc<KernelBudget>>,
     pool: Option<KernelPool>,
     // Runtime-owned step scratch (reused, never reallocated in steady
     // state).
@@ -122,6 +127,7 @@ impl NativeRuntime {
             eval_size: 0,
             threads_cfg: 0,
             dispatch: default_dispatch(),
+            budget: None,
             pool: None,
             h_buf: Vec::new(),
             logits_buf: Vec::new(),
@@ -157,6 +163,16 @@ impl NativeRuntime {
         self.dispatch
     }
 
+    /// Charge this runtime's spawned kernel lanes against a shared
+    /// [`KernelBudget`] (serve mode). When the budget is tight the pool
+    /// spawns fewer lanes — results are unchanged (DESIGN.md §7), only
+    /// parallelism degrades.
+    pub fn with_kernel_budget(mut self, budget: Arc<KernelBudget>) -> Self {
+        self.budget = Some(budget);
+        self.pool = None;
+        self
+    }
+
     /// The resolved kernel lane count this runtime will use.
     pub fn kernel_threads(&self) -> usize {
         if self.threads_cfg > 0 {
@@ -178,7 +194,12 @@ impl NativeRuntime {
     /// tests/config code stays free).
     fn ensure_pool(&mut self) {
         if self.pool.is_none() {
-            self.pool = Some(KernelPool::new(self.kernel_threads()));
+            self.pool = Some(match &self.budget {
+                Some(budget) => {
+                    KernelPool::with_budget(self.kernel_threads(), Arc::clone(budget))
+                }
+                None => KernelPool::new(self.kernel_threads()),
+            });
         }
     }
 
@@ -466,6 +487,7 @@ impl Clone for NativeRuntime {
             eval_size: self.eval_size,
             threads_cfg: self.threads_cfg,
             dispatch: self.dispatch,
+            budget: self.budget.clone(),
             pool: None,
             h_buf: Vec::new(),
             logits_buf: Vec::new(),
@@ -676,6 +698,20 @@ impl ModelRuntime for NativeRuntime {
         Ok(())
     }
 
+    fn get_opt_state(&mut self) -> anyhow::Result<Vec<f32>> {
+        // SGD-momentum: the velocity buffer, in canonical layout (the
+        // same pure permutation get_params uses).
+        let mut flat = vec![0.0f32; self.layout.param_count()];
+        self.velocity.unpack_into(&mut flat);
+        Ok(flat)
+    }
+
+    fn set_opt_state(&mut self, state: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(state.len() == self.layout.param_count(), "opt state count mismatch");
+        self.velocity.pack_from(state);
+        Ok(())
+    }
+
     fn flops_per_sample_fwd(&self) -> u64 {
         (2 * self.layout.d * self.layout.h + 2 * self.layout.h * self.layout.c) as u64
     }
@@ -839,6 +875,36 @@ mod tests {
     }
 
     #[test]
+    fn opt_state_restore_resumes_momentum_exactly() {
+        // Train 3 steps, snapshot (params + velocity), train 2 more; a
+        // fresh runtime restored from the snapshot must reproduce the
+        // last 2 steps bit-for-bit — params alone would not (momentum).
+        let (x, y) = toy_batch(16, 8, 4, 51);
+        let w = vec![1.0f32; 16];
+        let mut rt = NativeRuntime::new(8, 8, 4);
+        rt.init(5).unwrap();
+        for _ in 0..3 {
+            rt.train_step(BatchX::F32(&x), &y, &w, 0.1, 16).unwrap();
+        }
+        let p = rt.get_params().unwrap();
+        let v = rt.get_opt_state().unwrap();
+        assert!(v.iter().any(|&vi| vi != 0.0), "momentum must be live mid-run");
+        for _ in 0..2 {
+            rt.train_step(BatchX::F32(&x), &y, &w, 0.1, 16).unwrap();
+        }
+        let expected = rt.get_params().unwrap();
+
+        let mut resumed = NativeRuntime::new(8, 8, 4);
+        resumed.init(5).unwrap();
+        resumed.set_params(&p).unwrap();
+        resumed.set_opt_state(&v).unwrap();
+        for _ in 0..2 {
+            resumed.train_step(BatchX::F32(&x), &y, &w, 0.1, 16).unwrap();
+        }
+        assert_eq!(resumed.get_params().unwrap(), expected);
+    }
+
+    #[test]
     fn thread_count_does_not_change_the_bits() {
         // Big enough (n·(d+c)·h ≥ PAR_MIN_FLOPS) that the multi-lane
         // runtime actually dispatches to the pool.
@@ -865,6 +931,38 @@ mod tests {
             assert_eq!(f1, ft, "scoring diverged at {threads} threads");
             assert_eq!(p1, pt, "params diverged at {threads} threads");
         }
+    }
+
+    #[test]
+    fn shared_budget_never_changes_the_bits() {
+        // Two runtimes on one tight budget: the second gets fewer (or
+        // zero) worker lanes, yet both must match the unbudgeted run
+        // exactly (DESIGN.md §7: lane count never changes numerics).
+        let (d, h, c, n) = (128usize, 32usize, 4usize, 16usize);
+        let (x, y) = toy_batch(n, d, c, 37);
+        let w = vec![1.0f32; n];
+        let step = |rt: &mut NativeRuntime| -> (Vec<f32>, Vec<f32>) {
+            rt.init(41).unwrap();
+            let out = rt.train_step(BatchX::F32(&x), &y, &w, 0.05, n).unwrap();
+            (out.losses, rt.get_params().unwrap())
+        };
+        let mut free = NativeRuntime::new(d, h, c).with_kernel_threads(4);
+        let reference = step(&mut free);
+        let budget = KernelBudget::new(3);
+        let mut a = NativeRuntime::new(d, h, c)
+            .with_kernel_threads(4)
+            .with_kernel_budget(Arc::clone(&budget));
+        let ra = step(&mut a);
+        assert_eq!(budget.in_use(), 3, "first runtime takes the whole budget");
+        let mut b = NativeRuntime::new(d, h, c)
+            .with_kernel_threads(4)
+            .with_kernel_budget(Arc::clone(&budget));
+        let rb = step(&mut b);
+        assert_eq!(ra, reference);
+        assert_eq!(rb, reference);
+        drop(a);
+        drop(b);
+        assert_eq!(budget.in_use(), 0, "dropped runtimes return their lanes");
     }
 
     #[test]

@@ -26,7 +26,10 @@
 //! low-weight samples stay reachable (Remark 1).
 
 use super::annealing::Annealing;
-use super::{weights, Sampler, Selection, ShardLog, ShardObservations};
+use super::{
+    json_to_table, table_to_json, weights, Sampler, Selection, ShardLog, ShardObservations,
+};
+use crate::util::json::{obj, Json};
 use crate::util::Pcg64;
 
 pub struct Evolved {
@@ -168,6 +171,26 @@ impl Sampler for Evolved {
         for (indices, losses) in obs {
             self.update(indices, losses);
         }
+    }
+
+    fn state_json(&self) -> Option<Json> {
+        // The dual EMA *is* the entire evolving state (Eq. 3.1); betas,
+        // annealing, and prune ratio are config-derived and rebuilt.
+        Some(obj(vec![("s", table_to_json(&self.s)), ("w", table_to_json(&self.w))]))
+    }
+
+    fn restore_state(&mut self, state: &Json) -> anyhow::Result<()> {
+        let n = self.n();
+        let s = json_to_table(
+            state.get("s").ok_or_else(|| anyhow::anyhow!("es state: missing s"))?,
+            n,
+        )?;
+        let w = json_to_table(
+            state.get("w").ok_or_else(|| anyhow::anyhow!("es state: missing w"))?,
+            n,
+        )?;
+        self.install_tables(s, w);
+        Ok(())
     }
 
     fn as_any(&self) -> &dyn std::any::Any {

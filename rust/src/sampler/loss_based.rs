@@ -3,7 +3,8 @@
 //! loss, no history. Equivalent to ES with β1 = β2 = 0 (Prop. 3.1), kept
 //! as an independent implementation so the equivalence is testable.
 
-use super::{weights, Sampler, Selection};
+use super::{json_to_table, table_to_json, weights, Sampler, Selection};
+use crate::util::json::{obj, Json};
 use crate::util::Pcg64;
 
 pub struct LossSampler {
@@ -49,6 +50,19 @@ impl Sampler for LossSampler {
 
     // Batch-level only: selection state is per-shard-local by construction
     // (a worker only selects within its own shard), so no §D.5 sync.
+
+    fn state_json(&self) -> Option<Json> {
+        Some(obj(vec![("last", table_to_json(&self.last))]))
+    }
+
+    fn restore_state(&mut self, state: &Json) -> anyhow::Result<()> {
+        let n = self.n();
+        self.last = json_to_table(
+            state.get("last").ok_or_else(|| anyhow::anyhow!("loss state: missing last"))?,
+            n,
+        )?;
+        Ok(())
+    }
 
     fn as_any(&self) -> &dyn std::any::Any {
         self

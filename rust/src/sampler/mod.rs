@@ -29,7 +29,26 @@ pub mod uniform;
 pub mod weights;
 
 use crate::config::SamplerConfig;
+use crate::util::json::Json;
 use crate::util::Pcg64;
+
+/// Serialize an f32 table as a JSON array. f32 → f64 is exact and the
+/// writer emits shortest-roundtrip decimals, so `json_to_table` recovers
+/// the identical bits — the property sampler checkpoints rely on.
+pub fn table_to_json(t: &[f32]) -> Json {
+    Json::Arr(t.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+/// Inverse of [`table_to_json`]; checks the length against `n`.
+pub fn json_to_table(j: &Json, n: usize) -> anyhow::Result<Vec<f32>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("sampler state: expected array"))?;
+    anyhow::ensure!(arr.len() == n, "sampler state: table len {} != n {}", arr.len(), n);
+    arr.iter()
+        .map(|v| {
+            v.as_f64().map(|x| x as f32).ok_or_else(|| anyhow::anyhow!("sampler state: non-number"))
+        })
+        .collect()
+}
 
 /// The mini-batch chosen for the backward pass.
 #[derive(Clone, Debug, PartialEq)]
@@ -158,6 +177,24 @@ pub trait Sampler: Send {
         for (indices, losses) in obs {
             self.observe_train(indices, losses, epoch);
         }
+    }
+
+    // ---- checkpoint state (serve resume, DESIGN.md §10) -----------------
+
+    /// Serialize the sampler's evolving state for an epoch-boundary job
+    /// checkpoint. `None` (the default) means the method does not support
+    /// mid-run state capture — the serve scheduler then falls back to
+    /// restart-from-scratch on resume (still deterministic, just slower).
+    /// Stateless methods return `Some(Json::Null)` so resume is exact.
+    fn state_json(&self) -> Option<Json> {
+        None
+    }
+
+    /// Restore state captured by [`Sampler::state_json`] into a freshly
+    /// built sampler of the same config/`n`. Must reproduce the captured
+    /// tables bit-for-bit. Default: unsupported.
+    fn restore_state(&mut self, _state: &Json) -> anyhow::Result<()> {
+        anyhow::bail!("sampler {} does not support state restore", self.name())
     }
 
     /// Concrete-type access for table inspection (tests, analysis).
@@ -345,6 +382,43 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn state_json_round_trips_bit_for_bit() {
+        // Serialize → JSON text → parse → restore must reproduce the
+        // exact tables (and hence the exact selection sequence).
+        for cfg in [SC::es_default(), SC::eswp_default(), SC::Loss] {
+            let mut a = build(&cfg, 24, 10).unwrap();
+            let idx: Vec<u32> = (0..24).collect();
+            let losses: Vec<f32> = (0..24).map(|i| (i as f32 * 0.37 + 0.01).sin().abs()).collect();
+            a.observe_meta(&idx, &losses, 1);
+            let state = a.state_json().expect("table-driven samplers capture state");
+            let wire = state.to_string_compact();
+            let parsed = Json::parse(&wire).unwrap();
+            let mut b = build(&cfg, 24, 10).unwrap();
+            b.restore_state(&parsed).unwrap();
+            let rng = Pcg64::new(77);
+            for _ in 0..5 {
+                let sa = a.select(&idx, 6, 1, &mut rng.clone());
+                let sb = b.select(&idx, 6, 1, &mut rng.clone());
+                assert_eq!(sa, sb, "restored sampler diverged ({})", cfg.name());
+            }
+        }
+    }
+
+    #[test]
+    fn stateless_samplers_checkpoint_as_null() {
+        let mut u = build(&SC::Uniform, 8, 2).unwrap();
+        assert_eq!(u.state_json(), Some(Json::Null));
+        u.restore_state(&Json::Null).unwrap();
+        let mut rp = build(&SC::RandomPrune { prune_ratio: 0.5 }, 8, 2).unwrap();
+        assert_eq!(rp.state_json(), Some(Json::Null));
+        rp.restore_state(&Json::Null).unwrap();
+        // Methods without capture support advertise it via None + Err.
+        let mut ib = build(&SC::infobatch_default(), 8, 2).unwrap();
+        assert_eq!(ib.state_json(), None);
+        assert!(ib.restore_state(&Json::Null).is_err());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! random set-level pruning (the Tab. 7 "Random" ablation).
 
 use super::{Sampler, Selection};
+use crate::util::json::Json;
 use crate::util::Pcg64;
 
 /// Standard batched sampling — the paper's Baseline. No selection at all:
@@ -27,6 +28,15 @@ impl Sampler for Uniform {
 
     fn select(&mut self, meta: &[u32], _mini: usize, _epoch: usize, _rng: &mut Pcg64) -> Selection {
         Selection::unweighted(meta.to_vec())
+    }
+
+    // Stateless: checkpoint resume is exact with nothing to capture.
+    fn state_json(&self) -> Option<Json> {
+        Some(Json::Null)
+    }
+
+    fn restore_state(&mut self, _state: &Json) -> anyhow::Result<()> {
+        Ok(())
     }
 
     fn as_any(&self) -> &dyn std::any::Any {
@@ -63,6 +73,16 @@ impl Sampler for RandomPrune {
         let mut kept = rng.choose_k(self.n, keep.max(1));
         kept.sort_unstable();
         kept
+    }
+
+    // Stateless beyond the engine's RNG (captured separately by the
+    // checkpoint), so resume is exact with nothing to serialize.
+    fn state_json(&self) -> Option<Json> {
+        Some(Json::Null)
+    }
+
+    fn restore_state(&mut self, _state: &Json) -> anyhow::Result<()> {
+        Ok(())
     }
 
     fn as_any(&self) -> &dyn std::any::Any {

@@ -1,0 +1,455 @@
+//! Per-job shared state: lifecycle, accounting, event backlog, live
+//! subscribers, and the cooperative interrupt flag.
+//!
+//! A [`JobShared`] is the one object both sides touch while a job runs:
+//! the scheduler's worker thread (event sink + epoch hook) writes into
+//! it, connection threads read status and subscribe to the event
+//! stream. Everything mutable sits behind one small mutex; the
+//! interrupt flag is a lock-free atomic so the epoch hook can poll it
+//! without contending with event pushes.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::{num, obj, s, Json};
+
+/// Events kept per job for late subscribers; older events drop off (the
+/// drop count is reported in `status`, so truncation is never silent).
+pub const EVENT_BACKLOG_CAP: usize = 4096;
+
+/// Cooperative-interrupt flag values (checked at epoch boundaries).
+pub const INTERRUPT_NONE: u8 = 0;
+/// Client `cancel`: the job ends as `Cancelled`.
+pub const INTERRUPT_CANCEL: u8 = 1;
+/// Server `shutdown abort`: the job ends as `Interrupted` with its
+/// checkpoint retained, so the next server start resumes it.
+pub const INTERRUPT_SHUTDOWN: u8 = 2;
+
+/// Job lifecycle. `Queued → Running → {Done, Failed, Cancelled}`;
+/// `Interrupted` is the resumable parking state a `shutdown abort` (or
+/// a killed server) leaves behind — a restart re-enqueues it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+    Interrupted,
+}
+
+impl JobState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+            JobState::Interrupted => "interrupted",
+        }
+    }
+
+    pub fn parse(text: &str) -> Option<JobState> {
+        Some(match text {
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            "cancelled" => JobState::Cancelled,
+            "interrupted" => JobState::Interrupted,
+            _ => return None,
+        })
+    }
+
+    /// Terminal states never run again; `Interrupted` is NOT terminal.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+struct JobMeta {
+    name: String,
+    sampler: String,
+    epochs_total: usize,
+    state: JobState,
+    submitted: Instant,
+    started: Option<Instant>,
+    queue_s: f64,
+    /// Wall seconds from previous server lives (resumed jobs).
+    prior_wall_s: f64,
+    final_wall_s: Option<f64>,
+    epochs_done: usize,
+    fp_passes: u64,
+    bp_samples: u64,
+    accuracy: Option<f64>,
+    error: Option<String>,
+    events: VecDeque<Json>,
+    events_dropped: u64,
+    subscribers: Vec<Sender<Json>>,
+}
+
+/// Shared handle for one job; lives in the queue's job table and is
+/// cloned (via `Arc`) into the worker running it.
+pub struct JobShared {
+    id: String,
+    interrupt: AtomicU8,
+    meta: Mutex<JobMeta>,
+}
+
+impl JobShared {
+    pub fn new(id: &str, name: &str, sampler: &str, epochs_total: usize) -> JobShared {
+        JobShared {
+            id: id.to_string(),
+            interrupt: AtomicU8::new(INTERRUPT_NONE),
+            meta: Mutex::new(JobMeta {
+                name: name.to_string(),
+                sampler: sampler.to_string(),
+                epochs_total,
+                state: JobState::Queued,
+                submitted: Instant::now(),
+                started: None,
+                queue_s: 0.0,
+                prior_wall_s: 0.0,
+                final_wall_s: None,
+                epochs_done: 0,
+                fp_passes: 0,
+                bp_samples: 0,
+                accuracy: None,
+                error: None,
+                events: VecDeque::new(),
+                events_dropped: 0,
+                subscribers: Vec::new(),
+            }),
+        }
+    }
+
+    /// Seed accounting carried over from a previous server life.
+    pub fn with_prior(self, wall_s: f64, epochs_done: usize) -> JobShared {
+        {
+            let mut m = self.lock();
+            m.prior_wall_s = wall_s;
+            m.epochs_done = epochs_done;
+        }
+        self
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, JobMeta> {
+        self.meta.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    pub fn state(&self) -> JobState {
+        self.lock().state
+    }
+
+    pub fn interrupt_kind(&self) -> u8 {
+        self.interrupt.load(Ordering::Relaxed)
+    }
+
+    /// Request cooperative interruption (`INTERRUPT_CANCEL` /
+    /// `INTERRUPT_SHUTDOWN`); the epoch hook observes it at the next
+    /// epoch boundary.
+    pub fn request_interrupt(&self, kind: u8) {
+        self.interrupt.store(kind, Ordering::Relaxed);
+    }
+
+    /// Append an event to the backlog (capped) and fan it out to live
+    /// subscribers. The `"job"` key is stamped here so every consumer
+    /// sees tagged lines.
+    pub fn push_event(&self, mut ev: Json) {
+        if let Json::Obj(map) = &mut ev {
+            map.insert("job".to_string(), Json::Str(self.id.clone()));
+        }
+        let mut m = self.lock();
+        if m.events.len() >= EVENT_BACKLOG_CAP {
+            m.events.pop_front();
+            m.events_dropped += 1;
+        }
+        m.events.push_back(ev.clone());
+        m.subscribers.retain(|tx| tx.send(ev.clone()).is_ok());
+    }
+
+    /// Subscribe to the event stream: the full backlog replays into the
+    /// channel immediately; live events follow until the job finishes
+    /// (senders are dropped at terminal states, ending the stream). A
+    /// subscription to an already-finished job yields the backlog and
+    /// ends.
+    pub fn subscribe(&self) -> Receiver<Json> {
+        let (tx, rx) = channel();
+        let mut m = self.lock();
+        for ev in &m.events {
+            let _ = tx.send(ev.clone());
+        }
+        if !m.state.is_terminal() && m.state != JobState::Interrupted {
+            m.subscribers.push(tx);
+        }
+        rx
+    }
+
+    /// Queued → Running: freeze the queue latency, start the wall clock,
+    /// and announce admission on the event stream.
+    pub fn mark_running(&self) {
+        let queue_s;
+        {
+            let mut m = self.lock();
+            m.state = JobState::Running;
+            m.queue_s = m.submitted.elapsed().as_secs_f64();
+            m.started = Some(Instant::now());
+            queue_s = m.queue_s;
+        }
+        self.push_event(obj(vec![("event", s("admitted")), ("queue_s", num(queue_s))]));
+    }
+
+    /// Restore a terminal state from a rescanned record without the
+    /// side effects of [`JobShared::finish`] (no events, no wall-clock
+    /// mutation — the record already carries the final accounting).
+    pub fn restore_terminal(&self, state: JobState) {
+        self.lock().state = state;
+    }
+
+    /// Live accounting update from the epoch hook.
+    pub fn progress(&self, epochs_done: usize, fp_passes: u64, bp_samples: u64) {
+        let mut m = self.lock();
+        m.epochs_done = epochs_done;
+        m.fp_passes = fp_passes;
+        m.bp_samples = bp_samples;
+    }
+
+    /// Move to a final (or parked) state: stop the wall clock, record
+    /// the outcome, emit an optional final event plus a `state` marker,
+    /// and disconnect all subscribers (their streams end).
+    pub fn finish(
+        &self,
+        state: JobState,
+        accuracy: Option<f64>,
+        error: Option<String>,
+        final_event: Option<Json>,
+    ) {
+        {
+            let mut m = self.lock();
+            m.state = state;
+            if let Some(st) = m.started.take() {
+                m.final_wall_s = Some(m.prior_wall_s + st.elapsed().as_secs_f64());
+            }
+            if accuracy.is_some() {
+                m.accuracy = accuracy;
+            }
+            m.error = error;
+        }
+        if let Some(ev) = final_event {
+            self.push_event(ev);
+        }
+        self.push_event(obj(vec![("event", s("state")), ("state", s(state.as_str()))]));
+        self.lock().subscribers.clear();
+    }
+
+    fn wall_s(m: &JobMeta) -> f64 {
+        m.final_wall_s.unwrap_or_else(|| {
+            m.prior_wall_s + m.started.map(|st| st.elapsed().as_secs_f64()).unwrap_or(0.0)
+        })
+    }
+
+    /// The per-job record `status` responses carry.
+    pub fn status_json(&self) -> Json {
+        let m = self.lock();
+        let mut fields = vec![
+            ("job", s(self.id.clone())),
+            ("name", s(m.name.clone())),
+            ("sampler", s(m.sampler.clone())),
+            ("state", s(m.state.as_str())),
+            ("epochs_done", num(m.epochs_done as f64)),
+            ("epochs_total", num(m.epochs_total as f64)),
+            ("queue_s", num(m.queue_s)),
+            ("wall_s", num(Self::wall_s(&m))),
+            ("fp_passes", num(m.fp_passes as f64)),
+            ("bp_samples", num(m.bp_samples as f64)),
+            ("events_dropped", num(m.events_dropped as f64)),
+        ];
+        if let Some(acc) = m.accuracy {
+            fields.push(("accuracy", num(acc)));
+        }
+        if let Some(err) = &m.error {
+            fields.push(("error", s(err.clone())));
+        }
+        obj(fields)
+    }
+
+    /// Durable `<id>.job.json` record (the startup rescan's source of
+    /// truth). Carries the config TOML verbatim so a restarted server
+    /// can rebuild the run config without the original client.
+    pub fn record_json(&self, config_toml: &str) -> Json {
+        let m = self.lock();
+        obj(vec![
+            ("job", s(self.id.clone())),
+            ("name", s(m.name.clone())),
+            ("sampler", s(m.sampler.clone())),
+            ("state", s(m.state.as_str())),
+            ("config_toml", s(config_toml)),
+            ("epochs_done", num(m.epochs_done as f64)),
+            ("epochs_total", num(m.epochs_total as f64)),
+            ("wall_s", num(Self::wall_s(&m))),
+            ("fp_passes", num(m.fp_passes as f64)),
+            ("bp_samples", num(m.bp_samples as f64)),
+        ])
+    }
+}
+
+/// Write the durable job record (best-effort callers decide what to do
+/// with the error).
+pub fn write_record(dir: &Path, shared: &JobShared, config_toml: &str) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{}.job.json", shared.id()));
+    std::fs::write(path, shared.record_json(config_toml).to_string_compact())
+}
+
+/// One parsed `<id>.job.json` from a startup rescan.
+pub struct JobRecord {
+    pub id: String,
+    pub name: String,
+    pub sampler: String,
+    pub state: JobState,
+    pub config_toml: String,
+    pub epochs_done: usize,
+    pub wall_s: f64,
+}
+
+/// Scan `dir` for `*.job.json` records (unreadable/corrupt files are
+/// skipped — a rescan must never prevent the server from starting).
+pub fn scan_records(dir: &Path) -> Vec<JobRecord> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return out,
+    };
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.ends_with(".job.json"))
+        })
+        .collect();
+    paths.sort();
+    for path in paths {
+        let Ok(src) = std::fs::read_to_string(&path) else { continue };
+        let Ok(j) = Json::parse(&src) else { continue };
+        let get = |k: &str| j.get(k).and_then(Json::as_str).map(str::to_string);
+        let (Some(id), Some(state)) = (get("job"), get("state")) else { continue };
+        let Some(state) = JobState::parse(&state) else { continue };
+        out.push(JobRecord {
+            id,
+            name: get("name").unwrap_or_default(),
+            sampler: get("sampler").unwrap_or_default(),
+            state,
+            config_toml: get("config_toml").unwrap_or_default(),
+            epochs_done: j.get("epochs_done").and_then(Json::as_usize).unwrap_or(0),
+            wall_s: j.get("wall_s").and_then(Json::as_f64).unwrap_or(0.0),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backlog_caps_and_counts_drops() {
+        let j = JobShared::new("j1", "n", "es", 4);
+        for i in 0..(EVENT_BACKLOG_CAP + 10) {
+            j.push_event(obj(vec![("event", s("tick")), ("i", num(i as f64))]));
+        }
+        let m = j.lock();
+        assert_eq!(m.events.len(), EVENT_BACKLOG_CAP);
+        assert_eq!(m.events_dropped, 10);
+        // Oldest dropped: first surviving event is i = 10.
+        assert_eq!(m.events.front().unwrap().get("i").and_then(Json::as_f64), Some(10.0));
+    }
+
+    #[test]
+    fn subscribe_replays_backlog_then_streams_live() {
+        let j = JobShared::new("j1", "n", "es", 4);
+        j.push_event(obj(vec![("event", s("queued"))]));
+        let rx = j.subscribe();
+        j.push_event(obj(vec![("event", s("admitted"))]));
+        j.finish(JobState::Done, Some(0.9), None, None);
+        let got: Vec<String> = rx
+            .iter()
+            .map(|e| e.get("event").and_then(Json::as_str).unwrap().to_string())
+            .collect();
+        assert_eq!(got, vec!["queued", "admitted", "state"]);
+        // Every line is job-tagged for multiplexed client streams.
+        let late = j.subscribe();
+        let first = late.iter().next().unwrap();
+        assert_eq!(first.get("job").and_then(Json::as_str), Some("j1"));
+        // Late subscription on a finished job ends after the backlog.
+        assert!(late.iter().count() < EVENT_BACKLOG_CAP);
+    }
+
+    #[test]
+    fn status_tracks_lifecycle_and_accounting() {
+        let j = JobShared::new("j2", "runA", "eswp", 8);
+        assert_eq!(j.state(), JobState::Queued);
+        j.mark_running();
+        j.progress(3, 120, 4096);
+        let st = j.status_json();
+        assert_eq!(st.get("state").and_then(Json::as_str), Some("running"));
+        assert_eq!(st.get("epochs_done").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(st.get("fp_passes").and_then(Json::as_f64), Some(120.0));
+        assert_eq!(st.get("bp_samples").and_then(Json::as_f64), Some(4096.0));
+        j.finish(JobState::Done, Some(0.75), None, None);
+        let st = j.status_json();
+        assert_eq!(st.get("state").and_then(Json::as_str), Some("done"));
+        assert_eq!(st.get("accuracy").and_then(Json::as_f64), Some(0.75));
+        assert!(st.get("wall_s").and_then(Json::as_f64).unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn records_roundtrip_through_scan() {
+        let dir = std::env::temp_dir()
+            .join(format!("evosample_jobrec_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let toml = "[run]\nmodel = \"mlp\"\n";
+        let j = JobShared::new("j3", "runB", "es", 2).with_prior(1.5, 1);
+        write_record(&dir, &j, toml).unwrap();
+        let recs = scan_records(&dir);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].id, "j3");
+        assert_eq!(recs[0].state, JobState::Queued);
+        assert_eq!(recs[0].config_toml, toml);
+        assert_eq!(recs[0].epochs_done, 1);
+        assert!(recs[0].wall_s >= 1.5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interrupt_flag_is_observable() {
+        let j = JobShared::new("j4", "n", "es", 2);
+        assert_eq!(j.interrupt_kind(), INTERRUPT_NONE);
+        j.request_interrupt(INTERRUPT_SHUTDOWN);
+        assert_eq!(j.interrupt_kind(), INTERRUPT_SHUTDOWN);
+    }
+
+    #[test]
+    fn state_parse_roundtrips() {
+        for st in [
+            JobState::Queued,
+            JobState::Running,
+            JobState::Done,
+            JobState::Failed,
+            JobState::Cancelled,
+            JobState::Interrupted,
+        ] {
+            assert_eq!(JobState::parse(st.as_str()), Some(st));
+        }
+        assert_eq!(JobState::parse("nope"), None);
+        assert!(JobState::Done.is_terminal());
+        assert!(!JobState::Interrupted.is_terminal(), "interrupted must be resumable");
+    }
+}

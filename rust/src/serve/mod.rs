@@ -1,0 +1,33 @@
+//! The multi-tenant selection service: many concurrent training jobs as
+//! queued [`api::Session`](crate::api::Session) runs behind one
+//! line-oriented JSONL-over-TCP protocol (localhost only).
+//!
+//! Pieces (DESIGN.md §10):
+//!
+//! * [`protocol`] — the wire format: one JSON object per line, commands
+//!   `submit` / `status` / `events` / `cancel` / `shutdown`.
+//! * [`job`] — per-job shared state: lifecycle, accounting (queue
+//!   latency, wall time, `fp_passes`/`bp_samples`), the capped event
+//!   backlog, and live subscriber fan-out.
+//! * [`queue`] — the job table + pending queue with admission control:
+//!   submissions past `serve.max_queue` are shed with an explicit
+//!   `rejected{reason: "queue_full"}` instead of unbounded buffering.
+//! * [`scheduler`] — `serve.max_concurrent` worker threads draining the
+//!   queue. All concurrent jobs share one
+//!   [`KernelBudget`](crate::runtime::kernel::pool::KernelBudget), so
+//!   the aggregate spawned kernel lanes stay capped no matter how many
+//!   jobs run; budget pressure degrades lane counts, never numerics
+//!   (DESIGN.md §7), so served jobs are bit-identical to standalone
+//!   runs. Running jobs checkpoint at epoch boundaries through the
+//!   engine's [`EpochHook`](crate::coordinator::engine::EpochHook).
+//! * [`server`] — the TCP front door + startup rescan: jobs found in a
+//!   non-terminal state in `serve.state_dir` are re-enqueued and resume
+//!   from their last checkpoint.
+
+pub mod job;
+pub mod protocol;
+pub mod queue;
+pub mod scheduler;
+pub mod server;
+
+pub use server::{Server, ServerHandle};

@@ -1,0 +1,159 @@
+//! The serve wire protocol: newline-delimited JSON over TCP.
+//!
+//! Every request is one JSON object on one line with a `"cmd"` tag;
+//! every response is one JSON object on one line with an `"ok"` bool.
+//! The `events` command switches the connection into streaming mode:
+//! the server replays the job's event backlog, then forwards live
+//! events until the job reaches a terminal state, then sends a final
+//! `ok` line and returns to request/response mode.
+
+use crate::util::json::{obj, s, Json};
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Enqueue a run. `config_toml` is a full run config document (the
+    /// same TOML `evosample train --config` takes); `sampler` optionally
+    /// overrides `[sampler]` with a registry name at its defaults.
+    Submit {
+        config_toml: String,
+        name: Option<String>,
+        sampler: Option<String>,
+        job_id: Option<String>,
+    },
+    /// Report one job (or all jobs when `job` is absent).
+    Status { job: Option<String> },
+    /// Stream a job's event backlog + live events until it finishes.
+    Events { job: String },
+    /// Cooperatively cancel a queued or running job.
+    Cancel { job: String },
+    /// Stop the server: `drain` finishes queued+running jobs first,
+    /// `abort` interrupts running jobs at the next epoch boundary
+    /// (checkpoints retained, so a restart resumes them).
+    Shutdown { abort: bool },
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let j = Json::parse(line).map_err(|e| format!("bad request json: {e}"))?;
+        let cmd = j.get("cmd").and_then(Json::as_str).ok_or("missing \"cmd\"")?;
+        let get_str = |k: &str| j.get(k).and_then(Json::as_str).map(str::to_string);
+        match cmd {
+            "submit" => Ok(Request::Submit {
+                config_toml: get_str("config")
+                    .ok_or("submit needs \"config\" (a run-config TOML document)")?,
+                name: get_str("name"),
+                sampler: get_str("sampler"),
+                job_id: get_str("job_id"),
+            }),
+            "status" => Ok(Request::Status { job: get_str("job") }),
+            "events" => {
+                Ok(Request::Events { job: get_str("job").ok_or("events needs \"job\"")? })
+            }
+            "cancel" => {
+                Ok(Request::Cancel { job: get_str("job").ok_or("cancel needs \"job\"")? })
+            }
+            "shutdown" => match get_str("mode").as_deref().unwrap_or("drain") {
+                "drain" => Ok(Request::Shutdown { abort: false }),
+                "abort" => Ok(Request::Shutdown { abort: true }),
+                other => Err(format!("unknown shutdown mode {other:?}")),
+            },
+            other => Err(format!("unknown cmd {other:?}")),
+        }
+    }
+}
+
+/// `{"ok":true, ...fields}`.
+pub fn ok_response(fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("ok", Json::Bool(true))];
+    all.extend(fields);
+    obj(all)
+}
+
+/// `{"ok":false,"error":msg}`.
+pub fn err_response(msg: &str) -> Json {
+    obj(vec![("ok", Json::Bool(false)), ("error", s(msg))])
+}
+
+/// Admission-control shed: `{"ok":false,"rejected":true,"reason":..}`.
+pub fn rejected_response(reason: &str) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(false)),
+        ("rejected", Json::Bool(true)),
+        ("reason", s(reason)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_submit_with_embedded_toml() {
+        let toml = "[run]\nmodel = \"mlp\"\n";
+        let line = obj(vec![
+            ("cmd", s("submit")),
+            ("config", s(toml)),
+            ("sampler", s("es")),
+        ])
+        .to_string_compact();
+        match Request::parse(&line).unwrap() {
+            Request::Submit { config_toml, sampler, name, job_id } => {
+                assert_eq!(config_toml, toml, "TOML text round-trips through the wire");
+                assert_eq!(sampler.as_deref(), Some("es"));
+                assert_eq!(name, None);
+                assert_eq!(job_id, None);
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_remaining_commands() {
+        assert_eq!(
+            Request::parse(r#"{"cmd":"status"}"#).unwrap(),
+            Request::Status { job: None }
+        );
+        assert_eq!(
+            Request::parse(r#"{"cmd":"status","job":"j1"}"#).unwrap(),
+            Request::Status { job: Some("j1".into()) }
+        );
+        assert_eq!(
+            Request::parse(r#"{"cmd":"events","job":"j1"}"#).unwrap(),
+            Request::Events { job: "j1".into() }
+        );
+        assert_eq!(
+            Request::parse(r#"{"cmd":"cancel","job":"j1"}"#).unwrap(),
+            Request::Cancel { job: "j1".into() }
+        );
+        assert_eq!(
+            Request::parse(r#"{"cmd":"shutdown"}"#).unwrap(),
+            Request::Shutdown { abort: false }
+        );
+        assert_eq!(
+            Request::parse(r#"{"cmd":"shutdown","mode":"abort"}"#).unwrap(),
+            Request::Shutdown { abort: true }
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse(r#"{"cmd":"explode"}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"submit"}"#).is_err(), "submit needs config");
+        assert!(Request::parse(r#"{"cmd":"events"}"#).is_err(), "events needs job");
+        assert!(Request::parse(r#"{"cmd":"shutdown","mode":"later"}"#).is_err());
+    }
+
+    #[test]
+    fn response_builders_tag_ok() {
+        let r = ok_response(vec![("job", s("j1"))]);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("job").and_then(Json::as_str), Some("j1"));
+        let r = err_response("boom");
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        let r = rejected_response("queue_full");
+        assert_eq!(r.get("rejected"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("reason").and_then(Json::as_str), Some("queue_full"));
+    }
+}

@@ -1,0 +1,231 @@
+//! The job table + pending queue with admission control.
+//!
+//! One `JobQueue` sits behind the server's mutex; worker threads pop
+//! ready jobs, connection threads submit/cancel/inspect. Admission is
+//! explicit: a submit that would push the pending queue past
+//! `max_queue` is rejected with a reason (`queue_full`), never buffered
+//! unboundedly — the caller turns that into the protocol's
+//! `rejected{reason}` response.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+
+use super::job::{JobShared, JobState};
+
+/// Everything the queue holds per job. The `RunConfig` is immutable
+/// after submission; mutable state lives in [`JobShared`].
+pub struct JobEntry {
+    pub cfg: RunConfig,
+    pub config_toml: String,
+    pub shared: Arc<JobShared>,
+    /// A checkpoint exists in the state dir — admit with resume.
+    pub has_checkpoint: bool,
+}
+
+/// Handed to a worker when it claims a job.
+pub struct ClaimedJob {
+    pub id: String,
+    pub cfg: RunConfig,
+    pub config_toml: String,
+    pub shared: Arc<JobShared>,
+    pub has_checkpoint: bool,
+}
+
+pub struct JobQueue {
+    jobs: BTreeMap<String, JobEntry>,
+    pending: VecDeque<String>,
+    running: usize,
+    max_queue: usize,
+    draining: bool,
+    aborting: bool,
+}
+
+impl JobQueue {
+    pub fn new(max_queue: usize) -> JobQueue {
+        JobQueue {
+            jobs: BTreeMap::new(),
+            pending: VecDeque::new(),
+            running: 0,
+            max_queue,
+            draining: false,
+            aborting: false,
+        }
+    }
+
+    /// Admit a job into the pending queue. Returns its queue position
+    /// (0 = next up) or the shed reason.
+    pub fn submit(&mut self, id: &str, entry: JobEntry) -> Result<usize, &'static str> {
+        if self.draining || self.aborting {
+            return Err("shutting_down");
+        }
+        if self.jobs.contains_key(id) {
+            return Err("duplicate_id");
+        }
+        if self.pending.len() >= self.max_queue {
+            return Err("queue_full");
+        }
+        let position = self.pending.len();
+        self.pending.push_back(id.to_string());
+        self.jobs.insert(id.to_string(), entry);
+        Ok(position)
+    }
+
+    /// Re-admit a rescanned job without admission control (restart
+    /// recovery must never shed jobs the previous life accepted).
+    pub fn requeue(&mut self, id: &str, entry: JobEntry) {
+        self.pending.push_back(id.to_string());
+        self.jobs.insert(id.to_string(), entry);
+    }
+
+    /// Record a terminal job from a rescan for `status` visibility only.
+    pub fn insert_terminal(&mut self, id: &str, entry: JobEntry) {
+        self.jobs.insert(id.to_string(), entry);
+    }
+
+    /// Claim the next pending job (skipping any that were cancelled
+    /// while queued). Increments the running count.
+    pub fn claim_next(&mut self) -> Option<ClaimedJob> {
+        while let Some(id) = self.pending.pop_front() {
+            let Some(entry) = self.jobs.get(&id) else { continue };
+            if entry.shared.state() != JobState::Queued {
+                continue;
+            }
+            self.running += 1;
+            return Some(ClaimedJob {
+                id,
+                cfg: entry.cfg.clone(),
+                config_toml: entry.config_toml.clone(),
+                shared: Arc::clone(&entry.shared),
+                has_checkpoint: entry.has_checkpoint,
+            });
+        }
+        None
+    }
+
+    /// A worker finished (or parked) its claimed job.
+    pub fn release(&mut self) {
+        debug_assert!(self.running > 0);
+        self.running = self.running.saturating_sub(1);
+    }
+
+    pub fn get(&self, id: &str) -> Option<&JobEntry> {
+        self.jobs.get(id)
+    }
+
+    pub fn jobs(&self) -> impl Iterator<Item = (&String, &JobEntry)> {
+        self.jobs.iter()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running
+    }
+
+    /// Stop admitting; `abort` additionally interrupts running jobs at
+    /// their next epoch boundary.
+    pub fn begin_shutdown(&mut self, abort: bool) {
+        self.draining = true;
+        if abort {
+            self.aborting = true;
+            for entry in self.jobs.values() {
+                if entry.shared.state() == JobState::Running {
+                    entry.shared.request_interrupt(super::job::INTERRUPT_SHUTDOWN);
+                }
+            }
+        }
+    }
+
+    pub fn shutting_down(&self) -> bool {
+        self.draining
+    }
+
+    pub fn aborting(&self) -> bool {
+        self.aborting
+    }
+
+    /// Workers exit when this is true and `claim_next` returns None:
+    /// drain mode waits for the pending queue to empty, abort exits now.
+    pub fn workers_should_exit(&self) -> bool {
+        self.aborting || (self.draining && self.pending.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetConfig;
+
+    fn entry(id: &str) -> JobEntry {
+        let cfg = RunConfig::new(
+            id,
+            "native",
+            DatasetConfig::SynthCifar { n: 128, classes: 4, label_noise: 0.0, hard_frac: 0.2 },
+        );
+        JobEntry {
+            shared: Arc::new(JobShared::new(id, id, "baseline", cfg.epochs)),
+            cfg,
+            config_toml: String::new(),
+            has_checkpoint: false,
+        }
+    }
+
+    #[test]
+    fn admission_sheds_past_max_queue() {
+        let mut q = JobQueue::new(2);
+        assert_eq!(q.submit("a", entry("a")), Ok(0));
+        assert_eq!(q.submit("b", entry("b")), Ok(1));
+        assert_eq!(q.submit("c", entry("c")), Err("queue_full"));
+        assert_eq!(q.pending_len(), 2, "shed submits leave no residue");
+        assert!(q.get("c").is_none());
+        // Claiming frees a slot; admission recovers.
+        assert!(q.claim_next().is_some());
+        assert_eq!(q.submit("c", entry("c")), Ok(1));
+    }
+
+    #[test]
+    fn duplicate_ids_are_rejected() {
+        let mut q = JobQueue::new(4);
+        q.submit("a", entry("a")).unwrap();
+        assert_eq!(q.submit("a", entry("a")), Err("duplicate_id"));
+    }
+
+    #[test]
+    fn claim_skips_jobs_cancelled_while_queued() {
+        let mut q = JobQueue::new(4);
+        q.submit("a", entry("a")).unwrap();
+        q.submit("b", entry("b")).unwrap();
+        q.get("a").unwrap().shared.finish(JobState::Cancelled, None, None, None);
+        let claimed = q.claim_next().unwrap();
+        assert_eq!(claimed.id, "b");
+        assert_eq!(q.running_len(), 1);
+        q.release();
+        assert_eq!(q.running_len(), 0);
+    }
+
+    #[test]
+    fn shutdown_stops_admission_and_flags_runners() {
+        let mut q = JobQueue::new(4);
+        q.submit("a", entry("a")).unwrap();
+        let claimed = q.claim_next().unwrap();
+        claimed.shared.mark_running();
+        q.begin_shutdown(true);
+        assert_eq!(q.submit("b", entry("b")), Err("shutting_down"));
+        assert_eq!(claimed.shared.interrupt_kind(), crate::serve::job::INTERRUPT_SHUTDOWN);
+        assert!(q.workers_should_exit());
+    }
+
+    #[test]
+    fn drain_waits_for_pending() {
+        let mut q = JobQueue::new(4);
+        q.submit("a", entry("a")).unwrap();
+        q.begin_shutdown(false);
+        assert!(!q.workers_should_exit(), "drain runs the backlog first");
+        let _ = q.claim_next().unwrap();
+        assert!(q.workers_should_exit());
+    }
+}

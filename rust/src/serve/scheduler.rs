@@ -1,0 +1,402 @@
+//! Worker threads draining the job queue, and the checkpoint plumbing
+//! that makes served jobs survive a server kill.
+//!
+//! Each of the `serve.max_concurrent` workers loops: claim the next
+//! pending job under the queue mutex (condvar-waiting when idle), run
+//! it as a [`Session`](crate::api::Session) wired to the job's event
+//! stream and epoch hook, then release the slot. All workers share one
+//! [`KernelBudget`], so the aggregate kernel lanes spawned by
+//! concurrently running jobs never exceed `serve.kernel_budget` —
+//! budget pressure degrades lane counts, never numerics (DESIGN.md §7),
+//! keeping served results bit-identical to standalone runs.
+//!
+//! The epoch hook is also the cancellation point: it polls the job's
+//! interrupt flag at every epoch boundary, checkpointing first on a
+//! shutdown-abort so the restarted server resumes from the epoch that
+//! just finished rather than re-running it.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::api::{Event, SessionBuilder};
+use crate::config::ServeConfig;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::engine::{EngineResume, EpochHook, RunSnapshot, StepStats};
+use crate::metrics::{event_to_json, result_to_json};
+use crate::runtime::kernel::pool::KernelBudget;
+use crate::runtime::make_runtime_with_budget;
+use crate::util::json::{num, obj, s, Json};
+
+use super::job::{self, JobState, INTERRUPT_CANCEL, INTERRUPT_SHUTDOWN};
+use super::queue::{ClaimedJob, JobQueue};
+
+/// The scheduler's shared state: the job queue behind its mutex plus
+/// the condvar workers park on when the queue is empty.
+pub type SharedQueue = Arc<(Mutex<JobQueue>, Condvar)>;
+
+/// Spawn `cfg.max_concurrent` worker threads draining `state`.
+pub fn spawn_workers(
+    state: SharedQueue,
+    budget: Arc<KernelBudget>,
+    cfg: ServeConfig,
+) -> Vec<JoinHandle<()>> {
+    (0..cfg.max_concurrent)
+        .map(|i| {
+            let state = Arc::clone(&state);
+            let budget = Arc::clone(&budget);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || worker_loop(state, budget, cfg))
+                .expect("spawn serve worker")
+        })
+        .collect()
+}
+
+fn worker_loop(state: SharedQueue, budget: Arc<KernelBudget>, cfg: ServeConfig) {
+    let (lock, cvar) = &*state;
+    loop {
+        let claimed = {
+            let mut q = lock.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if let Some(c) = q.claim_next() {
+                    break Some(c);
+                }
+                if q.workers_should_exit() {
+                    break None;
+                }
+                q = cvar.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let Some(claimed) = claimed else { return };
+        run_claimed(&claimed, &budget, &cfg);
+        lock.lock().unwrap_or_else(|e| e.into_inner()).release();
+        cvar.notify_all();
+    }
+}
+
+/// Run one claimed job end to end and record its outcome (state, final
+/// event, durable record, result file).
+fn run_claimed(claim: &ClaimedJob, budget: &Arc<KernelBudget>, serve: &ServeConfig) {
+    let state_dir = PathBuf::from(&serve.state_dir);
+    claim.shared.mark_running();
+    let _ = job::write_record(&state_dir, &claim.shared, &claim.config_toml);
+    match run_session(claim, budget, serve, &state_dir) {
+        Ok(result_json) => {
+            let path = state_dir.join(format!("{}.result.json", claim.id));
+            let _ = std::fs::write(path, result_json.to_string_compact());
+            let accuracy = result_json
+                .get("accuracy_pct")
+                .and_then(Json::as_f64)
+                .map(|pct| pct / 100.0);
+            let mut final_ev = result_json;
+            if let Json::Obj(map) = &mut final_ev {
+                map.insert("event".to_string(), Json::Str("result".to_string()));
+            }
+            claim.shared.finish(JobState::Done, accuracy, None, Some(final_ev));
+        }
+        Err(e) => match claim.shared.interrupt_kind() {
+            INTERRUPT_CANCEL => {
+                let msg = "cancelled by client".to_string();
+                claim.shared.finish(JobState::Cancelled, None, Some(msg), None);
+            }
+            INTERRUPT_SHUTDOWN => {
+                // Checkpoint retained — the next server life resumes it.
+                let msg = "interrupted by shutdown".to_string();
+                claim.shared.finish(JobState::Interrupted, None, Some(msg), None);
+            }
+            _ => {
+                claim.shared.finish(JobState::Failed, None, Some(format!("{e:#}")), None);
+            }
+        },
+    }
+    let _ = job::write_record(&state_dir, &claim.shared, &claim.config_toml);
+}
+
+fn run_session(
+    claim: &ClaimedJob,
+    budget: &Arc<KernelBudget>,
+    serve: &ServeConfig,
+    state_dir: &Path,
+) -> anyhow::Result<Json> {
+    let cfg = claim.cfg.clone();
+    let rt = make_runtime_with_budget(&cfg, Some(Arc::clone(budget)))?;
+    let resume = if claim.has_checkpoint { load_resume(state_dir, &claim.id)? } else { None };
+    if claim.has_checkpoint && resume.is_none() {
+        claim.shared.push_event(obj(vec![
+            ("event", s("restarted")),
+            ("reason", s("no usable checkpoint")),
+        ]));
+    }
+    if let Some(r) = &resume {
+        claim.shared.push_event(obj(vec![
+            ("event", s("resumed")),
+            ("from_epoch", num(r.next_epoch as f64)),
+        ]));
+    }
+    let sink_shared = Arc::clone(&claim.shared);
+    let mut session = SessionBuilder::from_config(cfg.clone())
+        .runtime(rt)
+        .on_event(move |ev: &Event| sink_shared.push_event(event_to_json(ev)))
+        .build()?;
+    let hook = make_hook(claim, serve, state_dir, cfg.model.clone(), cfg.seed);
+    let result = session.run_resumable(resume, Some(hook))?;
+    Ok(result_to_json(&result))
+}
+
+/// The per-epoch hook: interrupt polling, live accounting, and periodic
+/// checkpoint writes. Checkpoints are only written when the sampler
+/// supports state capture ([`Sampler::state_json`] is `Some`) — jobs
+/// whose samplers cannot be captured simply restart from scratch after
+/// a server kill.
+fn make_hook(
+    claim: &ClaimedJob,
+    serve: &ServeConfig,
+    state_dir: &Path,
+    model: String,
+    seed: u64,
+) -> Box<dyn EpochHook> {
+    let shared = Arc::clone(&claim.shared);
+    let dir = state_dir.to_path_buf();
+    let id = claim.id.clone();
+    let config_toml = claim.config_toml.clone();
+    let every = serve.checkpoint_every;
+    Box::new(move |snap: &RunSnapshot<'_>| -> anyhow::Result<()> {
+        if shared.interrupt_kind() == INTERRUPT_CANCEL {
+            anyhow::bail!("cancelled by client");
+        }
+        shared.progress(snap.epoch + 1, snap.stats.fp_passes, snap.stats.bp_samples);
+        let shutting_down = shared.interrupt_kind() == INTERRUPT_SHUTDOWN;
+        let due = every > 0 && ((snap.epoch + 1) % every == 0 || shutting_down);
+        if due {
+            if let Some(sampler_state) = snap.sampler.state_json() {
+                write_checkpoint(&dir, &id, &model, seed, snap, sampler_state)?;
+                let _ = job::write_record(&dir, &shared, &config_toml);
+            }
+        }
+        if shutting_down {
+            anyhow::bail!("interrupted by shutdown");
+        }
+        Ok(())
+    })
+}
+
+/// Persist a resumable checkpoint for job `id`: the model params go in
+/// the binary `<id>.ckpt` via [`Checkpoint`], everything else
+/// (RNG/sampler/accounting/curves) rides the JSON sidecar's `extra`
+/// field, and the optimizer state lands in a sibling `<id>_opt.ckpt`.
+pub fn write_checkpoint(
+    dir: &Path,
+    id: &str,
+    model: &str,
+    seed: u64,
+    snap: &RunSnapshot<'_>,
+    sampler_state: Json,
+) -> anyhow::Result<()> {
+    let stats = obj(vec![
+        ("fp_samples", num(snap.stats.fp_samples as f64)),
+        ("fp_passes", num(snap.stats.fp_passes as f64)),
+        ("bp_samples", num(snap.stats.bp_samples as f64)),
+        ("bp_passes", num(snap.stats.bp_passes as f64)),
+        ("steps", num(snap.stats.steps as f64)),
+    ]);
+    let eval_curve = Json::Arr(
+        snap.eval_curve
+            .iter()
+            .map(|&(e, l, a)| Json::Arr(vec![num(e as f64), num(l), num(a)]))
+            .collect(),
+    );
+    let timer_secs = obj(snap
+        .timers
+        .phases()
+        .map(|(label, d)| (label, num(d.as_secs_f64())))
+        .collect());
+    let extra = obj(vec![
+        ("next_epoch", num((snap.epoch + 1) as f64)),
+        ("step_idx", num(snap.step_idx as f64)),
+        ("rng_state", s(format!("{:032x}:{:032x}", snap.rng_state.0, snap.rng_state.1))),
+        ("sampler_state", sampler_state),
+        ("stats", stats),
+        ("score_ticks", Json::Arr(snap.score_ticks.iter().map(|&t| num(t as f64)).collect())),
+        ("loss_curve", Json::Arr(snap.loss_curve.iter().map(|&l| num(l)).collect())),
+        ("eval_curve", eval_curve),
+        ("bp_at_eval", Json::Arr(snap.bp_at_eval.iter().map(|&b| num(b as f64)).collect())),
+        ("timer_secs", timer_secs),
+    ]);
+    let ck = Checkpoint {
+        model: model.to_string(),
+        step: snap.step_idx as u64,
+        seed,
+        params: snap.params.to_vec(),
+    };
+    ck.save_with_extra(dir, id, &extra)?;
+    let opt = Checkpoint {
+        model: format!("{model}.opt"),
+        step: snap.step_idx as u64,
+        seed,
+        params: snap.opt_state.to_vec(),
+    };
+    opt.save(dir, &format!("{id}_opt"))?;
+    Ok(())
+}
+
+fn want_f64(extra: &Json, key: &str) -> anyhow::Result<f64> {
+    extra
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint extra: missing {key}"))
+}
+
+fn f64_list(extra: &Json, key: &str) -> anyhow::Result<Vec<f64>> {
+    let arr = extra
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint extra: missing {key}"))?;
+    Ok(arr.iter().filter_map(Json::as_f64).collect())
+}
+
+/// Load the resume point [`write_checkpoint`] persisted for `id`, or
+/// `None` when no (usable) checkpoint exists — the caller then runs the
+/// job from scratch.
+pub fn load_resume(dir: &Path, id: &str) -> anyhow::Result<Option<EngineResume>> {
+    let ck = match Checkpoint::load(dir, id) {
+        Ok(ck) => ck,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let extra = Checkpoint::load_extra(dir, id)?;
+    if extra == Json::Null {
+        return Ok(None);
+    }
+    let rng_text = extra
+        .get("rng_state")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint extra: missing rng_state"))?;
+    let (hi, lo) = rng_text
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("checkpoint extra: malformed rng_state"))?;
+    let rng_state = (u128::from_str_radix(hi, 16)?, u128::from_str_radix(lo, 16)?);
+    let stats_j = extra
+        .get("stats")
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("checkpoint extra: missing stats"))?;
+    let stats = StepStats {
+        fp_samples: want_f64(&stats_j, "fp_samples")? as u64,
+        fp_passes: want_f64(&stats_j, "fp_passes")? as u64,
+        bp_samples: want_f64(&stats_j, "bp_samples")? as u64,
+        bp_passes: want_f64(&stats_j, "bp_passes")? as u64,
+        steps: want_f64(&stats_j, "steps")? as u64,
+    };
+    let eval_curve = extra
+        .get("eval_curve")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|row| {
+                    let row = row.as_arr()?;
+                    let e = row.first().and_then(Json::as_f64)? as usize;
+                    let l = row.get(1).and_then(Json::as_f64)?;
+                    let a = row.get(2).and_then(Json::as_f64)?;
+                    Some((e, l, a))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    let timer_secs = extra
+        .get("timer_secs")
+        .and_then(Json::as_obj)
+        .map(|map| {
+            map.iter()
+                .filter_map(|(k, v)| v.as_f64().map(|secs| (k.clone(), secs)))
+                .collect()
+        })
+        .unwrap_or_default();
+    let opt_state = match Checkpoint::load(dir, &format!("{id}_opt")) {
+        Ok(opt) => opt.params,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => return Err(e.into()),
+    };
+    Ok(Some(EngineResume {
+        next_epoch: want_f64(&extra, "next_epoch")? as usize,
+        step_idx: want_f64(&extra, "step_idx")? as usize,
+        params: ck.params,
+        opt_state,
+        rng_state,
+        sampler_state: extra.get("sampler_state").cloned(),
+        stats,
+        score_ticks: f64_list(&extra, "score_ticks")?.into_iter().map(|t| t as u64).collect(),
+        loss_curve: f64_list(&extra, "loss_curve")?,
+        eval_curve,
+        bp_at_eval: f64_list(&extra, "bp_at_eval")?.into_iter().map(|b| b as u64).collect(),
+        timer_secs,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SamplerConfig;
+    use crate::sampler;
+    use crate::util::timer::PhaseTimers;
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("evosample_sched_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Satellite: a mid-run checkpoint restores the cost accounting
+    /// (`fp_passes` / `bp_samples`) and every other resume field exactly.
+    #[test]
+    fn checkpoint_roundtrips_accounting_exactly() {
+        let dir = fresh_dir("roundtrip");
+        let smp = sampler::build(&SamplerConfig::Uniform, 32, 4).unwrap();
+        let stats =
+            StepStats { fp_samples: 96, fp_passes: 3, bp_samples: 512, bp_passes: 16, steps: 16 };
+        let mut timers = PhaseTimers::new();
+        timers.add("train", std::time::Duration::from_secs_f64(1.25));
+        let snap = RunSnapshot {
+            epoch: 2,
+            step_idx: 12,
+            params: &[1.0, -2.5, 0.0625],
+            opt_state: &[0.5, 0.25],
+            rng_state: (0x0123_4567_89ab_cdef_u128 << 32, 0xfeed_face_u128),
+            sampler: smp.as_ref(),
+            stats: &stats,
+            score_ticks: &[3, 1],
+            loss_curve: &[0.9, 0.8, 0.7],
+            eval_curve: &[(1, 0.5, 0.625)],
+            bp_at_eval: &[256],
+            timers: &timers,
+        };
+        write_checkpoint(&dir, "jobx", "mlp", 7, &snap, Json::Null).unwrap();
+        let r = load_resume(&dir, "jobx").unwrap().expect("checkpoint present");
+        assert_eq!(r.next_epoch, 3);
+        assert_eq!(r.step_idx, 12);
+        assert_eq!(r.params, vec![1.0, -2.5, 0.0625]);
+        assert_eq!(r.opt_state, vec![0.5, 0.25]);
+        assert_eq!(r.rng_state, snap.rng_state, "u128 RNG state survives the hex round-trip");
+        assert_eq!(r.sampler_state, Some(Json::Null));
+        assert_eq!(r.stats.fp_passes, 3, "fp accounting must restore exactly");
+        assert_eq!(r.stats.bp_samples, 512, "bp accounting must restore exactly");
+        assert_eq!(r.stats.fp_samples, 96);
+        assert_eq!(r.stats.bp_passes, 16);
+        assert_eq!(r.stats.steps, 16);
+        assert_eq!(r.score_ticks, vec![3, 1]);
+        assert_eq!(r.loss_curve, vec![0.9, 0.8, 0.7]);
+        assert_eq!(r.eval_curve, vec![(1, 0.5, 0.625)]);
+        assert_eq!(r.bp_at_eval, vec![256]);
+        assert_eq!(r.timer_secs, vec![("train".to_string(), 1.25)]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_checkpoint_resumes_from_scratch() {
+        let dir = fresh_dir("missing");
+        assert!(load_resume(&dir, "nope").unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

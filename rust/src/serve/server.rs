@@ -1,0 +1,347 @@
+//! The TCP front door: accept loop, per-connection request handling,
+//! startup rescan, and drain/abort shutdown.
+//!
+//! The server binds localhost only. Each connection gets its own
+//! detached thread speaking the line protocol ([`super::protocol`]);
+//! an `events` request flips the connection into streaming mode until
+//! the watched job finishes. On startup the state dir is rescanned:
+//! jobs left in a non-terminal state by a previous life (killed server,
+//! `shutdown abort`) are re-enqueued and resume from their last
+//! checkpoint.
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::{Doc, RunConfig, ServeConfig};
+use crate::runtime::kernel::pool::KernelBudget;
+use crate::sampler::registry;
+use crate::util::json::{num, obj, s, Json};
+
+use super::job::{self, JobShared, JobState, INTERRUPT_CANCEL};
+use super::protocol::{err_response, ok_response, rejected_response, Request};
+use super::queue::{JobEntry, JobQueue};
+use super::scheduler::{self, SharedQueue};
+
+struct Inner {
+    state: SharedQueue,
+    budget: Arc<KernelBudget>,
+    state_dir: PathBuf,
+    stop_accept: AtomicBool,
+    next_id: AtomicU64,
+}
+
+/// The running service. [`Server::start`] returns a handle; `wait`
+/// blocks until a `shutdown` request (or [`ServerHandle::shutdown`])
+/// stops it.
+pub struct Server;
+
+pub struct ServerHandle {
+    addr: SocketAddr,
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Boot the service: rescan the state dir, bind
+    /// `127.0.0.1:{cfg.port}` (0 = ephemeral), spawn the worker pool
+    /// and the accept loop.
+    pub fn start(cfg: ServeConfig) -> anyhow::Result<ServerHandle> {
+        cfg.validate().map_err(|e| anyhow::anyhow!("serve config: {e}"))?;
+        let state_dir = PathBuf::from(&cfg.state_dir);
+        std::fs::create_dir_all(&state_dir)?;
+        let state: SharedQueue =
+            Arc::new((Mutex::new(JobQueue::new(cfg.max_queue)), Condvar::new()));
+        let budget = KernelBudget::new(cfg.effective_kernel_budget());
+        let resumed = rescan(&state_dir, &state);
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        println!("serve: listening on {addr} (budget {} lanes)", budget.total());
+        if resumed > 0 {
+            println!("serve: re-enqueued {resumed} unfinished job(s) from {}", state_dir.display());
+        }
+        let workers = scheduler::spawn_workers(Arc::clone(&state), Arc::clone(&budget), cfg);
+        let inner = Arc::new(Inner {
+            state,
+            budget,
+            state_dir,
+            stop_accept: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+        });
+        let accept_inner = Arc::clone(&inner);
+        let accept = std::thread::Builder::new()
+            .name("serve-accept".to_string())
+            .spawn(move || accept_loop(listener, accept_inner))
+            .expect("spawn accept thread");
+        Ok(ServerHandle { addr, inner, workers, accept: Some(accept) })
+    }
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn port(&self) -> u16 {
+        self.addr.port()
+    }
+
+    /// Programmatic shutdown, equivalent to a `shutdown` request.
+    pub fn shutdown(&self, abort: bool) {
+        initiate_shutdown(&self.inner, abort);
+    }
+
+    /// Block until the service stops (all workers drained/aborted),
+    /// then reap the accept thread.
+    pub fn wait(mut self) {
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.inner.stop_accept.store(true, Ordering::Relaxed);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+/// Re-enqueue every non-terminal job record left by a previous server
+/// life; terminal records stay visible to `status`. Returns the number
+/// of re-enqueued jobs.
+fn rescan(state_dir: &Path, state: &SharedQueue) -> usize {
+    let records = job::scan_records(state_dir);
+    let (lock, _) = &**state;
+    let mut q = lock.lock().unwrap_or_else(|e| e.into_inner());
+    let mut resumed = 0;
+    for rec in records {
+        let cfg = match Doc::parse(&rec.config_toml).and_then(|d| RunConfig::from_doc(&d)) {
+            Ok(cfg) => cfg,
+            Err(_) => continue, // unusable record; leave the file for inspection
+        };
+        let shared = Arc::new(
+            JobShared::new(&rec.id, &cfg.name, cfg.sampler.name(), cfg.epochs)
+                .with_prior(rec.wall_s, rec.epochs_done),
+        );
+        if rec.state.is_terminal() {
+            shared.restore_terminal(rec.state);
+            let entry =
+                JobEntry { cfg, config_toml: rec.config_toml, shared, has_checkpoint: false };
+            q.insert_terminal(&rec.id, entry);
+            continue;
+        }
+        shared.push_event(obj(vec![("event", s("requeued")), ("after", s(rec.state.as_str()))]));
+        let has_checkpoint = state_dir.join(format!("{}.ckpt", rec.id)).exists();
+        let entry = JobEntry { cfg, config_toml: rec.config_toml, shared, has_checkpoint };
+        q.requeue(&rec.id, entry);
+        resumed += 1;
+    }
+    resumed
+}
+
+fn initiate_shutdown(inner: &Inner, abort: bool) {
+    inner.stop_accept.store(true, Ordering::Relaxed);
+    let (lock, cvar) = &*inner.state;
+    lock.lock().unwrap_or_else(|e| e.into_inner()).begin_shutdown(abort);
+    cvar.notify_all();
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<Inner>) {
+    loop {
+        if inner.stop_accept.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let inner = Arc::clone(&inner);
+                std::thread::spawn(move || {
+                    let _ = handle_connection(stream, inner);
+                });
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(15));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(15)),
+        }
+    }
+}
+
+fn write_line(out: &mut TcpStream, j: &Json) -> std::io::Result<()> {
+    out.write_all(j.to_string_compact().as_bytes())?;
+    out.write_all(b"\n")
+}
+
+fn handle_connection(stream: TcpStream, inner: Arc<Inner>) -> std::io::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match Request::parse(&line) {
+            Ok(req) => req,
+            Err(e) => {
+                write_line(&mut out, &err_response(&e))?;
+                continue;
+            }
+        };
+        match req {
+            Request::Submit { config_toml, name, sampler, job_id } => {
+                let resp = handle_submit(&inner, config_toml, name, sampler, job_id);
+                write_line(&mut out, &resp)?;
+            }
+            Request::Status { job } => {
+                write_line(&mut out, &handle_status(&inner, job.as_deref()))?;
+            }
+            Request::Events { job } => handle_events(&inner, &mut out, &job)?,
+            Request::Cancel { job } => {
+                write_line(&mut out, &handle_cancel(&inner, &job))?;
+            }
+            Request::Shutdown { abort } => {
+                let mode = if abort { "abort" } else { "drain" };
+                write_line(&mut out, &ok_response(vec![("shutdown", s(mode))]))?;
+                initiate_shutdown(&inner, abort);
+                return Ok(());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn handle_submit(
+    inner: &Inner,
+    config_toml: String,
+    name: Option<String>,
+    sampler: Option<String>,
+    job_id: Option<String>,
+) -> Json {
+    let doc = match Doc::parse(&config_toml) {
+        Ok(doc) => doc,
+        Err(e) => return err_response(&format!("config: {e}")),
+    };
+    let mut cfg = match RunConfig::from_doc(&doc) {
+        Ok(cfg) => cfg,
+        Err(e) => return err_response(&format!("config: {e}")),
+    };
+    if let Some(n) = name {
+        cfg.name = n;
+    }
+    if let Some(sname) = sampler {
+        match registry::parse(&sname, &registry::ParamBag::new()) {
+            Ok(sc) => cfg.sampler = sc,
+            Err(e) => return err_response(&format!("sampler: {e}")),
+        }
+    }
+    if let Err(e) = cfg.validate() {
+        return err_response(&format!("config: {e}"));
+    }
+    let id = job_id.unwrap_or_else(|| {
+        format!("job-{:x}-{}", std::process::id(), inner.next_id.fetch_add(1, Ordering::Relaxed))
+    });
+    let legal = |c: char| c.is_ascii_alphanumeric() || c == '-' || c == '_';
+    if id.is_empty() || !id.chars().all(legal) {
+        return err_response("job_id must be non-empty [A-Za-z0-9_-]");
+    }
+    let shared = Arc::new(JobShared::new(&id, &cfg.name, cfg.sampler.name(), cfg.epochs));
+    let entry = JobEntry {
+        cfg,
+        config_toml: config_toml.clone(),
+        shared: Arc::clone(&shared),
+        has_checkpoint: false,
+    };
+    let (lock, cvar) = &*inner.state;
+    let position = {
+        let mut q = lock.lock().unwrap_or_else(|e| e.into_inner());
+        match q.submit(&id, entry) {
+            Ok(pos) => pos,
+            Err(reason) => return rejected_response(reason),
+        }
+    };
+    shared.push_event(obj(vec![("event", s("queued")), ("position", num(position as f64))]));
+    let _ = job::write_record(&inner.state_dir, &shared, &config_toml);
+    cvar.notify_one();
+    ok_response(vec![
+        ("job", s(id)),
+        ("state", s("queued")),
+        ("position", num(position as f64)),
+    ])
+}
+
+fn handle_status(inner: &Inner, job: Option<&str>) -> Json {
+    let (lock, _) = &*inner.state;
+    let q = lock.lock().unwrap_or_else(|e| e.into_inner());
+    match job {
+        Some(id) => match q.get(id) {
+            Some(entry) => ok_response(vec![("jobs", Json::Arr(vec![entry.shared.status_json()]))]),
+            None => err_response("unknown job"),
+        },
+        None => {
+            let jobs: Vec<Json> = q.jobs().map(|(_, e)| e.shared.status_json()).collect();
+            ok_response(vec![
+                ("jobs", Json::Arr(jobs)),
+                ("pending", num(q.pending_len() as f64)),
+                ("running", num(q.running_len() as f64)),
+                ("kernel_budget", num(inner.budget.total() as f64)),
+                ("kernel_in_use", num(inner.budget.in_use() as f64)),
+                ("shutting_down", Json::Bool(q.shutting_down())),
+            ])
+        }
+    }
+}
+
+/// Stream the job's backlog + live events; the stream ends when the job
+/// finishes (its subscribers are disconnected), after which one final
+/// `ok` line reports the terminal state.
+fn handle_events(inner: &Inner, out: &mut TcpStream, id: &str) -> std::io::Result<()> {
+    let rx = {
+        let (lock, _) = &*inner.state;
+        let q = lock.lock().unwrap_or_else(|e| e.into_inner());
+        q.get(id).map(|entry| entry.shared.subscribe())
+    };
+    let Some(rx) = rx else {
+        return write_line(out, &err_response("unknown job"));
+    };
+    for ev in rx {
+        write_line(out, &ev)?;
+    }
+    let state = {
+        let (lock, _) = &*inner.state;
+        let q = lock.lock().unwrap_or_else(|e| e.into_inner());
+        q.get(id).map(|entry| entry.shared.state())
+    };
+    let state = state.map(JobState::as_str).unwrap_or("unknown");
+    write_line(out, &ok_response(vec![("job", s(id)), ("state", s(state))]))
+}
+
+fn handle_cancel(inner: &Inner, id: &str) -> Json {
+    let (lock, _) = &*inner.state;
+    let q = lock.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(entry) = q.get(id) else {
+        return err_response("unknown job");
+    };
+    match entry.shared.state() {
+        JobState::Queued => {
+            entry.shared.request_interrupt(INTERRUPT_CANCEL);
+            let msg = "cancelled while queued".to_string();
+            entry.shared.finish(JobState::Cancelled, None, Some(msg), None);
+            let _ = job::write_record(&inner.state_dir, &entry.shared, &entry.config_toml);
+            ok_response(vec![("job", s(id)), ("state", s("cancelled"))])
+        }
+        JobState::Running => {
+            // Cooperative: the epoch hook observes the flag at the next
+            // epoch boundary and aborts the run.
+            entry.shared.request_interrupt(INTERRUPT_CANCEL);
+            ok_response(vec![
+                ("job", s(id)),
+                ("state", s("running")),
+                ("cancel_requested", Json::Bool(true)),
+            ])
+        }
+        other => err_response(&format!("job already {}", other.as_str())),
+    }
+}

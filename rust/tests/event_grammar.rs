@@ -1,0 +1,183 @@
+//! DESIGN.md §6 event-ordering grammar, enforced per engine mode:
+//!
+//! ```text
+//! RunStart
+//!   ( EpochStart ( ScoringFp? SelectionMade )* SyncRound? EvalDone? EpochEnd )*
+//! RunEnd
+//! ```
+//!
+//! A state-machine validator consumes the typed stream from a custom
+//! sink and rejects any out-of-order emission. All three engine modes
+//! must satisfy the same grammar: single-worker, the sequential
+//! data-parallel simulation (`workers > 1`), and threaded replicas
+//! (which emit epoch-level events only — still grammar-conformant).
+
+use std::sync::{Arc, Mutex};
+
+use evosample::prelude::*;
+use evosample::runtime::native::NativeRuntime;
+
+/// Validator states, named for what the stream may legally do next.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum S {
+    /// Nothing seen yet; only `RunStart` is legal.
+    Start,
+    /// Between epochs; `EpochStart` or `RunEnd`.
+    BetweenEpochs,
+    /// Inside an epoch, before the sync/eval tail.
+    InEpoch,
+    /// A `ScoringFp` was emitted; the paired `SelectionMade` must follow.
+    PendingSelection,
+    /// `SyncRound` seen; only `EvalDone` or `EpochEnd` remain.
+    AfterSync,
+    /// `EvalDone` seen; only `EpochEnd` remains.
+    AfterEval,
+    /// `RunEnd` seen; the stream must be over.
+    Done,
+}
+
+fn check_grammar(events: &[Event]) -> Result<(), String> {
+    let mut state = S::Start;
+    let mut current_epoch: Option<usize> = None;
+    let bad = |state: S, ev: &Event| Err(format!("{ev:?} illegal in state {state:?}"));
+    for ev in events {
+        // Epoch tags must match the enclosing EpochStart.
+        let tag = match ev {
+            Event::EpochStart { epoch, .. }
+            | Event::ScoringFp { epoch, .. }
+            | Event::SelectionMade { epoch, .. }
+            | Event::SyncRound { epoch, .. }
+            | Event::EvalDone { epoch, .. }
+            | Event::EpochEnd { epoch, .. } => Some(*epoch),
+            _ => None,
+        };
+        state = match (state, ev) {
+            (S::Start, Event::RunStart { .. }) => S::BetweenEpochs,
+            (S::BetweenEpochs, Event::EpochStart { epoch, .. }) => {
+                if let Some(prev) = current_epoch {
+                    if *epoch != prev + 1 {
+                        return Err(format!("epoch {epoch} follows epoch {prev}"));
+                    }
+                }
+                current_epoch = Some(*epoch);
+                S::InEpoch
+            }
+            (S::BetweenEpochs, Event::RunEnd { .. }) => S::Done,
+            (S::InEpoch, Event::ScoringFp { .. }) => S::PendingSelection,
+            (S::InEpoch, Event::SelectionMade { .. }) => S::InEpoch,
+            (S::InEpoch, Event::SyncRound { .. }) => S::AfterSync,
+            (S::InEpoch | S::AfterSync, Event::EvalDone { .. }) => S::AfterEval,
+            (S::InEpoch | S::AfterSync | S::AfterEval, Event::EpochEnd { .. }) => S::BetweenEpochs,
+            (S::PendingSelection, Event::SelectionMade { .. }) => S::InEpoch,
+            (state, ev) => return bad(state, ev),
+        };
+        if let (Some(tag), Some(cur)) = (tag, current_epoch) {
+            if tag != cur {
+                return Err(format!("event tagged epoch {tag} inside epoch {cur}: {ev:?}"));
+            }
+        }
+    }
+    if state != S::Done {
+        return Err(format!("stream ended in state {state:?} (no RunEnd)"));
+    }
+    Ok(())
+}
+
+fn run_and_collect(cfg: RunConfig) -> Vec<Event> {
+    let seen: Arc<Mutex<Vec<Event>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = seen.clone();
+    let split = data::build(&cfg.dataset, cfg.test_n, cfg.seed ^ 0xda7a_5eed);
+    SessionBuilder::from_config(cfg)
+        .runtime(Box::new(NativeRuntime::new(split.train.x_len(), 16, 4)))
+        .on_event(move |ev: &Event| sink.lock().unwrap().push(ev.clone()))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    Arc::try_unwrap(seen).unwrap().into_inner().unwrap()
+}
+
+fn base_cfg(sampler: SamplerConfig) -> RunConfig {
+    let mut cfg = RunConfig::new(
+        "grammar",
+        "native",
+        DatasetConfig::SynthCifar { n: 192, classes: 4, label_noise: 0.05, hard_frac: 0.2 },
+    );
+    cfg.epochs = 3;
+    cfg.meta_batch = 32;
+    cfg.mini_batch = 8;
+    cfg.lr = LrSchedule::Const { lr: 0.02 };
+    cfg.test_n = 64;
+    cfg.eval_every = 2; // EvalDone must stay optional per epoch
+    cfg.seed = 11;
+    cfg.sampler = sampler;
+    cfg
+}
+
+#[test]
+fn grammar_holds_single_worker() {
+    // A scoring sampler exercises the ScoringFp→SelectionMade pairing,
+    // the baseline exercises the scoring-free path.
+    for sampler in [SamplerConfig::es_default(), SamplerConfig::Uniform] {
+        let events = run_and_collect(base_cfg(sampler));
+        assert!(events.iter().any(|e| matches!(e, Event::SelectionMade { .. })));
+        check_grammar(&events).unwrap();
+    }
+}
+
+#[test]
+fn grammar_holds_sequential_workers() {
+    let mut cfg = base_cfg(SamplerConfig::es_default());
+    cfg.workers = 2;
+    let events = run_and_collect(cfg);
+    assert!(events.iter().any(|e| matches!(e, Event::SyncRound { workers: 2, .. })));
+    check_grammar(&events).unwrap();
+}
+
+#[test]
+fn grammar_holds_threaded_workers() {
+    let mut cfg = base_cfg(SamplerConfig::es_default());
+    cfg.workers = 2;
+    cfg.threaded_workers = true;
+    cfg.sync_every = 2;
+    let events = run_and_collect(cfg);
+    // Threaded mode emits epoch-level events only — still conformant.
+    assert!(events.iter().any(|e| matches!(e, Event::SyncRound { .. })));
+    check_grammar(&events).unwrap();
+}
+
+#[test]
+fn validator_rejects_malformed_streams() {
+    // No RunStart.
+    assert!(check_grammar(&[Event::RunEnd { steps: 1, accuracy: 0.5 }]).is_err());
+    // ScoringFp without its paired SelectionMade.
+    let orphan_fp = vec![
+        Event::RunStart { name: "x".into(), sampler: "es".into(), epochs: 1 },
+        Event::EpochStart { epoch: 0, kept: 10, dataset_n: 10 },
+        Event::ScoringFp {
+            epoch: 0,
+            step: 0,
+            samples: 8,
+            elapsed: std::time::Duration::from_millis(1),
+        },
+        Event::EpochEnd { epoch: 0, mean_train_loss: 1.0 },
+        Event::RunEnd { steps: 1, accuracy: 0.5 },
+    ];
+    assert!(check_grammar(&orphan_fp).unwrap_err().contains("EpochEnd"));
+    // Truncated stream: no RunEnd.
+    let truncated = vec![
+        Event::RunStart { name: "x".into(), sampler: "es".into(), epochs: 1 },
+        Event::EpochStart { epoch: 0, kept: 10, dataset_n: 10 },
+    ];
+    assert!(check_grammar(&truncated).unwrap_err().contains("no RunEnd"));
+    // Epoch numbers must be consecutive.
+    let skipped = vec![
+        Event::RunStart { name: "x".into(), sampler: "es".into(), epochs: 2 },
+        Event::EpochStart { epoch: 0, kept: 10, dataset_n: 10 },
+        Event::EpochEnd { epoch: 0, mean_train_loss: 1.0 },
+        Event::EpochStart { epoch: 2, kept: 10, dataset_n: 10 },
+        Event::EpochEnd { epoch: 2, mean_train_loss: 1.0 },
+        Event::RunEnd { steps: 2, accuracy: 0.5 },
+    ];
+    assert!(check_grammar(&skipped).unwrap_err().contains("follows"));
+}
