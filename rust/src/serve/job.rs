@@ -11,7 +11,7 @@
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -19,6 +19,9 @@ use crate::util::json::{num, obj, s, Json};
 
 /// Events kept per job for late subscribers; older events drop off (the
 /// drop count is reported in `status`, so truncation is never silent).
+/// Live subscriber channels are bounded to the same cap: a subscriber
+/// that falls a full backlog behind is disconnected rather than
+/// queueing events without bound.
 pub const EVENT_BACKLOG_CAP: usize = 4096;
 
 /// Cooperative-interrupt flag values (checked at epoch boundaries).
@@ -90,7 +93,7 @@ struct JobMeta {
     error: Option<String>,
     events: VecDeque<Json>,
     events_dropped: u64,
-    subscribers: Vec<Sender<Json>>,
+    subscribers: Vec<SyncSender<Json>>,
 }
 
 /// Shared handle for one job; lives in the queue's job table and is
@@ -98,6 +101,13 @@ struct JobMeta {
 pub struct JobShared {
     id: String,
     interrupt: AtomicU8,
+    /// The interrupt the epoch hook actually *acted on* when it aborted
+    /// the run (set just before the hook bails). The scheduler
+    /// classifies a session error by this, not by [`JobShared::interrupt_kind`]:
+    /// a genuine failure that merely races a cancel/shutdown request
+    /// never sets it, so the job correctly ends `Failed` instead of
+    /// masquerading as a cooperative stop.
+    interrupt_fired: AtomicU8,
     meta: Mutex<JobMeta>,
 }
 
@@ -106,6 +116,7 @@ impl JobShared {
         JobShared {
             id: id.to_string(),
             interrupt: AtomicU8::new(INTERRUPT_NONE),
+            interrupt_fired: AtomicU8::new(INTERRUPT_NONE),
             meta: Mutex::new(JobMeta {
                 name: name.to_string(),
                 sampler: sampler.to_string(),
@@ -161,6 +172,19 @@ impl JobShared {
         self.interrupt.store(kind, Ordering::Relaxed);
     }
 
+    /// Record that the epoch hook is aborting the run *because of* this
+    /// interrupt (called immediately before the hook bails).
+    pub fn acknowledge_interrupt(&self, kind: u8) {
+        self.interrupt_fired.store(kind, Ordering::Relaxed);
+    }
+
+    /// The interrupt the epoch hook aborted the run for, or
+    /// [`INTERRUPT_NONE`] when the run failed on its own (even if an
+    /// interrupt request happened to be pending).
+    pub fn fired_interrupt(&self) -> u8 {
+        self.interrupt_fired.load(Ordering::Relaxed)
+    }
+
     /// Append an event to the backlog (capped) and fan it out to live
     /// subscribers. The `"job"` key is stamped here so every consumer
     /// sees tagged lines.
@@ -174,19 +198,26 @@ impl JobShared {
             m.events_dropped += 1;
         }
         m.events.push_back(ev.clone());
-        m.subscribers.retain(|tx| tx.send(ev.clone()).is_ok());
+        // Bounded fan-out: a subscriber whose channel is full has fallen
+        // a whole backlog behind — drop it like a disconnected one (its
+        // stream ends early) instead of growing its queue without bound.
+        m.subscribers.retain(|tx| tx.try_send(ev.clone()).is_ok());
     }
 
     /// Subscribe to the event stream: the full backlog replays into the
     /// channel immediately; live events follow until the job finishes
-    /// (senders are dropped at terminal states, ending the stream). A
+    /// (senders are dropped at terminal states, ending the stream) or
+    /// the subscriber falls more than [`EVENT_BACKLOG_CAP`] events
+    /// behind (it is disconnected, ending the stream early). A
     /// subscription to an already-finished job yields the backlog and
     /// ends.
     pub fn subscribe(&self) -> Receiver<Json> {
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(EVENT_BACKLOG_CAP);
         let mut m = self.lock();
         for ev in &m.events {
-            let _ = tx.send(ev.clone());
+            // The backlog never exceeds the channel bound, so the replay
+            // always fits.
+            let _ = tx.try_send(ev.clone());
         }
         if !m.state.is_terminal() && m.state != JobState::Interrupted {
             m.subscribers.push(tx);
@@ -393,6 +424,21 @@ mod tests {
     }
 
     #[test]
+    fn slow_subscriber_is_disconnected_not_buffered_unboundedly() {
+        let j = JobShared::new("j1", "n", "es", 4);
+        let rx = j.subscribe();
+        // A subscriber that never reads saturates its bounded channel…
+        for i in 0..(EVENT_BACKLOG_CAP + 5) {
+            j.push_event(obj(vec![("event", s("tick")), ("i", num(i as f64))]));
+        }
+        // …and is dropped from the fan-out list at the first overflow.
+        assert!(j.lock().subscribers.is_empty(), "overflowing subscriber must be disconnected");
+        // The receiver drains exactly the channel bound, then the stream
+        // ends (sender dropped) instead of blocking or growing.
+        assert_eq!(rx.iter().count(), EVENT_BACKLOG_CAP);
+    }
+
+    #[test]
     fn status_tracks_lifecycle_and_accounting() {
         let j = JobShared::new("j2", "runA", "eswp", 8);
         assert_eq!(j.state(), JobState::Queued);
@@ -434,6 +480,11 @@ mod tests {
         assert_eq!(j.interrupt_kind(), INTERRUPT_NONE);
         j.request_interrupt(INTERRUPT_SHUTDOWN);
         assert_eq!(j.interrupt_kind(), INTERRUPT_SHUTDOWN);
+        // A pending request alone is not an acknowledgement: only the
+        // hook acting on it marks the run as cooperatively stopped.
+        assert_eq!(j.fired_interrupt(), INTERRUPT_NONE);
+        j.acknowledge_interrupt(INTERRUPT_SHUTDOWN);
+        assert_eq!(j.fired_interrupt(), INTERRUPT_SHUTDOWN);
     }
 
     #[test]

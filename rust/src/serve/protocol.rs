@@ -29,7 +29,8 @@ pub enum Request {
     Cancel { job: String },
     /// Stop the server: `drain` finishes queued+running jobs first,
     /// `abort` interrupts running jobs at the next epoch boundary
-    /// (checkpoints retained, so a restart resumes them).
+    /// (checkpoints retained, so a restart resumes them) and leaves
+    /// queued jobs unclaimed for the next server life's rescan.
     Shutdown { abort: bool },
 }
 

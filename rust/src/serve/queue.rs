@@ -85,8 +85,14 @@ impl JobQueue {
     }
 
     /// Claim the next pending job (skipping any that were cancelled
-    /// while queued). Increments the running count.
+    /// while queued). Increments the running count. Returns `None`
+    /// outright while aborting: an abort parks the backlog for the next
+    /// server life's rescan and must never start new work (drain mode,
+    /// by contrast, keeps claiming until the queue empties).
     pub fn claim_next(&mut self) -> Option<ClaimedJob> {
+        if self.aborting {
+            return None;
+        }
         while let Some(id) = self.pending.pop_front() {
             let Some(entry) = self.jobs.get(&id) else { continue };
             if entry.shared.state() != JobState::Queued {
@@ -132,8 +138,14 @@ impl JobQueue {
         self.draining = true;
         if abort {
             self.aborting = true;
+            // Flag every non-terminal job, not just those already
+            // Running: a job a worker claimed but has not yet marked
+            // running would otherwise miss the interrupt and run to
+            // completion. Flagging still-queued jobs is harmless — the
+            // aborting guard in `claim_next` keeps them unclaimed, and a
+            // restart builds fresh `JobShared`s with clear flags.
             for entry in self.jobs.values() {
-                if entry.shared.state() == JobState::Running {
+                if !entry.shared.state().is_terminal() {
                     entry.shared.request_interrupt(super::job::INTERRUPT_SHUTDOWN);
                 }
             }
@@ -217,6 +229,24 @@ mod tests {
         assert_eq!(q.submit("b", entry("b")), Err("shutting_down"));
         assert_eq!(claimed.shared.interrupt_kind(), crate::serve::job::INTERRUPT_SHUTDOWN);
         assert!(q.workers_should_exit());
+    }
+
+    #[test]
+    fn abort_parks_pending_jobs_unclaimed() {
+        let mut q = JobQueue::new(4);
+        q.submit("a", entry("a")).unwrap();
+        let claimed = q.claim_next().unwrap();
+        claimed.shared.mark_running();
+        q.submit("b", entry("b")).unwrap();
+        q.begin_shutdown(true);
+        // The backlog is parked for the next life's rescan, never run.
+        assert!(q.claim_next().is_none(), "abort must not start queued work");
+        assert_eq!(q.pending_len(), 1);
+        assert!(q.workers_should_exit());
+        // Even the still-queued job carries the interrupt flag, closing
+        // the claimed-but-not-yet-running race.
+        let flag = q.get("b").unwrap().shared.interrupt_kind();
+        assert_eq!(flag, crate::serve::job::INTERRUPT_SHUTDOWN);
     }
 
     #[test]

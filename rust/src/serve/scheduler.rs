@@ -96,7 +96,11 @@ fn run_claimed(claim: &ClaimedJob, budget: &Arc<KernelBudget>, serve: &ServeConf
             }
             claim.shared.finish(JobState::Done, accuracy, None, Some(final_ev));
         }
-        Err(e) => match claim.shared.interrupt_kind() {
+        // Classify by the interrupt the hook *acknowledged* when it
+        // aborted the run, not the request flag: a real failure that
+        // merely races a cancel/shutdown request must still end the job
+        // as Failed, not masquerade as a cooperative stop.
+        Err(e) => match claim.shared.fired_interrupt() {
             INTERRUPT_CANCEL => {
                 let msg = "cancelled by client".to_string();
                 claim.shared.finish(JobState::Cancelled, None, Some(msg), None);
@@ -114,6 +118,25 @@ fn run_claimed(claim: &ClaimedJob, budget: &Arc<KernelBudget>, serve: &ServeConf
     let _ = job::write_record(&state_dir, &claim.shared, &claim.config_toml);
 }
 
+/// Resolve a claimed job's resume point. A corrupt or unreadable
+/// checkpoint is treated exactly like a missing one — the job restarts
+/// from scratch (with the reason surfaced on its event stream) rather
+/// than permanently failing a run that would succeed without it.
+fn resolve_resume(
+    state_dir: &Path,
+    id: &str,
+    has_checkpoint: bool,
+) -> (Option<EngineResume>, Option<String>) {
+    if !has_checkpoint {
+        return (None, None);
+    }
+    match load_resume(state_dir, id) {
+        Ok(Some(r)) => (Some(r), None),
+        Ok(None) => (None, Some("no usable checkpoint".to_string())),
+        Err(e) => (None, Some(format!("unreadable checkpoint: {e:#}"))),
+    }
+}
+
 fn run_session(
     claim: &ClaimedJob,
     budget: &Arc<KernelBudget>,
@@ -122,12 +145,9 @@ fn run_session(
 ) -> anyhow::Result<Json> {
     let cfg = claim.cfg.clone();
     let rt = make_runtime_with_budget(&cfg, Some(Arc::clone(budget)))?;
-    let resume = if claim.has_checkpoint { load_resume(state_dir, &claim.id)? } else { None };
-    if claim.has_checkpoint && resume.is_none() {
-        claim.shared.push_event(obj(vec![
-            ("event", s("restarted")),
-            ("reason", s("no usable checkpoint")),
-        ]));
+    let (resume, restart_reason) = resolve_resume(state_dir, &claim.id, claim.has_checkpoint);
+    if let Some(reason) = restart_reason {
+        claim.shared.push_event(obj(vec![("event", s("restarted")), ("reason", s(reason))]));
     }
     if let Some(r) = &resume {
         claim.shared.push_event(obj(vec![
@@ -164,10 +184,18 @@ fn make_hook(
     let every = serve.checkpoint_every;
     Box::new(move |snap: &RunSnapshot<'_>| -> anyhow::Result<()> {
         if shared.interrupt_kind() == INTERRUPT_CANCEL {
+            shared.acknowledge_interrupt(INTERRUPT_CANCEL);
             anyhow::bail!("cancelled by client");
         }
         shared.progress(snap.epoch + 1, snap.stats.fp_passes, snap.stats.bp_samples);
         let shutting_down = shared.interrupt_kind() == INTERRUPT_SHUTDOWN;
+        if shutting_down {
+            // Acknowledge before the final checkpoint write: even if
+            // that write fails, the stop is still the shutdown's doing —
+            // the job parks as Interrupted and resumes (from an older
+            // checkpoint, or scratch) in the next server life.
+            shared.acknowledge_interrupt(INTERRUPT_SHUTDOWN);
+        }
         let due = every > 0 && ((snap.epoch + 1) % every == 0 || shutting_down);
         if due {
             if let Some(sampler_state) = snap.sampler.state_json() {
@@ -397,6 +425,37 @@ mod tests {
     fn missing_checkpoint_resumes_from_scratch() {
         let dir = fresh_dir("missing");
         assert!(load_resume(&dir, "nope").unwrap().is_none());
+        let (resume, reason) = resolve_resume(&dir, "nope", false);
+        assert!(resume.is_none() && reason.is_none(), "no checkpoint expected, no restart note");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A corrupt checkpoint must behave like a missing one: restart from
+    /// scratch with a surfaced reason, never fail the job outright.
+    #[test]
+    fn corrupt_checkpoint_restarts_instead_of_failing() {
+        let dir = fresh_dir("corrupt");
+        std::fs::write(dir.join("jobc.ckpt"), b"definitely not a checkpoint").unwrap();
+        assert!(load_resume(&dir, "jobc").is_err(), "corrupt file still surfaces as an error");
+        let (resume, reason) = resolve_resume(&dir, "jobc", true);
+        assert!(resume.is_none());
+        assert!(reason.unwrap().contains("unreadable checkpoint"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Outcome classification keys off the interrupt the hook
+    /// acknowledged, not the request flag: a genuine failure racing a
+    /// shutdown request stays Failed, a hook-driven stop does not.
+    #[test]
+    fn interrupts_classify_by_acknowledgement_not_request() {
+        use crate::serve::job::{JobShared, INTERRUPT_NONE};
+        let shared = JobShared::new("jx", "n", "es", 4);
+        // Shutdown requested, but the run dies on its own before the
+        // hook acts on it → nothing acknowledged → Failed path.
+        shared.request_interrupt(INTERRUPT_SHUTDOWN);
+        assert_eq!(shared.fired_interrupt(), INTERRUPT_NONE);
+        // The hook acting on the request marks the cooperative stop.
+        shared.acknowledge_interrupt(INTERRUPT_SHUTDOWN);
+        assert_eq!(shared.fired_interrupt(), INTERRUPT_SHUTDOWN);
     }
 }

@@ -257,13 +257,19 @@ fn handle_submit(
     let (lock, cvar) = &*inner.state;
     let position = {
         let mut q = lock.lock().unwrap_or_else(|e| e.into_inner());
-        match q.submit(&id, entry) {
+        let position = match q.submit(&id, entry) {
             Ok(pos) => pos,
             Err(reason) => return rejected_response(reason),
-        }
+        };
+        // Stamp the queued event and the initial durable record while
+        // still holding the queue lock: workers claim under this same
+        // lock, so their running-state record write always happens-after
+        // this one (otherwise a fast worker's record could be clobbered
+        // by a stale state=queued snapshot).
+        shared.push_event(obj(vec![("event", s("queued")), ("position", num(position as f64))]));
+        let _ = job::write_record(&inner.state_dir, &shared, &config_toml);
+        position
     };
-    shared.push_event(obj(vec![("event", s("queued")), ("position", num(position as f64))]));
-    let _ = job::write_record(&inner.state_dir, &shared, &config_toml);
     cvar.notify_one();
     ok_response(vec![
         ("job", s(id)),

@@ -239,11 +239,15 @@ fn abort_then_restart_resumes_from_checkpoint_to_identical_result() {
     let dir = fresh_dir("resume");
     let toml = job_toml("resume_job", 21, 40, "es");
     let reference = standalone(&toml);
+    let toml_q = job_toml("parked_job", 22, 2, "baseline");
+    let reference_q = standalone(&toml_q);
 
-    // Life 1: run the job, interrupt it mid-flight.
+    // Life 1: run the job, interrupt it mid-flight. A second job sits
+    // queued behind the single slot the whole time.
     let life1 = start_server(&dir, 1, 4, 1);
     let addr = life1.addr();
     assert_eq!(submit(addr, &toml, "rj").get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(submit(addr, &toml_q, "rq").get("ok"), Some(&Json::Bool(true)));
     let mut conn = TcpStream::connect(addr).unwrap();
     let req = obj(vec![("cmd", jstr("events")), ("job", jstr("rj"))]);
     conn.write_all(req.to_string_compact().as_bytes()).unwrap();
@@ -269,6 +273,12 @@ fn abort_then_restart_resumes_from_checkpoint_to_identical_result() {
     let epochs_done = rec.get("epochs_done").and_then(Json::as_f64).unwrap();
     assert!(epochs_done >= 1.0 && epochs_done < 40.0, "interrupted mid-run: {epochs_done}");
     assert!(dir.join("rj.ckpt").exists(), "checkpoint retained for resume");
+    // Abort parks the backlog: the queued job was never started — its
+    // record still says queued and no checkpoint exists for it.
+    let rec_q = record_json(&dir, "rq");
+    assert_eq!(rec_q.get("state").and_then(Json::as_str), Some("queued"), "{rec_q:?}");
+    assert_eq!(rec_q.get("epochs_done").and_then(Json::as_f64), Some(0.0));
+    assert!(!dir.join("rq.ckpt").exists(), "queued job must not have run during abort");
 
     // Life 2: a fresh server on the same state dir resumes and finishes.
     let life2 = start_server(&dir, 1, 4, 1);
@@ -292,9 +302,21 @@ fn abort_then_restart_resumes_from_checkpoint_to_identical_result() {
     // uninterrupted standalone run.
     assert_matches_standalone(result, &reference, "resumed");
 
+    // The job parked queued by the abort is re-enqueued, runs from
+    // scratch, and matches its standalone reference too.
+    let events_q = stream_events(life2.addr(), "rq");
+    let names_q = event_names(&events_q);
+    assert!(names_q.contains(&"requeued".to_string()), "{names_q:?}");
+    let result_q = events_q
+        .iter()
+        .find(|e| e.get("event").and_then(Json::as_str) == Some("result"))
+        .unwrap_or_else(|| panic!("no result event for parked job: {names_q:?}"));
+    assert_matches_standalone(result_q, &reference_q, "parked");
+
     life2.shutdown(false);
     life2.wait();
     let rec = record_json(&dir, "rj");
     assert_eq!(rec.get("state").and_then(Json::as_str), Some("done"));
+    assert_eq!(record_json(&dir, "rq").get("state").and_then(Json::as_str), Some("done"));
     let _ = std::fs::remove_dir_all(&dir);
 }
