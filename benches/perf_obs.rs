@@ -1,0 +1,194 @@
+//! Telemetry overhead bench (DESIGN.md §11): step throughput of the
+//! same training run at `telemetry = off`, `counters`, and `trace`.
+//!
+//! Emits machine-readable `BENCH_obs.json` (best wall + steps/s per
+//! level, overhead percentages, span/counter sanity) and exits non-zero
+//! if the `counters` level costs more than 3% throughput vs `off` — the
+//! observability layer's hard perf budget. Also exits non-zero if any
+//! level perturbs the loss curve or the sample accounting: telemetry is
+//! observational only, bit-for-bit.
+
+use std::time::Instant;
+
+use evosample::coordinator::train_with_sampler;
+use evosample::prelude::*;
+use evosample::runtime::native::NativeRuntime;
+use evosample::util::bench::smoke_mode;
+use evosample::util::json::{num, obj, s, Json};
+
+/// Max counters-level throughput overhead vs off, in percent.
+const MAX_COUNTERS_OVERHEAD_PCT: f64 = 3.0;
+
+fn main() {
+    let (n, epochs, hidden, reps) =
+        if smoke_mode() { (2048, 4, 48, 5) } else { (8192, 8, 96, 5) };
+
+    // The busiest single-worker shape: ES with anneal 0 so every step
+    // runs the scoring FP, selection, and observation stages — each one
+    // an instrumented site, so per-step telemetry cost is maximally
+    // visible in the wall-clock.
+    let mut cfg = RunConfig::new(
+        "perf_obs",
+        "native",
+        DatasetConfig::SynthCifar { n, classes: 10, label_noise: 0.05, hard_frac: 0.2 },
+    );
+    cfg.epochs = epochs;
+    cfg.meta_batch = 128;
+    cfg.mini_batch = 32;
+    cfg.lr = LrSchedule::OneCycle { max_lr: 0.02, warmup_frac: 0.3 };
+    cfg.test_n = 256;
+    cfg.sampler = SamplerConfig::Es { beta1: 0.2, beta2: 0.9, anneal_frac: 0.0 };
+    let split = data::build(&cfg.dataset, cfg.test_n, 42);
+
+    println!(
+        "== telemetry overhead (n={n}, B={}, b={}, hidden={hidden}, {epochs} epochs, \
+         best of {reps}) ==",
+        cfg.meta_batch, cfg.mini_batch
+    );
+    println!("{:>9} {:>12} {:>12} {:>10}", "level", "best_wall_s", "steps/s", "steps");
+
+    struct LevelRun {
+        name: &'static str,
+        best_wall_s: f64,
+        steps_per_s: f64,
+        steps: u64,
+        loss_curve: Vec<f64>,
+        fp_samples: u64,
+        bp_samples: u64,
+    }
+
+    let levels: [(&str, u8); 3] = [
+        ("off", evosample::obs::OFF),
+        ("counters", evosample::obs::COUNTERS),
+        ("trace", evosample::obs::TRACE),
+    ];
+    let mut runs: Vec<LevelRun> = Vec::new();
+    let mut spans_recorded = 0usize;
+    let mut counted_steps = 0u64;
+    for (name, level) in levels {
+        evosample::obs::set_level(level);
+        evosample::obs::registry().reset();
+        evosample::obs::clear_spans();
+        let mut best_wall = f64::INFINITY;
+        let mut kept: Option<LevelRun> = None;
+        for _ in 0..reps {
+            let mut rt = NativeRuntime::new(split.train.x_len(), hidden, 10);
+            let sampler = evosample::sampler::build(&cfg.sampler, split.train.n, cfg.epochs)
+                .expect(&cfg.name);
+            let t0 = Instant::now();
+            let r = train_with_sampler(&cfg, &mut rt, &split, sampler).expect(&cfg.name);
+            let wall = t0.elapsed().as_secs_f64() - r.cost.eval_s;
+            if wall < best_wall {
+                best_wall = wall;
+                kept = Some(LevelRun {
+                    name,
+                    best_wall_s: wall,
+                    steps_per_s: r.steps as f64 / wall.max(1e-9),
+                    steps: r.steps,
+                    loss_curve: r.loss_curve.clone(),
+                    fp_samples: r.cost.fp_samples,
+                    bp_samples: r.cost.bp_samples,
+                });
+            }
+        }
+        let run = kept.expect("at least one rep");
+        println!(
+            "{name:>9} {:>12.3} {:>12.1} {:>10}",
+            run.best_wall_s, run.steps_per_s, run.steps
+        );
+        if level == evosample::obs::COUNTERS {
+            counted_steps = evosample::obs::registry().counter("engine.steps").get();
+        }
+        if level == evosample::obs::TRACE {
+            spans_recorded = evosample::obs::span_count();
+        }
+        runs.push(run);
+    }
+    evosample::obs::set_level(evosample::obs::OFF);
+
+    let off = &runs[0];
+    let overhead_vs_off = |r: &LevelRun| 100.0 * (1.0 - r.steps_per_s / off.steps_per_s);
+    let counters_overhead = overhead_vs_off(&runs[1]);
+    let trace_overhead = overhead_vs_off(&runs[2]);
+    println!(
+        "\ncounters overhead {counters_overhead:+.2}%  trace overhead {trace_overhead:+.2}% \
+         (budget: counters <= {MAX_COUNTERS_OVERHEAD_PCT}%)"
+    );
+    println!(
+        "sanity: engine.steps counted {counted_steps} over {reps} counters reps, \
+         {spans_recorded} spans in the trace ring"
+    );
+
+    let rows: Vec<Json> = runs
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("level", s(r.name)),
+                ("best_wall_s", num(r.best_wall_s)),
+                ("steps_per_s", num(r.steps_per_s)),
+                ("steps", num(r.steps as f64)),
+                ("overhead_pct_vs_off", num(overhead_vs_off(r))),
+            ])
+        })
+        .collect();
+    let out = obj(vec![
+        ("bench", s("perf_obs")),
+        ("backend", s("native")),
+        ("mode", s(if smoke_mode() { "smoke" } else { "full" })),
+        (
+            "shape",
+            obj(vec![
+                ("n", num(n as f64)),
+                ("epochs", num(epochs as f64)),
+                ("hidden", num(hidden as f64)),
+                ("meta_batch", num(cfg.meta_batch as f64)),
+                ("mini_batch", num(cfg.mini_batch as f64)),
+                ("reps", num(reps as f64)),
+            ]),
+        ),
+        ("levels", Json::Arr(rows)),
+        ("counters_overhead_pct", num(counters_overhead)),
+        ("trace_overhead_pct", num(trace_overhead)),
+        ("spans_recorded", num(spans_recorded as f64)),
+        ("guard_threshold_pct", num(MAX_COUNTERS_OVERHEAD_PCT)),
+    ]);
+    let payload = out.to_string_compact() + "\n";
+    std::fs::write("BENCH_obs.json", payload).expect("write BENCH_obs.json");
+    println!("wrote BENCH_obs.json");
+
+    // ---- CI guards ------------------------------------------------------
+
+    // Telemetry must be observational only: identical numerics and
+    // sample accounting at every level.
+    for r in &runs[1..] {
+        if r.loss_curve != off.loss_curve
+            || r.fp_samples != off.fp_samples
+            || r.bp_samples != off.bp_samples
+            || r.steps != off.steps
+        {
+            eprintln!(
+                "FAIL: telemetry level {:?} perturbed the run (loss curve or sample \
+                 accounting differs from off) — the §11 never-perturbs contract is broken",
+                r.name
+            );
+            std::process::exit(1);
+        }
+    }
+    // Counters were actually live during the counters reps, and the
+    // trace ring actually holds spans — otherwise the overhead numbers
+    // measure nothing.
+    if counted_steps < off.steps || spans_recorded == 0 {
+        eprintln!(
+            "FAIL: instrumentation dead during the bench (engine.steps {counted_steps}, \
+             spans {spans_recorded}) — overhead numbers are meaningless"
+        );
+        std::process::exit(1);
+    }
+    if counters_overhead > MAX_COUNTERS_OVERHEAD_PCT {
+        eprintln!(
+            "FAIL: counters-level telemetry costs {counters_overhead:.2}% throughput vs off \
+             (budget {MAX_COUNTERS_OVERHEAD_PCT}%)"
+        );
+        std::process::exit(1);
+    }
+}

@@ -94,6 +94,25 @@ fn main() -> anyhow::Result<()> {
     let status = request(addr, &obj(vec![("cmd", s("status"))]))?;
     println!("status: {}", status.to_string_compact());
 
+    // ---- metrics: live telemetry scrape (DESIGN.md §11) ----------------
+    // One response carries the process `obs::` registry snapshot plus
+    // queue depth / kernel-lane occupancy under "global", and per-job
+    // selection health (keep rate, fp passes, wall seconds) under
+    // "jobs". `evosample top --addr ...` polls exactly this verb.
+    let metrics = request(addr, &obj(vec![("cmd", s("metrics"))]))?;
+    if let Some(global) = metrics.get("global") {
+        println!("metrics global: {}", global.to_string_compact());
+    }
+    for job in metrics.get("jobs").and_then(Json::as_arr).into_iter().flatten() {
+        let id = job.get("job").and_then(Json::as_str).unwrap_or("?");
+        let keep = job
+            .get("keep_rate_pct")
+            .and_then(Json::as_f64)
+            .map(|k| format!("{k:.1}%"))
+            .unwrap_or_else(|| "-".to_string());
+        println!("metrics job {id}: keep_rate {keep}");
+    }
+
     // ---- shutdown: drain finishes queued jobs, then exits --------------
     let resp = request(addr, &obj(vec![("cmd", s("shutdown"))]))?;
     println!("shutdown: {}", resp.to_string_compact());

@@ -146,6 +146,15 @@ impl<'rt> SessionBuilder<'rt> {
         self
     }
 
+    /// Telemetry level (`off` default / `counters` / `trace`). Raised
+    /// process-wide when the session runs — purely observational
+    /// (DESIGN.md §11); numerics and event streams are identical at
+    /// every level.
+    pub fn telemetry(mut self, level: crate::config::TelemetryLevel) -> Self {
+        self.cfg.telemetry = level;
+        self
+    }
+
     pub fn lr(mut self, schedule: LrSchedule) -> Self {
         self.cfg.lr = schedule;
         self
@@ -299,6 +308,9 @@ impl<'rt> Session<'rt> {
         hook: Option<Box<dyn EpochHook>>,
     ) -> anyhow::Result<RunResult> {
         self.cfg.validate().map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        // Sessions raise the process telemetry level, never lower it —
+        // one `telemetry = "off"` job can't blind a server that scrapes.
+        crate::obs::raise_level(self.cfg.telemetry.as_obs_level());
         let sampler = sampler::build(&self.cfg.sampler, self.split.train.n, self.cfg.epochs)?;
         let mut engine = Engine::new(&self.cfg, self.rt.get(), &self.split, sampler)
             .with_event_bus(&mut self.bus);

@@ -6,6 +6,7 @@ pub mod toml;
 
 pub use schema::{
     DatasetConfig, LrSchedule, RunConfig, SamplerConfig, ScoringPrecision, ServeConfig,
+    TelemetryLevel,
 };
 pub use toml::Doc;
 

@@ -259,6 +259,49 @@ impl ScoringPrecision {
     }
 }
 
+/// Telemetry level for the run (`run.telemetry`, DESIGN.md §11):
+/// `off` (default, near-zero overhead), `counters` (metrics registry
+/// accumulates), or `trace` (counters + ring-buffered spans exportable
+/// as Chrome-trace JSON via `--trace-out`). Telemetry observes the run
+/// without perturbing it — determinism holds at every level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TelemetryLevel {
+    #[default]
+    Off,
+    Counters,
+    Trace,
+}
+
+impl TelemetryLevel {
+    pub fn parse(s: &str) -> Result<TelemetryLevel, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" | "0" => Ok(TelemetryLevel::Off),
+            "counters" | "metrics" => Ok(TelemetryLevel::Counters),
+            "trace" | "full" => Ok(TelemetryLevel::Trace),
+            other => Err(format!(
+                "unknown telemetry {other:?} (expected \"off\", \"counters\", or \"trace\")"
+            )),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TelemetryLevel::Off => "off",
+            TelemetryLevel::Counters => "counters",
+            TelemetryLevel::Trace => "trace",
+        }
+    }
+
+    /// The `crate::obs` level constant this config level maps to.
+    pub fn as_obs_level(&self) -> u8 {
+        match self {
+            TelemetryLevel::Off => crate::obs::OFF,
+            TelemetryLevel::Counters => crate::obs::COUNTERS,
+            TelemetryLevel::Trace => crate::obs::TRACE,
+        }
+    }
+}
+
 /// One fully-specified training run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -310,6 +353,11 @@ pub struct RunConfig {
     /// pinned to 1 kernel lane by `spawn_replica` so W replicas don't
     /// oversubscribe the box; parallelism there comes from the workers.
     pub kernel_threads: usize,
+    /// Telemetry level applied (raised, process-wide — see
+    /// `crate::obs`) when the session starts: `off` | `counters` |
+    /// `trace`. Purely observational; never changes numerics or event
+    /// ordering (DESIGN.md §11).
+    pub telemetry: TelemetryLevel,
 }
 
 impl RunConfig {
@@ -334,6 +382,7 @@ impl RunConfig {
             threaded_workers: false,
             sync_every: 0,
             kernel_threads: 0,
+            telemetry: TelemetryLevel::Off,
         }
     }
 
@@ -505,6 +554,7 @@ impl RunConfig {
             threaded_workers: doc.bool_or("run.threaded_workers", false),
             sync_every: doc.i64_or("run.sync_every", 0) as usize,
             kernel_threads: doc.i64_or("run.kernel_threads", 0) as usize,
+            telemetry: TelemetryLevel::parse(&doc.str_or("run.telemetry", "off"))?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -750,6 +800,35 @@ max_lr = 0.05
         for p in [ScoringPrecision::Exact, ScoringPrecision::Bf16] {
             assert_eq!(ScoringPrecision::parse(p.as_str()), Ok(p));
         }
+    }
+
+    #[test]
+    fn telemetry_parses_from_toml_and_defaults_to_off() {
+        let src = "[run]\nmodel = \"mlp_cifar10\"\ntelemetry = \"trace\"\n[dataset]\nkind = \"synth_cifar\"\nn = 1024\n";
+        let cfg = RunConfig::from_doc(&Doc::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.telemetry, TelemetryLevel::Trace);
+        let src = "[run]\nmodel = \"mlp_cifar10\"\n[dataset]\nkind = \"synth_cifar\"\nn = 1024\n";
+        let cfg = RunConfig::from_doc(&Doc::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.telemetry, TelemetryLevel::Off, "default is off");
+        let src = "[run]\nmodel = \"mlp_cifar10\"\ntelemetry = \"loud\"\n[dataset]\nkind = \"synth_cifar\"\nn = 1024\n";
+        let err = RunConfig::from_doc(&Doc::parse(src).unwrap()).unwrap_err();
+        assert!(err.contains("telemetry"), "{err}");
+    }
+
+    #[test]
+    fn telemetry_parse_accepts_aliases_and_maps_to_obs_levels() {
+        assert_eq!(TelemetryLevel::parse("off"), Ok(TelemetryLevel::Off));
+        assert_eq!(TelemetryLevel::parse("none"), Ok(TelemetryLevel::Off));
+        assert_eq!(TelemetryLevel::parse(" Counters "), Ok(TelemetryLevel::Counters));
+        assert_eq!(TelemetryLevel::parse("metrics"), Ok(TelemetryLevel::Counters));
+        assert_eq!(TelemetryLevel::parse("TRACE"), Ok(TelemetryLevel::Trace));
+        assert!(TelemetryLevel::parse("verbose").is_err());
+        for t in [TelemetryLevel::Off, TelemetryLevel::Counters, TelemetryLevel::Trace] {
+            assert_eq!(TelemetryLevel::parse(t.as_str()), Ok(t));
+        }
+        assert_eq!(TelemetryLevel::Off.as_obs_level(), crate::obs::OFF);
+        assert_eq!(TelemetryLevel::Counters.as_obs_level(), crate::obs::COUNTERS);
+        assert_eq!(TelemetryLevel::Trace.as_obs_level(), crate::obs::TRACE);
     }
 
     #[test]

@@ -169,6 +169,62 @@ mod tests {
     }
 
     #[test]
+    fn accumulate_and_fp_passes_round_trip_property() {
+        use crate::prop_assert;
+        use crate::util::timer::phase;
+        crate::util::proptest::check("cost accumulate round-trip", 200, |g| {
+            let k = g.usize_in(1, 8);
+            let mut parts: Vec<CostSummary> = Vec::with_capacity(k);
+            for _ in 0..k {
+                let mut t = PhaseTimers::new();
+                for label in [
+                    phase::SCORING_FP,
+                    phase::TRAIN_BP,
+                    phase::SELECT,
+                    phase::DATA,
+                    phase::PRUNE,
+                    phase::SYNC,
+                    phase::EVAL,
+                ] {
+                    t.add(label, Duration::from_secs_f64(g.f64_in(0.0, 2.0)));
+                }
+                let fp = g.usize_in(0, 10_000) as u64;
+                let bp = g.usize_in(0, 10_000) as u64;
+                let passes = g.usize_in(0, 512) as u64;
+                let flops = g.usize_in(1, 1_000) as u64;
+                let s = CostSummary::from_run(&t, fp, bp, bp / 8, flops);
+                prop_assert!(s.fp_passes == 0, "from_run must leave fp_passes unset");
+                let s = s.with_fp_passes(passes);
+                prop_assert!(s.fp_passes == passes, "with_fp_passes must round-trip");
+                prop_assert!(
+                    s.fp_flops == fp * flops,
+                    "with_fp_passes must not touch fp_flops"
+                );
+                parts.push(s);
+            }
+            let mut total = CostSummary::default();
+            for p in &parts {
+                total.accumulate(p);
+            }
+            let sum_u = |f: fn(&CostSummary) -> u64| parts.iter().map(f).sum::<u64>();
+            prop_assert!(total.fp_samples == sum_u(|s| s.fp_samples), "fp_samples");
+            prop_assert!(total.fp_passes == sum_u(|s| s.fp_passes), "fp_passes");
+            prop_assert!(total.bp_samples == sum_u(|s| s.bp_samples), "bp_samples");
+            prop_assert!(total.bp_passes == sum_u(|s| s.bp_passes), "bp_passes");
+            prop_assert!(total.total_flops() == sum_u(|s| s.total_flops()), "flops");
+            let wall: f64 = parts.iter().map(CostSummary::train_wall_s).sum();
+            prop_assert!(
+                (total.train_wall_s() - wall).abs() < 1e-6 * (1.0 + wall),
+                "train_wall_s: accumulated {} vs summed {wall}",
+                total.train_wall_s()
+            );
+            let eval: f64 = parts.iter().map(|s| s.eval_s).sum();
+            prop_assert!((total.eval_s - eval).abs() < 1e-9, "eval_s");
+            Ok(())
+        });
+    }
+
+    #[test]
     fn frequency_tuning_amortizes_scoring_flops() {
         // ES at score_every = k scores ⌈steps/k⌉ meta-batches: fp_flops
         // shrink k-fold while bp_flops are unchanged, so the predicted

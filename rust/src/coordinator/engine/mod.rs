@@ -291,6 +291,7 @@ impl<'a> Engine<'a> {
             // single meta-batch (DESIGN.md §8.4). Identity unless a
             // high-prune config actually under-keeps.
             let kept = crate::sampler::enforce_min_keep(kept, cfg.meta_batch, n);
+            note_epoch_obs(kept.len(), n);
             emit_into(
                 &mut self.events,
                 Event::EpochStart { epoch, kept: kept.len(), dataset_n: n },
@@ -475,6 +476,19 @@ impl<'a> Engine<'a> {
             bp_at_eval,
             pipeline.class_bp_counts.clone(),
         ))
+    }
+}
+
+/// Selection-health gauges at an epoch boundary (DESIGN.md §11): the
+/// keep rate and pruned-set size of the epoch now starting, plus a
+/// completed-epoch counter. Shared by the sequential and threaded paths.
+pub(super) fn note_epoch_obs(kept: usize, dataset_n: usize) {
+    if crate::obs::counters_on() {
+        let reg = crate::obs::registry();
+        reg.counter("engine.epochs").add(1);
+        let pct = kept as f64 / dataset_n.max(1) as f64 * 100.0;
+        reg.gauge("select.keep_rate_pct").set(pct.round() as i64);
+        reg.gauge("select.pruned_size").set(dataset_n.saturating_sub(kept) as i64);
     }
 }
 

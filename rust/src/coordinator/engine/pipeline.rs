@@ -57,6 +57,29 @@ impl Stage {
             Stage::Observe => phase::SELECT,
         }
     }
+
+    /// Telemetry span name — unlike [`Stage::phase_label`], this keeps
+    /// `Observe` distinct so traces show the full five-stage shape.
+    pub fn obs_name(self) -> &'static str {
+        match self {
+            Stage::DataGather => "data_gather",
+            Stage::ScoringFp => "scoring_fp",
+            Stage::Select => "select",
+            Stage::TrainBp => "train_bp",
+            Stage::Observe => "observe",
+        }
+    }
+
+    /// Per-stage duration histogram name (DESIGN.md §11).
+    pub fn obs_metric(self) -> &'static str {
+        match self {
+            Stage::DataGather => "stage.data_gather",
+            Stage::ScoringFp => "stage.scoring_fp",
+            Stage::Select => "stage.select",
+            Stage::TrainBp => "stage.train_bp",
+            Stage::Observe => "stage.observe",
+        }
+    }
 }
 
 /// Per-stage accounting hook. Receives every stage execution with its
@@ -152,6 +175,14 @@ fn staged<T>(
     let out = f();
     let elapsed = t0.elapsed();
     timers.add(stage.phase_label(), elapsed);
+    // Telemetry (DESIGN.md §11) reuses the stage timer's `Instant` reads:
+    // the histogram is a few relaxed atomic adds, and the trace span is
+    // back-dated from `elapsed` — neither adds clock calls or touches
+    // anything the run computes with.
+    if crate::obs::counters_on() {
+        crate::obs::registry().histogram(stage.obs_metric()).record(elapsed.as_secs_f64());
+    }
+    crate::obs::record_elapsed("stage", stage.obs_name(), elapsed);
     if let Some(obs) = observer.as_deref_mut() {
         obs.on_stage(stage, elapsed);
     }
@@ -235,6 +266,17 @@ impl StepPipeline {
                 false
             }
         };
+        // Selection-health counters: scoring passes vs cadence skips is
+        // the live view of the `score_every` stride actually striding.
+        if crate::obs::counters_on() {
+            let reg = crate::obs::registry();
+            reg.counter("engine.steps").add(1);
+            if scoring {
+                reg.counter("select.scoring_passes").add(1);
+            } else if eligible {
+                reg.counter("select.cadence_skips").add(1);
+            }
+        }
         if scoring {
             let t0 = Instant::now();
             self.meta_losses.clear();
@@ -260,6 +302,13 @@ impl StepPipeline {
             })?;
             self.stats.fp_samples += meta.len() as u64;
             self.stats.fp_passes += 1;
+            // Score-distribution summary (mean/p50/p90 of meta losses).
+            if crate::obs::counters_on() {
+                let h = crate::obs::registry().histogram("select.meta_loss");
+                for &l in &self.meta_losses {
+                    h.record(l as f64);
+                }
+            }
             emit_into(
                 &mut events,
                 Event::ScoringFp {

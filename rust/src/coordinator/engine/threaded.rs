@@ -173,6 +173,7 @@ pub(super) fn run(
         // worker; replica sampler state stays consistent because the clamp
         // touches no tables and no RNG.
         let kept = sampler::enforce_min_keep(kept, cfg.meta_batch, n);
+        super::note_epoch_obs(kept.len(), n);
         emit_into(&mut events, Event::EpochStart { epoch, kept: kept.len(), dataset_n: n });
 
         // ---- disjoint round-robin shards over effective workers --------
@@ -485,5 +486,13 @@ fn sync_params(
     } else if scratch.len() != replica.param_count() {
         scratch.resize(replica.param_count(), 0.0);
     }
-    timers.add(phase::SYNC, t0.elapsed());
+    let elapsed = t0.elapsed();
+    timers.add(phase::SYNC, elapsed);
+    // Sync rounds trace per worker thread — barrier waits show up as the
+    // span's width, so stragglers are visible across Perfetto tracks.
+    if crate::obs::counters_on() {
+        crate::obs::registry().counter("engine.sync_rounds").add(1);
+        crate::obs::registry().histogram("stage.sync").record(elapsed.as_secs_f64());
+    }
+    crate::obs::record_elapsed("sync", "sync_round", elapsed);
 }

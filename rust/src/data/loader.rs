@@ -105,7 +105,22 @@ impl Prefetcher {
 
     /// Next prefetched meta-batch, or None when the epoch is done.
     pub fn next(&mut self) -> Option<Vec<u32>> {
-        self.full_rx.as_ref().and_then(|rx| rx.recv().ok())
+        let rx = self.full_rx.as_ref()?;
+        if crate::obs::counters_on() {
+            // The recv wait IS the stall: with the worker keeping the
+            // channel full it is ~0; a growing p90 means index assembly
+            // can't keep up with the step (DESIGN.md §11).
+            let t0 = std::time::Instant::now();
+            let out = rx.recv().ok();
+            let reg = crate::obs::registry();
+            reg.histogram("data.prefetch_stall_s").record(t0.elapsed().as_secs_f64());
+            if out.is_some() {
+                reg.counter("data.prefetch_batches").add(1);
+            }
+            out
+        } else {
+            rx.recv().ok()
+        }
     }
 
     /// Hand a consumed buffer back for reuse. Optional — dropping the

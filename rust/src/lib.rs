@@ -24,6 +24,7 @@
 //! announcing engine progress.
 
 pub mod util;
+pub mod obs;
 pub mod config;
 pub mod data;
 pub mod sampler;

@@ -5,6 +5,7 @@
 //!   train          --config <run.toml> [--trials N] [--workers W]
 //!                  [--threaded-workers] [--sync-every K] [--score-every K]
 //!                  [--scoring-precision exact|bf16]
+//!                  [--telemetry off|counters|trace] [--trace-out FILE]
 //!   list-models                       (artifact inventory)
 //!   list-samplers                     (registry inventory: name/kind/params)
 //!   experiment     --id <table2|table3|table4|table5|fig4|fig5|fig6|fig7|
@@ -15,7 +16,9 @@
 //!                  [--checkpoint-every K] [--dir STATE_DIR]
 //!   submit         --addr <host:port> (--config <run.toml> [--sampler S]
 //!                  [--name N] [--job-id ID] [--follow] | --status [--job ID]
-//!                  | --cancel ID | --shutdown drain|abort)
+//!                  | --metrics [--job ID] | --cancel ID
+//!                  | --shutdown drain|abort)
+//!   top            --addr <host:port> [--interval-ms MS] [--count N]
 //!   help
 //!
 //! Unknown subcommands are an error (exit 1); `help` is the only usage
@@ -37,10 +40,14 @@ USAGE:
   evosample train --config <run.toml> [--trials N] [--workers W]
                   [--threaded-workers] [--sync-every K] [--score-every K]
                   [--scoring-precision exact|bf16]
+                  [--telemetry off|counters|trace] [--trace-out FILE]
                   (--score-every K re-scores the meta-batch every K-th
                    step and selects from cached weights in between;
                    --scoring-precision bf16 ranks the meta-batch from a
-                   bf16 weight shadow — BP and eval stay exact)
+                   bf16 weight shadow — BP and eval stay exact;
+                   --telemetry counters prints a metrics snapshot after
+                   the run, --trace-out writes a Chrome-trace/Perfetto
+                   JSON of the per-stage spans and implies trace level)
   evosample list-models
   evosample list-samplers
   evosample experiment --id <table2|table3|table4|table5|fig1|fig4|fig5|
@@ -56,8 +63,12 @@ USAGE:
   evosample submit   --addr <host:port>
                      (--config <run.toml> [--sampler S] [--name N]
                       [--job-id ID] [--follow]
-                      | --status [--job ID] | --cancel ID
-                      | --shutdown drain|abort)
+                      | --status [--job ID] | --metrics [--job ID]
+                      | --cancel ID | --shutdown drain|abort)
+  evosample top      --addr <host:port> [--interval-ms MS] [--count N]
+                     (live telemetry view over the serve protocol's
+                      metrics verb: queue depth, kernel-lane occupancy,
+                      per-job selection health; --count 0 polls forever)
   evosample help
 ";
 
@@ -70,7 +81,7 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> anyhow::Result<()> {
-    let args = Args::parse(argv, &["full", "threaded-workers", "follow", "status"])
+    let args = Args::parse(argv, &["full", "threaded-workers", "follow", "status", "metrics"])
         .map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
     match args.subcommand.as_str() {
         "train" => {
@@ -95,6 +106,15 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             if let Some(p) = args.flag("scoring-precision") {
                 cfg.scoring_precision =
                     config::ScoringPrecision::parse(p).map_err(|e| anyhow::anyhow!("{e}"))?;
+            }
+            if let Some(t) = args.flag("telemetry") {
+                cfg.telemetry =
+                    config::TelemetryLevel::parse(t).map_err(|e| anyhow::anyhow!("{e}"))?;
+            }
+            let trace_out = args.flag("trace-out").map(str::to_string);
+            if trace_out.is_some() && cfg.telemetry != config::TelemetryLevel::Trace {
+                // A trace file without trace-level spans would be empty.
+                cfg.telemetry = config::TelemetryLevel::Trace;
             }
             cfg.validate().map_err(|e| anyhow::anyhow!("config: {e}"))?;
             if cfg.score_every > 1 {
@@ -140,6 +160,18 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                     r.cost.bp_samples,
                     r.timers.summary(),
                 );
+            }
+            if cfg.telemetry != config::TelemetryLevel::Off {
+                println!(
+                    "telemetry: {}",
+                    evosample::metrics::obs_snapshot_json().to_string_compact()
+                );
+            }
+            if let Some(path) = trace_out {
+                let spans = evosample::obs::span_count();
+                std::fs::write(&path, evosample::obs::chrome_trace_json().to_string_compact())
+                    .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+                println!("telemetry: wrote {spans} span(s) to {path} (open in Perfetto/chrome://tracing)");
             }
             Ok(())
         }
@@ -209,6 +241,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "illustrate" => experiments::fig1::run(400),
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
+        "top" => cmd_top(&args),
         "help" => {
             println!("{USAGE}");
             Ok(())
@@ -285,6 +318,15 @@ fn cmd_submit(args: &Args) -> anyhow::Result<()> {
         println!("{}", read_line(&mut reader)?);
         return Ok(());
     }
+    if args.has("metrics") {
+        let mut fields = vec![("cmd", s("metrics"))];
+        if let Some(id) = args.flag("job") {
+            fields.push(("job", s(id)));
+        }
+        send(&mut stream, &obj(fields))?;
+        println!("{}", read_line(&mut reader)?);
+        return Ok(());
+    }
     if let Some(id) = args.flag("cancel") {
         send(&mut stream, &obj(vec![("cmd", s("cancel")), ("job", s(id))]))?;
         println!("{}", read_line(&mut reader)?);
@@ -335,5 +377,92 @@ fn cmd_submit(args: &Args) -> anyhow::Result<()> {
         if Json::parse(&line).is_ok_and(|j| j.get("ok").is_some()) {
             return Ok(());
         }
+    }
+}
+
+/// Live telemetry view: poll the serve protocol's `metrics` verb over
+/// one connection and render a compact dashboard — queue depth, kernel
+/// lane occupancy, and one line per job with its selection health.
+fn cmd_top(args: &Args) -> anyhow::Result<()> {
+    use evosample::util::json::{obj, s, Json};
+    use std::io::{BufRead, BufReader, IsTerminal, Write};
+
+    let addr = args
+        .flag("addr")
+        .ok_or_else(|| anyhow::anyhow!("top needs --addr <host:port>"))?;
+    let interval =
+        args.usize_flag("interval-ms").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap_or(1000);
+    let count = args.usize_flag("count").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap_or(0);
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    // Only repaint in-place when a human is watching; piped output gets
+    // plain appended frames.
+    let repaint = std::io::stdout().is_terminal();
+    let mut polls = 0usize;
+    loop {
+        stream.write_all(obj(vec![("cmd", s("metrics"))]).to_string_compact().as_bytes())?;
+        stream.write_all(b"\n")?;
+        let mut line = String::new();
+        anyhow::ensure!(reader.read_line(&mut line)? > 0, "server closed the connection");
+        let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+        if j.get("ok") != Some(&Json::Bool(true)) {
+            anyhow::bail!("server error: {}", j.to_string_compact());
+        }
+        if repaint {
+            print!("\x1b[2J\x1b[H");
+        }
+        render_top(addr, &j);
+        polls += 1;
+        if count > 0 && polls >= count {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval as u64));
+    }
+}
+
+fn render_top(addr: &str, j: &evosample::util::json::Json) {
+    use evosample::util::json::Json;
+    let f = |j: Option<&Json>| j.and_then(Json::as_f64).unwrap_or(0.0);
+    let global = j.get("global");
+    let queue = global.and_then(|g| g.get("queue"));
+    let kernel = global.and_then(|g| g.get("kernel"));
+    let shutting = queue.and_then(|q| q.get("shutting_down")) == Some(&Json::Bool(true));
+    println!(
+        "evosample top — {addr}  pending {}  running {}  kernel {}/{} lanes{}",
+        f(queue.and_then(|q| q.get("pending"))),
+        f(queue.and_then(|q| q.get("running"))),
+        f(kernel.and_then(|k| k.get("in_use"))),
+        f(kernel.and_then(|k| k.get("budget"))),
+        if shutting { "  [shutting down]" } else { "" },
+    );
+    let jobs = j.get("jobs").and_then(Json::as_arr);
+    let Some(jobs) = jobs else { return };
+    if jobs.is_empty() {
+        println!("(no jobs)");
+        return;
+    }
+    println!(
+        "{:<24} {:<10} {:>9} {:>7} {:>10} {:>11} {:>8}",
+        "job", "state", "epochs", "keep%", "fp_passes", "bp_samples", "wall_s"
+    );
+    for job in jobs {
+        let sg = |k: &str| job.get(k).and_then(Json::as_str).unwrap_or("?");
+        let keep = job
+            .get("keep_rate_pct")
+            .and_then(Json::as_f64)
+            .map(|k| format!("{k:.1}"))
+            .unwrap_or_else(|| "-".to_string());
+        println!(
+            "{:<24} {:<10} {:>4}/{:<4} {:>7} {:>10} {:>11} {:>8.1}",
+            sg("job"),
+            sg("state"),
+            f(job.get("epochs_done")),
+            f(job.get("epochs_total")),
+            keep,
+            f(job.get("fp_passes")),
+            f(job.get("bp_samples")),
+            f(job.get("wall_s")),
+        );
     }
 }

@@ -52,6 +52,17 @@ pub fn result_to_json(r: &TrainResult) -> Json {
     ])
 }
 
+/// One-shot snapshot of the process telemetry registry (DESIGN.md §11):
+/// the `obs::` counters/gauges/histogram summaries plus the current
+/// telemetry level, rendered the way every exporter (CLI `--telemetry`
+/// runs, the serve `metrics` verb) presents it.
+pub fn obs_snapshot_json() -> Json {
+    obj(vec![
+        ("telemetry", s(crate::obs::level_str())),
+        ("metrics", crate::obs::registry().snapshot_json()),
+    ])
+}
+
 /// Append-only JSONL recorder.
 ///
 /// The append handle is opened lazily on the first record and held for

@@ -1,0 +1,384 @@
+//! The metrics registry: named `Counter`/`Gauge`/`Histogram` handles
+//! with an atomic hot path.
+//!
+//! Handles are `&'static` (the registry leaks one small allocation per
+//! distinct name — the metric namespace is a bounded, code-authored
+//! set), so call sites may cache them and record lock-free. The name →
+//! handle map itself is behind a mutex, but only lookups touch it;
+//! `add`/`set`/`record` are plain relaxed atomics.
+//!
+//! Level gating happens AT THE CALL SITE (`obs::counters_on()` first,
+//! then look up + record), not inside the metric ops — so tests and
+//! exporters can drive metrics directly, and an `off`-level site pays
+//! exactly one relaxed load.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::{num, obj, Json};
+
+/// Monotonic event count.
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (queue depth, keep rate, …).
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge { v: AtomicI64::new(0) }
+    }
+
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.v.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of histogram buckets. Bucket `i` covers values in
+/// `[2^(i-31), 2^(i-30))` — log2-scaled, fixed, spanning ~5e-10 to
+/// ~4e9, which holds both sub-microsecond stage durations (seconds) and
+/// raw loss values without configuration.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Exponent bias: bucket 0's lower bound is `2^-BUCKET_BIAS`.
+const BUCKET_BIAS: i32 = 31;
+
+/// Log-scaled histogram: fixed buckets, relaxed-atomic recording, and
+/// approximate quantiles from the bucket counts (each bucket reports
+/// its geometric midpoint, so quantiles carry at most a √2 factor of
+/// bucket-resolution error — plenty for health dashboards).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Running sum in fixed-point micro-units (f64 can't be atomically
+    /// added; 1e-6 resolution over u64 is ample for seconds and losses).
+    sum_micro: AtomicU64,
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_micro: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(v: f64) -> usize {
+        if !(v > 0.0) {
+            return 0;
+        }
+        let e = v.log2().floor() as i32 + BUCKET_BIAS;
+        e.clamp(0, HIST_BUCKETS as i32 - 1) as usize
+    }
+
+    /// Geometric midpoint of bucket `i` — the value quantiles report.
+    fn bucket_mid(i: usize) -> f64 {
+        2f64.powi(i as i32 - BUCKET_BIAS) * std::f64::consts::SQRT_2
+    }
+
+    pub fn record(&self, v: f64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micro.fetch_add((v.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile `q ∈ [0, 1]` from the bucket counts.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return Self::bucket_mid(i);
+            }
+        }
+        Self::bucket_mid(HIST_BUCKETS - 1)
+    }
+
+    pub fn summary(&self) -> HistogramSummary {
+        let count = self.count();
+        let sum = self.sum_micro.load(Ordering::Relaxed) as f64 * 1e-6;
+        HistogramSummary {
+            count,
+            mean: if count > 0 { sum / count as f64 } else { 0.0 },
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+        }
+    }
+}
+
+/// The snapshot a histogram renders into exports.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HistogramSummary {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+}
+
+/// The process-wide metric table: names to leaked `&'static` handles.
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, &'static Counter>>,
+    gauges: Mutex<BTreeMap<String, &'static Gauge>>,
+    histograms: Mutex<BTreeMap<String, &'static Histogram>>,
+}
+
+impl Registry {
+    fn new() -> Registry {
+        Registry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+        m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Counter by name (created on first use; same name → same handle).
+    pub fn counter(&self, name: &str) -> &'static Counter {
+        let mut map = Self::lock(&self.counters);
+        if let Some(c) = map.get(name) {
+            return c;
+        }
+        let c: &'static Counter = Box::leak(Box::new(Counter::new()));
+        map.insert(name.to_string(), c);
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> &'static Gauge {
+        let mut map = Self::lock(&self.gauges);
+        if let Some(g) = map.get(name) {
+            return g;
+        }
+        let g: &'static Gauge = Box::leak(Box::new(Gauge::new()));
+        map.insert(name.to_string(), g);
+        g
+    }
+
+    pub fn histogram(&self, name: &str) -> &'static Histogram {
+        let mut map = Self::lock(&self.histograms);
+        if let Some(h) = map.get(name) {
+            return h;
+        }
+        let h: &'static Histogram = Box::leak(Box::new(Histogram::new()));
+        map.insert(name.to_string(), h);
+        h
+    }
+
+    /// A name-prefixed view — the per-`Session`/per-job form, so scoped
+    /// metrics (`job.<id>.…`) coexist in one process snapshot.
+    pub fn scope(&self, prefix: &str) -> Scope {
+        Scope { prefix: prefix.to_string() }
+    }
+
+    /// One-shot snapshot of every registered metric:
+    /// `{counters:{..}, gauges:{..}, histograms:{name:{count,mean,p50,p90}}}`.
+    pub fn snapshot_json(&self) -> Json {
+        let counters: Vec<(String, Json)> = Self::lock(&self.counters)
+            .iter()
+            .map(|(k, c)| (k.clone(), num(c.get() as f64)))
+            .collect();
+        let gauges: Vec<(String, Json)> = Self::lock(&self.gauges)
+            .iter()
+            .map(|(k, g)| (k.clone(), num(g.get() as f64)))
+            .collect();
+        let hists: Vec<(String, Json)> = Self::lock(&self.histograms)
+            .iter()
+            .map(|(k, h)| {
+                let s = h.summary();
+                (
+                    k.clone(),
+                    obj(vec![
+                        ("count", num(s.count as f64)),
+                        ("mean", num(s.mean)),
+                        ("p50", num(s.p50)),
+                        ("p90", num(s.p90)),
+                    ]),
+                )
+            })
+            .collect();
+        let owned = |v: Vec<(String, Json)>| {
+            Json::Obj(v.into_iter().collect::<BTreeMap<String, Json>>())
+        };
+        obj(vec![
+            ("counters", owned(counters)),
+            ("gauges", owned(gauges)),
+            ("histograms", owned(hists)),
+        ])
+    }
+
+    /// Zero every registered metric (bench/test isolation between
+    /// telemetry modes; handles stay valid — cached call sites keep
+    /// working).
+    pub fn reset(&self) {
+        for c in Self::lock(&self.counters).values() {
+            c.v.store(0, Ordering::Relaxed);
+        }
+        for g in Self::lock(&self.gauges).values() {
+            g.v.store(0, Ordering::Relaxed);
+        }
+        for h in Self::lock(&self.histograms).values() {
+            for b in &h.buckets {
+                b.store(0, Ordering::Relaxed);
+            }
+            h.count.store(0, Ordering::Relaxed);
+            h.sum_micro.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::new)
+}
+
+/// A prefixed view onto the process registry ([`Registry::scope`]).
+pub struct Scope {
+    prefix: String,
+}
+
+impl Scope {
+    pub fn counter(&self, name: &str) -> &'static Counter {
+        registry().counter(&format!("{}.{name}", self.prefix))
+    }
+
+    pub fn gauge(&self, name: &str) -> &'static Gauge {
+        registry().gauge(&format!("{}.{name}", self.prefix))
+    }
+
+    pub fn histogram(&self, name: &str) -> &'static Histogram {
+        registry().histogram(&format!("{}.{name}", self.prefix))
+    }
+
+    pub fn prefix(&self) -> &str {
+        &self.prefix
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry is process-global and `reset` zeroes everything, so
+    /// tests that assert absolute values serialize against it.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static L: Mutex<()> = Mutex::new(());
+        L.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn counter_and_gauge_accumulate() {
+        let _g = test_lock();
+        let c = registry().counter("test.metrics.counter");
+        let before = c.get();
+        c.add(3);
+        c.add(2);
+        assert_eq!(c.get(), before + 5);
+        // Same name resolves to the same handle.
+        assert_eq!(registry().counter("test.metrics.counter").get(), before + 5);
+
+        let g = registry().gauge("test.metrics.gauge");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(g.get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_log_bucket_accurate() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record(0.001); // 1 ms
+        }
+        for _ in 0..10 {
+            h.record(1.0); // 1 s tail
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 100);
+        assert!((s.mean - (90.0 * 0.001 + 10.0) / 100.0).abs() < 1e-6, "mean={}", s.mean);
+        // p50 lands in the 1ms bucket, p90 still below the 1s tail, and
+        // quantiles are within the bucket's √2 resolution.
+        assert!(s.p50 > 0.0005 && s.p50 < 0.002, "p50={}", s.p50);
+        assert!(s.p90 < 0.01, "p90={}", s.p90);
+        assert!(h.quantile(0.99) > 0.5, "p99={}", h.quantile(0.99));
+    }
+
+    #[test]
+    fn histogram_handles_degenerate_values() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram quantile is 0");
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 3);
+        assert!(h.summary().mean.is_finite());
+    }
+
+    #[test]
+    fn scope_prefixes_names() {
+        let _g = test_lock();
+        let sc = registry().scope("test.scope.a");
+        sc.counter("hits").add(1);
+        assert_eq!(sc.prefix(), "test.scope.a");
+        assert_eq!(registry().counter("test.scope.a.hits").get(), 1);
+    }
+
+    #[test]
+    fn snapshot_includes_all_kinds_and_reset_zeroes() {
+        let _g = test_lock();
+        registry().counter("test.snap.c").add(4);
+        registry().gauge("test.snap.g").set(-2);
+        registry().histogram("test.snap.h").record(0.5);
+        let snap = registry().snapshot_json();
+        assert_eq!(
+            snap.get("counters").and_then(|c| c.get("test.snap.c")).and_then(Json::as_f64),
+            Some(4.0)
+        );
+        assert_eq!(
+            snap.get("gauges").and_then(|g| g.get("test.snap.g")).and_then(Json::as_f64),
+            Some(-2.0)
+        );
+        let h = snap.get("histograms").and_then(|h| h.get("test.snap.h")).unwrap();
+        assert_eq!(h.get("count").and_then(Json::as_f64), Some(1.0));
+        registry().reset();
+        assert_eq!(registry().counter("test.snap.c").get(), 0);
+        assert_eq!(registry().histogram("test.snap.h").count(), 0);
+    }
+}

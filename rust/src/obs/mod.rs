@@ -1,0 +1,109 @@
+//! Unified telemetry layer (DESIGN.md §11): a std-only metrics registry
+//! and span tracer the whole stack reports through — engine stages,
+//! kernel dispatch, data prefetch, and the serve queue — plus exporters
+//! (Chrome-trace JSON, one-shot snapshots via `metrics::obs_snapshot_json`)
+//! and live scraping over the serve protocol's `metrics` verb.
+//!
+//! Contract (the one hard rule): **telemetry never perturbs the run**.
+//! Instrumentation reads clocks and bumps atomics; it never touches RNG
+//! state, arithmetic, or event emission, so determinism pins hold
+//! bit-for-bit at every level including `trace`. And `off` is near-free:
+//! every instrumented site performs exactly one relaxed atomic load
+//! before bailing (guarded by `perf_obs` in CI at ≤3% for `counters`).
+//!
+//! Three levels, config knob `run.telemetry = off|counters|trace`:
+//!
+//! * [`OFF`] — the default; sites check [`counters_on`]/[`trace_on`]
+//!   (one relaxed load) and skip all work.
+//! * [`COUNTERS`] — counters/gauges/histograms in the process-wide
+//!   [`registry()`] accumulate; no spans.
+//! * [`TRACE`] — counters plus per-stage spans in a bounded ring buffer,
+//!   exportable as Chrome-trace/Perfetto JSON ([`chrome_trace_json`],
+//!   CLI `--trace-out`). Spans carry a per-thread track id, so the
+//!   threaded engine's workers land on distinct Perfetto tracks.
+//!
+//! The level is process-global (the registry is shared across
+//! concurrent `Session`s — the serve scheduler's jobs aggregate into one
+//! snapshot). Sessions *raise* the level from their config at run start
+//! and never lower it, so one `telemetry = "off"` job cannot silently
+//! blind a server that scrapes metrics; use [`set_level`] for explicit
+//! control (benches, tests, the serve bootstrap).
+
+mod metrics;
+mod trace;
+
+pub use metrics::{registry, Counter, Gauge, Histogram, HistogramSummary, Registry, Scope};
+pub use trace::{
+    chrome_trace_json, clear_spans, record_elapsed, span, span_count, take_spans, SpanGuard,
+    SpanRec,
+};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Telemetry disabled: instrumented sites do one relaxed load and bail.
+pub const OFF: u8 = 0;
+/// Counters/gauges/histograms accumulate in the process registry.
+pub const COUNTERS: u8 = 1;
+/// Counters plus ring-buffered spans for Chrome-trace export.
+pub const TRACE: u8 = 2;
+
+static LEVEL: AtomicU8 = AtomicU8::new(OFF);
+
+/// Set the process-wide telemetry level (clamped to [`TRACE`]).
+pub fn set_level(level: u8) {
+    LEVEL.store(level.min(TRACE), Ordering::Relaxed);
+}
+
+/// Raise the level if `level` is higher than the current one; never
+/// lowers (see module docs for why sessions use this form).
+pub fn raise_level(level: u8) {
+    LEVEL.fetch_max(level.min(TRACE), Ordering::Relaxed);
+}
+
+/// Current process-wide telemetry level.
+#[inline]
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+/// True when counters (level ≥ [`COUNTERS`]) should be recorded. The
+/// single gate every metric site checks first — one relaxed load.
+#[inline]
+pub fn counters_on() -> bool {
+    level() >= COUNTERS
+}
+
+/// True when spans (level [`TRACE`]) should be recorded.
+#[inline]
+pub fn trace_on() -> bool {
+    level() >= TRACE
+}
+
+/// Human-readable level name (snapshot/metrics responses).
+pub fn level_str() -> &'static str {
+    match level() {
+        OFF => "off",
+        COUNTERS => "counters",
+        _ => "trace",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raise_never_lowers_and_set_clamps() {
+        let prev = level();
+        set_level(OFF);
+        assert!(!counters_on() && !trace_on());
+        raise_level(COUNTERS);
+        assert!(counters_on() && !trace_on());
+        raise_level(OFF); // no-op: raise never lowers
+        assert_eq!(level(), COUNTERS);
+        set_level(99); // clamped
+        assert_eq!(level(), TRACE);
+        assert_eq!(level_str(), "trace");
+        set_level(prev);
+    }
+}

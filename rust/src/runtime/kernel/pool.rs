@@ -125,6 +125,14 @@ impl KernelPool {
     pub fn with_budget(threads: usize, budget: Arc<KernelBudget>) -> KernelPool {
         let want = threads.max(1) - 1;
         let granted = budget.acquire_up_to(want);
+        // Occupancy telemetry: requested vs granted is the live signal of
+        // lane degradation under KernelBudget pressure (DESIGN.md §11).
+        if crate::obs::counters_on() {
+            let reg = crate::obs::registry();
+            reg.counter("kernel.lanes_requested").add(want as u64);
+            reg.counter("kernel.lanes_granted").add(granted as u64);
+            reg.gauge("kernel.lanes_in_use").add(granted as i64);
+        }
         Self::build(1 + granted, Some((budget, granted)))
     }
 
@@ -156,6 +164,9 @@ impl KernelPool {
     /// Run `f(lane)` for every lane in `0..threads()`; returns after all
     /// lanes complete. Lanes must write only to disjoint data.
     pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if crate::obs::counters_on() {
+            crate::obs::registry().counter("kernel.dispatches").add(1);
+        }
         if self.threads == 1 {
             f(0);
             return;
@@ -252,6 +263,9 @@ impl Drop for KernelPool {
         // never under-counts live threads.
         if let Some((budget, tokens)) = self.budget.take() {
             budget.release(tokens);
+            if crate::obs::counters_on() {
+                crate::obs::registry().gauge("kernel.lanes_in_use").add(-(tokens as i64));
+            }
         }
     }
 }

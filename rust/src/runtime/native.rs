@@ -290,6 +290,9 @@ impl NativeRuntime {
             let shadow = self.shadow_bf16.get_or_insert_with(|| PackedBf16::zeros(l));
             shadow.refresh_from(&self.params);
             self.shadow_dirty = false;
+            if crate::obs::counters_on() {
+                crate::obs::registry().counter("runtime.bf16_shadow_refresh").add(1);
+            }
         }
         self.ensure_pool();
         let pool = self.pool.as_ref().expect("kernel pool");

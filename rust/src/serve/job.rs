@@ -89,6 +89,8 @@ struct JobMeta {
     epochs_done: usize,
     fp_passes: u64,
     bp_samples: u64,
+    /// Keep rate (%) of the job's most recent epoch (selection health).
+    keep_rate_pct: Option<f64>,
     accuracy: Option<f64>,
     error: Option<String>,
     events: VecDeque<Json>,
@@ -130,6 +132,7 @@ impl JobShared {
                 epochs_done: 0,
                 fp_passes: 0,
                 bp_samples: 0,
+                keep_rate_pct: None,
                 accuracy: None,
                 error: None,
                 events: VecDeque::new(),
@@ -145,6 +148,30 @@ impl JobShared {
             let mut m = self.lock();
             m.prior_wall_s = wall_s;
             m.epochs_done = epochs_done;
+        }
+        self
+    }
+
+    /// Restore the full durable accounting of a rescanned record —
+    /// timing, counters, and outcome — so a terminal job reports its
+    /// original wall/queue numbers after a server restart instead of
+    /// zeros. (Contract: [`JobShared::record_json`] persists every field
+    /// this reads.)
+    pub fn with_record(self, rec: &JobRecord) -> JobShared {
+        {
+            let mut m = self.lock();
+            m.prior_wall_s = rec.wall_s;
+            m.epochs_done = rec.epochs_done;
+            m.queue_s = rec.queue_s;
+            m.fp_passes = rec.fp_passes;
+            m.bp_samples = rec.bp_samples;
+            m.accuracy = rec.accuracy;
+            m.error = rec.error.clone();
+            if rec.state.is_terminal() {
+                // `started` stays None on a restored terminal job, so pin
+                // the final wall clock to the recorded value explicitly.
+                m.final_wall_s = Some(rec.wall_s);
+            }
         }
         self
     }
@@ -236,7 +263,16 @@ impl JobShared {
             m.started = Some(Instant::now());
             queue_s = m.queue_s;
         }
+        if crate::obs::counters_on() {
+            crate::obs::registry().histogram("serve.queue_wait_s").record(queue_s);
+        }
         self.push_event(obj(vec![("event", s("admitted")), ("queue_s", num(queue_s))]));
+    }
+
+    /// Selection-health note from the job's event stream: keep rate of
+    /// the epoch now starting (surfaced in `status` and `metrics`).
+    pub fn note_selection(&self, kept: usize, dataset_n: usize) {
+        self.lock().keep_rate_pct = Some(kept as f64 / dataset_n.max(1) as f64 * 100.0);
     }
 
     /// Restore a terminal state from a rescanned record without the
@@ -304,6 +340,9 @@ impl JobShared {
             ("bp_samples", num(m.bp_samples as f64)),
             ("events_dropped", num(m.events_dropped as f64)),
         ];
+        if let Some(kr) = m.keep_rate_pct {
+            fields.push(("keep_rate_pct", num(kr)));
+        }
         if let Some(acc) = m.accuracy {
             fields.push(("accuracy", num(acc)));
         }
@@ -318,7 +357,7 @@ impl JobShared {
     /// can rebuild the run config without the original client.
     pub fn record_json(&self, config_toml: &str) -> Json {
         let m = self.lock();
-        obj(vec![
+        let mut fields = vec![
             ("job", s(self.id.clone())),
             ("name", s(m.name.clone())),
             ("sampler", s(m.sampler.clone())),
@@ -326,10 +365,18 @@ impl JobShared {
             ("config_toml", s(config_toml)),
             ("epochs_done", num(m.epochs_done as f64)),
             ("epochs_total", num(m.epochs_total as f64)),
+            ("queue_s", num(m.queue_s)),
             ("wall_s", num(Self::wall_s(&m))),
             ("fp_passes", num(m.fp_passes as f64)),
             ("bp_samples", num(m.bp_samples as f64)),
-        ])
+        ];
+        if let Some(acc) = m.accuracy {
+            fields.push(("accuracy", num(acc)));
+        }
+        if let Some(err) = &m.error {
+            fields.push(("error", s(err.clone())));
+        }
+        obj(fields)
     }
 }
 
@@ -349,7 +396,12 @@ pub struct JobRecord {
     pub state: JobState,
     pub config_toml: String,
     pub epochs_done: usize,
+    pub queue_s: f64,
     pub wall_s: f64,
+    pub fp_passes: u64,
+    pub bp_samples: u64,
+    pub accuracy: Option<f64>,
+    pub error: Option<String>,
 }
 
 /// Scan `dir` for `*.job.json` records (unreadable/corrupt files are
@@ -380,7 +432,12 @@ pub fn scan_records(dir: &Path) -> Vec<JobRecord> {
             state,
             config_toml: get("config_toml").unwrap_or_default(),
             epochs_done: j.get("epochs_done").and_then(Json::as_usize).unwrap_or(0),
+            queue_s: j.get("queue_s").and_then(Json::as_f64).unwrap_or(0.0),
             wall_s: j.get("wall_s").and_then(Json::as_f64).unwrap_or(0.0),
+            fp_passes: j.get("fp_passes").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            bp_samples: j.get("bp_samples").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            accuracy: j.get("accuracy").and_then(Json::as_f64),
+            error: get("error"),
         });
     }
     out
@@ -472,6 +529,70 @@ mod tests {
         assert_eq!(recs[0].epochs_done, 1);
         assert!(recs[0].wall_s >= 1.5);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn terminal_record_restores_timing_and_outcome() {
+        let dir = std::env::temp_dir()
+            .join(format!("evosample_jobrec_term_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let toml = "[run]\nmodel = \"mlp\"\n";
+        let j = JobShared::new("j9", "runC", "es", 4);
+        j.mark_running();
+        j.progress(4, 64, 2048);
+        j.finish(JobState::Done, Some(0.81), None, None);
+        write_record(&dir, &j, toml).unwrap();
+        let wall_before = j.status_json().get("wall_s").and_then(Json::as_f64).unwrap();
+        let queue_before = j.status_json().get("queue_s").and_then(Json::as_f64).unwrap();
+
+        // A fresh server life rescans the record: the restored job must
+        // report the original wall/queue accounting, not zeros.
+        let recs = scan_records(&dir);
+        assert_eq!(recs.len(), 1);
+        let rec = &recs[0];
+        assert_eq!(rec.state, JobState::Done);
+        let restored = JobShared::new(&rec.id, &rec.name, &rec.sampler, 4).with_record(rec);
+        restored.restore_terminal(rec.state);
+        let st = restored.status_json();
+        assert_eq!(st.get("state").and_then(Json::as_str), Some("done"));
+        assert_eq!(st.get("wall_s").and_then(Json::as_f64), Some(wall_before));
+        assert_eq!(st.get("queue_s").and_then(Json::as_f64), Some(queue_before));
+        assert_eq!(st.get("fp_passes").and_then(Json::as_f64), Some(64.0));
+        assert_eq!(st.get("bp_samples").and_then(Json::as_f64), Some(2048.0));
+        assert_eq!(st.get("accuracy").and_then(Json::as_f64), Some(0.81));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_record_restores_error() {
+        let j = JobShared::new("j10", "runD", "es", 2);
+        j.mark_running();
+        j.finish(JobState::Failed, None, Some("boom".into()), None);
+        let rec_json = j.record_json("");
+        assert_eq!(rec_json.get("error").and_then(Json::as_str), Some("boom"));
+        let dir = std::env::temp_dir()
+            .join(format!("evosample_jobrec_fail_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_record(&dir, &j, "").unwrap();
+        let recs = scan_records(&dir);
+        assert_eq!(recs[0].error.as_deref(), Some("boom"));
+        let restored =
+            JobShared::new(&recs[0].id, "", "", 2).with_record(&recs[0]);
+        restored.restore_terminal(recs[0].state);
+        let st = restored.status_json();
+        assert_eq!(st.get("error").and_then(Json::as_str), Some("boom"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn keep_rate_surfaces_in_status() {
+        let j = JobShared::new("j11", "n", "es", 2);
+        assert!(j.status_json().get("keep_rate_pct").is_none());
+        j.note_selection(384, 512);
+        assert_eq!(
+            j.status_json().get("keep_rate_pct").and_then(Json::as_f64),
+            Some(75.0)
+        );
     }
 
     #[test]

@@ -27,6 +27,10 @@ pub enum Request {
     Events { job: String },
     /// Cooperatively cancel a queued or running job.
     Cancel { job: String },
+    /// Scrape the server's telemetry: the process metrics snapshot plus
+    /// queue/kernel occupancy, and per-job selection health (one job
+    /// when `job` is given, every known job otherwise).
+    Metrics { job: Option<String> },
     /// Stop the server: `drain` finishes queued+running jobs first,
     /// `abort` interrupts running jobs at the next epoch boundary
     /// (checkpoints retained, so a restart resumes them) and leaves
@@ -54,6 +58,7 @@ impl Request {
             "cancel" => {
                 Ok(Request::Cancel { job: get_str("job").ok_or("cancel needs \"job\"")? })
             }
+            "metrics" => Ok(Request::Metrics { job: get_str("job") }),
             "shutdown" => match get_str("mode").as_deref().unwrap_or("drain") {
                 "drain" => Ok(Request::Shutdown { abort: false }),
                 "abort" => Ok(Request::Shutdown { abort: true }),
@@ -126,6 +131,14 @@ mod tests {
         assert_eq!(
             Request::parse(r#"{"cmd":"cancel","job":"j1"}"#).unwrap(),
             Request::Cancel { job: "j1".into() }
+        );
+        assert_eq!(
+            Request::parse(r#"{"cmd":"metrics"}"#).unwrap(),
+            Request::Metrics { job: None }
+        );
+        assert_eq!(
+            Request::parse(r#"{"cmd":"metrics","job":"j1"}"#).unwrap(),
+            Request::Metrics { job: Some("j1".into()) }
         );
         assert_eq!(
             Request::parse(r#"{"cmd":"shutdown"}"#).unwrap(),

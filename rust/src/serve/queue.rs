@@ -54,21 +54,44 @@ impl JobQueue {
         }
     }
 
+    /// Shed a submit: count it (total + per reason) and return the reason.
+    fn shed(reason: &'static str) -> Result<usize, &'static str> {
+        if crate::obs::counters_on() {
+            let reg = crate::obs::registry();
+            reg.counter("serve.shed").add(1);
+            reg.counter(&format!("serve.shed.{reason}")).add(1);
+        }
+        Err(reason)
+    }
+
+    /// Queue-health gauges, refreshed at every depth transition.
+    fn note_depth(&self) {
+        if crate::obs::counters_on() {
+            let reg = crate::obs::registry();
+            reg.gauge("serve.queue_depth").set(self.pending.len() as i64);
+            reg.gauge("serve.running").set(self.running as i64);
+        }
+    }
+
     /// Admit a job into the pending queue. Returns its queue position
     /// (0 = next up) or the shed reason.
     pub fn submit(&mut self, id: &str, entry: JobEntry) -> Result<usize, &'static str> {
         if self.draining || self.aborting {
-            return Err("shutting_down");
+            return Self::shed("shutting_down");
         }
         if self.jobs.contains_key(id) {
-            return Err("duplicate_id");
+            return Self::shed("duplicate_id");
         }
         if self.pending.len() >= self.max_queue {
-            return Err("queue_full");
+            return Self::shed("queue_full");
         }
         let position = self.pending.len();
         self.pending.push_back(id.to_string());
         self.jobs.insert(id.to_string(), entry);
+        if crate::obs::counters_on() {
+            crate::obs::registry().counter("serve.submitted").add(1);
+        }
+        self.note_depth();
         Ok(position)
     }
 
@@ -77,6 +100,7 @@ impl JobQueue {
     pub fn requeue(&mut self, id: &str, entry: JobEntry) {
         self.pending.push_back(id.to_string());
         self.jobs.insert(id.to_string(), entry);
+        self.note_depth();
     }
 
     /// Record a terminal job from a rescan for `status` visibility only.
@@ -99,6 +123,7 @@ impl JobQueue {
                 continue;
             }
             self.running += 1;
+            self.note_depth();
             return Some(ClaimedJob {
                 id,
                 cfg: entry.cfg.clone(),
@@ -114,6 +139,7 @@ impl JobQueue {
     pub fn release(&mut self) {
         debug_assert!(self.running > 0);
         self.running = self.running.saturating_sub(1);
+        self.note_depth();
     }
 
     pub fn get(&self, id: &str) -> Option<&JobEntry> {

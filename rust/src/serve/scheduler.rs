@@ -158,7 +158,14 @@ fn run_session(
     let sink_shared = Arc::clone(&claim.shared);
     let mut session = SessionBuilder::from_config(cfg.clone())
         .runtime(rt)
-        .on_event(move |ev: &Event| sink_shared.push_event(event_to_json(ev)))
+        .on_event(move |ev: &Event| {
+            // Selection health per job: the epoch-start keep rate feeds
+            // the `status`/`metrics` responses (DESIGN.md §11).
+            if let Event::EpochStart { kept, dataset_n, .. } = ev {
+                sink_shared.note_selection(*kept, *dataset_n);
+            }
+            sink_shared.push_event(event_to_json(ev));
+        })
         .build()?;
     let hook = make_hook(claim, serve, state_dir, cfg.model.clone(), cfg.seed);
     let result = session.run_resumable(resume, Some(hook))?;

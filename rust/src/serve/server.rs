@@ -53,6 +53,10 @@ impl Server {
     /// and the accept loop.
     pub fn start(cfg: ServeConfig) -> anyhow::Result<ServerHandle> {
         cfg.validate().map_err(|e| anyhow::anyhow!("serve config: {e}"))?;
+        // The service always keeps counters live so the `metrics` verb
+        // has something to scrape; jobs may raise further (to trace) but
+        // never lower the process level.
+        crate::obs::raise_level(crate::obs::COUNTERS);
         let state_dir = PathBuf::from(&cfg.state_dir);
         std::fs::create_dir_all(&state_dir)?;
         let state: SharedQueue =
@@ -125,7 +129,7 @@ fn rescan(state_dir: &Path, state: &SharedQueue) -> usize {
         };
         let shared = Arc::new(
             JobShared::new(&rec.id, &cfg.name, cfg.sampler.name(), cfg.epochs)
-                .with_prior(rec.wall_s, rec.epochs_done),
+                .with_record(&rec),
         );
         if rec.state.is_terminal() {
             shared.restore_terminal(rec.state);
@@ -201,6 +205,9 @@ fn handle_connection(stream: TcpStream, inner: Arc<Inner>) -> std::io::Result<()
             Request::Events { job } => handle_events(&inner, &mut out, &job)?,
             Request::Cancel { job } => {
                 write_line(&mut out, &handle_cancel(&inner, &job))?;
+            }
+            Request::Metrics { job } => {
+                write_line(&mut out, &handle_metrics(&inner, job.as_deref()))?;
             }
             Request::Shutdown { abort } => {
                 let mode = if abort { "abort" } else { "drain" };
@@ -298,6 +305,43 @@ fn handle_status(inner: &Inner, job: Option<&str>) -> Json {
             ])
         }
     }
+}
+
+/// Telemetry scrape (DESIGN.md §11): the process-wide `obs::` registry
+/// snapshot plus queue/kernel occupancy, and per-job selection health
+/// (`status_json` carries keep rate, fp passes, epoch progress). With a
+/// `job` filter only that job's entry is returned; the process/global
+/// section is always present so scrapers get a complete picture from
+/// one request.
+fn handle_metrics(inner: &Inner, job: Option<&str>) -> Json {
+    let (lock, _) = &*inner.state;
+    let q = lock.lock().unwrap_or_else(|e| e.into_inner());
+    let jobs: Vec<Json> = match job {
+        Some(id) => match q.get(id) {
+            Some(entry) => vec![entry.shared.status_json()],
+            None => return err_response("unknown job"),
+        },
+        None => q.jobs().map(|(_, e)| e.shared.status_json()).collect(),
+    };
+    let global = obj(vec![
+        (
+            "queue",
+            obj(vec![
+                ("pending", num(q.pending_len() as f64)),
+                ("running", num(q.running_len() as f64)),
+                ("shutting_down", Json::Bool(q.shutting_down())),
+            ]),
+        ),
+        (
+            "kernel",
+            obj(vec![
+                ("budget", num(inner.budget.total() as f64)),
+                ("in_use", num(inner.budget.in_use() as f64)),
+            ]),
+        ),
+        ("obs", crate::metrics::obs_snapshot_json()),
+    ]);
+    ok_response(vec![("global", global), ("jobs", Json::Arr(jobs))])
 }
 
 /// Stream the job's backlog + live events; the stream ends when the job

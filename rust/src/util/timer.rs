@@ -60,6 +60,11 @@ impl PhaseTimers {
     }
 
     /// Merge another ledger into this one (distributed-sim reduction).
+    ///
+    /// Contract: `merge(o)` ≡ `merge_scaled(o, 1.0)` — durations and
+    /// counts both sum exactly. There is a single merge implementation;
+    /// any divergence between the two paths (e.g. one scaling counts)
+    /// would skew per-phase mean durations in the threaded reduction.
     pub fn merge(&mut self, other: &PhaseTimers) {
         self.merge_scaled(other, 1.0);
     }
@@ -139,6 +144,34 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.get("x"), Duration::from_millis(3));
         assert_eq!(a.get("y"), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn merge_is_merge_scaled_at_one() {
+        // The documented contract: the two merge paths must agree on
+        // durations AND counts — `merge` is `merge_scaled(_, 1.0)`, and
+        // counts sum unscaled under ANY scale (the threaded engine's
+        // 1/W reduction divides wall-clock but must preserve how many
+        // phase entries fed each mean).
+        let mut src = PhaseTimers::new();
+        src.add("x", Duration::from_millis(12));
+        src.add("x", Duration::from_millis(8));
+        src.add("y", Duration::from_millis(3));
+        let mut via_merge = PhaseTimers::new();
+        via_merge.add("x", Duration::from_millis(5));
+        let mut via_scaled = via_merge.clone();
+        via_merge.merge(&src);
+        via_scaled.merge_scaled(&src, 1.0);
+        for label in ["x", "y"] {
+            assert_eq!(via_merge.get(label), via_scaled.get(label), "{label} durations");
+            assert_eq!(via_merge.count(label), via_scaled.count(label), "{label} counts");
+        }
+        // Counts are scale-invariant even when durations are not.
+        let mut quarter = PhaseTimers::new();
+        quarter.merge_scaled(&src, 0.25);
+        assert_eq!(quarter.count("x"), 2);
+        assert_eq!(quarter.count("y"), 1);
+        assert_eq!(quarter.get("x"), Duration::from_millis(5));
     }
 
     #[test]

@@ -652,6 +652,34 @@ fn fp_samples_scale_as_ceil_steps_over_k_times_meta_batch() {
     });
 }
 
+// ---- telemetry (run.telemetry, DESIGN.md §11) ---------------------------
+
+/// Telemetry is observational only: raising the process level to trace
+/// must leave every engine mode bit-for-bit on its untraced result —
+/// same curves, same sample accounting, same class histograms. (The
+/// raise is process-global and sticky, so tests running after this one
+/// simply execute traced; the grammar suite separately pins that the
+/// event sequence is level-invariant.)
+#[test]
+fn trace_telemetry_is_bit_for_bit_in_all_modes() {
+    let run = |cfg: &RunConfig, split: &SplitDataset| {
+        let mut rt = NativeRuntime::new(split.train.x_len(), 32, 4);
+        train(cfg, &mut rt, split).unwrap()
+    };
+    let (cfg_single, split_single) = setup(SamplerConfig::es_default(), 512, 7);
+    let (mut cfg_threaded, split_threaded) = setup(SamplerConfig::eswp_default(), 512, 13);
+    cfg_threaded.workers = 4;
+    cfg_threaded.threaded_workers = true;
+    let base_single = run(&cfg_single, &split_single);
+    let base_threaded = run(&cfg_threaded, &split_threaded);
+    evosample::obs::raise_level(evosample::obs::TRACE);
+    let traced_single = run(&cfg_single, &split_single);
+    let traced_threaded = run(&cfg_threaded, &split_threaded);
+    assert_identical(&base_single, &traced_single);
+    assert_identical(&base_threaded, &traced_threaded);
+    assert!(evosample::obs::trace_on(), "level stays raised");
+}
+
 // ---- scoring precision (run.scoring_precision, DESIGN.md §9) ------------
 
 /// With `scoring_precision = "exact"` (the default, pinned explicitly

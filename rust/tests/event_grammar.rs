@@ -146,6 +146,38 @@ fn grammar_holds_threaded_workers() {
     check_grammar(&events).unwrap();
 }
 
+/// The DESIGN.md §11 contract: telemetry is purely observational, so
+/// the exact event sequence must be identical at every `run.telemetry`
+/// level. `ScoringFp` carries a measured wall-clock `elapsed`, so events
+/// are compared on a fingerprint that drops only that field — every
+/// numeric payload (losses, accuracies, counts) must match exactly.
+#[test]
+fn telemetry_levels_do_not_perturb_event_stream() {
+    use evosample::config::TelemetryLevel;
+    fn fingerprint(ev: &Event) -> String {
+        match ev {
+            Event::ScoringFp { epoch, step, samples, .. } => {
+                format!("scoring_fp e{epoch} s{step} n{samples}")
+            }
+            other => format!("{other:?}"),
+        }
+    }
+    let run_at = |level: TelemetryLevel| {
+        // Sequential data-parallel sim: the busiest emitter (scoring,
+        // selection, sync, eval all fire).
+        let mut cfg = base_cfg(SamplerConfig::es_default());
+        cfg.workers = 2;
+        cfg.telemetry = level;
+        run_and_collect(cfg).iter().map(fingerprint).collect::<Vec<_>>()
+    };
+    let off = run_at(TelemetryLevel::Off);
+    let counters = run_at(TelemetryLevel::Counters);
+    let trace = run_at(TelemetryLevel::Trace);
+    assert!(off.iter().any(|f| f.starts_with("scoring_fp")), "stream exercises scoring");
+    assert_eq!(off, counters, "counters level changed the event sequence");
+    assert_eq!(off, trace, "trace level changed the event sequence");
+}
+
 #[test]
 fn validator_rejects_malformed_streams() {
     // No RunStart.

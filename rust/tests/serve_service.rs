@@ -235,6 +235,103 @@ fn record_json(dir: &Path, id: &str) -> Json {
 }
 
 #[test]
+fn metrics_verb_reports_queue_kernel_and_selection_health() {
+    let dir = fresh_dir("metrics");
+    let handle = start_server(&dir, 2, 8, 0);
+    let addr = handle.addr();
+
+    let toml = job_toml("metrics_job", 31, 3, "es");
+    assert_eq!(submit(addr, &toml, "mj").get("ok"), Some(&Json::Bool(true)));
+    let events = stream_events(addr, "mj");
+    assert!(event_names(&events).contains(&"run_end".to_string()));
+
+    // One scrape carries the queue section, the shared kernel budget,
+    // and the live process obs registry (the serve bootstrap raises the
+    // telemetry level to counters, so the snapshot is never empty).
+    let resp = request(addr, &obj(vec![("cmd", jstr("metrics"))]));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    let global = resp.get("global").unwrap();
+    let queue = global.get("queue").unwrap();
+    assert_eq!(queue.get("pending").and_then(Json::as_f64), Some(0.0));
+    assert!(queue.get("running").and_then(Json::as_f64).is_some());
+    let kernel = global.get("kernel").unwrap();
+    assert_eq!(kernel.get("budget").and_then(Json::as_f64), Some(2.0));
+    assert!(kernel.get("in_use").and_then(Json::as_f64).unwrap() >= 0.0);
+    let obs = global.get("obs").unwrap();
+    let level = obs.get("telemetry").and_then(Json::as_str).unwrap();
+    assert_ne!(level, "off", "serve must raise the telemetry level");
+    let counters = obs.get("metrics").and_then(|m| m.get("counters")).unwrap();
+    assert!(
+        counters.get("serve.submitted").and_then(Json::as_f64).unwrap() >= 1.0,
+        "{counters:?}"
+    );
+    assert!(
+        counters.get("engine.steps").and_then(Json::as_f64).unwrap() > 0.0,
+        "{counters:?}"
+    );
+
+    // Per-job selection health: the scheduler feeds each epoch-start
+    // keep rate into the job record the metrics verb returns.
+    let jobs = resp.get("jobs").and_then(Json::as_arr).unwrap();
+    let job = jobs
+        .iter()
+        .find(|j| j.get("job").and_then(Json::as_str) == Some("mj"))
+        .unwrap_or_else(|| panic!("mj missing from {jobs:?}"));
+    assert_eq!(job.get("state").and_then(Json::as_str), Some("done"));
+    let keep = job.get("keep_rate_pct").and_then(Json::as_f64).unwrap();
+    assert!(keep > 0.0 && keep <= 100.0, "keep rate {keep}");
+    assert!(job.get("fp_passes").and_then(Json::as_f64).unwrap() > 0.0);
+
+    // The job filter narrows the response; unknown ids are an error,
+    // not an empty list.
+    let one = request(addr, &obj(vec![("cmd", jstr("metrics")), ("job", jstr("mj"))]));
+    assert_eq!(one.get("jobs").and_then(Json::as_arr).unwrap().len(), 1);
+    let bad = request(addr, &obj(vec![("cmd", jstr("metrics")), ("job", jstr("nope"))]));
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)), "{bad:?}");
+
+    handle.shutdown(false);
+    handle.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn terminal_job_accounting_survives_server_restart() {
+    let dir = fresh_dir("terminal_acct");
+    let life1 = start_server(&dir, 1, 4, 0);
+    let addr = life1.addr();
+    let toml = job_toml("acct_job", 33, 2, "baseline");
+    assert_eq!(submit(addr, &toml, "aj").get("ok"), Some(&Json::Bool(true)));
+    let events = stream_events(addr, "aj");
+    assert!(event_names(&events).contains(&"run_end".to_string()));
+    life1.shutdown(false);
+    life1.wait();
+
+    // The durable record carries the finished job's full accounting…
+    let rec = record_json(&dir, "aj");
+    assert_eq!(rec.get("state").and_then(Json::as_str), Some("done"));
+    let wall = rec.get("wall_s").and_then(Json::as_f64).unwrap();
+    assert!(wall > 0.0, "finished job must have nonzero wall: {rec:?}");
+
+    // …and a fresh server life reports exactly those numbers in
+    // `status`, not zeros (the rescan restores timing, counters, and
+    // outcome — f64 JSON round-trips are lossless).
+    let life2 = start_server(&dir, 1, 4, 0);
+    let status =
+        request(life2.addr(), &obj(vec![("cmd", jstr("status")), ("job", jstr("aj"))]));
+    let job = &status.get("jobs").and_then(Json::as_arr).unwrap()[0];
+    assert_eq!(job.get("state").and_then(Json::as_str), Some("done"));
+    assert_eq!(job.get("wall_s"), rec.get("wall_s"), "wall accounting lost in rescan");
+    assert_eq!(job.get("queue_s"), rec.get("queue_s"));
+    assert_eq!(job.get("fp_passes"), rec.get("fp_passes"));
+    assert_eq!(job.get("bp_samples"), rec.get("bp_samples"));
+    assert_eq!(job.get("epochs_done"), rec.get("epochs_done"));
+    assert_eq!(job.get("accuracy"), rec.get("accuracy"));
+    life2.shutdown(false);
+    life2.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn abort_then_restart_resumes_from_checkpoint_to_identical_result() {
     let dir = fresh_dir("resume");
     let toml = job_toml("resume_job", 21, 40, "es");
