@@ -1,0 +1,73 @@
+//! Disarmed-failpoint overhead bench (DESIGN.md §12): the zero-cost-
+//! when-off contract. Each `fault::hit_io` / `maybe_delay` at a hot site
+//! must reduce to one relaxed atomic load when no faults are armed —
+//! same budget as `obs::counters_on()`.
+//!
+//! Report-only (the chaos tests enforce behavior; this tracks cost):
+//! prints ns/op for a batch of disarmed hits against an empty-loop
+//! baseline, then the armed-but-non-matching case (rules present, site
+//! not targeted), which pays the registry lock and is expected to be
+//! slower — it only runs while chaos experiments are armed.
+
+use evosample::fault::{self, sites};
+use evosample::util::bench::Bencher;
+
+/// Hits per bench iteration: one `hit_io` is sub-ns, far below timer
+/// resolution, so measure batches and report the per-iteration figure.
+const BATCH: u32 = 10_000;
+
+fn main() {
+    println!("== disarmed failpoint overhead (batch = {BATCH} hits/iter) ==");
+    let b = Bencher::default();
+
+    let base = b.run("baseline: counter loop", || {
+        let mut acc = 0u32;
+        for i in 0..BATCH {
+            acc = acc.wrapping_add(std::hint::black_box(i));
+        }
+        acc
+    });
+
+    fault::disarm();
+    let off = b.run("disarmed hit_io(kernel.dispatch)", || {
+        let mut ok = 0u32;
+        for _ in 0..BATCH {
+            if fault::hit_io(sites::KERNEL_DISPATCH).is_ok() {
+                ok += 1;
+            }
+        }
+        ok
+    });
+    let off_delay = b.run("disarmed maybe_delay(engine.sync)", || {
+        for _ in 0..BATCH {
+            fault::maybe_delay(sites::ENGINE_SYNC);
+        }
+        BATCH
+    });
+
+    // Armed-but-elsewhere: a rule exists for a different site, so every
+    // hit takes the registry lock and scans rules. Not on the hot path
+    // in production — armed registries exist only during chaos runs.
+    fault::arm_spec("seed=1;checkpoint.save=err,times=1").expect("arm");
+    let armed = b.run("armed elsewhere hit_io(kernel.dispatch)", || {
+        let mut ok = 0u32;
+        for _ in 0..BATCH {
+            if fault::hit_io(sites::KERNEL_DISPATCH).is_ok() {
+                ok += 1;
+            }
+        }
+        ok
+    });
+    fault::disarm();
+
+    let per_hit_ns =
+        |r: &evosample::util::bench::BenchResult| r.median.as_secs_f64() * 1e9 / BATCH as f64;
+    println!(
+        "per-hit: baseline {:.2} ns, disarmed hit_io {:.2} ns, disarmed maybe_delay {:.2} ns, \
+         armed-elsewhere {:.2} ns",
+        per_hit_ns(&base),
+        per_hit_ns(&off),
+        per_hit_ns(&off_delay),
+        per_hit_ns(&armed),
+    );
+}

@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
         kernel_budget: 2,
         state_dir: state_dir.to_string_lossy().into_owned(),
         checkpoint_every: 1,
+        ..ServeConfig::default()
     })?;
     let addr = server.addr();
 

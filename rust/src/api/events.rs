@@ -14,6 +14,7 @@
 //! RunStart
 //!   ( EpochStart
 //!       ( ScoringFp? SelectionMade )*      sequential modes only
+//!       WorkerLost*                        threaded degraded mode
 //!       SyncRound?                         workers > 1
 //!       EvalDone?                          at eval points
 //!     EpochEnd )*
@@ -43,6 +44,11 @@ pub enum Event {
     /// `false` on every `run.score_every` stride step *and* on steps that
     /// never score (set-level methods, annealing epochs). See DESIGN.md §8.
     SelectionMade { epoch: usize, step: u64, meta: usize, selected: usize, scored: bool },
+    /// A threaded worker died mid-epoch (panic or step error) and was
+    /// quarantined; the run continues degraded on the survivors, with the
+    /// lost worker's shard redistributed at the next epoch boundary
+    /// (DESIGN.md §12). Emitted before the epoch's `SyncRound`.
+    WorkerLost { epoch: usize, worker: usize, error: String },
     /// A data-parallel synchronization round completed (§D.5: parameter
     /// averaging + sampler-table merge across `workers` workers).
     SyncRound { epoch: usize, workers: usize },

@@ -591,6 +591,18 @@ pub struct ServeConfig {
     /// Checkpoint a running job every k completed epochs (0 = never; a
     /// killed server then restarts the job from scratch).
     pub checkpoint_every: usize,
+    /// Per-connection read timeout in milliseconds (0 = none). A client
+    /// that goes silent mid-request gets a clean
+    /// `rejected{reason: "read_timeout"}` instead of pinning a
+    /// connection thread forever.
+    pub read_timeout_ms: u64,
+    /// Transient-failure retry budget per job (0 = fail on first error).
+    /// Only errors the fault layer classifies as transient are retried;
+    /// cancels and shutdowns are never retried (DESIGN.md §12).
+    pub retry_max: usize,
+    /// Base backoff before retry attempt k, doubled each attempt:
+    /// `retry_backoff_ms * 2^(k-1)` milliseconds.
+    pub retry_backoff_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -602,6 +614,9 @@ impl Default for ServeConfig {
             kernel_budget: 0,
             state_dir: "serve_state".to_string(),
             checkpoint_every: 1,
+            read_timeout_ms: 30_000,
+            retry_max: 2,
+            retry_backoff_ms: 50,
         }
     }
 }
@@ -637,6 +652,15 @@ impl ServeConfig {
         if self.state_dir.is_empty() {
             return Err("serve.state_dir must not be empty".into());
         }
+        if self.read_timeout_ms > 3_600_000 {
+            return Err("serve.read_timeout_ms out of range (0 = none)".into());
+        }
+        if self.retry_max > 16 {
+            return Err("serve.retry_max out of range".into());
+        }
+        if self.retry_backoff_ms > 60_000 {
+            return Err("serve.retry_backoff_ms out of range".into());
+        }
         Ok(())
     }
 
@@ -656,6 +680,11 @@ impl ServeConfig {
             state_dir: doc.str_or("serve.state_dir", &d.state_dir),
             checkpoint_every: doc.i64_or("serve.checkpoint_every", d.checkpoint_every as i64)
                 as usize,
+            read_timeout_ms: doc.i64_or("serve.read_timeout_ms", d.read_timeout_ms as i64)
+                as u64,
+            retry_max: doc.i64_or("serve.retry_max", d.retry_max as i64) as usize,
+            retry_backoff_ms: doc.i64_or("serve.retry_backoff_ms", d.retry_backoff_ms as i64)
+                as u64,
         };
         cfg.validate()?;
         Ok(cfg)

@@ -4,10 +4,15 @@
 //!
 //! Format: `<name>.ckpt` = 16-byte header (magic, version, param count)
 //! + raw little-endian f32 params; `<name>.json` = metadata sidecar.
+//!
+//! Both files go through [`crate::fault::write_atomic`] (tmp + fsync +
+//! rename), so a crash mid-save leaves the previous checkpoint intact —
+//! a reader only ever sees a complete generation (DESIGN.md §12).
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::{Path, PathBuf};
 
+use crate::fault::{self, sites, write_atomic};
 use crate::util::json::{num, obj, s, Json};
 
 const MAGIC: u32 = 0x45564f53; // "EVOS"
@@ -23,26 +28,7 @@ pub struct Checkpoint {
 
 impl Checkpoint {
     pub fn save(&self, dir: &Path, name: &str) -> std::io::Result<PathBuf> {
-        std::fs::create_dir_all(dir)?;
-        let bin = dir.join(format!("{name}.ckpt"));
-        let mut f = std::fs::File::create(&bin)?;
-        f.write_all(&MAGIC.to_le_bytes())?;
-        f.write_all(&VERSION.to_le_bytes())?;
-        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
-        // Safe f32 -> bytes without unsafe: chunk through to_le_bytes.
-        let mut buf = Vec::with_capacity(self.params.len() * 4);
-        for &p in &self.params {
-            buf.extend_from_slice(&p.to_le_bytes());
-        }
-        f.write_all(&buf)?;
-        let meta = obj(vec![
-            ("model", s(self.model.clone())),
-            ("step", num(self.step as f64)),
-            ("seed", num(self.seed as f64)),
-            ("param_count", num(self.params.len() as f64)),
-        ]);
-        std::fs::write(dir.join(format!("{name}.json")), meta.to_string_compact())?;
-        Ok(bin)
+        self.save_inner(dir, name, None)
     }
 
     /// [`Checkpoint::save`] with an additional free-form JSON document
@@ -51,15 +37,39 @@ impl Checkpoint {
     /// beyond the flat params (RNG position, sampler tables, optimizer
     /// state, accounting counters) without changing the binary format.
     pub fn save_with_extra(&self, dir: &Path, name: &str, extra: &Json) -> std::io::Result<PathBuf> {
-        let bin = self.save(dir, name)?;
-        let side = dir.join(format!("{name}.json"));
-        let src = std::fs::read_to_string(&side)?;
-        let mut meta = Json::parse(&src)
-            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
-        if let Json::Obj(map) = &mut meta {
-            map.insert("extra".to_string(), extra.clone());
+        self.save_inner(dir, name, Some(extra))
+    }
+
+    /// Both save forms: build each file's complete byte image in memory,
+    /// then commit via [`write_atomic`] — one generation per file, no
+    /// read-modify-rewrite window on the sidecar.
+    fn save_inner(&self, dir: &Path, name: &str, extra: Option<&Json>) -> std::io::Result<PathBuf> {
+        fault::hit_io(sites::CHECKPOINT_SAVE)?;
+        std::fs::create_dir_all(dir)?;
+        let bin = dir.join(format!("{name}.ckpt"));
+        // Safe f32 -> bytes without unsafe: chunk through to_le_bytes.
+        let mut buf = Vec::with_capacity(16 + self.params.len() * 4);
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        for &p in &self.params {
+            buf.extend_from_slice(&p.to_le_bytes());
         }
-        std::fs::write(&side, meta.to_string_compact())?;
+        write_atomic(&bin, &buf)?;
+        let mut fields = vec![
+            ("model", s(self.model.clone())),
+            ("step", num(self.step as f64)),
+            ("seed", num(self.seed as f64)),
+            ("param_count", num(self.params.len() as f64)),
+        ];
+        if let Some(extra) = extra {
+            fields.push(("extra", extra.clone()));
+        }
+        let meta = obj(fields);
+        write_atomic(
+            &dir.join(format!("{name}.json")),
+            meta.to_string_compact().as_bytes(),
+        )?;
         Ok(bin)
     }
 
@@ -74,10 +84,19 @@ impl Checkpoint {
     }
 
     pub fn load(dir: &Path, name: &str) -> std::io::Result<Checkpoint> {
+        fault::hit_io(sites::CHECKPOINT_LOAD)?;
         let invalid = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
         let bin = dir.join(format!("{name}.ckpt"));
         let mut f = std::fs::File::open(&bin)?;
         let file_len = f.metadata()?.len();
+        if file_len < 16 {
+            // A sub-header file would surface as UnexpectedEof from
+            // read_exact; corruption uniformly reports InvalidData.
+            return Err(invalid(format!(
+                "{}: {file_len} bytes is shorter than the 16-byte header (truncated checkpoint)",
+                bin.display()
+            )));
+        }
         let mut head = [0u8; 16];
         f.read_exact(&mut head)?;
         let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());

@@ -32,6 +32,16 @@
 //! single shared sampler would have reached (property-tested in
 //! tests/engine_determinism.rs).
 //!
+//! Degraded mode (DESIGN.md §12): a worker whose epoch ends in an error
+//! (a caught panic included) is *quarantined* instead of aborting the
+//! run — `Event::WorkerLost` is emitted, its report (observations,
+//! parameters, accounting) is dropped, and the §D.5 merge runs over the
+//! survivors only, in worker-slot order, so the degraded result is still
+//! a deterministic function of (seed, surviving shard set). The next
+//! epoch re-shards the kept set over the remaining workers, which is the
+//! shard redistribution: no sample is orphaned. Only zero survivors
+//! aborts the run.
+//!
 //! Accounting: per-worker phase timers are merged at scale 1/W_eff, so a
 //! threaded run's `train_wall_s` stays wall-clock-equivalent (ideal
 //! scaling) instead of summed CPU-seconds; sync rounds book under `sync`.
@@ -140,6 +150,13 @@ pub(super) fn run(
     let total_steps = cfg.epochs * n.div_ceil(cfg.meta_batch);
     let mut base_step = 0usize;
 
+    // Degraded mode (DESIGN.md §12): a worker that fails an epoch is
+    // quarantined here and never scheduled again; its replica and sampler
+    // stay allocated but unread. All-true when no faults fire, in which
+    // case every loop below visits exactly the slots the pre-quarantine
+    // code visited, in the same order.
+    let mut alive = vec![true; workers];
+
     let mut loss_curve = Vec::with_capacity(cfg.epochs);
     let mut eval_curve = Vec::new();
     let mut bp_at_eval = Vec::new();
@@ -162,8 +179,10 @@ pub(super) fn run(
         let prune_rng = rng.fork(0x5e1ec7 + epoch as u64);
         let kept = timers.time(phase::PRUNE, || {
             let kept = canonical.on_epoch_start(epoch, &mut prune_rng.clone());
-            for ws in worker_samplers.iter_mut() {
-                let _ = ws.on_epoch_start(epoch, &mut prune_rng.clone());
+            for (v, ws) in worker_samplers.iter_mut().enumerate() {
+                if alive[v] {
+                    let _ = ws.on_epoch_start(epoch, &mut prune_rng.clone());
+                }
             }
             kept
         });
@@ -181,16 +200,24 @@ pub(super) fn run(
         // relies on disjointness), AND at least one meta-batch long — a
         // shorter shard would wrap around inside a single meta-batch and
         // emit duplicate indices (DESIGN.md §8.4). Surplus replicas sit
-        // the epoch out and are re-synced at the boundary.
-        let eff = workers.min((kept.len() / cfg.meta_batch).max(1));
+        // the epoch out and are re-synced at the boundary. Quarantined
+        // slots are excluded, which is the degraded-mode shard
+        // redistribution: the full kept set re-shards over the survivors,
+        // so no sample is orphaned by a lost worker. Shard rank j (the
+        // RNG fork tag and barrier slot) equals worker slot j whenever no
+        // slot below it has been lost — i.e. always, until a fault fires.
+        let avail = alive.iter().filter(|a| **a).count();
+        anyhow::ensure!(avail > 0, "no threaded workers left alive at epoch {epoch}");
+        let eff = avail.min((kept.len() / cfg.meta_batch).max(1));
+        let active: Vec<usize> = (0..workers).filter(|&i| alive[i]).take(eff).collect();
         let shards: Vec<Vec<u32>> = (0..eff)
             .map(|w| kept.iter().copied().skip(w).step_by(eff).collect())
             .collect();
         let mut inputs: Vec<(EpochLoader, Pcg64)> = Vec::with_capacity(eff);
-        for (w, shard) in shards.iter().enumerate() {
-            let mut wrng = rng.fork(0xd15c0 + w as u64);
+        for (j, shard) in shards.iter().enumerate() {
+            let mut wrng = rng.fork(0xd15c0 + j as u64);
             let loader = EpochLoader::new(shard, cfg.meta_batch, &mut wrng);
-            worker_samplers[w].begin_shard(shard);
+            worker_samplers[active[j]].begin_shard(shard);
             inputs.push((loader, wrng));
         }
 
@@ -207,50 +234,82 @@ pub(super) fn run(
 
         // ---- run the epoch on real threads -----------------------------
         let epoch_base = base_step;
-        let reports: Vec<anyhow::Result<WorkerReport>> = std::thread::scope(|scope| {
-            let shared = &shared;
-            let mut handles = Vec::with_capacity(eff);
-            for (w, ((replica, wsampler), (loader, wrng))) in replicas[..eff]
-                .iter_mut()
-                .zip(worker_samplers[..eff].iter_mut())
-                .zip(inputs.into_iter())
-                .enumerate()
-            {
-                handles.push(scope.spawn(move || {
-                    run_worker(
-                        cfg,
-                        train_ds,
-                        epoch,
-                        w,
-                        eff,
-                        epoch_base,
-                        total_steps,
-                        n_syncs,
-                        shared,
-                        replica.as_mut(),
-                        wsampler.as_mut(),
-                        loader,
-                        wrng,
-                    )
-                }));
+        let reports: Vec<(usize, anyhow::Result<WorkerReport>)> =
+            std::thread::scope(|scope| {
+                let shared = &shared;
+                let mut handles = Vec::with_capacity(eff);
+                for (j, ((slot, (replica, wsampler)), (loader, wrng))) in replicas
+                    .iter_mut()
+                    .zip(worker_samplers.iter_mut())
+                    .enumerate()
+                    .filter(|(slot, _)| active.contains(slot))
+                    .zip(inputs.into_iter())
+                    .enumerate()
+                {
+                    handles.push((
+                        slot,
+                        scope.spawn(move || {
+                            run_worker(
+                                cfg,
+                                train_ds,
+                                epoch,
+                                j,
+                                slot,
+                                eff,
+                                epoch_base,
+                                total_steps,
+                                n_syncs,
+                                shared,
+                                replica.as_mut(),
+                                wsampler.as_mut(),
+                                loader,
+                                wrng,
+                            )
+                        }),
+                    ));
+                }
+                handles
+                    .into_iter()
+                    .map(|(slot, h)| {
+                        let r = h.join().unwrap_or_else(|_| {
+                            Err(anyhow::anyhow!("threaded worker panicked"))
+                        });
+                        (slot, r)
+                    })
+                    .collect()
+            });
+
+        // ---- quarantine failed workers (degraded mode, DESIGN.md §12) --
+        // A failed worker's report (observations, parameters, accounting)
+        // is dropped whole; the run continues on the survivors, and the
+        // lost shard re-enters via next epoch's re-sharding.
+        let mut ok_reports: Vec<(usize, WorkerReport)> = Vec::with_capacity(eff);
+        for (slot, res) in reports {
+            match res {
+                Ok(r) => ok_reports.push((slot, r)),
+                Err(e) => {
+                    alive[slot] = false;
+                    if crate::obs::counters_on() {
+                        crate::obs::registry().counter("worker.lost").add(1);
+                    }
+                    emit_into(
+                        &mut events,
+                        Event::WorkerLost { epoch, worker: slot, error: format!("{e:#}") },
+                    );
+                }
             }
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join()
-                        .unwrap_or_else(|_| Err(anyhow::anyhow!("threaded worker panicked")))
-                })
-                .collect()
-        });
-        let reports: Vec<WorkerReport> =
-            reports.into_iter().collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        anyhow::ensure!(
+            !ok_reports.is_empty(),
+            "all {eff} threaded workers failed at epoch {epoch}"
+        );
 
         // ---- reduce worker accounting ----------------------------------
         // Workers ran concurrently: merge their phase times at 1/eff so
         // totals stay wall-clock-equivalent under ideal scaling.
         let mut epoch_loss_sum = 0.0f64;
         let mut epoch_loss_cnt = 0u64;
-        for r in &reports {
+        for (_, r) in &ok_reports {
             timers.merge_scaled(&r.timers, 1.0 / eff as f64);
             stats.accumulate(&r.stats);
             for (t, &c) in class_bp_counts.iter_mut().zip(&r.class_bp_counts) {
@@ -263,32 +322,36 @@ pub(super) fn run(
 
         // ---- §D.5 sync round: tables + parameters ----------------------
         timers.time(phase::SYNC, || -> anyhow::Result<()> {
-            // All-gather shard observation logs: the canonical gets every
-            // log, every replica (including idle ones) gets every peer's
-            // (its own is already applied).
-            for (w, r) in reports.iter().enumerate() {
+            // All-gather shard observation logs in worker-slot order: the
+            // canonical gets every surviving log, every live replica
+            // (idle ones included) gets every live peer's (its own is
+            // already applied). Quarantined samplers are skipped — their
+            // tables are never read again.
+            for (slot, r) in &ok_reports {
                 canonical.merge_observations(&r.observations, epoch);
                 for (v, ws) in worker_samplers.iter_mut().enumerate() {
-                    if v != w {
+                    if alive[v] && v != *slot {
                         ws.merge_observations(&r.observations, epoch);
                     }
                 }
             }
-            // Average the ACTIVE replicas' parameters, install everywhere
-            // (idle replicas included) and into the main runtime for
-            // eval. Snapshots land in the run-owned reusable buffers —
-            // no per-round Vec cloning.
-            for (replica, buf) in replicas[..eff].iter_mut().zip(snap_bufs.iter_mut()) {
-                replica.read_params_into(buf)?;
+            // Average the SURVIVING replicas' parameters, install into
+            // every live replica and the main runtime for eval. Snapshots
+            // land in the run-owned reusable buffers — no per-round Vec
+            // cloning.
+            for (k, (slot, _)) in ok_reports.iter().enumerate() {
+                replicas[*slot].read_params_into(&mut snap_bufs[k])?;
             }
-            mean_params_into(&mut avg_buf, snap_bufs[..eff].iter());
-            for replica in replicas.iter_mut() {
-                replica.set_params(&avg_buf)?;
+            mean_params_into(&mut avg_buf, snap_bufs[..ok_reports.len()].iter());
+            for (v, replica) in replicas.iter_mut().enumerate() {
+                if alive[v] {
+                    replica.set_params(&avg_buf)?;
+                }
             }
             rt.set_params(&avg_buf)?;
             Ok(())
         })?;
-        emit_into(&mut events, Event::SyncRound { epoch, workers: eff });
+        emit_into(&mut events, Event::SyncRound { epoch, workers: ok_reports.len() });
 
         let epoch_mean = if epoch_loss_cnt > 0 {
             epoch_loss_sum / epoch_loss_cnt as f64
@@ -339,6 +402,11 @@ pub(super) fn run(
 
 /// One worker's epoch: step the shard, rendezvous at each scheduled sync.
 ///
+/// `w` is the epoch rank (barrier slot, RNG fork tag, step interleave);
+/// `slot` is the stable worker-slot id used for fault scoping and the
+/// degraded-mode quarantine — the two coincide until a lower slot is
+/// lost.
+///
 /// Failures do not abort the barrier schedule — panics are caught and
 /// demoted to errors, and a failed worker keeps publishing its (stale)
 /// parameters at every remaining sync so peers never deadlock; the error
@@ -349,6 +417,7 @@ fn run_worker(
     train_ds: &crate::data::TensorDataset,
     epoch: usize,
     w: usize,
+    slot: usize,
     eff_workers: usize,
     epoch_base: usize,
     total_steps: usize,
@@ -384,6 +453,13 @@ fn run_worker(
                         if !loader.next_batch_into(&mut meta) {
                             break;
                         }
+                        // Deterministic fault injection (DESIGN.md §12):
+                        // scoped by stable slot id so a chaos scenario can
+                        // target one worker across epochs.
+                        crate::fault::hit_worker(
+                            crate::fault::sites::ENGINE_WORKER_STEP,
+                            slot,
+                        )?;
                         // Global-step approximation for the LR schedule:
                         // the sim interleaves workers round-robin, so
                         // local step r of worker w lands near global step
@@ -425,7 +501,7 @@ fn run_worker(
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => first_err = Some(e),
                 Err(_) => {
-                    first_err = Some(anyhow::anyhow!("worker {w} panicked mid-step"));
+                    first_err = Some(anyhow::anyhow!("worker {slot} panicked mid-step"));
                 }
             }
         }
@@ -463,6 +539,9 @@ fn sync_params(
     timers: &mut PhaseTimers,
     scratch: &mut Vec<f32>,
 ) {
+    // Delay-only injection point (the barrier schedule makes any other
+    // action here a deadlock; enforced at fault-spec parse time).
+    crate::fault::maybe_delay(crate::fault::sites::ENGINE_SYNC);
     let t0 = std::time::Instant::now();
     let published = replica.read_params_into(scratch).is_ok();
     shared.slots.lock().unwrap()[w] =

@@ -1,0 +1,540 @@
+//! Deterministic fault injection (DESIGN.md §12): a std-only failpoint
+//! registry the crash-critical paths consult so chaos tests can script
+//! real failures — IO errors, latency, panics, process kills — with
+//! reproducible schedules.
+//!
+//! Sites are `&'static str` names (catalogued in [`sites`]); a site that
+//! is not armed costs exactly one relaxed atomic load, the same
+//! zero-cost-when-off contract the telemetry layer keeps
+//! (`obs::counters_on`). Arming happens explicitly — the `[fault]`
+//! config table ([`arm_from_doc`]), the `EVOSAMPLE_FAULTS` env var
+//! ([`arm_from_env`]), or a literal spec ([`arm_spec`]) — and never from
+//! library code, so production runs can only be chaotic on purpose.
+//!
+//! Rule spec grammar (semicolon-separated, one optional `seed=N` entry):
+//!
+//! ```text
+//! seed=42;checkpoint.save=err,times=1;serve.socket_read=delay:50,p=0.5
+//! site=action[:arg][,p=<prob>][,after=<hits>][,times=<fires>][,worker=<id>]
+//! ```
+//!
+//! Actions: `err` (return an injected `io::Error`), `delay:<ms>`
+//! (sleep), `panic`, `kill` (`process::abort` — the crash-durability
+//! scenario). Modifiers: `p` fires probabilistically from the registry's
+//! seeded PCG64 stream; `after` skips the first N matching hits;
+//! `times` caps total fires; `worker` scopes the rule to one threaded
+//! worker id so multi-thread sites stay deterministic regardless of
+//! interleaving.
+//!
+//! Every fire bumps `fault.injected` (and `fault.injected.<site>`) when
+//! counters are on, so chaos tests can reconcile telemetry against the
+//! registry's own [`fired`] ledger: no injection goes unaccounted.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::config::Doc;
+use crate::util::Pcg64;
+
+mod atomic_io;
+
+pub use atomic_io::write_atomic;
+
+/// The failpoint site catalog. Arm specs must name one of these (typos
+/// fail at parse time, not by silently never firing).
+pub mod sites {
+    /// `Checkpoint::save`/`save_with_extra` entry (before any write).
+    pub const CHECKPOINT_SAVE: &str = "checkpoint.save";
+    /// `Checkpoint::load` entry (before the file is opened).
+    pub const CHECKPOINT_LOAD: &str = "checkpoint.load";
+    /// Inside [`super::write_atomic`], between the tmp-file fsync and the
+    /// rename — the torn-write crash window the helper closes.
+    pub const ATOMIC_COMMIT: &str = "atomic.commit";
+    /// Durable `.job.json` record writes in the serve layer.
+    pub const SERVE_RECORD_WRITE: &str = "serve.record_write";
+    /// Per-line socket reads in the serve connection handler.
+    pub const SERVE_SOCKET_READ: &str = "serve.socket_read";
+    /// Response-line socket writes in the serve connection handler.
+    pub const SERVE_SOCKET_WRITE: &str = "serve.socket_write";
+    /// Scheduler job execution, at the top of each (re)try of a claimed
+    /// job — the cheap hook for exercising the retry/backoff path.
+    pub const SERVE_JOB_CLAIM: &str = "serve.job_claim";
+    /// Kernel pool dispatch (delay-only: `KernelPool::run` returns `()`
+    /// and is called under the dispatch lock, so only latency is safe).
+    pub const KERNEL_DISPATCH: &str = "kernel.dispatch";
+    /// Threaded-engine mid-epoch sync rendezvous (delay-only: an error
+    /// or panic here would strand peers at the barrier).
+    pub const ENGINE_SYNC: &str = "engine.sync";
+    /// Inside a threaded worker's step loop, within its catch-unwind
+    /// region — `panic` here exercises degraded-mode quarantine.
+    pub const ENGINE_WORKER_STEP: &str = "engine.worker_step";
+    /// Reserved for unit tests, so in-crate tests can arm the process-
+    /// global registry without perturbing real sites used by concurrent
+    /// tests in the same process.
+    pub const TEST_PROBE: &str = "test.probe";
+
+    /// Every site, for spec validation and the DESIGN.md §12 catalog.
+    pub const ALL: &[&str] = &[
+        CHECKPOINT_SAVE,
+        CHECKPOINT_LOAD,
+        ATOMIC_COMMIT,
+        SERVE_RECORD_WRITE,
+        SERVE_SOCKET_READ,
+        SERVE_SOCKET_WRITE,
+        SERVE_JOB_CLAIM,
+        KERNEL_DISPATCH,
+        ENGINE_SYNC,
+        ENGINE_WORKER_STEP,
+        TEST_PROBE,
+    ];
+
+    /// Sites where only `delay` is performable (see the per-site docs).
+    pub const DELAY_ONLY: &[&str] = &[KERNEL_DISPATCH, ENGINE_SYNC];
+}
+
+/// What an armed rule does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Action {
+    /// Return an injected `io::Error` (kind `Interrupted`, message
+    /// `"injected fault at <site>"` — classified transient by the
+    /// scheduler's retry policy).
+    Err,
+    /// Sleep for the given number of milliseconds, then proceed.
+    Delay(u64),
+    /// Panic with `"injected panic at <site>"`.
+    Panic,
+    /// `std::process::abort()` — the kill-after-N-hits crash scenario.
+    Kill,
+}
+
+#[derive(Clone, Debug)]
+struct Rule {
+    site: &'static str,
+    action: Action,
+    /// Fire probability once eligible (1.0 = always).
+    p: f64,
+    /// Skip the first `after` matching hits.
+    after: u64,
+    /// Fire at most this many times (0 = unlimited).
+    times: u64,
+    /// Only hits carrying this worker scope match ([`hit_worker`]).
+    worker: Option<usize>,
+    hits: u64,
+    fired: u64,
+}
+
+struct Registry {
+    rules: Vec<Rule>,
+    rng: Pcg64,
+}
+
+/// The zero-cost-when-off gate: every failpoint checks this first.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+fn lock() -> std::sync::MutexGuard<'static, Option<Registry>> {
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// True when any fault rules are armed.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Disarm everything; failpoints return to the one-load fast path.
+pub fn disarm() {
+    *lock() = None;
+    ARMED.store(false, Ordering::SeqCst);
+}
+
+fn resolve_site(name: &str) -> Result<&'static str, String> {
+    sites::ALL
+        .iter()
+        .copied()
+        .find(|s| *s == name)
+        .ok_or_else(|| format!("unknown fault site {name:?} (see fault::sites)"))
+}
+
+fn parse_action(token: &str) -> Result<Action, String> {
+    if let Some(ms) = token.strip_prefix("delay:") {
+        let ms: u64 =
+            ms.parse().map_err(|_| format!("bad delay milliseconds in {token:?}"))?;
+        return Ok(Action::Delay(ms));
+    }
+    match token {
+        "err" => Ok(Action::Err),
+        "panic" => Ok(Action::Panic),
+        "kill" => Ok(Action::Kill),
+        "delay" => Err("delay needs an argument: delay:<ms>".to_string()),
+        other => Err(format!("unknown fault action {other:?} (err|delay:<ms>|panic|kill)")),
+    }
+}
+
+/// Parse one `site=action[,key=val]*` rule.
+fn parse_rule(spec: &str) -> Result<Rule, String> {
+    let (site, body) = spec
+        .split_once('=')
+        .ok_or_else(|| format!("fault rule {spec:?} is not site=action[,...]"))?;
+    let site = resolve_site(site.trim())?;
+    let mut parts = body.split(',').map(str::trim);
+    let action = parse_action(parts.next().unwrap_or(""))?;
+    if sites::DELAY_ONLY.contains(&site) && !matches!(action, Action::Delay(_)) {
+        return Err(format!("site {site:?} supports only delay:<ms> actions"));
+    }
+    let mut rule =
+        Rule { site, action, p: 1.0, after: 0, times: 0, worker: None, hits: 0, fired: 0 };
+    for part in parts {
+        let (key, val) = part
+            .split_once('=')
+            .ok_or_else(|| format!("fault modifier {part:?} is not key=val"))?;
+        match key.trim() {
+            "p" => {
+                let p: f64 = val.parse().map_err(|_| format!("bad probability {val:?}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("probability {p} outside [0, 1]"));
+                }
+                rule.p = p;
+            }
+            "after" => {
+                rule.after = val.parse().map_err(|_| format!("bad after count {val:?}"))?;
+            }
+            "times" => {
+                rule.times = val.parse().map_err(|_| format!("bad times count {val:?}"))?;
+            }
+            "worker" => {
+                rule.worker =
+                    Some(val.parse().map_err(|_| format!("bad worker id {val:?}"))?);
+            }
+            other => return Err(format!("unknown fault modifier {other:?}")),
+        }
+    }
+    Ok(rule)
+}
+
+/// Arm a full spec: `[seed=N;]site=action[,mods];...`. Replaces any
+/// previously armed rules. Returns the number of rules armed.
+pub fn arm_spec(spec: &str) -> Result<usize, String> {
+    let mut seed = 0u64;
+    let mut rules = Vec::new();
+    for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+        if let Some(v) = part.strip_prefix("seed=") {
+            seed = v.trim().parse().map_err(|_| format!("bad fault seed {v:?}"))?;
+            continue;
+        }
+        rules.push(parse_rule(part)?);
+    }
+    let n = rules.len();
+    *lock() = Some(Registry { rules, rng: Pcg64::new(seed) });
+    ARMED.store(n > 0, Ordering::SeqCst);
+    Ok(n)
+}
+
+/// Arm from the `EVOSAMPLE_FAULTS` env var; unset/empty is a no-op.
+pub fn arm_from_env() -> Result<usize, String> {
+    match std::env::var("EVOSAMPLE_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            arm_spec(&spec).map_err(|e| format!("EVOSAMPLE_FAULTS: {e}"))
+        }
+        _ => Ok(0),
+    }
+}
+
+/// Arm from a config document's `[fault]` table:
+///
+/// ```toml
+/// [fault]
+/// seed = 42
+/// rules = ["checkpoint.save=err,times=1", "serve.socket_read=delay:50"]
+/// ```
+///
+/// A document with no `[fault]` table is a no-op.
+pub fn arm_from_doc(doc: &Doc) -> Result<usize, String> {
+    let Some(rules_val) = doc.get("fault.rules") else {
+        return Ok(0);
+    };
+    let arr = rules_val
+        .as_array()
+        .ok_or_else(|| "fault.rules must be an array of rule strings".to_string())?;
+    let seed = doc.i64_or("fault.seed", 0);
+    if seed < 0 {
+        return Err(format!("fault.seed {seed} must be non-negative"));
+    }
+    let mut spec = format!("seed={seed}");
+    for v in arr {
+        let rule = v
+            .as_str()
+            .ok_or_else(|| "fault.rules entries must be strings".to_string())?;
+        spec.push(';');
+        spec.push_str(rule);
+    }
+    arm_spec(&spec)
+}
+
+/// Decide whether a failpoint hit at `site` (with optional worker scope)
+/// fires, and which action. The armed-check is the only cost when off.
+fn decide(site: &str, worker: Option<usize>) -> Option<Action> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut guard = lock();
+    let reg = guard.as_mut()?;
+    let Registry { rules, rng } = reg;
+    for rule in rules.iter_mut() {
+        if rule.site != site {
+            continue;
+        }
+        if let Some(w) = rule.worker {
+            if worker != Some(w) {
+                continue;
+            }
+        }
+        rule.hits += 1;
+        if rule.hits <= rule.after {
+            continue;
+        }
+        if rule.times > 0 && rule.fired >= rule.times {
+            continue;
+        }
+        if rule.p < 1.0 && rng.f64() >= rule.p {
+            continue;
+        }
+        rule.fired += 1;
+        let action = rule.action;
+        drop(guard);
+        if crate::obs::counters_on() {
+            let r = crate::obs::registry();
+            r.counter("fault.injected").add(1);
+            r.counter(&format!("fault.injected.{site}")).add(1);
+        }
+        return Some(action);
+    }
+    None
+}
+
+fn perform(site: &str, action: Action) -> std::io::Result<()> {
+    match action {
+        Action::Err => Err(std::io::Error::new(
+            std::io::ErrorKind::Interrupted,
+            format!("injected fault at {site}"),
+        )),
+        Action::Delay(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+        Action::Panic => panic!("injected panic at {site}"),
+        Action::Kill => std::process::abort(),
+    }
+}
+
+/// The standard failpoint: no-op unless an armed rule at `site` fires.
+#[inline]
+pub fn hit_io(site: &'static str) -> std::io::Result<()> {
+    match decide(site, None) {
+        None => Ok(()),
+        Some(action) => perform(site, action),
+    }
+}
+
+/// Worker-scoped failpoint for multi-threaded sites: rules carrying a
+/// `worker=<id>` modifier match only their worker, so hit counts stay
+/// deterministic regardless of thread interleaving.
+#[inline]
+pub fn hit_worker(site: &'static str, worker: usize) -> std::io::Result<()> {
+    match decide(site, Some(worker)) {
+        None => Ok(()),
+        Some(action) => perform(site, action),
+    }
+}
+
+/// Delay-only failpoint for sites that cannot express an error and must
+/// not panic (barriers, `()`-returning dispatch). Parse-time validation
+/// restricts [`sites::DELAY_ONLY`] rules to `delay:<ms>` actions.
+#[inline]
+pub fn maybe_delay(site: &'static str) {
+    if let Some(Action::Delay(ms)) = decide(site, None) {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
+}
+
+/// Total fires recorded at `site` since arming (the chaos tests'
+/// reconciliation ledger against the `fault.injected` counters).
+pub fn fired(site: &str) -> u64 {
+    lock()
+        .as_ref()
+        .map(|reg| reg.rules.iter().filter(|r| r.site == site).map(|r| r.fired).sum())
+        .unwrap_or(0)
+}
+
+/// Total fires across every armed rule since arming.
+pub fn injected_total() -> u64 {
+    lock()
+        .as_ref()
+        .map(|reg| reg.rules.iter().map(|r| r.fired).sum())
+        .unwrap_or(0)
+}
+
+/// True when an error message names an injected fault or a transient IO
+/// condition worth retrying (the vendored `anyhow` carries flat message
+/// chains, so classification is textual by design).
+pub fn is_transient_error_msg(msg: &str) -> bool {
+    let lower = msg.to_ascii_lowercase();
+    lower.contains("injected fault")
+        || lower.contains("timed out")
+        || lower.contains("interrupted system call")
+        || lower.contains("resource temporarily unavailable")
+}
+
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    // The registry is process-global; in-crate tests that arm it (only
+    // ever on `sites::TEST_PROBE` — never a real site, so concurrent
+    // tests exercising real paths stay fault-free) serialize here.
+    static L: Mutex<()> = Mutex::new(());
+    L.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Arm-for-the-duration guard so a failing assertion can't leave the
+    /// process-global registry armed for later tests.
+    struct Armed;
+    impl Drop for Armed {
+        fn drop(&mut self) {
+            disarm();
+        }
+    }
+
+    #[test]
+    fn unarmed_sites_are_no_ops() {
+        let _g = test_lock();
+        disarm();
+        assert!(!armed());
+        assert!(hit_io(sites::TEST_PROBE).is_ok());
+        assert_eq!(fired(sites::TEST_PROBE), 0);
+    }
+
+    #[test]
+    fn err_rule_fires_and_counts() {
+        let _g = test_lock();
+        let _armed = Armed;
+        assert_eq!(arm_spec("seed=7;test.probe=err,times=2").unwrap(), 1);
+        let e = hit_io(sites::TEST_PROBE).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::Interrupted);
+        assert!(e.to_string().contains("injected fault at test.probe"));
+        assert!(hit_io(sites::TEST_PROBE).is_err());
+        // `times=2` exhausted: further hits pass through.
+        assert!(hit_io(sites::TEST_PROBE).is_ok());
+        assert_eq!(fired(sites::TEST_PROBE), 2);
+        assert_eq!(injected_total(), 2);
+    }
+
+    #[test]
+    fn after_skips_leading_hits() {
+        let _g = test_lock();
+        let _armed = Armed;
+        arm_spec("test.probe=err,after=2,times=1").unwrap();
+        assert!(hit_io(sites::TEST_PROBE).is_ok());
+        assert!(hit_io(sites::TEST_PROBE).is_ok());
+        assert!(hit_io(sites::TEST_PROBE).is_err());
+        assert!(hit_io(sites::TEST_PROBE).is_ok());
+        assert_eq!(fired(sites::TEST_PROBE), 1);
+    }
+
+    #[test]
+    fn worker_scope_matches_only_its_worker() {
+        let _g = test_lock();
+        let _armed = Armed;
+        arm_spec("test.probe=err,worker=1").unwrap();
+        assert!(hit_io(sites::TEST_PROBE).is_ok(), "unscoped hit never matches");
+        assert!(hit_worker(sites::TEST_PROBE, 0).is_ok());
+        assert!(hit_worker(sites::TEST_PROBE, 1).is_err());
+        assert_eq!(fired(sites::TEST_PROBE), 1);
+    }
+
+    #[test]
+    fn probability_is_seed_deterministic() {
+        let _g = test_lock();
+        let _armed = Armed;
+        let run = |seed: u64| -> Vec<bool> {
+            arm_spec(&format!("seed={seed};test.probe=err,p=0.5")).unwrap();
+            (0..32).map(|_| hit_io(sites::TEST_PROBE).is_err()).collect()
+        };
+        let a = run(3);
+        let b = run(3);
+        assert_eq!(a, b, "same seed, same fire schedule");
+        assert!(a.iter().any(|&f| f) && !a.iter().all(|&f| f), "p=0.5 mixes outcomes");
+        let c = run(4);
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn delay_rule_sleeps_then_proceeds() {
+        let _g = test_lock();
+        let _armed = Armed;
+        arm_spec("test.probe=delay:5,times=1").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(hit_io(sites::TEST_PROBE).is_ok());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(5));
+        maybe_delay(sites::TEST_PROBE); // exhausted: no further sleep
+        assert_eq!(fired(sites::TEST_PROBE), 1);
+    }
+
+    #[test]
+    fn panic_rule_panics_with_site_name() {
+        let _g = test_lock();
+        let _armed = Armed;
+        arm_spec("test.probe=panic,times=1").unwrap();
+        let caught = std::panic::catch_unwind(|| hit_io(sites::TEST_PROBE));
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("injected panic at test.probe"), "{msg}");
+    }
+
+    #[test]
+    fn spec_errors_are_descriptive() {
+        let _g = test_lock();
+        disarm();
+        let cases = [
+            ("nonsite=err", "unknown fault site"),
+            ("test.probe=explode", "unknown fault action"),
+            ("test.probe=delay", "delay needs an argument"),
+            ("test.probe=err,p=1.5", "outside [0, 1]"),
+            ("test.probe=err,bogus=1", "unknown fault modifier"),
+            ("test.probe", "not site=action"),
+            ("seed=x;test.probe=err", "bad fault seed"),
+            ("kernel.dispatch=panic", "only delay"),
+            ("engine.sync=err", "only delay"),
+        ];
+        for (spec, want) in cases {
+            let err = arm_spec(spec).unwrap_err();
+            assert!(err.contains(want), "{spec:?}: {err}");
+        }
+        assert!(!armed(), "failed arming leaves the layer disarmed");
+    }
+
+    #[test]
+    fn arm_from_doc_reads_fault_table() {
+        let _g = test_lock();
+        let _armed = Armed;
+        let src = "[fault]\nseed = 9\nrules = [\"test.probe=err,times=1\"]\n";
+        let doc = Doc::parse(src).unwrap();
+        assert_eq!(arm_from_doc(&doc).unwrap(), 1);
+        assert!(hit_io(sites::TEST_PROBE).is_err());
+        assert!(hit_io(sites::TEST_PROBE).is_ok());
+        // No [fault] table: no-op, leaves arming untouched.
+        let empty = Doc::parse("[run]\nepochs = 1\n").unwrap();
+        assert_eq!(arm_from_doc(&empty).unwrap(), 0);
+        // Bad entries are rejected.
+        let bad = Doc::parse("[fault]\nrules = [3]\n").unwrap();
+        assert!(arm_from_doc(&bad).unwrap_err().contains("strings"));
+    }
+
+    #[test]
+    fn transient_classification_is_textual() {
+        assert!(is_transient_error_msg("run: injected fault at checkpoint.save"));
+        assert!(is_transient_error_msg("read: Connection Timed Out"));
+        assert!(!is_transient_error_msg("header claims 12 params (truncated checkpoint)"));
+        assert!(!is_transient_error_msg("sampler kept nothing at epoch 3"));
+    }
+}

@@ -25,6 +25,7 @@
 
 pub mod util;
 pub mod obs;
+pub mod fault;
 pub mod config;
 pub mod data;
 pub mod sampler;

@@ -58,8 +58,13 @@ USAGE:
   evosample serve    [--config <serve.toml>] [--port P] [--max-concurrent N]
                      [--max-queue N] [--kernel-budget N]
                      [--checkpoint-every K] [--dir STATE_DIR]
+                     [--read-timeout-ms MS] [--retry-max N]
+                     [--retry-backoff-ms MS] [--faults SPEC]
                      (multi-tenant selection service: queued jobs behind a
-                      JSONL-over-TCP protocol on localhost; see DESIGN.md §10)
+                      JSONL-over-TCP protocol on localhost; see DESIGN.md §10.
+                      --faults / the EVOSAMPLE_FAULTS env var arm the
+                      deterministic fault-injection layer, e.g.
+                      \"seed=7;checkpoint.save=err,times=1\"; DESIGN.md §12)
   evosample submit   --addr <host:port>
                      (--config <run.toml> [--sampler S] [--name N]
                       [--job-id ID] [--follow]
@@ -83,6 +88,15 @@ fn main() {
 fn run(argv: &[String]) -> anyhow::Result<()> {
     let args = Args::parse(argv, &["full", "threaded-workers", "follow", "status", "metrics"])
         .map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
+    // Deterministic fault injection (DESIGN.md §12): armed process-wide
+    // from EVOSAMPLE_FAULTS before any subcommand touches disk or
+    // sockets; a malformed spec is a hard startup error, never a
+    // silently-unarmed chaos run.
+    let armed = evosample::fault::arm_from_env()
+        .map_err(|e| anyhow::anyhow!("EVOSAMPLE_FAULTS: {e}"))?;
+    if armed > 0 {
+        eprintln!("fault: {armed} injection rule(s) armed from EVOSAMPLE_FAULTS");
+    }
     match args.subcommand.as_str() {
         "train" => {
             let path = args
@@ -258,10 +272,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             let src = std::fs::read_to_string(path)
                 .map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
             let doc = config::Doc::parse(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+            // The same document may carry a `[fault]` table (chaos runs).
+            let armed = evosample::fault::arm_from_doc(&doc)
+                .map_err(|e| anyhow::anyhow!("[fault]: {e}"))?;
+            if armed > 0 {
+                eprintln!("fault: {armed} injection rule(s) armed from {path}");
+            }
             config::ServeConfig::from_doc(&doc).map_err(|e| anyhow::anyhow!("{e}"))?
         }
         None => config::ServeConfig::default(),
     };
+    if let Some(spec) = args.flag("faults") {
+        let armed =
+            evosample::fault::arm_spec(spec).map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+        eprintln!("fault: {armed} injection rule(s) armed from --faults");
+    }
     if let Some(p) = args.usize_flag("port").map_err(|e| anyhow::anyhow!("{e}"))? {
         sc.port = u16::try_from(p).map_err(|_| anyhow::anyhow!("--port out of range"))?;
     }
@@ -276,6 +301,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(k) = args.usize_flag("checkpoint-every").map_err(|e| anyhow::anyhow!("{e}"))? {
         sc.checkpoint_every = k;
+    }
+    if let Some(ms) = args.usize_flag("read-timeout-ms").map_err(|e| anyhow::anyhow!("{e}"))? {
+        sc.read_timeout_ms = ms as u64;
+    }
+    if let Some(n) = args.usize_flag("retry-max").map_err(|e| anyhow::anyhow!("{e}"))? {
+        sc.retry_max = n;
+    }
+    if let Some(ms) = args.usize_flag("retry-backoff-ms").map_err(|e| anyhow::anyhow!("{e}"))? {
+        sc.retry_backoff_ms = ms as u64;
     }
     if let Some(dir) = args.flag("dir") {
         sc.state_dir = dir.to_string();

@@ -137,6 +137,12 @@ pub fn event_to_json(ev: &Event) -> Json {
             ("selected", num(*selected as f64)),
             ("scored", Json::Bool(*scored)),
         ]),
+        Event::WorkerLost { epoch, worker, error } => obj(vec![
+            ("event", s("worker_lost")),
+            ("epoch", num(*epoch as f64)),
+            ("worker", num(*worker as f64)),
+            ("error", s(error.clone())),
+        ]),
         Event::SyncRound { epoch, workers } => obj(vec![
             ("event", s("sync_round")),
             ("epoch", num(*epoch as f64)),

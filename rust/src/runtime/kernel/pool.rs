@@ -167,6 +167,10 @@ impl KernelPool {
         if crate::obs::counters_on() {
             crate::obs::registry().counter("kernel.dispatches").add(1);
         }
+        // Delay-only injection point (DESIGN.md §12): dispatch sits on
+        // the numerics hot path, so the fault layer may stall it to
+        // surface straggler behavior but never alter its result.
+        crate::fault::maybe_delay(crate::fault::sites::KERNEL_DISPATCH);
         if self.threads == 1 {
             f(0);
             return;

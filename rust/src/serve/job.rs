@@ -381,11 +381,17 @@ impl JobShared {
 }
 
 /// Write the durable job record (best-effort callers decide what to do
-/// with the error).
+/// with the error). Goes through [`crate::fault::write_atomic`], so a
+/// crash mid-write leaves the previous record parseable — a rescan never
+/// sees a torn `.job.json`.
 pub fn write_record(dir: &Path, shared: &JobShared, config_toml: &str) -> std::io::Result<()> {
+    crate::fault::hit_io(crate::fault::sites::SERVE_RECORD_WRITE)?;
     std::fs::create_dir_all(dir)?;
     let path = dir.join(format!("{}.job.json", shared.id()));
-    std::fs::write(path, shared.record_json(config_toml).to_string_compact())
+    crate::fault::write_atomic(
+        &path,
+        shared.record_json(config_toml).to_string_compact().as_bytes(),
+    )
 }
 
 /// One parsed `<id>.job.json` from a startup rescan.

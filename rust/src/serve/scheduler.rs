@@ -36,22 +36,37 @@ use super::queue::{ClaimedJob, JobQueue};
 pub type SharedQueue = Arc<(Mutex<JobQueue>, Condvar)>;
 
 /// Spawn `cfg.max_concurrent` worker threads draining `state`.
+///
+/// Thread-spawn failure (fd/thread exhaustion) is surfaced instead of
+/// panicking: the partially-spawned pool is shut down and joined before
+/// the error returns, so the caller never leaks orphan workers.
 pub fn spawn_workers(
     state: SharedQueue,
     budget: Arc<KernelBudget>,
     cfg: ServeConfig,
-) -> Vec<JoinHandle<()>> {
-    (0..cfg.max_concurrent)
-        .map(|i| {
-            let state = Arc::clone(&state);
-            let budget = Arc::clone(&budget);
-            let cfg = cfg.clone();
-            std::thread::Builder::new()
-                .name(format!("serve-worker-{i}"))
-                .spawn(move || worker_loop(state, budget, cfg))
-                .expect("spawn serve worker")
-        })
-        .collect()
+) -> std::io::Result<Vec<JoinHandle<()>>> {
+    let mut handles = Vec::with_capacity(cfg.max_concurrent);
+    for i in 0..cfg.max_concurrent {
+        let worker_state = Arc::clone(&state);
+        let budget = Arc::clone(&budget);
+        let cfg = cfg.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("serve-worker-{i}"))
+            .spawn(move || worker_loop(worker_state, budget, cfg));
+        match spawned {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                let (lock, cvar) = &*state;
+                lock.lock().unwrap_or_else(|p| p.into_inner()).begin_shutdown(true);
+                cvar.notify_all();
+                for h in handles {
+                    let _ = h.join();
+                }
+                return Err(e);
+            }
+        }
+    }
+    Ok(handles)
 }
 
 fn worker_loop(state: SharedQueue, budget: Arc<KernelBudget>, cfg: ServeConfig) {
@@ -78,14 +93,54 @@ fn worker_loop(state: SharedQueue, budget: Arc<KernelBudget>, cfg: ServeConfig) 
 
 /// Run one claimed job end to end and record its outcome (state, final
 /// event, durable record, result file).
+///
+/// Transient failures (injected faults, timeouts, interrupted syscalls —
+/// see [`crate::fault::is_transient_error_msg`]) are retried up to
+/// `serve.retry_max` times with exponential backoff, each attempt
+/// announced on the job's event stream as `retrying{attempt, error}`.
+/// Cooperative stops (cancel/shutdown acknowledged by the hook) and
+/// non-transient errors fail through immediately; a job that spends its
+/// whole budget fails with a `retries_exhausted:`-prefixed message
+/// (DESIGN.md §12).
 fn run_claimed(claim: &ClaimedJob, budget: &Arc<KernelBudget>, serve: &ServeConfig) {
     let state_dir = PathBuf::from(&serve.state_dir);
     claim.shared.mark_running();
     let _ = job::write_record(&state_dir, &claim.shared, &claim.config_toml);
-    match run_session(claim, budget, serve, &state_dir) {
+    let mut attempt = 0usize;
+    let outcome = loop {
+        match run_session(claim, budget, serve, &state_dir, attempt) {
+            Ok(j) => break Ok(j),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                let transient = claim.shared.fired_interrupt() == job::INTERRUPT_NONE
+                    && crate::fault::is_transient_error_msg(&msg);
+                if !transient || attempt >= serve.retry_max {
+                    break Err((e, transient));
+                }
+                attempt += 1;
+                claim.shared.push_event(obj(vec![
+                    ("event", s("retrying")),
+                    ("attempt", num(attempt as f64)),
+                    ("error", s(msg)),
+                ]));
+                if crate::obs::counters_on() {
+                    crate::obs::registry().counter("retry.attempts").add(1);
+                }
+                let backoff =
+                    serve.retry_backoff_ms.saturating_mul(1u64 << (attempt - 1).min(16));
+                if backoff > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(backoff));
+                }
+            }
+        }
+    };
+    match outcome {
         Ok(result_json) => {
             let path = state_dir.join(format!("{}.result.json", claim.id));
-            let _ = std::fs::write(path, result_json.to_string_compact());
+            let _ = crate::fault::write_atomic(
+                &path,
+                result_json.to_string_compact().as_bytes(),
+            );
             let accuracy = result_json
                 .get("accuracy_pct")
                 .and_then(Json::as_f64)
@@ -100,7 +155,7 @@ fn run_claimed(claim: &ClaimedJob, budget: &Arc<KernelBudget>, serve: &ServeConf
         // aborted the run, not the request flag: a real failure that
         // merely races a cancel/shutdown request must still end the job
         // as Failed, not masquerade as a cooperative stop.
-        Err(e) => match claim.shared.fired_interrupt() {
+        Err((e, transient)) => match claim.shared.fired_interrupt() {
             INTERRUPT_CANCEL => {
                 let msg = "cancelled by client".to_string();
                 claim.shared.finish(JobState::Cancelled, None, Some(msg), None);
@@ -111,7 +166,12 @@ fn run_claimed(claim: &ClaimedJob, budget: &Arc<KernelBudget>, serve: &ServeConf
                 claim.shared.finish(JobState::Interrupted, None, Some(msg), None);
             }
             _ => {
-                claim.shared.finish(JobState::Failed, None, Some(format!("{e:#}")), None);
+                let msg = if transient {
+                    format!("retries_exhausted: {e:#}")
+                } else {
+                    format!("{e:#}")
+                };
+                claim.shared.finish(JobState::Failed, None, Some(msg), None);
             }
         },
     }
@@ -142,10 +202,18 @@ fn run_session(
     budget: &Arc<KernelBudget>,
     serve: &ServeConfig,
     state_dir: &Path,
+    attempt: usize,
 ) -> anyhow::Result<Json> {
+    crate::fault::hit_io(crate::fault::sites::SERVE_JOB_CLAIM)?;
     let cfg = claim.cfg.clone();
     let rt = make_runtime_with_budget(&cfg, Some(Arc::clone(budget)))?;
-    let (resume, restart_reason) = resolve_resume(state_dir, &claim.id, claim.has_checkpoint);
+    // Retries additionally probe the disk: a checkpoint written *during*
+    // the failed attempt post-dates the claim's `has_checkpoint` snapshot
+    // and must be resumed, not re-run. The first attempt keeps the
+    // snapshot semantics so a reused job id never picks up a stale file.
+    let has_checkpoint = claim.has_checkpoint
+        || (attempt > 0 && state_dir.join(format!("{}.ckpt", claim.id)).exists());
+    let (resume, restart_reason) = resolve_resume(state_dir, &claim.id, has_checkpoint);
     if let Some(reason) = restart_reason {
         claim.shared.push_event(obj(vec![("event", s("restarted")), ("reason", s(reason))]));
     }

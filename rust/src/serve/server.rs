@@ -33,7 +33,17 @@ struct Inner {
     state_dir: PathBuf,
     stop_accept: AtomicBool,
     next_id: AtomicU64,
+    /// Per-connection read timeout (`serve.read_timeout_ms`; None = no
+    /// timeout): a client that goes silent mid-request is rejected and
+    /// disconnected instead of pinning its connection thread forever.
+    read_timeout: Option<Duration>,
 }
+
+/// Hard cap on one request line (DESIGN.md §12): a client streaming an
+/// unterminated line cannot balloon the connection thread's memory —
+/// past this the request is rejected (`line_too_long`) and the
+/// connection closed.
+const MAX_LINE_BYTES: usize = 1 << 20;
 
 /// The running service. [`Server::start`] returns a handle; `wait`
 /// blocks until a `shutdown` request (or [`ServerHandle::shutdown`])
@@ -70,19 +80,36 @@ impl Server {
         if resumed > 0 {
             println!("serve: re-enqueued {resumed} unfinished job(s) from {}", state_dir.display());
         }
-        let workers = scheduler::spawn_workers(Arc::clone(&state), Arc::clone(&budget), cfg);
+        let workers =
+            scheduler::spawn_workers(Arc::clone(&state), Arc::clone(&budget), cfg.clone())?;
         let inner = Arc::new(Inner {
             state,
             budget,
             state_dir,
             stop_accept: AtomicBool::new(false),
             next_id: AtomicU64::new(1),
+            read_timeout: match cfg.read_timeout_ms {
+                0 => None,
+                ms => Some(Duration::from_millis(ms)),
+            },
         });
         let accept_inner = Arc::clone(&inner);
         let accept = std::thread::Builder::new()
             .name("serve-accept".to_string())
-            .spawn(move || accept_loop(listener, accept_inner))
-            .expect("spawn accept thread");
+            .spawn(move || accept_loop(listener, accept_inner));
+        let accept = match accept {
+            Ok(h) => h,
+            Err(e) => {
+                // Never leave the worker pool orphaned behind a dead
+                // front door: shut it down, then surface the error.
+                eprintln!("serve: failed to spawn accept thread: {e}");
+                initiate_shutdown(&inner, true);
+                for w in workers {
+                    let _ = w.join();
+                }
+                return Err(anyhow::anyhow!("failed to spawn accept thread: {e}"));
+            }
+        };
         Ok(ServerHandle { addr, inner, workers, accept: Some(accept) })
     }
 }
@@ -175,15 +202,111 @@ fn accept_loop(listener: TcpListener, inner: Arc<Inner>) {
 }
 
 fn write_line(out: &mut TcpStream, j: &Json) -> std::io::Result<()> {
+    crate::fault::hit_io(crate::fault::sites::SERVE_SOCKET_WRITE)?;
     out.write_all(j.to_string_compact().as_bytes())?;
     out.write_all(b"\n")
 }
 
+/// What one bounded line read produced.
+enum LineRead {
+    /// A complete request line (terminator stripped) is in the buffer.
+    Line,
+    /// Clean end of stream before any byte.
+    Eof,
+    /// The line exceeded [`MAX_LINE_BYTES`]; the rest is unread.
+    TooLong,
+}
+
+/// Read one `\n`-terminated line of at most `cap` content bytes into
+/// `buf` — the bounded replacement for `BufRead::lines()`, which would
+/// buffer an unterminated line without limit. A final unterminated line
+/// (EOF mid-line) still parses; non-UTF-8 input fails with
+/// `InvalidData`; read timeouts surface as the platform's
+/// `WouldBlock`/`TimedOut`.
+fn read_bounded_line(
+    reader: &mut impl BufRead,
+    buf: &mut String,
+    cap: usize,
+) -> std::io::Result<LineRead> {
+    crate::fault::hit_io(crate::fault::sites::SERVE_SOCKET_READ)?;
+    let mut bytes: Vec<u8> = Vec::new();
+    loop {
+        let (take, found_nl, eof) = {
+            let chunk = match reader.fill_buf() {
+                Ok(c) => c,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            if chunk.is_empty() {
+                (0, false, true)
+            } else {
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(pos) => {
+                        if bytes.len() + pos > cap {
+                            return Ok(LineRead::TooLong);
+                        }
+                        bytes.extend_from_slice(&chunk[..pos]);
+                        (pos + 1, true, false)
+                    }
+                    None => {
+                        if bytes.len() + chunk.len() > cap {
+                            return Ok(LineRead::TooLong);
+                        }
+                        bytes.extend_from_slice(chunk);
+                        (chunk.len(), false, false)
+                    }
+                }
+            }
+        };
+        if eof {
+            if bytes.is_empty() {
+                return Ok(LineRead::Eof);
+            }
+            break;
+        }
+        reader.consume(take);
+        if found_nl {
+            break;
+        }
+    }
+    match String::from_utf8(bytes) {
+        Ok(text) => {
+            buf.push_str(&text);
+            Ok(LineRead::Line)
+        }
+        Err(_) => Err(std::io::Error::new(ErrorKind::InvalidData, "request is not UTF-8")),
+    }
+}
+
 fn handle_connection(stream: TcpStream, inner: Arc<Inner>) -> std::io::Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
+    if let Some(t) = inner.read_timeout {
+        let _ = stream.set_read_timeout(Some(t));
+    }
+    let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
-    for line in reader.lines() {
-        let line = line?;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let read = match read_bounded_line(&mut reader, &mut line, MAX_LINE_BYTES) {
+            Ok(r) => r,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                let _ = write_line(&mut out, &rejected_response("read_timeout"));
+                return Ok(());
+            }
+            Err(e) if e.kind() == ErrorKind::InvalidData => {
+                let _ = write_line(&mut out, &err_response("request is not UTF-8"));
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        };
+        match read {
+            LineRead::Eof => return Ok(()),
+            LineRead::TooLong => {
+                let _ = write_line(&mut out, &rejected_response("line_too_long"));
+                return Ok(());
+            }
+            LineRead::Line => {}
+        }
         if line.trim().is_empty() {
             continue;
         }
@@ -217,7 +340,6 @@ fn handle_connection(stream: TcpStream, inner: Arc<Inner>) -> std::io::Result<()
             }
         }
     }
-    Ok(())
 }
 
 fn handle_submit(

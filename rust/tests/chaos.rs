@@ -1,0 +1,423 @@
+//! Seeded fault-scenario matrix (DESIGN.md §12): the chaos invariants
+//! the fault layer + durability hardening must hold under injection.
+//!
+//! * No job is lost or double-run across failures and restarts.
+//! * Durable files (`.ckpt`, `.job.json`, `.result.json`) always parse —
+//!   a crash window leaves the previous version, never a torn file.
+//! * Kill/corrupt-then-restart resumes (or cleanly restarts) the job.
+//! * Telemetry accounts for every injection: the `fault.injected` /
+//!   `retry.attempts` / `worker.lost` counters reconcile against the
+//!   registry's own fired ledger.
+//!
+//! The scenario seed comes from `EVOSAMPLE_CHAOS_SEED` (CI runs two
+//! fixed seeds); every invariant here must hold for *any* seed. This
+//! test binary is its own process, so arming real sites is safe — but
+//! the registry is still process-global, so scenarios serialize on a
+//! mutex and disarm via drop guard even when an assertion fails.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use evosample::config::{Doc, ServeConfig};
+use evosample::fault::{self, sites};
+use evosample::prelude::*;
+use evosample::serve::{Server, ServerHandle};
+use evosample::util::json::{obj, s as jstr, Json};
+
+static CHAOS: Mutex<()> = Mutex::new(());
+
+fn chaos_guard() -> std::sync::MutexGuard<'static, ()> {
+    CHAOS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Disarm-on-drop so a failing assertion can't leave faults armed for
+/// the next scenario.
+struct Armed;
+impl Drop for Armed {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("EVOSAMPLE_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(7)
+}
+
+fn counter(name: &str) -> u64 {
+    evosample::obs::registry().counter(name).get()
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("evosample_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn start_server(dir: &Path, checkpoint_every: usize, retry_max: usize) -> ServerHandle {
+    Server::start(ServeConfig {
+        port: 0,
+        max_concurrent: 1,
+        max_queue: 8,
+        kernel_budget: 2,
+        state_dir: dir.to_string_lossy().into_owned(),
+        checkpoint_every,
+        retry_max,
+        retry_backoff_ms: 1, // keep chaos scenarios fast
+        ..ServeConfig::default()
+    })
+    .unwrap()
+}
+
+fn job_toml(name: &str, seed: u64, epochs: usize) -> String {
+    format!(
+        "[run]\nmodel = \"native\"\nname = \"{name}\"\nepochs = {epochs}\n\
+         meta_batch = 32\nmini_batch = 8\ntest_n = 64\nseed = {seed}\neval_every = 1\n\n\
+         [dataset]\nkind = \"synth_cifar\"\nn = 192\nclasses = 4\n\n\
+         [sampler]\nkind = \"es\"\n\n\
+         [lr]\nschedule = \"const\"\nlr = 0.02\n"
+    )
+}
+
+fn request(addr: SocketAddr, req: &Json) -> Json {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(req.to_string_compact().as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).unwrap()
+}
+
+fn submit(addr: SocketAddr, toml: &str, job_id: &str) -> Json {
+    request(
+        addr,
+        &obj(vec![
+            ("cmd", jstr("submit")),
+            ("config", jstr(toml)),
+            ("job_id", jstr(job_id)),
+        ]),
+    )
+}
+
+/// Stream a job's events until the final `ok` line (terminal/parked).
+fn stream_events(addr: SocketAddr, job: &str) -> Vec<Json> {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let req = obj(vec![("cmd", jstr("events")), ("job", jstr(job))]);
+    conn.write_all(req.to_string_compact().as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let reader = BufReader::new(conn);
+    let mut out = Vec::new();
+    for line in reader.lines() {
+        let j = Json::parse(line.unwrap().trim()).unwrap();
+        let done = j.get("ok").is_some();
+        out.push(j);
+        if done {
+            break;
+        }
+    }
+    out
+}
+
+fn event_names(events: &[Json]) -> Vec<String> {
+    events
+        .iter()
+        .filter_map(|e| e.get("event").and_then(Json::as_str).map(str::to_string))
+        .collect()
+}
+
+fn record_json(dir: &Path, id: &str) -> Json {
+    let src = std::fs::read_to_string(dir.join(format!("{id}.job.json"))).unwrap();
+    Json::parse(&src).unwrap()
+}
+
+fn standalone(toml: &str) -> RunResult {
+    let cfg = RunConfig::from_doc(&Doc::parse(toml).unwrap()).unwrap();
+    let rt = evosample::runtime::make_runtime(&cfg).unwrap();
+    SessionBuilder::from_config(cfg).runtime(rt).build().unwrap().run().unwrap()
+}
+
+fn assert_matches_standalone(result: &Json, reference: &RunResult, tag: &str) {
+    let f = |k: &str| result.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+    assert_eq!(f("accuracy_pct"), reference.accuracy_pct(), "{tag}: accuracy");
+    assert_eq!(f("steps") as u64, reference.steps, "{tag}: steps");
+    let served_curve: Vec<f64> = result
+        .get("loss_curve")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_f64)
+        .collect();
+    assert_eq!(served_curve, reference.loss_curve, "{tag}: loss curve");
+}
+
+/// Satellite regression: a crash in `write_atomic`'s commit window (after
+/// the tmp fsync, before the rename) leaves the PREVIOUS file intact and
+/// parseable; the orphaned `.tmp` sibling is invisible to record scans
+/// and consumed by the next successful write.
+#[test]
+fn torn_write_crash_window_preserves_previous_file() {
+    let _g = chaos_guard();
+    let dir = fresh_dir("torn");
+    let path = dir.join("victim.job.json");
+    fault::write_atomic(&path, b"{\"v\":1}").unwrap();
+
+    let _armed = Armed;
+    fault::arm_spec(&format!("seed={};atomic.commit=err,times=1", chaos_seed())).unwrap();
+    let err = fault::write_atomic(&path, b"{\"v\":2}").unwrap_err();
+    assert!(err.to_string().contains("injected fault at atomic.commit"), "{err}");
+    // The previous version survives the simulated crash…
+    let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(back.get("v").and_then(Json::as_f64), Some(1.0));
+    // …the orphaned tmp is on disk but never scanned as a record…
+    let tmp = dir.join("victim.job.json.tmp");
+    assert!(tmp.exists(), "tmp sibling left by the aborted commit");
+    assert!(
+        evosample::serve::job::scan_records(&dir).is_empty(),
+        "a .tmp sibling must never surface in the record scan"
+    );
+    // …and the retried write both lands and consumes the tmp.
+    fault::write_atomic(&path, b"{\"v\":2}").unwrap();
+    let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(back.get("v").and_then(Json::as_f64), Some(2.0));
+    assert!(!tmp.exists(), "successful commit consumes the tmp file");
+    assert_eq!(fault::fired(sites::ATOMIC_COMMIT), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An injected checkpoint-write failure is transient: the job announces
+/// `retrying`, re-runs, completes with the standalone result, and every
+/// injection is accounted for in the telemetry counters.
+#[test]
+fn injected_checkpoint_failure_retries_to_completion() {
+    let _g = chaos_guard();
+    evosample::obs::raise_level(evosample::obs::COUNTERS);
+    let dir = fresh_dir("ckpt_retry");
+    let toml = job_toml("ckpt_retry", 41, 3);
+    let reference = standalone(&toml);
+
+    let injected0 = counter("fault.injected");
+    let retries0 = counter("retry.attempts");
+    let _armed = Armed;
+    fault::arm_spec(&format!("seed={};checkpoint.save=err,times=1", chaos_seed())).unwrap();
+
+    let handle = start_server(&dir, 1, 2);
+    let addr = handle.addr();
+    assert_eq!(submit(addr, &toml, "cr").get("ok"), Some(&Json::Bool(true)));
+    let events = stream_events(addr, "cr");
+    let names = event_names(&events);
+    assert!(names.contains(&"retrying".to_string()), "{names:?}");
+    assert!(names.contains(&"run_end".to_string()), "{names:?}");
+    // Exactly one result event: the failed attempt never double-reports.
+    let results: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("event").and_then(Json::as_str) == Some("result"))
+        .collect();
+    assert_eq!(results.len(), 1, "{names:?}");
+    // The retried run restarts deterministically: standalone-identical.
+    assert_matches_standalone(results[0], &reference, "retried");
+    handle.shutdown(false);
+    handle.wait();
+
+    // Durables parse and agree.
+    assert_eq!(record_json(&dir, "cr").get("state").and_then(Json::as_str), Some("done"));
+    let result_file =
+        Json::parse(&std::fs::read_to_string(dir.join("cr.result.json")).unwrap()).unwrap();
+    assert_eq!(
+        result_file.get("accuracy_pct").and_then(Json::as_f64),
+        Some(reference.accuracy_pct())
+    );
+
+    // Counter reconciliation: every injection and retry is accounted.
+    assert_eq!(fault::fired(sites::CHECKPOINT_SAVE), 1);
+    assert_eq!(counter("fault.injected") - injected0, fault::injected_total());
+    assert_eq!(counter("retry.attempts") - retries0, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A persistently-failing transient site spends the whole retry budget,
+/// then fails the job with an explicit `retries_exhausted` reason — and
+/// the durable record still parses.
+#[test]
+fn persistent_transient_failure_exhausts_retries_cleanly() {
+    let _g = chaos_guard();
+    evosample::obs::raise_level(evosample::obs::COUNTERS);
+    let dir = fresh_dir("exhaust");
+
+    let _armed = Armed;
+    fault::arm_spec(&format!("seed={};serve.job_claim=err", chaos_seed())).unwrap();
+
+    let handle = start_server(&dir, 0, 1);
+    let addr = handle.addr();
+    assert_eq!(submit(addr, &job_toml("exhaust", 43, 2), "ex").get("ok"), Some(&Json::Bool(true)));
+    let events = stream_events(addr, "ex");
+    let names = event_names(&events);
+    assert!(names.contains(&"retrying".to_string()), "{names:?}");
+    handle.shutdown(false);
+    handle.wait();
+
+    // retry_max=1: the initial attempt plus one retry, both injected.
+    assert_eq!(fault::fired(sites::SERVE_JOB_CLAIM), 2);
+    let rec = record_json(&dir, "ex");
+    assert_eq!(rec.get("state").and_then(Json::as_str), Some("failed"), "{rec:?}");
+    let error = rec.get("error").and_then(Json::as_str).unwrap();
+    assert!(error.starts_with("retries_exhausted: "), "{error}");
+    assert!(error.contains("injected fault at serve.job_claim"), "{error}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Kill-then-restart with a CORRUPTED checkpoint: the next life restarts
+/// the job from scratch (surfacing the reason), finishes it exactly
+/// once, and matches the uninterrupted run.
+#[test]
+fn corrupt_checkpoint_after_kill_restarts_without_losing_the_job() {
+    let _g = chaos_guard();
+    let dir = fresh_dir("kill_restart");
+    let toml = job_toml("kill_restart", 45, 40);
+    let reference = standalone(&toml);
+
+    // Life 1: interrupt mid-run with a checkpoint on disk.
+    let life1 = start_server(&dir, 1, 0);
+    let addr = life1.addr();
+    assert_eq!(submit(addr, &toml, "kr").get("ok"), Some(&Json::Bool(true)));
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let req = obj(vec![("cmd", jstr("events")), ("job", jstr("kr"))]);
+    conn.write_all(req.to_string_compact().as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(conn);
+    loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "stream ended before epoch 1");
+        let j = Json::parse(line.trim()).unwrap();
+        if j.get("event").and_then(Json::as_str) == Some("epoch_end")
+            && j.get("epoch").and_then(Json::as_f64).unwrap_or(0.0) >= 1.0
+        {
+            break;
+        }
+    }
+    let resp = request(addr, &obj(vec![("cmd", jstr("shutdown")), ("mode", jstr("abort"))]));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    life1.wait();
+    let ckpt = dir.join("kr.ckpt");
+    assert!(ckpt.exists(), "abort parks the job with its checkpoint");
+
+    // The "kill corrupted the disk" scenario: truncate below the header.
+    std::fs::write(&ckpt, b"EVOS").unwrap();
+
+    // Life 2: rescan requeues, the corrupt checkpoint demotes to a clean
+    // restart, and the job completes exactly once.
+    let life2 = start_server(&dir, 1, 0);
+    let events = stream_events(life2.addr(), "kr");
+    let names = event_names(&events);
+    assert!(names.contains(&"requeued".to_string()), "{names:?}");
+    let restarted = events
+        .iter()
+        .find(|e| e.get("event").and_then(Json::as_str) == Some("restarted"))
+        .unwrap_or_else(|| panic!("no restarted event: {names:?}"));
+    let reason = restarted.get("reason").and_then(Json::as_str).unwrap();
+    assert!(reason.contains("unreadable checkpoint"), "{reason}");
+    assert!(!names.contains(&"resumed".to_string()), "corrupt checkpoint must not resume");
+    let results: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("event").and_then(Json::as_str) == Some("result"))
+        .collect();
+    assert_eq!(results.len(), 1, "job must complete exactly once: {names:?}");
+    assert_matches_standalone(results[0], &reference, "restarted");
+    life2.shutdown(false);
+    life2.wait();
+    assert_eq!(record_json(&dir, "kr").get("state").and_then(Json::as_str), Some("done"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Degraded-mode acceptance: a threaded run surviving one injected
+/// worker panic finishes with W−1 workers, emits exactly one
+/// `WorkerLost`, bumps `worker.lost`, and stays deterministic — two runs
+/// under the same armed schedule produce identical results.
+#[test]
+fn threaded_worker_panic_degrades_deterministically() {
+    let _g = chaos_guard();
+    evosample::obs::raise_level(evosample::obs::COUNTERS);
+
+    let run_armed = || {
+        fault::arm_spec(&format!(
+            "seed={};engine.worker_step=panic,worker=1,after=3,times=1",
+            chaos_seed()
+        ))
+        .unwrap();
+        let mut cfg = RunConfig::new(
+            "chaos_threaded",
+            "native",
+            DatasetConfig::SynthCifar { n: 192, classes: 4, label_noise: 0.05, hard_frac: 0.2 },
+        );
+        cfg.epochs = 4;
+        cfg.meta_batch = 32;
+        cfg.mini_batch = 8;
+        cfg.lr = LrSchedule::Const { lr: 0.02 };
+        cfg.test_n = 64;
+        cfg.eval_every = 2;
+        cfg.seed = 17;
+        cfg.sampler = SamplerConfig::es_default();
+        cfg.workers = 3;
+        cfg.threaded_workers = true;
+        let events: std::sync::Arc<Mutex<Vec<Event>>> =
+            std::sync::Arc::new(Mutex::new(Vec::new()));
+        let sink = std::sync::Arc::clone(&events);
+        let rt = evosample::runtime::make_runtime(&cfg).unwrap();
+        let result = SessionBuilder::from_config(cfg)
+            .runtime(rt)
+            .on_event(move |ev: &Event| sink.lock().unwrap().push(ev.clone()))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let fired = fault::fired(sites::ENGINE_WORKER_STEP);
+        fault::disarm();
+        let events = std::sync::Arc::try_unwrap(events).unwrap().into_inner().unwrap();
+        (result, events, fired)
+    };
+
+    let _armed = Armed;
+    let lost0 = counter("worker.lost");
+    let (r1, ev1, fired1) = run_armed();
+    assert_eq!(fired1, 1, "the panic rule fires exactly once");
+    assert_eq!(counter("worker.lost") - lost0, 1);
+
+    // Exactly one quarantine, of the targeted worker slot.
+    let lost: Vec<(usize, usize, String)> = ev1
+        .iter()
+        .filter_map(|e| match e {
+            Event::WorkerLost { epoch, worker, error } => {
+                Some((*epoch, *worker, error.clone()))
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(lost.len(), 1, "{lost:?}");
+    assert_eq!(lost[0].1, 1, "the worker=1 scope quarantines slot 1");
+    assert!(lost[0].2.contains("panicked"), "{lost:?}");
+    let lost_epoch = lost[0].0;
+
+    // Epochs after the loss sync W−1 survivors; epochs before sync W.
+    for ev in &ev1 {
+        if let Event::SyncRound { epoch, workers } = ev {
+            let expect = if *epoch >= lost_epoch { 2 } else { 3 };
+            assert_eq!(*workers, expect, "epoch {epoch}");
+        }
+    }
+    assert_eq!(r1.loss_curve.len(), 4, "the run finishes all epochs degraded");
+
+    // Determinism: same seed + same fault schedule → identical run.
+    let (r2, ev2, _) = run_armed();
+    assert_eq!(r1.loss_curve, r2.loss_curve, "degraded loss curve is deterministic");
+    assert_eq!(r1.accuracy_pct(), r2.accuracy_pct());
+    assert_eq!(r1.steps, r2.steps);
+    let lost2: Vec<&Event> =
+        ev2.iter().filter(|e| matches!(e, Event::WorkerLost { .. })).collect();
+    assert_eq!(lost2.len(), 1);
+    assert!(
+        matches!(lost2[0], Event::WorkerLost { epoch, worker: 1, .. } if *epoch == lost_epoch),
+        "loss lands on the same epoch both runs: {lost2:?}"
+    );
+}

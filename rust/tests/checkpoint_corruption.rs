@@ -1,0 +1,149 @@
+//! Corruption corpus for `Checkpoint::load` / `Checkpoint::load_extra`
+//! (DESIGN.md §12): every mangled artifact a crash or bad disk can leave
+//! behind must surface as a clean `InvalidData` (or plain IO) error —
+//! never a panic, and never an allocation sized from a corrupt header.
+//!
+//! The corpus sweeps:
+//! * truncation at EVERY byte boundary of the 16-byte header and at
+//!   every word boundary of the payload,
+//! * a bit-flip in every header byte (magic / version / param count),
+//! * trailing garbage after a valid payload,
+//! * structural corruption of the JSON metadata sidecar.
+
+use std::io::ErrorKind;
+use std::path::PathBuf;
+
+use evosample::coordinator::checkpoint::Checkpoint;
+use evosample::util::json::{num, obj, s, Json};
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("evosample_corrupt_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn reference() -> Checkpoint {
+    Checkpoint {
+        model: "mlp".into(),
+        step: 321,
+        seed: 9,
+        params: (0..24).map(|i| (i as f32) * 0.75 - 4.0).collect(),
+    }
+}
+
+/// Save the reference checkpoint (with an extra sidecar section, like
+/// serve resume does) and return the raw `.ckpt` bytes.
+fn saved_bytes(dir: &PathBuf) -> Vec<u8> {
+    let extra = obj(vec![("epoch", num(3.0)), ("rng", s("abc123"))]);
+    let path = reference().save_with_extra(dir, "ref", &extra).unwrap();
+    std::fs::read(path).unwrap()
+}
+
+/// Every load of a corrupt artifact must return `Err` — specifically
+/// `InvalidData` once the file is readable — and must not panic. The
+/// caller passes the mangled bytes; this writes + loads them.
+fn assert_invalid(dir: &PathBuf, bytes: &[u8], what: &str) {
+    std::fs::write(dir.join("ref.ckpt"), bytes).unwrap();
+    match Checkpoint::load(dir, "ref") {
+        Ok(_) => panic!("{what}: corrupt checkpoint loaded successfully"),
+        Err(e) => assert_eq!(e.kind(), ErrorKind::InvalidData, "{what}: {e}"),
+    }
+}
+
+#[test]
+fn truncation_at_every_header_and_word_boundary_is_invalid_data() {
+    let dir = fresh_dir("trunc");
+    let good = saved_bytes(&dir);
+    assert_eq!(good.len(), 16 + 24 * 4);
+    // Every header byte boundary, then payload cuts in stride 4, then
+    // a mid-word cut. None may panic; all must be InvalidData.
+    let mut cuts: Vec<usize> = (0..=16).collect();
+    cuts.extend((17..good.len()).step_by(4));
+    cuts.push(good.len() - 2);
+    for cut in cuts {
+        assert_invalid(&dir, &good[..cut], &format!("truncated to {cut} bytes"));
+    }
+    // Sanity: the untouched image still loads.
+    std::fs::write(dir.join("ref.ckpt"), &good).unwrap();
+    assert_eq!(Checkpoint::load(&dir, "ref").unwrap(), reference());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bit_flip_in_every_header_byte_is_invalid_data() {
+    let dir = fresh_dir("flip");
+    let good = saved_bytes(&dir);
+    for byte in 0..16 {
+        for bit in 0..8 {
+            let mut bad = good.clone();
+            bad[byte] ^= 1 << bit;
+            // Flipping magic corrupts the tag; flipping version makes an
+            // unsupported version; flipping the count mismatches the
+            // payload — including high bits that claim exabyte payloads,
+            // which must be rejected before any allocation.
+            assert_invalid(&dir, &bad, &format!("bit {bit} of header byte {byte} flipped"));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn trailing_garbage_is_invalid_data() {
+    let dir = fresh_dir("tail");
+    let good = saved_bytes(&dir);
+    for extra in [1usize, 3, 4, 4096] {
+        let mut bad = good.clone();
+        bad.resize(good.len() + extra, 0xA5);
+        assert_invalid(&dir, &bad, &format!("{extra} trailing bytes"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn empty_and_sub_header_files_are_invalid_data() {
+    let dir = fresh_dir("stub");
+    let _ = saved_bytes(&dir);
+    assert_invalid(&dir, b"", "empty file");
+    assert_invalid(&dir, b"EVOS", "magic only");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupting the metadata sidecar must never panic: structural damage
+/// errors cleanly out of `load_extra`, while `load` (whose sidecar
+/// fields are best-effort) still recovers the binary payload.
+#[test]
+fn sidecar_corruption_never_panics() {
+    let dir = fresh_dir("sidecar");
+    let _ = saved_bytes(&dir);
+    let sidecar = dir.join("ref.json");
+    let good_meta = std::fs::read_to_string(&sidecar).unwrap();
+
+    for (what, text) in [
+        ("truncated json", &good_meta[..good_meta.len() / 2]),
+        ("not json at all", "]]]]{{{{"),
+        ("empty file", ""),
+    ] {
+        std::fs::write(&sidecar, text).unwrap();
+        let err = Checkpoint::load_extra(&dir, "ref").unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidData, "{what}: {err}");
+        // The binary side is intact: load still returns the params and
+        // falls back to defaulted metadata fields.
+        let back = Checkpoint::load(&dir, "ref").unwrap();
+        assert_eq!(back.params, reference().params, "{what}");
+    }
+
+    // Valid JSON of the wrong shape parses; the extra section is simply
+    // absent, and the typed fields default rather than panic.
+    std::fs::write(&sidecar, "[1,2,3]").unwrap();
+    assert_eq!(Checkpoint::load_extra(&dir, "ref").unwrap(), Json::Null);
+    let back = Checkpoint::load(&dir, "ref").unwrap();
+    assert_eq!(back.model, "");
+    assert_eq!(back.step, 0);
+    assert_eq!(back.params, reference().params);
+
+    // A missing sidecar is not fatal to load either.
+    std::fs::remove_file(&sidecar).unwrap();
+    assert_eq!(Checkpoint::load(&dir, "ref").unwrap().params, reference().params);
+    let _ = std::fs::remove_dir_all(&dir);
+}

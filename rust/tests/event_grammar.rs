@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! RunStart
-//!   ( EpochStart ( ScoringFp? SelectionMade )* SyncRound? EvalDone? EpochEnd )*
+//!   ( EpochStart ( ScoringFp? SelectionMade )* WorkerLost* SyncRound?
+//!     EvalDone? EpochEnd )*
 //! RunEnd
 //! ```
 //!
@@ -46,6 +47,7 @@ fn check_grammar(events: &[Event]) -> Result<(), String> {
             Event::EpochStart { epoch, .. }
             | Event::ScoringFp { epoch, .. }
             | Event::SelectionMade { epoch, .. }
+            | Event::WorkerLost { epoch, .. }
             | Event::SyncRound { epoch, .. }
             | Event::EvalDone { epoch, .. }
             | Event::EpochEnd { epoch, .. } => Some(*epoch),
@@ -65,6 +67,9 @@ fn check_grammar(events: &[Event]) -> Result<(), String> {
             (S::BetweenEpochs, Event::RunEnd { .. }) => S::Done,
             (S::InEpoch, Event::ScoringFp { .. }) => S::PendingSelection,
             (S::InEpoch, Event::SelectionMade { .. }) => S::InEpoch,
+            // Degraded mode: a quarantined worker announces before the
+            // epoch's sync tail; any number may be lost in one epoch.
+            (S::InEpoch, Event::WorkerLost { .. }) => S::InEpoch,
             (S::InEpoch, Event::SyncRound { .. }) => S::AfterSync,
             (S::InEpoch | S::AfterSync, Event::EvalDone { .. }) => S::AfterEval,
             (S::InEpoch | S::AfterSync | S::AfterEval, Event::EpochEnd { .. }) => S::BetweenEpochs,

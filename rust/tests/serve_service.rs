@@ -37,6 +37,7 @@ fn start_server(dir: &Path, max_concurrent: usize, max_queue: usize, ckpt: usize
         kernel_budget: 2, // deliberately scarce: all jobs share 2 lanes
         state_dir: dir.to_string_lossy().into_owned(),
         checkpoint_every: ckpt,
+        ..ServeConfig::default()
     })
     .unwrap()
 }
