@@ -1,0 +1,261 @@
+//! Registry-coherence catalogs, parsed out of the crate's own sources.
+//!
+//! The three `registry/*` rules check string literals at instrumentation
+//! sites against authoritative name lists that already live in the code:
+//!
+//! * failpoint sites — the `pub const NAME: &str = "…";` items in
+//!   `fault/mod.rs` (the same constants `fault::sites::ALL` collects),
+//! * metric names — the constants in `obs/catalog.rs`,
+//! * event names — the `api::events::Event` variants (snake-cased, the
+//!   exact form `metrics::event_to_json` emits) plus the serve job
+//!   lifecycle names in `serve/protocol.rs::LIFECYCLE_EVENTS`.
+//!
+//! Parsing the catalogs from source (rather than importing the consts)
+//! keeps the linter honest about what is *written*, not what this build
+//! happened to link — and keeps fixture tests able to supply synthetic
+//! catalogs. An empty catalog is a hard error: a refactor that moved a
+//! name list must break the lint run loudly, never make every check
+//! vacuously pass.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{lex, Tok, Token};
+
+/// Source files the catalogs are extracted from (paths relative to
+/// `rust/src`).
+pub const FAULT_SITES_FILE: &str = "fault/mod.rs";
+pub const METRIC_CATALOG_FILE: &str = "obs/catalog.rs";
+pub const EVENT_ENUM_FILE: &str = "api/events.rs";
+pub const LIFECYCLE_FILE: &str = "serve/protocol.rs";
+
+/// The three name lists the `registry/*` rules check against.
+#[derive(Clone, Debug)]
+pub struct Catalogs {
+    pub fault_sites: BTreeSet<String>,
+    pub metric_names: BTreeSet<String>,
+    pub event_names: BTreeSet<String>,
+}
+
+impl Catalogs {
+    /// Build the catalogs by lexing the four source files, fetched
+    /// through `read` (rel path → contents). Missing files or empty
+    /// extraction results are errors.
+    pub fn from_sources(
+        read: impl Fn(&str) -> Option<String>,
+    ) -> Result<Catalogs, String> {
+        let src_of = |rel: &str| {
+            read(rel).ok_or_else(|| format!("catalog source {rel} not found under the lint root"))
+        };
+        let fault_sites = const_str_values(&lex(&src_of(FAULT_SITES_FILE)?).tokens);
+        let metric_names = const_str_values(&lex(&src_of(METRIC_CATALOG_FILE)?).tokens);
+        let mut event_names: BTreeSet<String> =
+            enum_variants(&lex(&src_of(EVENT_ENUM_FILE)?).tokens, "Event")
+                .iter()
+                .map(|v| snake_case(v))
+                .collect();
+        event_names
+            .extend(array_str_values(&lex(&src_of(LIFECYCLE_FILE)?).tokens, "LIFECYCLE_EVENTS"));
+        for (what, set, file) in [
+            ("failpoint-site", &fault_sites, FAULT_SITES_FILE),
+            ("metric-name", &metric_names, METRIC_CATALOG_FILE),
+            ("event-name", &event_names, EVENT_ENUM_FILE),
+        ] {
+            if set.is_empty() {
+                return Err(format!(
+                    "{what} catalog extracted from {file} is empty — \
+                     the registry rules would pass vacuously"
+                ));
+            }
+        }
+        Ok(Catalogs { fault_sites, metric_names, event_names })
+    }
+}
+
+/// Collect the values of `const NAME: … str … = "value";` items — one
+/// string literal between `const` and the terminating `;`, with `str`
+/// somewhere in the type. Array consts like `ALL: &[&str] = &[A, B]`
+/// reference the named constants (no literals), so they are skipped.
+pub fn const_str_values(tokens: &[Token]) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if matches!(&tokens[i].tok, Tok::Ident(s) if s == "const") {
+            let mut saw_str_type = false;
+            let mut lits: Vec<&str> = Vec::new();
+            let mut j = i + 1;
+            while j < tokens.len() && tokens[j].tok != Tok::Punct(';') {
+                match &tokens[j].tok {
+                    Tok::Ident(s) if s == "str" => saw_str_type = true,
+                    Tok::Str(s) => lits.push(s),
+                    _ => {}
+                }
+                j += 1;
+            }
+            if saw_str_type && lits.len() == 1 {
+                out.insert(lits[0].to_string());
+            }
+            i = j;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Collect the string literals in `NAME: … = &["a", "b", …];`.
+pub fn array_str_values(tokens: &[Token], name: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let Some(start) = tokens
+        .iter()
+        .position(|t| matches!(&t.tok, Tok::Ident(s) if s == name))
+    else {
+        return out;
+    };
+    for t in &tokens[start..] {
+        match &t.tok {
+            Tok::Str(s) => {
+                out.insert(s.clone());
+            }
+            Tok::Punct(';') => break,
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Collect the variant names of `enum <enum_name> { … }`: identifiers at
+/// brace depth 1, in variant-name position (fields and attribute
+/// contents are deeper or skipped).
+pub fn enum_variants(tokens: &[Token], enum_name: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    // Find `enum <enum_name>` then its opening brace.
+    let mut found = false;
+    while i + 1 < tokens.len() {
+        if matches!(&tokens[i].tok, Tok::Ident(s) if s == "enum")
+            && matches!(&tokens[i + 1].tok, Tok::Ident(s) if s == enum_name)
+        {
+            found = true;
+            break;
+        }
+        i += 1;
+    }
+    if !found {
+        return out;
+    }
+    while i < tokens.len() && tokens[i].tok != Tok::Punct('{') {
+        i += 1;
+    }
+    if i >= tokens.len() {
+        return out;
+    }
+    let mut depth = 1i32;
+    let mut expect_variant = true;
+    i += 1;
+    while i < tokens.len() && depth > 0 {
+        match &tokens[i].tok {
+            Tok::Punct('{') | Tok::Punct('(') | Tok::Punct('[') => {
+                depth += 1;
+            }
+            Tok::Punct('}') | Tok::Punct(')') | Tok::Punct(']') => {
+                depth -= 1;
+            }
+            Tok::Punct(',') if depth == 1 => expect_variant = true,
+            Tok::Punct('#') if depth == 1 => {
+                // Variant attribute: skip its balanced `[…]` group so
+                // attribute arguments never look like variant names.
+                i += 1;
+                continue;
+            }
+            Tok::Ident(name) if depth == 1 && expect_variant => {
+                out.push(name.clone());
+                expect_variant = false;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+/// `RunStart` → `run_start` (the `metrics::event_to_json` convention).
+pub fn snake_case(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 4);
+    for (i, ch) in name.chars().enumerate() {
+        if ch.is_ascii_uppercase() {
+            if i > 0 {
+                out.push('_');
+            }
+            out.push(ch.to_ascii_lowercase());
+        } else {
+            out.push(ch);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_str_extraction_skips_arrays_and_non_str() {
+        let src = r#"
+pub mod sites {
+    /// Doc.
+    pub const A: &str = "a.site";
+    pub const B: &str = "b.site";
+    pub const N: usize = 3;
+    pub const ALL: &[&str] = &[A, B];
+}
+"#;
+        let got = const_str_values(&lex(src).tokens);
+        let want: BTreeSet<String> = ["a.site", "b.site"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn array_values_extract_until_semicolon() {
+        let src = r#"
+pub const LIFECYCLE_EVENTS: &[&str] = &["queued", "admitted"];
+pub const OTHER: &str = "not.collected";
+"#;
+        let got = array_str_values(&lex(src).tokens, "LIFECYCLE_EVENTS");
+        let want: BTreeSet<String> = ["queued", "admitted"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn enum_variants_skip_fields_and_attrs() {
+        let src = r#"
+pub enum Event {
+    /// Doc comment.
+    RunStart { name: String, epochs: usize },
+    #[deprecated(note = "NotAVariant")]
+    ScoringFp { elapsed: Duration },
+    RunEnd { steps: u64 },
+}
+pub enum Other { X, Y }
+"#;
+        let got = enum_variants(&lex(src).tokens, "Event");
+        assert_eq!(got, vec!["RunStart", "ScoringFp", "RunEnd"]);
+    }
+
+    #[test]
+    fn snake_case_matches_event_to_json_convention() {
+        assert_eq!(snake_case("RunStart"), "run_start");
+        assert_eq!(snake_case("ScoringFp"), "scoring_fp");
+        assert_eq!(snake_case("EvalDone"), "eval_done");
+        assert_eq!(snake_case("tick"), "tick");
+    }
+
+    #[test]
+    fn real_crate_catalogs_extract_nonempty() {
+        let root = crate::analysis::default_src_root();
+        let read = |rel: &str| std::fs::read_to_string(root.join(rel)).ok();
+        let cats = Catalogs::from_sources(read).expect("catalogs from the real tree");
+        assert!(cats.fault_sites.contains("checkpoint.save"));
+        assert!(cats.metric_names.contains("engine.steps"));
+        assert!(cats.event_names.contains("run_start"), "{:?}", cats.event_names);
+        assert!(cats.event_names.contains("queued"), "{:?}", cats.event_names);
+    }
+}

@@ -1,0 +1,619 @@
+//! A minimal Rust lexer for evolint (DESIGN.md §13).
+//!
+//! Produces a flat token stream — identifiers, string literals, chars,
+//! numbers, lifetimes, and single-character punctuation — plus two side
+//! channels the rule engine needs:
+//!
+//! * **suppression directives** parsed out of plain `//` line comments
+//!   (doc comments are exempt so rule documentation can quote the
+//!   syntax without creating live directives), and
+//! * **test spans**: the line ranges covered by `#[cfg(test)]` /
+//!   `#[test]` items, so every rule can exempt test code.
+//!
+//! The lexer handles the hard cases that would otherwise cause false
+//! positives in a grep-based checker: nested block comments, raw
+//! strings (`r"…"`, `r#"…"#`, any hash depth), byte strings and byte
+//! chars (`b"…"`, `b'x'`), raw identifiers (`r#type`), escapes, and
+//! the char-literal vs. lifetime ambiguity (`'a'` vs. `'a`). String
+//! *contents* never become identifier tokens, so a string containing
+//! `"unwrap()"` cannot trip the panic-safety rule.
+
+/// One lexical token. String contents are kept raw (escape sequences
+/// unprocessed) — the rules only compare catalog names, which never
+/// contain escapes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    Str(String),
+    Char,
+    Num,
+    Lifetime,
+    Punct(char),
+}
+
+/// A token with the 1-based source line it starts on.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// A parsed `// lint:allow(<rule>): <reason>` suppression directive.
+#[derive(Clone, Debug)]
+pub struct Directive {
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// The lexed view of one source file.
+#[derive(Clone, Debug, Default)]
+pub struct LexFile {
+    pub tokens: Vec<Token>,
+    pub directives: Vec<Directive>,
+    /// Lines carrying a `lint:allow` marker that failed to parse
+    /// (missing rule, missing `: reason`, …).
+    pub malformed_directives: Vec<u32>,
+    /// Inclusive line ranges covered by `#[cfg(test)]`/`#[test]` items.
+    test_spans: Vec<(u32, u32)>,
+}
+
+impl LexFile {
+    /// True when `line` falls inside a `#[cfg(test)]`/`#[test]` item.
+    pub fn is_test_line(&self, line: u32) -> bool {
+        self.test_spans.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    #[cfg(test)]
+    pub(crate) fn test_spans(&self) -> &[(u32, u32)] {
+        &self.test_spans
+    }
+}
+
+/// Lex `src` into tokens, directives, and test spans.
+pub fn lex(src: &str) -> LexFile {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = LexFile::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    while i < n {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ if c.is_ascii_whitespace() => i += 1,
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                let start = i + 2;
+                let mut j = start;
+                while j < n && b[j] != b'\n' {
+                    j += 1;
+                }
+                let text = &src[start..j];
+                // Doc comments (`///`, `//!`) document the directive
+                // syntax; only plain `//` comments carry live directives.
+                let doc = text.starts_with('!')
+                    || (text.starts_with('/') && !text.starts_with("//"));
+                if !doc {
+                    parse_directive(text, line, &mut out);
+                }
+                i = j;
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                // Block comments nest in Rust.
+                let mut depth = 1u32;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if b[j] == b'\n' {
+                        line += 1;
+                        j += 1;
+                    } else if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                        depth += 1;
+                        j += 2;
+                    } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                i = j;
+            }
+            b'"' => {
+                let tok_line = line;
+                let (content, j) = scan_plain_str(b, i + 1, &mut line);
+                out.tokens.push(Token { tok: Tok::Str(content), line: tok_line });
+                i = j;
+            }
+            b'\'' => {
+                let tok_line = line;
+                let (tok, j) = scan_char_or_lifetime(b, i);
+                out.tokens.push(Token { tok, line: tok_line });
+                i = j;
+            }
+            _ if c == b'_' || c.is_ascii_alphabetic() => {
+                let tok_line = line;
+                // Raw strings, byte strings, byte chars, raw idents.
+                if c == b'r' || c == b'b' {
+                    if let Some((tok, j)) = scan_prefixed_literal(b, i, &mut line) {
+                        out.tokens.push(Token { tok, line: tok_line });
+                        i = j;
+                        continue;
+                    }
+                }
+                let mut j = i;
+                // Raw identifier: `r#type` lexes as Ident("type").
+                if c == b'r' && i + 2 < n && b[i + 1] == b'#' && is_ident_start(b[i + 2]) {
+                    j = i + 2;
+                }
+                let start = j;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+                out.tokens.push(Token {
+                    tok: Tok::Ident(src[start..j].to_string()),
+                    line: tok_line,
+                });
+                i = j;
+            }
+            _ if c.is_ascii_digit() => {
+                let mut j = i + 1;
+                while j < n {
+                    let d = b[j];
+                    if d.is_ascii_alphanumeric() || d == b'_' {
+                        j += 1;
+                    } else if d == b'.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                        // `1.5` continues the number; `0..n` does not.
+                        j += 2;
+                    } else if (d == b'+' || d == b'-') && matches!(b[j - 1], b'e' | b'E') {
+                        // Exponent sign: `1e-3`.
+                        j += 1;
+                    } else {
+                        break;
+                    }
+                }
+                out.tokens.push(Token { tok: Tok::Num, line });
+                i = j;
+            }
+            _ => {
+                out.tokens.push(Token { tok: Tok::Punct(c as char), line });
+                i += 1;
+            }
+        }
+    }
+
+    out.test_spans = test_spans(&out.tokens);
+    out
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_continue(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Scan a `"…"` body starting just past the opening quote; returns the
+/// raw content and the index just past the closing quote.
+fn scan_plain_str(b: &[u8], mut j: usize, line: &mut u32) -> (String, usize) {
+    let mut content: Vec<u8> = Vec::new();
+    while j < b.len() {
+        match b[j] {
+            b'\\' if j + 1 < b.len() => {
+                if b[j + 1] == b'\n' {
+                    *line += 1;
+                }
+                content.push(b[j]);
+                content.push(b[j + 1]);
+                j += 2;
+            }
+            b'"' => {
+                j += 1;
+                break;
+            }
+            c => {
+                if c == b'\n' {
+                    *line += 1;
+                }
+                content.push(c);
+                j += 1;
+            }
+        }
+    }
+    (String::from_utf8_lossy(&content).into_owned(), j)
+}
+
+/// Scan `'x'` / `'\n'` / `'a` starting at the opening quote; returns the
+/// token and the index just past it.
+fn scan_char_or_lifetime(b: &[u8], i: usize) -> (Tok, usize) {
+    let n = b.len();
+    if i + 1 >= n {
+        return (Tok::Punct('\''), i + 1);
+    }
+    let mut j = i + 1;
+    if b[j] == b'\\' {
+        // Escaped char literal: `'\n'`, `'\u{1F600}'`.
+        j += 1;
+        if j < n && b[j] == b'u' && j + 1 < n && b[j + 1] == b'{' {
+            j += 2;
+            while j < n && b[j] != b'}' {
+                j += 1;
+            }
+            j += 1;
+        } else {
+            j += 1;
+        }
+        if j < n && b[j] == b'\'' {
+            return (Tok::Char, j + 1);
+        }
+        return (Tok::Punct('\''), i + 1);
+    }
+    // One (possibly multibyte) char then a closing quote → char literal.
+    let mut k = j + 1;
+    if b[j] >= 0x80 {
+        while k < n && (b[k] & 0xC0) == 0x80 {
+            k += 1;
+        }
+    }
+    if k < n && b[k] == b'\'' && b[j] != b'\'' {
+        // `'a'`, `'.'`, `'é'` — one char then a closing quote.
+        return (Tok::Char, k + 1);
+    }
+    // Lifetime: consume identifier chars after the quote.
+    while j < n && is_ident_continue(b[j]) {
+        j += 1;
+    }
+    (Tok::Lifetime, j)
+}
+
+/// Try to scan `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`, or `b'x'` at `i`.
+/// Returns None when `i` starts a plain identifier instead.
+fn scan_prefixed_literal(b: &[u8], i: usize, line: &mut u32) -> Option<(Tok, usize)> {
+    let n = b.len();
+    let c = b[i];
+    if c == b'r' {
+        // r"…" or r#…#"…"#…# (raw ident `r#word` is handled by caller).
+        let mut hashes = 0usize;
+        let mut j = i + 1;
+        while j < n && b[j] == b'#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j < n && b[j] == b'"' && (hashes > 0 || b[i + 1] == b'"') {
+            return Some(scan_raw_str(b, j + 1, hashes, line));
+        }
+        return None;
+    }
+    // c == b'b'
+    if i + 1 < n && b[i + 1] == b'"' {
+        let (content, j) = scan_plain_str(b, i + 2, line);
+        return Some((Tok::Str(content), j));
+    }
+    if i + 1 < n && b[i + 1] == b'\'' {
+        let (tok, j) = scan_char_or_lifetime(b, i + 1);
+        return Some((tok, j));
+    }
+    if i + 1 < n && b[i + 1] == b'r' {
+        let mut hashes = 0usize;
+        let mut j = i + 2;
+        while j < n && b[j] == b'#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j < n && b[j] == b'"' {
+            return Some(scan_raw_str(b, j + 1, hashes, line));
+        }
+    }
+    None
+}
+
+/// Scan a raw-string body starting just past the opening quote; the
+/// terminator is `"` followed by `hashes` `#`s.
+fn scan_raw_str(b: &[u8], mut j: usize, hashes: usize, line: &mut u32) -> (Tok, usize) {
+    let n = b.len();
+    let start = j;
+    while j < n {
+        if b[j] == b'\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == b'"' && n - (j + 1) >= hashes && b[j + 1..j + 1 + hashes].iter().all(|&h| h == b'#')
+        {
+            let content = String::from_utf8_lossy(&b[start..j]).into_owned();
+            return (Tok::Str(content), j + 1 + hashes);
+        }
+        j += 1;
+    }
+    (Tok::Str(String::from_utf8_lossy(&b[start..]).into_owned()), n)
+}
+
+/// Parse a `lint:allow(rule): reason` directive out of one line-comment
+/// body. Parse failures are recorded so a typo cannot silently disable
+/// nothing (they surface as `lint/unused-allow` findings).
+fn parse_directive(text: &str, line: u32, out: &mut LexFile) {
+    const MARKER: &str = "lint:allow";
+    let Some(pos) = text.find(MARKER) else { return };
+    let rest = &text[pos + MARKER.len()..];
+    let parsed = rest.strip_prefix('(').and_then(|r| r.split_once(')')).and_then(
+        |(rule, tail)| {
+            let reason = tail.strip_prefix(':')?.trim();
+            let rule = rule.trim();
+            (!rule.is_empty() && !reason.is_empty())
+                .then(|| (rule.to_string(), reason.to_string()))
+        },
+    );
+    match parsed {
+        Some((rule, reason)) => out.directives.push(Directive { line, rule, reason }),
+        None => out.malformed_directives.push(line),
+    }
+}
+
+/// True when `tokens[i..]` opens an attribute (`#[…]` or `#![…]`).
+fn is_attr_start(tokens: &[Token], i: usize) -> bool {
+    matches!(tokens.get(i).map(|t| &t.tok), Some(Tok::Punct('#')))
+        && (matches!(tokens.get(i + 1).map(|t| &t.tok), Some(Tok::Punct('[')))
+            || (matches!(tokens.get(i + 1).map(|t| &t.tok), Some(Tok::Punct('!')))
+                && matches!(tokens.get(i + 2).map(|t| &t.tok), Some(Tok::Punct('[')))))
+}
+
+/// Index just past the attribute opening at `i` (balanced brackets).
+fn skip_attr(tokens: &[Token], i: usize) -> usize {
+    let mut j = i;
+    while j < tokens.len() && tokens[j].tok != Tok::Punct('[') {
+        j += 1;
+    }
+    let mut depth = 0i32;
+    while j < tokens.len() {
+        match tokens[j].tok {
+            Tok::Punct('[') => depth += 1,
+            Tok::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    j
+}
+
+/// True when the attribute at `i` is exactly `#[test]` or `#[cfg(test)]`.
+/// The exact-token match means `#[cfg(not(test))]` and friends do NOT
+/// create exemption spans.
+fn is_test_attr(tokens: &[Token], i: usize) -> bool {
+    let ident = |k: usize, name: &str| {
+        matches!(tokens.get(k).map(|t| &t.tok), Some(Tok::Ident(s)) if s == name)
+    };
+    let punct = |k: usize, c: char| {
+        matches!(tokens.get(k).map(|t| &t.tok), Some(Tok::Punct(p)) if *p == c)
+    };
+    if !(punct(i, '#') && punct(i + 1, '[')) {
+        return false;
+    }
+    (ident(i + 2, "test") && punct(i + 3, ']'))
+        || (ident(i + 2, "cfg")
+            && punct(i + 3, '(')
+            && ident(i + 4, "test")
+            && punct(i + 5, ')')
+            && punct(i + 6, ']'))
+}
+
+/// Compute the line spans of `#[cfg(test)]`/`#[test]` items: from the
+/// attribute through the item's closing brace (or terminating `;`).
+fn test_spans(tokens: &[Token]) -> Vec<(u32, u32)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if !is_test_attr(tokens, i) {
+            i += 1;
+            continue;
+        }
+        let attr_line = tokens[i].line;
+        // Skip this attribute and any further attributes on the item.
+        let mut j = i;
+        while is_attr_start(tokens, j) {
+            j = skip_attr(tokens, j);
+        }
+        // Find the item body: first `{` (then match braces) or `;` at
+        // paren/bracket depth 0.
+        let mut depth = 0i32;
+        let mut end_line = attr_line;
+        while j < tokens.len() {
+            match tokens[j].tok {
+                Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                Tok::Punct(';') if depth == 0 => {
+                    end_line = tokens[j].line;
+                    j += 1;
+                    break;
+                }
+                Tok::Punct('{') if depth == 0 => {
+                    let mut braces = 1i32;
+                    j += 1;
+                    while j < tokens.len() && braces > 0 {
+                        match tokens[j].tok {
+                            Tok::Punct('{') => braces += 1,
+                            Tok::Punct('}') => braces -= 1,
+                            _ => {}
+                        }
+                        end_line = tokens[j].line;
+                        j += 1;
+                    }
+                    break;
+                }
+                _ => {}
+            }
+            end_line = tokens[j].line;
+            j += 1;
+        }
+        spans.push((attr_line, end_line));
+        i = j;
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn strs(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn nested_block_comments_are_skipped() {
+        let src = "fn a() {}\n/* outer /* inner */ still comment */ fn b() {}\n";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["fn", "a", "fn", "b"], "comment text never tokenizes");
+        // Line numbers survive the newline inside the comment.
+        let lexed = lex("/* one\n * two\n */ fn tail() {}\n");
+        let f = lexed.tokens.first().expect("token after comment");
+        assert_eq!(f.line, 3);
+    }
+
+    #[test]
+    fn raw_strings_round_trip_without_escaping() {
+        let src = r####"let a = r"plain"; let b = r#"has "quotes" inside"#;"####;
+        let got = strs(src);
+        assert_eq!(got, vec!["plain".to_string(), "has \"quotes\" inside".to_string()]);
+        // Multi-hash terminator: `"#` inside a `##`-delimited raw string
+        // does not terminate it.
+        let src2 = "let c = r##\"one \"# two\"##;";
+        assert_eq!(strs(src2), vec!["one \"# two".to_string()]);
+        // No identifier ever leaks out of raw-string content.
+        assert_eq!(idents(src), vec!["let", "a", "let", "b"]);
+    }
+
+    #[test]
+    fn string_containing_unwrap_is_not_an_ident() {
+        let src = "let msg = \"please call .unwrap() later\";\n";
+        let ids = idents(src);
+        assert!(
+            !ids.iter().any(|s| s == "unwrap"),
+            "string content must not produce identifier tokens: {ids:?}"
+        );
+        assert_eq!(strs(src), vec!["please call .unwrap() later".to_string()]);
+    }
+
+    #[test]
+    fn escaped_quotes_stay_inside_the_string() {
+        let src = r#"let a = "say \"hi\" now"; let b = 1;"#;
+        assert_eq!(strs(src), vec![r#"say \"hi\" now"#.to_string()]);
+        assert_eq!(idents(src), vec!["let", "a", "let", "b"]);
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let src = "let a = b\"bytes\"; let c = b'{'; let d = b'\\n';";
+        assert_eq!(strs(src), vec!["bytes".to_string()]);
+        let chars = lex(src).tokens.iter().filter(|t| t.tok == Tok::Char).count();
+        assert_eq!(chars, 2, "byte chars lex as char literals");
+    }
+
+    #[test]
+    fn char_vs_lifetime_disambiguation() {
+        let lexed = lex("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let lifetimes = lexed.tokens.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        let chars = lexed.tokens.iter().filter(|t| t.tok == Tok::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_plain_idents() {
+        assert_eq!(idents("let r#type = 1;"), vec!["let", "type"]);
+    }
+
+    #[test]
+    fn cfg_test_module_span_covers_body_only() {
+        let src = "\
+fn live() { x.unwrap(); }
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { y.unwrap(); }
+}
+
+fn also_live() {}
+";
+        let lexed = lex(src);
+        assert_eq!(lexed.test_spans(), &[(3, 7)], "span is attr line..closing brace");
+        assert!(!lexed.is_test_line(1), "code before the module is live");
+        assert!(lexed.is_test_line(6), "test fn body is exempt");
+        assert!(!lexed.is_test_line(9), "code after the module is live");
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_span() {
+        let src = "#[cfg(not(test))]\nfn live() { x.unwrap(); }\n";
+        let lexed = lex(src);
+        assert!(lexed.test_spans().is_empty(), "cfg(not(test)) must stay live");
+    }
+
+    #[test]
+    fn test_attr_with_following_attrs_and_semicolon_items() {
+        let src = "#[test]\n#[should_panic]\nfn t() { boom(); }\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.test_spans(), &[(1, 3)]);
+        // `#[cfg(test)] use x;` — semicolon-terminated item.
+        let lexed = lex("#[cfg(test)]\nuse std::collections::HashMap;\nfn f() {}\n");
+        assert_eq!(lexed.test_spans(), &[(1, 2)]);
+    }
+
+    #[test]
+    fn directives_parse_from_plain_comments_only() {
+        let src = "\
+// lint:allow(robustness/no-panic-in-serve): fixture reason
+/// lint:allow(robustness/no-panic-in-serve): doc text, not a directive
+//! lint:allow(robustness/no-panic-in-serve): module doc, not a directive
+// lint:allow(broken
+";
+        let lexed = lex(src);
+        assert_eq!(lexed.directives.len(), 1);
+        assert_eq!(lexed.directives[0].line, 1);
+        assert_eq!(lexed.directives[0].rule, "robustness/no-panic-in-serve");
+        assert_eq!(lexed.directives[0].reason, "fixture reason");
+        assert_eq!(lexed.malformed_directives, vec![4]);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges() {
+        let src = "for i in 0..10 { let x = 1.5e-3; let y = t.0; }";
+        let lexed = lex(src);
+        let nums = lexed.tokens.iter().filter(|t| t.tok == Tok::Num).count();
+        // 0, 10, 1.5e-3, 0 (tuple index)
+        assert_eq!(nums, 4);
+        let dots = lexed
+            .tokens
+            .iter()
+            .filter(|t| t.tok == Tok::Punct('.'))
+            .count();
+        assert_eq!(dots, 3, "`..` is two dots, `t.0` one");
+    }
+}

@@ -1,0 +1,202 @@
+//! evolint — self-hosted static analysis for the crate's own contracts
+//! (DESIGN.md §13).
+//!
+//! After nine PRs the repo's determinism, durability, and panic-safety
+//! guarantees were enforced purely by convention: nothing stopped a new
+//! `HashMap` iteration from leaking nondeterministic order into an
+//! export, a raw `fs::write` from bypassing the crash-safe
+//! `fault::write_atomic` commit, or a fresh `.unwrap()` from landing in
+//! a serve connection path. evolint lexes the crate's sources
+//! ([`lexer`]), extracts the authoritative name registries from them
+//! ([`catalog`]), and machine-checks those conventions ([`rules`]).
+//!
+//! Three consumers share this module: the `evosample lint` CLI
+//! subcommand, the `tests/lint_clean.rs` self-check (the crate must lint
+//! clean, and every rule must fire on a negative fixture), and the CI
+//! gate (`lint --format json`, findings uploaded as an artifact).
+//!
+//! Scope: `rust/src/**/*.rs` — the library and binary sources where the
+//! contracts live. Benches, examples, and integration tests drive the
+//! public API from outside the contract surface and are not scanned.
+
+pub mod catalog;
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{num, obj, s, Json};
+
+/// One rule violation (or unused suppression), with the context a
+/// reader needs to act on it.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to the lint root (`rust/src`), `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+    pub suggestion: String,
+}
+
+/// The result of linting a source tree.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub files_scanned: usize,
+    /// Sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable rendering: one `file:line: rule: message` block
+    /// per finding plus a summary line.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "rust/src/{}:{}: {}: {}\n    hint: {}\n",
+                f.file, f.line, f.rule, f.message, f.suggestion
+            ));
+        }
+        out.push_str(&format!(
+            "lint: {} file(s) scanned, {} violation(s)\n",
+            self.files_scanned,
+            self.findings.len()
+        ));
+        out
+    }
+
+    /// Machine-readable rendering (the CI artifact format).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("files_scanned", num(self.files_scanned as f64)),
+            ("violations", num(self.findings.len() as f64)),
+            (
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            obj(vec![
+                                ("file", s(format!("rust/src/{}", f.file))),
+                                ("line", num(f.line as f64)),
+                                ("rule", s(f.rule)),
+                                ("message", s(f.message.clone())),
+                                ("suggestion", s(f.suggestion.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The crate's own source root, baked in at compile time — correct for
+/// the self-check and for CI, overridable via `lint --root`.
+pub fn default_src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src")
+}
+
+/// Recursively collect `.rs` sources under `root` as rel-path → text.
+/// BTreeMap keys give the deterministic scan order.
+pub fn collect_sources(root: &Path) -> std::io::Result<BTreeMap<String, String>> {
+    fn walk(
+        dir: &Path,
+        base: &Path,
+        out: &mut BTreeMap<String, String>,
+    ) -> std::io::Result<()> {
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                walk(&path, base, out)?;
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                let rel = path
+                    .strip_prefix(base)
+                    .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e))?
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.insert(rel, std::fs::read_to_string(&path)?);
+            }
+        }
+        Ok(())
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out)?;
+    Ok(out)
+}
+
+/// Lint one source text under its rel path, against prebuilt catalogs.
+/// This is the fixture entry point: tests feed synthetic sources with
+/// synthetic paths to prove each rule fires.
+pub fn lint_source(rel: &str, src: &str, cats: &catalog::Catalogs) -> Vec<Finding> {
+    rules::check_file(rel, &lexer::lex(src), cats)
+}
+
+/// Lint every `.rs` file under `root` (normally `rust/src`): build the
+/// registry catalogs from the tree itself, run the rule registry over
+/// every file, and return the sorted report.
+pub fn lint_crate(root: &Path) -> anyhow::Result<Report> {
+    let files = collect_sources(root)
+        .map_err(|e| anyhow::anyhow!("scan {}: {e}", root.display()))?;
+    anyhow::ensure!(!files.is_empty(), "no .rs sources under {}", root.display());
+    let cats = catalog::Catalogs::from_sources(|rel| files.get(rel).cloned())
+        .map_err(|e| anyhow::anyhow!("catalog extraction: {e}"))?;
+    let mut findings: Vec<Finding> = files
+        .iter()
+        .flat_map(|(rel, src)| lint_source(rel, src, &cats))
+        .collect();
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(Report { files_scanned: files.len(), findings })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_text_and_json() {
+        let r = Report {
+            files_scanned: 2,
+            findings: vec![Finding {
+                file: "serve/x.rs".into(),
+                line: 7,
+                rule: rules::PANIC,
+                message: "boom".into(),
+                suggestion: "do not".into(),
+            }],
+        };
+        let text = r.to_text();
+        assert!(text.contains("rust/src/serve/x.rs:7"), "{text}");
+        assert!(text.contains(rules::PANIC), "{text}");
+        assert!(text.contains("1 violation(s)"), "{text}");
+        let j = r.to_json();
+        assert_eq!(j.get("violations").and_then(Json::as_f64), Some(1.0));
+        let fs = j.get("findings").and_then(Json::as_arr).expect("findings array");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].get("line").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(
+            fs[0].get("file").and_then(Json::as_str),
+            Some("rust/src/serve/x.rs")
+        );
+    }
+
+    #[test]
+    fn collect_sources_sees_this_module() {
+        let files = collect_sources(&default_src_root()).expect("scan rust/src");
+        assert!(files.contains_key("analysis/mod.rs"));
+        assert!(files.contains_key("lib.rs"));
+        assert!(
+            files.keys().all(|k| k.ends_with(".rs")),
+            "only .rs files are collected"
+        );
+    }
+}

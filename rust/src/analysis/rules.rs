@@ -1,0 +1,286 @@
+//! The evolint rule registry (DESIGN.md §13).
+//!
+//! Every rule walks the token stream of one file, path-scoped to the
+//! subsystems whose contract it protects, and skips test spans. Raw
+//! findings are then filtered through the file's `lint:allow`
+//! directives; a directive that suppresses nothing is itself a finding
+//! (`lint/unused-allow`), so stale suppressions cannot accumulate.
+
+use super::catalog::Catalogs;
+use super::lexer::{LexFile, Tok};
+use super::Finding;
+
+/// `HashMap`/`HashSet` in determinism-scoped paths: iteration order
+/// would leak into selection state or exports.
+pub const UNORDERED: &str = "determinism/no-unordered-iteration";
+/// Raw `Instant`/`SystemTime` outside the blessed wall-clock layers.
+pub const WALLCLOCK: &str = "determinism/no-wallclock-in-pipeline";
+/// `fs::write`/`File::create`/`fs::rename` outside `fault/atomic_io.rs`:
+/// a durable artifact written without the tmp+fsync+rename commit.
+pub const ATOMIC: &str = "durability/atomic-writes-only";
+/// `.unwrap()`/`.expect()`/`panic!` in serve/fault non-test code.
+pub const PANIC: &str = "robustness/no-panic-in-serve";
+/// String literal handed to a failpoint helper that is not a site in
+/// `fault::sites::ALL`.
+pub const FAILPOINT: &str = "registry/failpoint-sites";
+/// Metric-name literal at an instrumentation site missing from the
+/// `obs::catalog` name list.
+pub const METRIC: &str = "registry/metric-names";
+/// `("event", s("…"))` name missing from the `api::events::Event`
+/// variants / serve lifecycle names.
+pub const EVENT: &str = "registry/event-names";
+/// A `lint:allow` directive that suppresses nothing (or failed to parse).
+pub const UNUSED_ALLOW: &str = "lint/unused-allow";
+
+/// Every rule id, for `lint --list` style output and directive checks.
+pub const ALL_RULES: &[&str] =
+    &[UNORDERED, WALLCLOCK, ATOMIC, PANIC, FAILPOINT, METRIC, EVENT, UNUSED_ALLOW];
+
+/// Paths (relative to `rust/src`, `/`-separated) where unordered
+/// iteration can perturb determinism pins or exports.
+const UNORDERED_SCOPE: &[&str] =
+    &["coordinator/", "sampler/", "runtime/", "obs/", "metrics/", "data/"];
+
+/// Layers allowed to read the wall clock: the timer abstraction itself,
+/// telemetry (monotonic span anchors), the serve runtime (queue-wait
+/// accounting), and fault injection (delay actions).
+const WALLCLOCK_ALLOWED: &[&str] = &["obs/", "serve/", "fault/"];
+const WALLCLOCK_ALLOWED_FILE: &str = "util/timer.rs";
+
+/// The one file allowed to touch raw file-creation/rename primitives —
+/// it implements the atomic commit everything else must use.
+const ATOMIC_ALLOWED_FILE: &str = "fault/atomic_io.rs";
+
+/// Paths where a panic would tear down a multi-tenant server or corrupt
+/// a fault-injection run instead of failing one request.
+const PANIC_SCOPE: &[&str] = &["serve/", "fault/"];
+
+/// Functions that accept a failpoint-site string.
+const FAILPOINT_FNS: &[&str] = &["hit_io", "hit_worker", "maybe_delay", "fired"];
+
+/// Registry methods that accept a metric name.
+const METRIC_FNS: &[&str] = &["counter", "gauge", "histogram"];
+
+fn in_any(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+/// Run every rule over one lexed file and apply suppression directives.
+pub fn check_file(rel: &str, lex: &LexFile, cats: &Catalogs) -> Vec<Finding> {
+    let mut raw: Vec<Finding> = Vec::new();
+    let toks = &lex.tokens;
+    let mk = |rule: &'static str, line: u32, message: String, suggestion: &str| Finding {
+        file: rel.to_string(),
+        line,
+        rule,
+        message,
+        suggestion: suggestion.to_string(),
+    };
+
+    let ident = |k: usize| match toks.get(k).map(|t| &t.tok) {
+        Some(Tok::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    };
+    let punct = |k: usize, c: char| {
+        matches!(toks.get(k).map(|t| &t.tok), Some(Tok::Punct(p)) if *p == c)
+    };
+    let str_lit = |k: usize| match toks.get(k).map(|t| &t.tok) {
+        Some(Tok::Str(s)) => Some(s.as_str()),
+        _ => None,
+    };
+
+    for i in 0..toks.len() {
+        let line = toks[i].line;
+        if lex.is_test_line(line) {
+            continue;
+        }
+
+        // determinism/no-unordered-iteration
+        if in_any(rel, UNORDERED_SCOPE) {
+            if let Some(name @ ("HashMap" | "HashSet")) = ident(i) {
+                raw.push(mk(
+                    UNORDERED,
+                    line,
+                    format!("{name} in a determinism-scoped path"),
+                    "use BTreeMap/BTreeSet (or collect and sort before iterating) so \
+                     iteration order cannot leak into selection state or exports",
+                ));
+            }
+        }
+
+        // determinism/no-wallclock-in-pipeline
+        if rel != WALLCLOCK_ALLOWED_FILE && !in_any(rel, WALLCLOCK_ALLOWED) {
+            if let Some(name @ ("Instant" | "SystemTime")) = ident(i) {
+                raw.push(mk(
+                    WALLCLOCK,
+                    line,
+                    format!("raw {name} outside the blessed wall-clock layers"),
+                    "time through util::timer::Stopwatch (or PhaseTimers::time) so \
+                     clock reads stay confined to util/timer, obs, serve, and fault",
+                ));
+            }
+        }
+
+        // durability/atomic-writes-only
+        if rel != ATOMIC_ALLOWED_FILE {
+            let path_call = |head: &str, method: &str| {
+                ident(i) == Some(head)
+                    && punct(i + 1, ':')
+                    && punct(i + 2, ':')
+                    && ident(i + 3) == Some(method)
+            };
+            let hit = if path_call("fs", "write") {
+                Some("fs::write")
+            } else if path_call("fs", "rename") {
+                Some("fs::rename")
+            } else if path_call("File", "create") {
+                Some("File::create")
+            } else {
+                None
+            };
+            if let Some(what) = hit {
+                raw.push(mk(
+                    ATOMIC,
+                    line,
+                    format!("{what} bypasses the atomic-commit path"),
+                    "write durable artifacts via fault::write_atomic (tmp + fsync + \
+                     rename); only fault/atomic_io.rs touches the raw primitives",
+                ));
+            }
+        }
+
+        // robustness/no-panic-in-serve
+        if in_any(rel, PANIC_SCOPE) {
+            if punct(i, '.') {
+                if let Some(name @ ("unwrap" | "expect")) = ident(i + 1) {
+                    raw.push(mk(
+                        PANIC,
+                        toks[i + 1].line,
+                        format!(".{name}() in serve/fault non-test code"),
+                        "propagate the error (log it, or answer a rejected/err \
+                         response); a panic here tears down the whole server",
+                    ));
+                }
+            }
+            if ident(i) == Some("panic") && punct(i + 1, '!') {
+                raw.push(mk(
+                    PANIC,
+                    line,
+                    "panic! in serve/fault non-test code".to_string(),
+                    "propagate the error (log it, or answer a rejected/err \
+                     response); a panic here tears down the whole server",
+                ));
+            }
+        }
+
+        // registry/failpoint-sites
+        if let Some(f) = ident(i) {
+            if FAILPOINT_FNS.contains(&f) && punct(i + 1, '(') {
+                if let Some(site) = str_lit(i + 2) {
+                    if !cats.fault_sites.contains(site) {
+                        raw.push(mk(
+                            FAILPOINT,
+                            toks[i + 2].line,
+                            format!("failpoint site {site:?} is not in fault::sites::ALL"),
+                            "use a fault::sites:: constant; new sites must be added \
+                             to fault::sites::ALL so specs can be validated",
+                        ));
+                    }
+                }
+            }
+        }
+
+        // registry/metric-names
+        if let Some(f) = ident(i) {
+            if METRIC_FNS.contains(&f) && punct(i + 1, '(') {
+                if let Some(name) = str_lit(i + 2) {
+                    if !cats.metric_names.contains(name) {
+                        raw.push(mk(
+                            METRIC,
+                            toks[i + 2].line,
+                            format!("metric name {name:?} is not in the obs catalog"),
+                            "add the name to obs::catalog (the authoritative \
+                             metric-name list) or fix the typo",
+                        ));
+                    }
+                }
+            }
+        }
+
+        // registry/event-names
+        if str_lit(i) == Some("event")
+            && punct(i + 1, ',')
+            && ident(i + 2) == Some("s")
+            && punct(i + 3, '(')
+        {
+            if let Some(name) = str_lit(i + 4) {
+                if !cats.event_names.contains(name) {
+                    raw.push(mk(
+                        EVENT,
+                        toks[i + 4].line,
+                        format!(
+                            "event name {name:?} matches no api::events::Event variant \
+                             or serve lifecycle event"
+                        ),
+                        "event-name strings must snake_case an Event variant or appear \
+                         in serve::protocol::LIFECYCLE_EVENTS",
+                    ));
+                }
+            }
+        }
+    }
+
+    apply_directives(rel, lex, raw)
+}
+
+/// Filter findings through `lint:allow` directives and report unused or
+/// malformed directives. A directive suppresses findings of its rule on
+/// its own line or the next line (comment-above or trailing-comment
+/// placement).
+fn apply_directives(rel: &str, lex: &LexFile, mut raw: Vec<Finding>) -> Vec<Finding> {
+    let mut used = vec![false; lex.directives.len()];
+    raw.retain(|f| {
+        let mut suppressed = false;
+        for (k, d) in lex.directives.iter().enumerate() {
+            if d.rule == f.rule && (d.line == f.line || d.line + 1 == f.line) {
+                used[k] = true;
+                suppressed = true;
+            }
+        }
+        !suppressed
+    });
+    for (k, d) in lex.directives.iter().enumerate() {
+        if used[k] || lex.is_test_line(d.line) {
+            continue;
+        }
+        let detail = if ALL_RULES.contains(&d.rule.as_str()) {
+            "it suppresses nothing on its own or the next line"
+        } else {
+            "its rule id matches no known rule"
+        };
+        raw.push(Finding {
+            file: rel.to_string(),
+            line: d.line,
+            rule: UNUSED_ALLOW,
+            message: format!("lint:allow({}) is unused — {detail}", d.rule),
+            suggestion: "remove the stale directive (or fix the rule id) so \
+                         suppressions always carry their justification"
+                .to_string(),
+        });
+    }
+    for &line in &lex.malformed_directives {
+        if lex.is_test_line(line) {
+            continue;
+        }
+        raw.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: UNUSED_ALLOW,
+            message: "malformed lint:allow directive".to_string(),
+            suggestion: "write `// lint:allow(<rule-id>): <reason>` — the reason \
+                         is mandatory"
+                .to_string(),
+        });
+    }
+    raw
+}

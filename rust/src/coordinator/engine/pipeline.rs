@@ -19,14 +19,14 @@
 //! [`ModelRuntime::loss_fwd_ranked`] — a ranking-grade reduced-precision
 //! forward — while the BP batch and eval always stay exact.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::api::events::{emit_into, Event, EventBus};
 use crate::config::{RunConfig, ScoringPrecision};
 use crate::data::TensorDataset;
 use crate::runtime::{BatchBuf, BatchX, ModelRuntime};
 use crate::sampler::Sampler;
-use crate::util::timer::{phase, PhaseTimers};
+use crate::util::timer::{phase, PhaseTimers, Stopwatch};
 use crate::util::Pcg64;
 
 /// The explicit stages of one training step.
@@ -171,7 +171,7 @@ fn staged<T>(
     stage: Stage,
     f: impl FnOnce() -> T,
 ) -> T {
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let out = f();
     let elapsed = t0.elapsed();
     timers.add(stage.phase_label(), elapsed);
@@ -278,7 +278,7 @@ impl StepPipeline {
             }
         }
         if scoring {
-            let t0 = Instant::now();
+            let t0 = Stopwatch::start();
             self.meta_losses.clear();
             // The scoring FP only needs a ranking, so it may run on the
             // runtime's reduced-precision path (DESIGN.md §9). The BP

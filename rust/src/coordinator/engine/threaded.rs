@@ -542,7 +542,7 @@ fn sync_params(
     // Delay-only injection point (the barrier schedule makes any other
     // action here a deadlock; enforced at fault-spec parse time).
     crate::fault::maybe_delay(crate::fault::sites::ENGINE_SYNC);
-    let t0 = std::time::Instant::now();
+    let t0 = crate::util::timer::Stopwatch::start();
     let published = replica.read_params_into(scratch).is_ok();
     shared.slots.lock().unwrap()[w] =
         if published { Some(std::mem::take(scratch)) } else { None };

@@ -110,7 +110,7 @@ impl Prefetcher {
             // The recv wait IS the stall: with the worker keeping the
             // channel full it is ~0; a growing p90 means index assembly
             // can't keep up with the step (DESIGN.md §11).
-            let t0 = std::time::Instant::now();
+            let t0 = crate::util::timer::Stopwatch::start();
             let out = rx.recv().ok();
             let reg = crate::obs::registry();
             reg.histogram("data.prefetch_stall_s").record(t0.elapsed().as_secs_f64());

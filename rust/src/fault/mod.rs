@@ -321,6 +321,7 @@ fn perform(site: &str, action: Action) -> std::io::Result<()> {
             std::thread::sleep(std::time::Duration::from_millis(ms));
             Ok(())
         }
+        // lint:allow(robustness/no-panic-in-serve): the panic IS the injected fault — chaos tests catch_unwind it
         Action::Panic => panic!("injected panic at {site}"),
         Action::Kill => std::process::abort(),
     }

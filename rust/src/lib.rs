@@ -36,6 +36,7 @@ pub mod api;
 pub mod experiments;
 pub mod serve;
 pub mod cli;
+pub mod analysis;
 
 pub use api::prelude;
 pub use api::{Event, EventBus, EventSink, RunResult, Session, SessionBuilder};

@@ -19,6 +19,7 @@
 //!                  | --metrics [--job ID] | --cancel ID
 //!                  | --shutdown drain|abort)
 //!   top            --addr <host:port> [--interval-ms MS] [--count N]
+//!   lint           [--format text|json] [--root DIR]
 //!   help
 //!
 //! Unknown subcommands are an error (exit 1); `help` is the only usage
@@ -74,6 +75,10 @@ USAGE:
                      (live telemetry view over the serve protocol's
                       metrics verb: queue depth, kernel-lane occupancy,
                       per-job selection health; --count 0 polls forever)
+  evosample lint     [--format text|json] [--root DIR]
+                     (evolint: self-hosted static analysis of the crate's
+                      determinism/durability/panic-safety contracts,
+                      DESIGN.md §13; exits 1 when violations are found)
   evosample help
 ";
 
@@ -183,8 +188,13 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             }
             if let Some(path) = trace_out {
                 let spans = evosample::obs::span_count();
-                std::fs::write(&path, evosample::obs::chrome_trace_json().to_string_compact())
-                    .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+                // A durable artifact goes through the atomic commit path
+                // (tmp + fsync + rename) like every other one.
+                evosample::fault::write_atomic(
+                    std::path::Path::new(&path),
+                    evosample::obs::chrome_trace_json().to_string_compact().as_bytes(),
+                )
+                .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
                 println!("telemetry: wrote {spans} span(s) to {path} (open in Perfetto/chrome://tracing)");
             }
             Ok(())
@@ -256,12 +266,37 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
         "top" => cmd_top(&args),
+        "lint" => cmd_lint(&args),
         "help" => {
             println!("{USAGE}");
             Ok(())
         }
         other => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
     }
+}
+
+/// evolint (DESIGN.md §13): lint the crate's own sources against the
+/// determinism/durability/panic-safety contracts. Exit 0 when clean;
+/// violations print (text or JSON) and exit 1 — the CI gate and the
+/// `tests/lint_clean.rs` self-check share this code path.
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    let default_root = evosample::analysis::default_src_root();
+    let root = match args.flag("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => default_root,
+    };
+    let report = evosample::analysis::lint_crate(&root)?;
+    match args.flag_or("format", "text").as_str() {
+        "json" => println!("{}", report.to_json().to_string_compact()),
+        "text" => print!("{}", report.to_text()),
+        other => anyhow::bail!("--format expects text|json, got {other:?}"),
+    }
+    anyhow::ensure!(
+        report.is_clean(),
+        "lint found {} violation(s)",
+        report.findings.len()
+    );
+    Ok(())
 }
 
 /// Boot the multi-tenant selection service (blocks until a client sends

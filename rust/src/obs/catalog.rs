@@ -1,0 +1,135 @@
+//! The authoritative metric-name catalog (DESIGN.md §11, §13).
+//!
+//! Every static metric name any instrumentation site passes to
+//! [`Registry::counter`](super::Registry::counter) /
+//! [`gauge`](super::Registry::gauge) /
+//! [`histogram`](super::Registry::histogram) is declared here, and
+//! evolint's `registry/metric-names` rule machine-checks the match: a
+//! typo'd name at a call site (silently splitting a metric in two) or a
+//! name added without cataloging it fails `evosample lint`.
+//!
+//! Dynamically-suffixed families are out of literal-check scope and
+//! documented here instead: `fault.injected.<site>` (per-site fire
+//! counts), `serve.shed.<reason>` (per-reason admission sheds), and the
+//! `job.<id>.…` names minted by [`Registry::scope`](super::Registry::scope).
+
+/// `data/loader.rs`: prefetched meta-batches handed to the engine.
+pub const DATA_PREFETCH_BATCHES: &str = "data.prefetch_batches";
+/// `data/loader.rs`: seconds the engine blocked on the prefetch channel.
+pub const DATA_PREFETCH_STALL_S: &str = "data.prefetch_stall_s";
+/// `coordinator/engine`: completed epochs.
+pub const ENGINE_EPOCHS: &str = "engine.epochs";
+/// `coordinator/engine`: completed optimizer steps.
+pub const ENGINE_STEPS: &str = "engine.steps";
+/// `coordinator/engine/threaded.rs`: §D.5 sync rounds completed.
+pub const ENGINE_SYNC_ROUNDS: &str = "engine.sync_rounds";
+/// `fault/mod.rs`: total injected faults (per-site under
+/// `fault.injected.<site>`).
+pub const FAULT_INJECTED: &str = "fault.injected";
+/// `runtime/kernel/pool.rs`: kernel dispatches through the pool.
+pub const KERNEL_DISPATCHES: &str = "kernel.dispatches";
+/// `runtime/kernel/pool.rs`: lanes actually granted.
+pub const KERNEL_LANES_GRANTED: &str = "kernel.lanes_granted";
+/// `runtime/kernel/pool.rs`: lanes currently held.
+pub const KERNEL_LANES_IN_USE: &str = "kernel.lanes_in_use";
+/// `runtime/kernel/pool.rs`: lanes requested.
+pub const KERNEL_LANES_REQUESTED: &str = "kernel.lanes_requested";
+/// `serve/scheduler.rs`: job retry attempts after worker errors.
+pub const RETRY_ATTEMPTS: &str = "retry.attempts";
+/// `runtime/native.rs`: bf16 weight-shadow refreshes (DESIGN.md §9).
+pub const RUNTIME_BF16_SHADOW_REFRESH: &str = "runtime.bf16_shadow_refresh";
+/// `coordinator/engine/pipeline.rs`: cadence steps that reused cached
+/// weights instead of scoring (DESIGN.md §8).
+pub const SELECT_CADENCE_SKIPS: &str = "select.cadence_skips";
+/// `coordinator/engine`: share of the dataset kept this epoch.
+pub const SELECT_KEEP_RATE_PCT: &str = "select.keep_rate_pct";
+/// `coordinator/engine/pipeline.rs`: meta-loss distribution summary.
+pub const SELECT_META_LOSS: &str = "select.meta_loss";
+/// `coordinator/engine`: samples pruned from the epoch's active set.
+pub const SELECT_PRUNED_SIZE: &str = "select.pruned_size";
+/// `coordinator/engine/pipeline.rs`: scoring forward passes run.
+pub const SELECT_SCORING_PASSES: &str = "select.scoring_passes";
+/// `serve/queue.rs`: queued jobs.
+pub const SERVE_QUEUE_DEPTH: &str = "serve.queue_depth";
+/// `serve/job.rs`: seconds a job waited between submission and start.
+pub const SERVE_QUEUE_WAIT_S: &str = "serve.queue_wait_s";
+/// `serve/queue.rs`: running jobs.
+pub const SERVE_RUNNING: &str = "serve.running";
+/// `serve/queue.rs`: admission-control sheds (per-reason under
+/// `serve.shed.<reason>`).
+pub const SERVE_SHED: &str = "serve.shed";
+/// `serve/queue.rs`: jobs accepted into the queue.
+pub const SERVE_SUBMITTED: &str = "serve.submitted";
+/// `coordinator/engine/pipeline.rs`: data-gather stage duration.
+pub const STAGE_DATA_GATHER: &str = "stage.data_gather";
+/// `coordinator/engine/pipeline.rs`: observe stage duration.
+pub const STAGE_OBSERVE: &str = "stage.observe";
+/// `coordinator/engine/pipeline.rs`: scoring-FP stage duration.
+pub const STAGE_SCORING_FP: &str = "stage.scoring_fp";
+/// `coordinator/engine/pipeline.rs`: select stage duration.
+pub const STAGE_SELECT: &str = "stage.select";
+/// `coordinator/engine/threaded.rs`: §D.5 sync-round duration.
+pub const STAGE_SYNC: &str = "stage.sync";
+/// `coordinator/engine/pipeline.rs`: train-BP stage duration.
+pub const STAGE_TRAIN_BP: &str = "stage.train_bp";
+/// `coordinator/engine/threaded.rs`: workers lost to panics/step errors.
+pub const WORKER_LOST: &str = "worker.lost";
+
+/// Every cataloged static metric name, sorted.
+pub const ALL: &[&str] = &[
+    DATA_PREFETCH_BATCHES,
+    DATA_PREFETCH_STALL_S,
+    ENGINE_EPOCHS,
+    ENGINE_STEPS,
+    ENGINE_SYNC_ROUNDS,
+    FAULT_INJECTED,
+    KERNEL_DISPATCHES,
+    KERNEL_LANES_GRANTED,
+    KERNEL_LANES_IN_USE,
+    KERNEL_LANES_REQUESTED,
+    RETRY_ATTEMPTS,
+    RUNTIME_BF16_SHADOW_REFRESH,
+    SELECT_CADENCE_SKIPS,
+    SELECT_KEEP_RATE_PCT,
+    SELECT_META_LOSS,
+    SELECT_PRUNED_SIZE,
+    SELECT_SCORING_PASSES,
+    SERVE_QUEUE_DEPTH,
+    SERVE_QUEUE_WAIT_S,
+    SERVE_RUNNING,
+    SERVE_SHED,
+    SERVE_SUBMITTED,
+    STAGE_DATA_GATHER,
+    STAGE_OBSERVE,
+    STAGE_SCORING_FP,
+    STAGE_SELECT,
+    STAGE_SYNC,
+    STAGE_TRAIN_BP,
+    WORKER_LOST,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::ALL;
+
+    #[test]
+    fn catalog_is_sorted_and_unique() {
+        for w in ALL.windows(2) {
+            assert!(w[0] < w[1], "catalog must stay sorted/deduped: {} vs {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn names_use_the_dotted_lowercase_convention() {
+        for name in ALL {
+            assert!(
+                name.chars().all(|c| c.is_ascii_lowercase()
+                    || c.is_ascii_digit()
+                    || c == '.'
+                    || c == '_'),
+                "bad metric name {name:?}"
+            );
+            assert!(name.contains('.'), "names are <subsystem>.<metric>: {name:?}");
+        }
+    }
+}

@@ -361,6 +361,24 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_is_key_sorted_and_byte_stable() {
+        let _g = test_lock();
+        // Register in an order that disagrees with the sorted one; the
+        // BTreeMap-backed registry must still export sorted, identical
+        // bytes on every snapshot (telemetry-invariance pin, DESIGN §11).
+        registry().counter("test.det.zz").add(1);
+        registry().counter("test.det.aa").add(2);
+        registry().counter("test.det.mm").add(3);
+        let a = registry().snapshot_json().to_string_compact();
+        let b = registry().snapshot_json().to_string_compact();
+        assert_eq!(a, b, "same state → byte-identical snapshots");
+        let zz = a.find("test.det.zz").expect("zz present");
+        let aa = a.find("test.det.aa").expect("aa present");
+        let mm = a.find("test.det.mm").expect("mm present");
+        assert!(aa < mm && mm < zz, "counter keys serialize sorted: {a}");
+    }
+
+    #[test]
     fn snapshot_includes_all_kinds_and_reset_zeroes() {
         let _g = test_lock();
         registry().counter("test.snap.c").add(4);

@@ -29,6 +29,7 @@
 //! blind a server that scrapes metrics; use [`set_level`] for explicit
 //! control (benches, tests, the serve bootstrap).
 
+pub mod catalog;
 mod metrics;
 mod trace;
 

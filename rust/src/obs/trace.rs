@@ -134,14 +134,23 @@ pub fn span_count() -> usize {
     ring().buf.len()
 }
 
-/// Drain the ring, returning spans sorted by start time.
+/// Total order over spans for exports: start time, then track id, then
+/// category/name/duration. The tie-break matters for determinism — at
+/// microsecond resolution concurrent workers DO collide on `ts_us`, and
+/// a bare sort-by-start would leave ring arrival order (a thread race)
+/// visible in the exported JSON.
+fn span_sort_key(sp: &SpanRec) -> (u64, u64, &'static str, &'static str, u64) {
+    (sp.ts_us, sp.tid, sp.cat, sp.name, sp.dur_us)
+}
+
+/// Drain the ring, returning spans in the total export order.
 pub fn take_spans() -> Vec<SpanRec> {
     let mut r = ring();
     let mut out = std::mem::take(&mut r.buf);
     r.next = 0;
     r.dropped = 0;
     drop(r);
-    out.sort_by_key(|sp| sp.ts_us);
+    out.sort_by_key(span_sort_key);
     out
 }
 
@@ -163,7 +172,7 @@ pub fn chrome_trace_json() -> Json {
         (r.buf.clone(), r.dropped)
     };
     let mut recs = recs;
-    recs.sort_by_key(|sp| sp.ts_us);
+    recs.sort_by_key(span_sort_key);
     let mut tids: Vec<u64> = recs.iter().map(|sp| sp.tid).collect();
     tids.sort_unstable();
     tids.dedup();
@@ -281,6 +290,27 @@ mod tests {
         assert_eq!(sp.get("dur").and_then(Json::as_f64), Some(42.0));
         assert!(j.get("spans_dropped").and_then(Json::as_f64).is_some());
         clear_spans();
+    }
+
+    #[test]
+    fn export_order_is_total_even_on_timestamp_ties() {
+        let _g = test_lock();
+        let prev = super::super::level();
+        super::super::set_level(super::super::OFF);
+        clear_spans();
+        // Same start microsecond from three "threads", pushed in an
+        // arbitrary arrival order (the race the tie-break erases).
+        push(SpanRec { cat: "t", name: "b", tid: 3, ts_us: 100, dur_us: 4 });
+        push(SpanRec { cat: "t", name: "a", tid: 1, ts_us: 100, dur_us: 9 });
+        push(SpanRec { cat: "t", name: "c", tid: 2, ts_us: 100, dur_us: 1 });
+        push(SpanRec { cat: "t", name: "z", tid: 1, ts_us: 50, dur_us: 2 });
+        let first = chrome_trace_json().to_string_compact();
+        let second = chrome_trace_json().to_string_compact();
+        assert_eq!(first, second, "export is byte-stable");
+        let spans = take_spans();
+        super::super::set_level(prev);
+        let order: Vec<(u64, u64)> = spans.iter().map(|sp| (sp.ts_us, sp.tid)).collect();
+        assert_eq!(order, vec![(50, 1), (100, 1), (100, 2), (100, 3)]);
     }
 
     #[test]

@@ -69,6 +69,25 @@ impl Request {
     }
 }
 
+/// The serve-side job lifecycle event names, as they appear in `event`
+/// fields on the wire and in job records — alongside the engine's own
+/// events (snake-cased `api::events::Event` variants) that stream
+/// through unchanged.
+///
+/// This is the authoritative list evolint's `registry/event-names` rule
+/// checks serve instrumentation sites against (DESIGN.md §13): an event
+/// name typo'd at an emission site would silently split a job's history
+/// across two names for every consumer replaying the backlog.
+pub const LIFECYCLE_EVENTS: &[&str] = &[
+    "queued",    // accepted into the queue (server)
+    "admitted",  // claimed by the scheduler, about to run (job)
+    "state",     // explicit state-transition record (job)
+    "requeued",  // released back to pending after an interrupted claim (server)
+    "retrying",  // worker error, scheduled for another attempt (scheduler)
+    "restarted", // resumed from checkpoint after a server restart (scheduler)
+    "resumed",   // picked up mid-run from a rescan (scheduler)
+];
+
 /// `{"ok":true, ...fields}`.
 pub fn ok_response(fields: Vec<(&str, Json)>) -> Json {
     let mut all = vec![("ok", Json::Bool(true))];
@@ -157,6 +176,20 @@ mod tests {
         assert!(Request::parse(r#"{"cmd":"submit"}"#).is_err(), "submit needs config");
         assert!(Request::parse(r#"{"cmd":"events"}"#).is_err(), "events needs job");
         assert!(Request::parse(r#"{"cmd":"shutdown","mode":"later"}"#).is_err());
+    }
+
+    #[test]
+    fn lifecycle_event_names_are_unique_and_snake_case() {
+        for name in LIFECYCLE_EVENTS {
+            assert!(
+                name.chars().all(|c| c.is_ascii_lowercase() || c == '_'),
+                "wire event names are snake_case: {name:?}"
+            );
+        }
+        let mut sorted: Vec<&str> = LIFECYCLE_EVENTS.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), LIFECYCLE_EVENTS.len(), "no duplicate names");
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! until a time budget or iteration cap is reached; report median and MAD
 //! (median absolute deviation) which are robust to scheduler noise.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::util::timer::Stopwatch;
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -69,16 +71,16 @@ impl Bencher {
     /// a value that is passed to `std::hint::black_box`.
     pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
         // Warmup.
-        let w0 = Instant::now();
+        let w0 = Stopwatch::start();
         while w0.elapsed() < self.warmup {
             std::hint::black_box(f());
         }
         // Timed samples.
         let mut samples: Vec<Duration> = Vec::new();
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut iters = 0u64;
         while t0.elapsed() < self.budget && iters < self.max_iters {
-            let s = Instant::now();
+            let s = Stopwatch::start();
             std::hint::black_box(f());
             samples.push(s.elapsed());
             iters += 1;

@@ -22,6 +22,28 @@ pub mod phase {
     pub const SYNC: &str = "sync";
 }
 
+/// A started wall-clock measurement — the blessed way to time code
+/// outside the telemetry/serve/fault layers.
+///
+/// evolint's `determinism/no-wallclock-in-pipeline` rule (DESIGN.md §13)
+/// keeps raw `Instant`/`SystemTime` reads out of engine, data, and bench
+/// code; those sites time through this one type instead, so every clock
+/// read in the pipeline is attributable to a single audited entry point
+/// (timing feeds ledgers and telemetry only — never arithmetic, so the
+/// determinism pins hold regardless of what the clock returns).
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+}
+
 #[derive(Default, Clone, Debug)]
 pub struct PhaseTimers {
     acc: BTreeMap<String, Duration>,
@@ -103,6 +125,15 @@ impl PhaseTimers {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stopwatch_measures_elapsed_time() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let d = sw.elapsed();
+        assert!(d >= Duration::from_millis(2), "elapsed {d:?}");
+        assert!(sw.elapsed() >= d, "elapsed is monotonic");
+    }
 
     #[test]
     fn accumulates_and_counts() {

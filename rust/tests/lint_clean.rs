@@ -1,0 +1,229 @@
+//! evolint self-check (DESIGN.md §13).
+//!
+//! Two halves, both load-bearing:
+//!
+//! * the crate's own sources must lint clean — the determinism,
+//!   durability, and panic-safety contracts are machine-checked, not
+//!   conventions; and
+//! * every rule must FIRE on a negative fixture — a lint that always
+//!   passes is indistinguishable from a lint that checks nothing.
+
+use evosample::analysis::{self, catalog::Catalogs, rules};
+
+/// Registry catalogs extracted from the real tree (fixtures lint
+/// against the same name lists the crate does).
+fn cats() -> Catalogs {
+    let root = analysis::default_src_root();
+    Catalogs::from_sources(|rel| std::fs::read_to_string(root.join(rel)).ok())
+        .expect("catalogs extract from the real tree")
+}
+
+/// Rule ids that fire on `src` placed at `rel` (relative to rust/src).
+fn fired(rel: &str, src: &str) -> Vec<&'static str> {
+    analysis::lint_source(rel, src, &cats()).iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn crate_is_violation_free() {
+    let report = analysis::lint_crate(&analysis::default_src_root())
+        .expect("lint run over rust/src");
+    assert!(report.files_scanned > 40, "scanned {} files", report.files_scanned);
+    assert!(
+        report.is_clean(),
+        "the crate must lint clean:\n{}",
+        report.to_text()
+    );
+}
+
+#[test]
+fn fires_on_unordered_iteration_in_scoped_paths() {
+    let src = "use std::collections::HashMap;\nfn f(m: HashMap<u32, u32>) { for _ in &m {} }\n";
+    assert!(
+        fired("coordinator/fixture.rs", src).contains(&rules::UNORDERED),
+        "HashMap in coordinator/ must fire"
+    );
+    assert!(
+        fired("sampler/fixture.rs", "fn f() { let s = std::collections::HashSet::new(); }")
+            .contains(&rules::UNORDERED),
+        "HashSet in sampler/ must fire"
+    );
+    // api/ is outside the determinism scope.
+    assert!(fired("api/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn fires_on_wallclock_outside_blessed_layers() {
+    let src = "fn f() { let _t = std::time::Instant::now(); }";
+    assert!(fired("coordinator/engine/fixture.rs", src).contains(&rules::WALLCLOCK));
+    assert!(
+        fired("data/fixture.rs", "fn f() { let _t = std::time::SystemTime::now(); }")
+            .contains(&rules::WALLCLOCK),
+        "SystemTime fires too"
+    );
+    // The blessed layers may read the clock.
+    assert!(fired("serve/fixture.rs", src).is_empty());
+    assert!(fired("obs/fixture.rs", src).is_empty());
+    assert!(fired("fault/fixture.rs", src).is_empty());
+    assert!(fired("util/timer.rs", src).is_empty());
+    // …but util/ broadly may not (bench.rs times through Stopwatch).
+    assert!(fired("util/bench.rs", src).contains(&rules::WALLCLOCK));
+}
+
+#[test]
+fn fires_on_raw_write_primitives() {
+    for src in [
+        r#"fn f() { let _ = std::fs::write("p", b"x"); }"#,
+        r#"fn f() -> std::io::Result<std::fs::File> { std::fs::File::create("p") }"#,
+        r#"fn f() { let _ = std::fs::rename("a", "b"); }"#,
+    ] {
+        assert!(
+            fired("coordinator/fixture.rs", src).contains(&rules::ATOMIC),
+            "must fire on: {src}"
+        );
+    }
+    // The atomic-commit implementation itself is the one allowed home.
+    assert!(fired(
+        "fault/atomic_io.rs",
+        r#"fn f() { let _ = std::fs::rename("a", "b"); }"#
+    )
+    .is_empty());
+}
+
+#[test]
+fn fires_on_panics_in_serve_and_fault() {
+    let unwrap_src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+    let expect_src = r#"fn f(x: Option<u32>) -> u32 { x.expect("present") }"#;
+    let panic_src = r#"fn f() { panic!("boom"); }"#;
+    for src in [unwrap_src, expect_src, panic_src] {
+        assert!(fired("serve/fixture.rs", src).contains(&rules::PANIC), "serve: {src}");
+        assert!(fired("fault/fixture.rs", src).contains(&rules::PANIC), "fault: {src}");
+    }
+    // Out of scope: the engine may unwrap (its panics are caught by the
+    // threaded engine's quarantine, not a server teardown).
+    assert!(fired("coordinator/fixture.rs", unwrap_src).is_empty());
+    // The poisoned-lock house pattern must NOT be flagged: identifier
+    // tokenization distinguishes unwrap from unwrap_or_else.
+    let house = "fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap_or_else(|e| e.into_inner()) }";
+    assert!(fired("serve/fixture.rs", house).is_empty(), "unwrap_or_else is fine");
+    // A string literal CONTAINING unwrap() is content, not code.
+    let string_only = r#"fn f() -> &'static str { "please .unwrap() later" }"#;
+    assert!(fired("serve/fixture.rs", string_only).is_empty());
+}
+
+#[test]
+fn fires_on_unknown_failpoint_site() {
+    let bad = r#"fn f() { let _ = crate::fault::hit_io("bogus.site"); }"#;
+    assert!(fired("serve/fixture.rs", bad).contains(&rules::FAILPOINT));
+    let good = r#"fn f() { let _ = crate::fault::hit_io("checkpoint.save"); }"#;
+    assert!(
+        fired("coordinator/fixture.rs", good).is_empty(),
+        "sites in fault::sites::ALL pass"
+    );
+}
+
+#[test]
+fn fires_on_uncataloged_metric_name() {
+    let bad = r#"fn f() { crate::obs::registry().counter("bogus.metric").add(1); }"#;
+    assert!(fired("serve/fixture.rs", bad).contains(&rules::METRIC));
+    let good = r#"fn f() { crate::obs::registry().counter("engine.steps").add(1); }"#;
+    assert!(fired("serve/fixture.rs", good).is_empty());
+    // Dynamic names (format!) are out of literal-check scope.
+    let dynamic = r#"fn f(site: &str) { crate::obs::registry().counter(&format!("fault.injected.{site}")).add(1); }"#;
+    assert!(fired("fault/fixture.rs", dynamic).is_empty());
+}
+
+#[test]
+fn fires_on_unknown_event_name() {
+    let bad = r#"fn f() -> (&'static str, Json) { ("event", s("not_an_event")) }"#;
+    assert!(fired("serve/fixture.rs", bad).contains(&rules::EVENT));
+    for good_name in ["run_start", "eval_done", "queued", "retrying"] {
+        let good = format!(r#"fn f() -> (&'static str, Json) {{ ("event", s("{good_name}")) }}"#);
+        assert!(
+            fired("serve/fixture.rs", &good).is_empty(),
+            "{good_name} is a known event"
+        );
+    }
+}
+
+#[test]
+fn allow_directive_suppresses_and_unused_allow_fires() {
+    let suppressed = "\
+fn f() {
+    // lint:allow(robustness/no-panic-in-serve): fixture demonstrates suppression
+    panic!(\"boom\");
+}
+";
+    assert!(
+        fired("serve/fixture.rs", suppressed).is_empty(),
+        "a justified allow suppresses the finding without an unused-allow"
+    );
+    // Same directive with nothing to suppress → lint/unused-allow.
+    let unused = "// lint:allow(robustness/no-panic-in-serve): stale reason\nfn f() {}\n";
+    assert_eq!(fired("serve/fixture.rs", unused), vec![rules::UNUSED_ALLOW]);
+    // Unknown rule id → flagged rather than silently inert.
+    let unknown = "// lint:allow(no/such-rule): whatever\nfn f() {}\n";
+    assert_eq!(fired("serve/fixture.rs", unknown), vec![rules::UNUSED_ALLOW]);
+    // Missing reason → malformed → flagged.
+    let malformed = "// lint:allow(robustness/no-panic-in-serve)\nfn f() { panic!(\"x\"); }\n";
+    let got = fired("serve/fixture.rs", malformed);
+    assert!(got.contains(&rules::UNUSED_ALLOW), "malformed directive is reported");
+    assert!(got.contains(&rules::PANIC), "and it suppresses nothing");
+}
+
+#[test]
+fn test_code_is_exempt_from_every_rule() {
+    let src = "\
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let _t = std::time::Instant::now();
+        let _ = std::fs::write(\"p\", b\"x\");
+        let m: std::collections::HashMap<u32, u32> = Default::default();
+        assert!(m.is_empty());
+        Some(1).unwrap();
+        crate::obs::registry().counter(\"test.only.name\").add(1);
+    }
+}
+";
+    for rel in ["serve/fixture.rs", "coordinator/fixture.rs", "data/fixture.rs"] {
+        assert!(fired(rel, src).is_empty(), "test spans exempt everything in {rel}");
+    }
+}
+
+/// Satellite check: the serve connection/record paths the fault layer
+/// hardened stay panic-free — per file, not just via the whole-crate
+/// sweep, so a regression names the file that broke.
+#[test]
+fn serve_connection_paths_stay_panic_free() {
+    let root = analysis::default_src_root();
+    let catalogs = cats();
+    for rel in ["serve/server.rs", "serve/scheduler.rs", "serve/job.rs", "serve/queue.rs"] {
+        let src = std::fs::read_to_string(root.join(rel)).expect(rel);
+        let panics: Vec<String> = analysis::lint_source(rel, &src, &catalogs)
+            .into_iter()
+            .filter(|f| f.rule == rules::PANIC)
+            .map(|f| format!("{}:{}", f.file, f.line))
+            .collect();
+        assert!(panics.is_empty(), "{rel} has panic paths: {panics:?}");
+    }
+}
+
+/// Every rule in the registry has at least one firing fixture above;
+/// keep the list and the registry in sync.
+#[test]
+fn every_rule_has_a_fixture() {
+    let exercised = [
+        rules::UNORDERED,
+        rules::WALLCLOCK,
+        rules::ATOMIC,
+        rules::PANIC,
+        rules::FAILPOINT,
+        rules::METRIC,
+        rules::EVENT,
+        rules::UNUSED_ALLOW,
+    ];
+    for rule in rules::ALL_RULES {
+        assert!(exercised.contains(rule), "rule {rule} lacks a negative fixture");
+    }
+}
